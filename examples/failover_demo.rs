@@ -1,0 +1,63 @@
+//! Self-healing demo (§4.3 / Fig. 10): continuous transfers survive a NIC
+//! hard-failure with no application-side error handling, and the rail is
+//! re-admitted within tens of milliseconds of recovery.
+//!
+//! Run: `cargo run --release --example failover_demo`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tent::cluster::Cluster;
+use tent::engine::{EngineConfig, TentEngine, TransferReq};
+use tent::segment::Location;
+use tent::topology::{FabricKind, NodeId};
+
+fn main() -> tent::Result<()> {
+    tent::util::logging::init(log::Level::Info);
+    let cluster = Cluster::from_profile("h800_hgx")?;
+    let mut cfg = EngineConfig::default();
+    cfg.probe_interval = Duration::from_millis(10); // Fig 10: fast re-admission
+    let engine = Arc::new(TentEngine::new(&cluster, cfg)?);
+
+    let len = 64u64 << 20;
+    let src = engine.register_segment(Location::host(0, 0), len)?;
+    let dst = engine.register_segment(Location::host(1, 0), len)?;
+
+    // Fail NIC 0 at t=1000 ms, recover at t=3000 ms (the Fig. 10 script).
+    let rail = cluster.topo.rails_of(NodeId(0), FabricKind::Rdma)[0];
+    let fabric = Arc::clone(&cluster.fabric);
+    let injector = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(1000));
+        println!(">>> t=1000ms: injecting hard failure on rail 0");
+        fabric.inject_failure(rail);
+        std::thread::sleep(Duration::from_millis(2000));
+        println!(">>> t=3000ms: rail 0 recovered");
+        fabric.recover(rail);
+    });
+
+    // Continuous 64 MiB transfers; the app never sees a failure.
+    let start = Instant::now();
+    while start.elapsed() < Duration::from_millis(4000) {
+        let t0 = Instant::now();
+        engine.transfer_sync(
+            TransferReq::write(src, 0, dst, 0, len),
+            Duration::from_secs(30),
+        )?;
+        let dt = t0.elapsed();
+        println!(
+            "t={:>5}ms  64 MiB in {:>6.1}ms  ({:>7.1} MB/s)",
+            start.elapsed().as_millis(),
+            dt.as_secs_f64() * 1e3,
+            (len as f64 / dt.as_secs_f64()) / 1e6
+        );
+    }
+    injector.join().unwrap();
+
+    let s = engine.stats();
+    println!(
+        "\nengine events: retries={} exclusions={} probes={} readmissions={} permanent_failures={}",
+        s.retries, s.exclusions, s.probes, s.readmissions, s.permanent_failures
+    );
+    assert_eq!(s.permanent_failures, 0, "the data plane must mask the fault");
+    println!("no transfer ever failed at the API — in-band recovery only.");
+    Ok(())
+}

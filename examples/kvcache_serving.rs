@@ -1,0 +1,116 @@
+//! **End-to-end driver**: serve multi-turn LLM conversations with the full
+//! three-layer stack —
+//!
+//!   L1 Pallas decode-attention kernel (inside the AOT-compiled HLO)
+//!   L2 TinyGPT prefill/decode executed via PJRT from Rust
+//!   L3 TENT moving KV-cache blocks between GPU / CPU / SSD tiers
+//!
+//! and report the Table-2 metrics (input throughput, avg/P90 TTFT,
+//! per-round TTFT) for three configurations: no-HiCache baseline,
+//! HiCache + Mooncake TE, and HiCache + TENT.
+//!
+//! Requires `make artifacts`. Run:
+//!   `cargo run --release --example kvcache_serving [-- --clients 6 --turns 4]`
+
+use std::sync::Arc;
+use tent::cluster::Cluster;
+use tent::engine::{EngineConfig, TentEngine};
+use tent::policy::PolicyKind;
+use tent::runtime::Runtime;
+use tent::serving::{build_conversations, run_serving, ServeConfig, ServeMode, ServeReport};
+use tent::util::cli::Args;
+
+fn run_config(
+    rt: &Runtime,
+    policy: PolicyKind,
+    cfg: &ServeConfig,
+) -> tent::Result<ServeReport> {
+    // Fresh cluster per configuration so cache state never leaks across runs.
+    let cluster = Cluster::from_profile_nodes("h800_hgx", 1, tent::fabric::FabricConfig::default())?;
+    let engine = Arc::new(TentEngine::new(&cluster, EngineConfig::with_policy(policy))?);
+    let convs = build_conversations(
+        cfg.clients,
+        cfg.turns,
+        rt.meta.t_pre,
+        rt.meta.vocab as i32,
+        cfg.cache.gpus,
+        cfg.seed,
+        cfg.shared_system_prompt,
+    );
+    run_serving(&engine, rt, &convs, cfg)
+}
+
+fn main() -> tent::Result<()> {
+    tent::util::logging::init(log::Level::Warn);
+    let args = Args::from_env();
+    let dir = tent::runtime::default_artifacts_dir();
+    if !Runtime::artifacts_available(&dir) {
+        eprintln!("artifacts not found — run `make artifacts` first");
+        std::process::exit(2);
+    }
+    let rt = Runtime::load(&dir)?;
+    println!(
+        "model: TinyGPT {} params, KV {}/request, {} tok/block",
+        rt.meta.param_count,
+        tent::util::fmt_bytes(rt.meta.kv_bytes),
+        rt.meta.t_pre
+    );
+
+    let base_cfg = ServeConfig {
+        clients: args.get_usize("clients", 6),
+        turns: args.get_usize("turns", 4),
+        decode_tokens: args.get_usize("decode", 2),
+        seed: args.get_u64("seed", 7),
+        ..Default::default()
+    };
+    let turns = base_cfg.turns;
+
+    let configs = [
+        ("Baseline (no HiCache)", PolicyKind::Tent, ServeMode::Baseline),
+        ("HiCache + Mooncake TE", PolicyKind::MooncakeTe, ServeMode::HiCache),
+        ("HiCache + TENT", PolicyKind::Tent, ServeMode::HiCache),
+    ];
+
+    let mut reports = Vec::new();
+    for (label, policy, mode) in configs {
+        println!("\n=== {label} ===");
+        let cfg = ServeConfig { mode, ..base_cfg.clone() };
+        let rep = run_config(&rt, policy, &cfg)?;
+        println!(
+            "  input throughput {:>8.0} tok/s | avg TTFT {:.3}s | P90 TTFT {:.3}s",
+            rep.input_throughput_tok_s(),
+            rep.avg_ttft_s(),
+            rep.p90_ttft_s()
+        );
+        for r in 1..=turns {
+            println!("  round {r}: avg TTFT {:.3}s", rep.round_avg_ttft_s(r));
+        }
+        reports.push((label, rep));
+    }
+
+    // Table 2 shape check.
+    println!("\n=== summary (Table 2 shape) ===");
+    println!(
+        "{:<24} {:>12} {:>10} {:>10}",
+        "config", "tok/s", "avgTTFT", "p90TTFT"
+    );
+    for (label, rep) in &reports {
+        println!(
+            "{:<24} {:>12.0} {:>9.3}s {:>9.3}s",
+            label,
+            rep.input_throughput_tok_s(),
+            rep.avg_ttft_s(),
+            rep.p90_ttft_s()
+        );
+    }
+    let (_, base) = &reports[0];
+    let (_, te) = &reports[1];
+    let (_, tent_r) = &reports[2];
+    println!(
+        "\nTENT vs baseline: {:.2}x throughput | TENT vs TE: {:.2}x throughput, {:.1}% lower P90 TTFT",
+        tent_r.input_throughput_tok_s() / base.input_throughput_tok_s(),
+        tent_r.input_throughput_tok_s() / te.input_throughput_tok_s(),
+        (1.0 - tent_r.p90_ttft_s() / te.p90_ttft_s()) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,86 @@
+"""AOT compile path: lower TinyGPT's prefill/decode to HLO **text** and dump
+the flat parameter vector.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which the runtime's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Outputs (``make artifacts``):
+  artifacts/prefill.hlo.txt   step() at Tq = T_PRE
+  artifacts/decode.hlo.txt    step() at Tq = 1
+  artifacts/params.bin        flat f32 little-endian weights
+  artifacts/model_meta.json   dimensions the Rust runtime needs
+
+Python runs ONCE at build time and never on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_phase(tq: int) -> str:
+    pspec = jax.ShapeDtypeStruct((model.param_count(),), jnp.float32)
+    tokens = jax.ShapeDtypeStruct((tq,), jnp.int32)
+    kv = jax.ShapeDtypeStruct(model.KV_SHAPE, jnp.float32)
+    off = jax.ShapeDtypeStruct((), jnp.int32)
+    lowered = jax.jit(model.step).lower(pspec, tokens, kv, off)
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name, tq in [("prefill", model.T_PRE), ("decode", 1)]:
+        text = lower_phase(tq)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    params = model.init_params(args.seed)
+    import numpy as np
+
+    raw = np.asarray(params, dtype="<f4").tobytes()
+    with open(os.path.join(args.out_dir, "params.bin"), "wb") as f:
+        f.write(raw)
+    print(f"wrote params.bin ({len(raw)} bytes, {model.param_count()} params)")
+
+    meta = {
+        "vocab": model.VOCAB,
+        "d_model": model.D_MODEL,
+        "layers": model.LAYERS,
+        "heads": model.HEADS,
+        "head_dim": model.HEAD_DIM,
+        "t_max": model.T_MAX,
+        "t_pre": model.T_PRE,
+        "param_count": model.param_count(),
+        "kv_shape": list(model.KV_SHAPE),
+        "kv_bytes": model.KV_BYTES,
+        "kv_bytes_per_token": model.KV_BYTES_PER_TOKEN,
+    }
+    with open(os.path.join(args.out_dir, "model_meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print("wrote model_meta.json:", meta)
+
+
+if __name__ == "__main__":
+    main()

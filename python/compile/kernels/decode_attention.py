@@ -1,0 +1,100 @@
+"""Layer 1 — Pallas attention kernel over a KV cache (flash-decode style).
+
+The serving hot-spot: every prefill chunk and every decode step attends over
+the request's KV cache. The kernel processes one head per grid step and
+streams the cache in `block_k`-wide tiles with an online-softmax
+(running-max + renormalized accumulator), so the working set stays one tile —
+the VMEM analogue of TENT's 64 KB slice (see DESIGN.md §Hardware-Adaptation).
+
+Always lowered with ``interpret=True``: the CPU PJRT client cannot execute
+Mosaic custom-calls; on a real TPU the same kernel lowers natively.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(start_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: float):
+    """One head: q [1,Tq,Dh] attends over k/v [1,Tmax,Dh] with causal mask.
+
+    Keys at global positions `j` are visible to query row `i` (global
+    position `start + i`) iff ``j <= start + i``.
+    """
+    q = q_ref[0].astype(jnp.float32) * scale  # [Tq, Dh]
+    tq = q.shape[0]
+    tmax = k_ref.shape[1]
+    nkb = tmax // block_k
+    start = start_ref[0]
+
+    qpos = start + lax.broadcasted_iota(jnp.int32, (tq, block_k), 0)  # [Tq, BK]
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k_tile = pl.load(k_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
+        v_tile = pl.load(v_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
+        k_tile = k_tile.astype(jnp.float32)
+        v_tile = v_tile.astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k_tile, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [Tq, BK]
+        jpos = kb * block_k + lax.broadcasted_iota(jnp.int32, (tq, block_k), 1)
+        mask = jpos <= qpos
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # Masked probabilities: explicit where() so fully-masked tiles stay 0.
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v_tile, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((tq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((tq,), jnp.float32)
+    acc0 = jnp.zeros((tq, q.shape[1]), jnp.float32)
+    _, l, acc = lax.fori_loop(0, nkb, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q, k, v, start, block_k: int = 128):
+    """Attention over the KV cache.
+
+    Args:
+      q: ``[H, Tq, Dh]`` queries for the new token block.
+      k, v: ``[H, Tmax, Dh]`` KV cache (new block already inserted at
+        ``start .. start+Tq``).
+      start: scalar int32 — global position of the first query row.
+      block_k: KV tile width; ``Tmax % block_k == 0`` required.
+
+    Returns:
+      ``[H, Tq, Dh]`` attention output, in ``q.dtype``.
+    """
+    h, tq, dh = q.shape
+    tmax = k.shape[1]
+    block_k = min(block_k, tmax)
+    if tmax % block_k != 0:
+        raise ValueError(f"Tmax={tmax} not a multiple of block_k={block_k}")
+    scale = 1.0 / (dh**0.5)
+    start_arr = jnp.asarray(start, jnp.int32).reshape((1,))
+    kernel = functools.partial(_attn_kernel, block_k=block_k, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1, tq, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, tmax, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, tmax, dh), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, tq, dh), q.dtype),
+        interpret=True,
+    )(start_arr, q, k, v)

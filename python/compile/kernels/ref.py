@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the Pallas decode-attention kernel.
+
+Materializes the full [Tq, Tmax] score matrix with an explicit causal mask —
+slow but obviously correct; pytest/hypothesis compares the kernel against it
+across shapes and dtypes.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_attention(q, k, v, start):
+    """Reference attention.
+
+    Args:
+      q: ``[H, Tq, Dh]``; k, v: ``[H, Tmax, Dh]``; start: scalar int32.
+
+    Returns: ``[H, Tq, Dh]`` in q.dtype.
+    """
+    h, tq, dh = q.shape
+    tmax = k.shape[1]
+    scale = 1.0 / (dh**0.5)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("hqd,hkd->hqk", qf, kf)  # [H, Tq, Tmax]
+    qpos = start + jnp.arange(tq)[:, None]  # [Tq, 1]
+    jpos = jnp.arange(tmax)[None, :]  # [1, Tmax]
+    mask = jpos <= qpos  # [Tq, Tmax]
+    s = jnp.where(mask[None, :, :], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask[None, :, :], p, 0.0)
+    o = jnp.einsum("hqk,hkd->hqd", p, vf) / jnp.sum(p, axis=-1, keepdims=True)
+    return o.astype(q.dtype)

@@ -1,0 +1,146 @@
+"""Layer 2 — TinyGPT: the JAX model served by the Rust coordinator.
+
+A small GPT-style decoder whose attention hot loop is the Layer-1 Pallas
+kernel. Both serving phases are a single `step` function specialized by
+shape at AOT time:
+
+* **prefill** — a 128-token chunk attends over the KV cache and appends its
+  own K/V at `offset`;
+* **decode** — the same with a 1-token block.
+
+All parameters travel as ONE flat f32 vector so the Rust runtime passes a
+single weights literal (and the checkpoint-engine benches treat the same
+buffer as the update payload).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.decode_attention import decode_attention
+
+# Model dimensions (fixed at AOT time; see DESIGN.md for the scaling note).
+VOCAB = 4096
+D_MODEL = 256
+LAYERS = 4
+HEADS = 4
+HEAD_DIM = 64
+MLP = 4 * D_MODEL
+T_MAX = 640
+T_PRE = 128
+EPS = 1e-5
+
+KV_SHAPE = (LAYERS, 2, HEADS, T_MAX, HEAD_DIM)
+KV_BYTES = LAYERS * 2 * HEADS * T_MAX * HEAD_DIM * 4
+KV_BYTES_PER_TOKEN = LAYERS * 2 * HEADS * HEAD_DIM * 4
+
+
+def param_specs():
+    """Fixed (name, shape) layout of the flat parameter vector."""
+    specs = [("tok_emb", (VOCAB, D_MODEL)), ("pos_emb", (T_MAX, D_MODEL))]
+    for l in range(LAYERS):
+        specs += [
+            (f"l{l}.ln1", (D_MODEL,)),
+            (f"l{l}.wq", (D_MODEL, D_MODEL)),
+            (f"l{l}.wk", (D_MODEL, D_MODEL)),
+            (f"l{l}.wv", (D_MODEL, D_MODEL)),
+            (f"l{l}.wo", (D_MODEL, D_MODEL)),
+            (f"l{l}.ln2", (D_MODEL,)),
+            (f"l{l}.w1", (D_MODEL, MLP)),
+            (f"l{l}.w2", (MLP, D_MODEL)),
+        ]
+    specs.append(("lnf", (D_MODEL,)))
+    return specs
+
+
+def _size(shape):
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+def param_count():
+    return sum(_size(s) for _, s in param_specs())
+
+
+def init_params(seed: int = 0):
+    """Deterministic init; returns the flat f32 vector."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in param_specs():
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "lnf")):
+            chunks.append(jnp.ones(shape, jnp.float32).ravel())
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            w = jax.random.normal(sub, shape, jnp.float32) * fan_in**-0.5
+            chunks.append(w.ravel().astype(jnp.float32))
+    return jnp.concatenate(chunks)
+
+
+def unflatten(flat):
+    """Split the flat vector back into named arrays (static offsets)."""
+    params = {}
+    off = 0
+    for name, shape in param_specs():
+        n = _size(shape)
+        params[name] = jax.lax.slice(flat, (off,), (off + n,)).reshape(shape)
+        off += n
+    return params
+
+
+def _rmsnorm(x, scale):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS) * scale
+
+
+def step(flat_params, tokens, kv, offset):
+    """One serving step: process `tokens` starting at global position
+    `offset`, updating the KV cache in-graph.
+
+    Args:
+      flat_params: ``[P]`` f32 — the whole model.
+      tokens: ``[Tq]`` int32 (Tq = T_PRE for prefill, 1 for decode).
+      kv: ``[LAYERS, 2, HEADS, T_MAX, HEAD_DIM]`` f32.
+      offset: scalar int32 — current sequence length.
+
+    Returns:
+      (next_token ``[] int32`` — greedy argmax at the last position,
+       kv_out — cache with this block's K/V inserted at ``offset``).
+    """
+    p = unflatten(flat_params)
+    tq = tokens.shape[0]
+    x = p["tok_emb"][tokens] + jax.lax.dynamic_slice(
+        p["pos_emb"], (offset, 0), (tq, D_MODEL)
+    )
+    for l in range(LAYERS):
+        h = _rmsnorm(x, p[f"l{l}.ln1"])
+        q = (h @ p[f"l{l}.wq"]).reshape(tq, HEADS, HEAD_DIM).transpose(1, 0, 2)
+        k = (h @ p[f"l{l}.wk"]).reshape(tq, HEADS, HEAD_DIM).transpose(1, 0, 2)
+        v = (h @ p[f"l{l}.wv"]).reshape(tq, HEADS, HEAD_DIM).transpose(1, 0, 2)
+        kv = jax.lax.dynamic_update_slice(kv, k[None, None], (l, 0, 0, offset, 0))
+        kv = jax.lax.dynamic_update_slice(kv, v[None, None], (l, 1, 0, offset, 0))
+        attn = decode_attention(q, kv[l, 0], kv[l, 1], offset)  # [H, Tq, Dh]
+        attn = attn.transpose(1, 0, 2).reshape(tq, D_MODEL)
+        x = x + attn @ p[f"l{l}.wo"]
+        h2 = _rmsnorm(x, p[f"l{l}.ln2"])
+        x = x + jax.nn.gelu(h2 @ p[f"l{l}.w1"]) @ p[f"l{l}.w2"]
+    xf = _rmsnorm(x[-1], p["lnf"])
+    logits = xf @ p["tok_emb"].T  # tied head, [VOCAB]
+    next_token = jnp.argmax(logits).astype(jnp.int32)
+    return next_token, kv
+
+
+def prefill(flat_params, tokens, kv, offset):
+    """Prefill entry point: `tokens` is a full T_PRE chunk."""
+    assert tokens.shape == (T_PRE,)
+    return step(flat_params, tokens, kv, offset)
+
+
+def decode(flat_params, token, kv, pos):
+    """Decode entry point: a single token."""
+    assert token.shape == (1,)
+    return step(flat_params, token, kv, pos)
+
+
+def empty_kv():
+    return jnp.zeros(KV_SHAPE, jnp.float32)

@@ -1,0 +1,140 @@
+"""L1 correctness: Pallas decode-attention kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes, block sizes, and offsets; targeted tests
+cover the serving-relevant shapes and the masking edge cases.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels.ref import ref_attention
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_inputs(h, tq, tmax, dh, start, dtype, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (h, tq, dh), dtype)
+    k = jax.random.normal(kk, (h, tmax, dh), dtype)
+    v = jax.random.normal(kv, (h, tmax, dh), dtype)
+    return q, k, v, jnp.int32(start)
+
+
+def check(h, tq, tmax, dh, start, dtype=jnp.float32, block_k=128, atol=1e-4, seed=0):
+    q, k, v, s = make_inputs(h, tq, tmax, dh, start, dtype, seed)
+    got = decode_attention(q, k, v, s, block_k=block_k)
+    want = ref_attention(q, k, v, s)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=atol, rtol=atol
+    )
+
+
+# ---- serving shapes ----
+
+
+def test_prefill_shape():
+    check(h=4, tq=128, tmax=640, dh=64, start=0)
+
+
+def test_prefill_mid_history():
+    check(h=4, tq=128, tmax=640, dh=64, start=256)
+
+
+def test_decode_shape():
+    check(h=4, tq=1, tmax=640, dh=64, start=639 - 0)
+
+
+def test_decode_first_token():
+    check(h=4, tq=1, tmax=640, dh=64, start=0)
+
+
+def test_last_block_exactly_fits():
+    check(h=4, tq=128, tmax=640, dh=64, start=512)
+
+
+# ---- edge cases ----
+
+
+def test_single_head():
+    check(h=1, tq=16, tmax=128, dh=32, start=5)
+
+
+def test_tiny_block_k():
+    check(h=2, tq=8, tmax=64, dh=16, start=3, block_k=16)
+
+
+def test_block_k_equals_tmax():
+    check(h=2, tq=8, tmax=128, dh=16, start=0, block_k=128)
+
+
+def test_non_multiple_tmax_rejected():
+    q, k, v, s = make_inputs(1, 1, 100, 16, 0, jnp.float32)
+    with pytest.raises(ValueError):
+        decode_attention(q, k, v, s, block_k=64)
+
+
+def test_bf16_tolerance():
+    check(h=2, tq=16, tmax=256, dh=32, start=17, dtype=jnp.bfloat16, atol=3e-2)
+
+
+def test_mask_blocks_future_keys():
+    """Keys beyond start+i must not influence the output: poisoning them
+    with huge values must not change anything."""
+    h, tq, tmax, dh, start = 2, 4, 128, 16, 10
+    q, k, v, s = make_inputs(h, tq, tmax, dh, start, jnp.float32)
+    out1 = decode_attention(q, k, v, s)
+    k2 = k.at[:, start + tq :, :].set(1e4)
+    v2 = v.at[:, start + tq :, :].set(-1e4)
+    out2 = decode_attention(q, k2, v2, s)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-5)
+
+
+def test_causality_within_block():
+    """Row i must see key start+i but not start+i+1."""
+    h, tq, tmax, dh = 1, 8, 64, 8
+    q, k, v, s = make_inputs(h, tq, tmax, dh, 0, jnp.float32, seed=3)
+    out = decode_attention(q, k, v, s)
+    # Changing key at position 7 must not affect rows 0..6.
+    k2 = k.at[:, 7, :].set(123.0)
+    out2 = decode_attention(q, k2, v, s)
+    np.testing.assert_allclose(
+        np.asarray(out[:, :7]), np.asarray(out2[:, :7]), atol=1e-5
+    )
+    assert not np.allclose(np.asarray(out[:, 7]), np.asarray(out2[:, 7]))
+
+
+# ---- hypothesis sweep ----
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(1, 4),
+    tq_pow=st.integers(0, 5),
+    nkb=st.integers(1, 5),
+    dh=st.sampled_from([8, 16, 32, 64]),
+    block_k=st.sampled_from([16, 32, 64, 128]),
+    start_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_sweep(h, tq_pow, nkb, dh, block_k, start_frac, seed):
+    tq = 1 << tq_pow  # 1..32
+    tmax = nkb * block_k
+    if tmax < tq:
+        tmax = ((tq + block_k - 1) // block_k) * block_k
+    start = int(start_frac * (tmax - tq))
+    check(h, tq, tmax, dh, start, block_k=block_k, seed=seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    dh=st.sampled_from([16, 32]),
+    start=st.integers(0, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_sweep(dh, start, seed):
+    check(h=2, tq=1, tmax=128, dh=dh, start=start, block_k=32, seed=seed)

@@ -1,0 +1,84 @@
+"""L2 correctness: TinyGPT shapes, KV-cache semantics, and the
+prefill/decode equivalence that the serving layer's cache reuse relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+PARAMS = model.init_params(0)
+
+
+def test_param_layout_consistent():
+    assert PARAMS.shape == (model.param_count(),)
+    p = model.unflatten(PARAMS)
+    assert p["tok_emb"].shape == (model.VOCAB, model.D_MODEL)
+    assert p["l3.w2"].shape == (model.MLP, model.D_MODEL)
+    # Unflatten must cover the vector exactly (no overlap / gap): sum check.
+    total = sum(int(np.prod(v.shape)) for v in p.values())
+    assert total == model.param_count()
+
+
+def test_init_is_deterministic():
+    a = model.init_params(0)
+    b = model.init_params(0)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = model.init_params(1)
+    assert not np.allclose(np.asarray(a), np.asarray(c))
+
+
+def test_prefill_shapes_and_kv_insertion():
+    tokens = jnp.arange(model.T_PRE, dtype=jnp.int32) % model.VOCAB
+    kv = model.empty_kv()
+    tok, kv2 = model.prefill(PARAMS, tokens, kv, jnp.int32(0))
+    assert tok.shape == ()
+    assert kv2.shape == model.KV_SHAPE
+    # KV must be written exactly for positions [0, T_PRE) and untouched after.
+    filled = np.asarray(kv2[:, :, :, : model.T_PRE, :])
+    assert np.abs(filled).sum() > 0
+    rest = np.asarray(kv2[:, :, :, model.T_PRE :, :])
+    assert np.abs(rest).sum() == 0
+
+
+def test_decode_appends_single_position():
+    tokens = jnp.arange(model.T_PRE, dtype=jnp.int32)
+    _, kv = model.prefill(PARAMS, tokens, model.empty_kv(), jnp.int32(0))
+    tok2, kv2 = model.decode(PARAMS, jnp.array([42], jnp.int32), kv, jnp.int32(model.T_PRE))
+    changed = np.asarray(kv2) != np.asarray(kv)
+    # Only the T_PRE-th position may change.
+    pos_changed = np.where(changed.any(axis=(0, 1, 2, 4)))[0]
+    np.testing.assert_array_equal(pos_changed, [model.T_PRE])
+    assert 0 <= int(tok2) < model.VOCAB
+
+
+def test_chunked_prefill_equals_fresh_history():
+    """Serving equivalence: prefilling chunk B on top of cached chunk A must
+    give the same next-token as prefilling [A; B] from scratch. This is the
+    property that makes HiCache-style KV reuse lossless."""
+    rng = np.random.RandomState(7)
+    a = jnp.asarray(rng.randint(0, model.VOCAB, model.T_PRE), jnp.int32)
+    b = jnp.asarray(rng.randint(0, model.VOCAB, model.T_PRE), jnp.int32)
+    # Path 1: two chunks with cache carried over.
+    _, kv1 = model.prefill(PARAMS, a, model.empty_kv(), jnp.int32(0))
+    t1, kv1b = model.prefill(PARAMS, b, kv1, jnp.int32(model.T_PRE))
+    # Path 2: same, but the cache for A was "fetched" (bitwise copy).
+    kv_fetched = jnp.asarray(np.asarray(kv1).copy())
+    t2, _ = model.prefill(PARAMS, b, kv_fetched, jnp.int32(model.T_PRE))
+    assert int(t1) == int(t2)
+    assert kv1b.shape == model.KV_SHAPE
+
+
+def test_greedy_decode_is_deterministic():
+    tokens = jnp.arange(model.T_PRE, dtype=jnp.int32)
+    t1, kv1 = model.prefill(PARAMS, tokens, model.empty_kv(), jnp.int32(0))
+    t2, kv2 = model.prefill(PARAMS, tokens, model.empty_kv(), jnp.int32(0))
+    assert int(t1) == int(t2)
+    np.testing.assert_array_equal(np.asarray(kv1), np.asarray(kv2))
+
+
+def test_kv_bytes_accounting():
+    assert model.KV_BYTES == int(np.prod(model.KV_SHAPE)) * 4
+    assert model.KV_BYTES_PER_TOKEN * model.T_MAX == model.KV_BYTES

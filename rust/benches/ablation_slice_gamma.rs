@@ -1,0 +1,66 @@
+//! Ablation — the two §4.2 design knobs the paper fixes by fiat:
+//!
+//! * **slice size** (64 KB default): "small enough that no single slice
+//!   holds a rail for long … large enough to amortize the enqueue and
+//!   completion costs";
+//! * **tolerance window γ** (0.05 default): γ=0 degenerates to strict
+//!   join-shortest-queue (no round-robin smoothing, maximal sensitivity to
+//!   β noise); large γ degenerates toward plain round-robin (state-blind).
+//!
+//! Both swept on the Fig-5 H2H workload.
+
+use std::sync::Arc;
+use std::time::Duration;
+use tent::bench::{self, TeBenchConfig, ThreadPair};
+use tent::cluster::Cluster;
+use tent::engine::{EngineConfig, TentEngine, TransferOp};
+use tent::segment::Location;
+use tent::util::{fmt_bw, fmt_bytes, fmt_ns};
+
+fn run(min_slice: u64, gamma: f64) -> (f64, u64) {
+    let cluster = Cluster::from_profile("h800_hgx").unwrap();
+    let mut cfg = EngineConfig::default();
+    cfg.min_slice = min_slice;
+    cfg.sched.gamma = gamma;
+    let engine = Arc::new(TentEngine::new(&cluster, cfg).unwrap());
+    let seg_len = 32u64 << 20;
+    let pairs: Vec<ThreadPair> = (0..2u8)
+        .map(|s| ThreadPair {
+            src: engine.register_segment(Location::host(0, s), seg_len).unwrap(),
+            dst: engine.register_segment(Location::host(1, s), seg_len).unwrap(),
+            seg_len,
+        })
+        .collect();
+    let r = bench::run(
+        &engine,
+        &pairs,
+        &TeBenchConfig {
+            block_size: 8 << 20,
+            batch_size: 1,
+            iters: 16,
+            warmup: 2,
+            op: TransferOp::Write,
+            time_limit: Duration::from_secs(25),
+        },
+    )
+    .unwrap();
+    (r.throughput(), r.latency.p99())
+}
+
+fn main() {
+    println!("== Ablation: slice size (gamma = 0.05) ==");
+    println!("{:<12} {:>12} {:>12}", "min_slice", "goodput", "p99");
+    for s in [16u64 << 10, 64 << 10, 256 << 10, 1 << 20, 4 << 20] {
+        let (bw, p99) = run(s, 0.05);
+        println!("{:<12} {:>12} {:>12}", fmt_bytes(s), fmt_bw(bw), fmt_ns(p99));
+    }
+    println!("\n== Ablation: tolerance window gamma (slice = 64 KiB) ==");
+    println!("{:<8} {:>12} {:>12}", "gamma", "goodput", "p99");
+    for g in [0.0, 0.02, 0.05, 0.2, 1.0] {
+        let (bw, p99) = run(64 << 10, g);
+        println!("{:<8} {:>12} {:>12}", g, fmt_bw(bw), fmt_ns(p99));
+    }
+    println!("\nexpected: tiny slices pay per-slice overhead; huge slices hold rails");
+    println!("too long (HoL) — 64-256 KiB is the sweet spot. gamma=0 is brittle to");
+    println!("estimator noise; gamma>=1 approaches state-blind RR.");
+}

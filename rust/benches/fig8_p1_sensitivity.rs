@@ -1,0 +1,60 @@
+//! Figure 8 — sensitivity to the tier-2 topology penalty P₁ (the paper's
+//! notation for the penalty separating tier-1 from tier-2 rails).
+//!
+//! Fig. 6 setup (cross-node GPU write), varying the penalty while holding
+//! everything else fixed. Paper: too large → degenerates to single-rail
+//! (Mooncake-TE-like); too small → overuses expensive tier-2 rails; best
+//! around P₁ = 3, and mis-setting degrades only modestly because the
+//! feedback loop corrects.
+
+use std::sync::Arc;
+use std::time::Duration;
+use tent::bench::{self, TeBenchConfig, ThreadPair};
+use tent::cluster::Cluster;
+use tent::engine::{EngineConfig, TentEngine, TransferOp};
+use tent::segment::Location;
+use tent::util::{fmt_bytes, fmt_ns};
+
+const P1S: [f64; 5] = [1.0, 1.5, 3.0, 8.0, 64.0];
+const BLOCKS: [u64; 4] = [1 << 20, 4 << 20, 16 << 20, 64 << 20];
+
+fn bench_one(p1: f64, block: u64) -> tent::Result<u64> {
+    let cluster = Cluster::from_profile("h800_hgx")?;
+    let mut cfg = EngineConfig::default();
+    cfg.sched.tier_penalties = [1.0, p1, f64::INFINITY];
+    let engine = Arc::new(TentEngine::new(&cluster, cfg)?);
+    let seg_len = (block * 4).max(16 << 20);
+    let src = engine.register_segment(Location::device(0, 0), seg_len)?;
+    let dst = engine.register_segment(Location::device(1, 0), seg_len)?;
+    let pairs = [ThreadPair { src, dst, seg_len }];
+    let iters = ((96u64 << 20) / block).clamp(6, 64) as usize;
+    let bcfg = TeBenchConfig {
+        block_size: block,
+        batch_size: 1,
+        iters,
+        warmup: 2,
+        op: TransferOp::Read,
+        time_limit: Duration::from_secs(20),
+    };
+    let r = bench::run(&engine, &pairs, &bcfg)?;
+    Ok(r.latency.p99())
+}
+
+fn main() {
+    println!("== Figure 8: GPU-to-GPU P99 read latency vs tier-2 penalty P1 ==");
+    print!("{:<10}", "block");
+    for p1 in P1S {
+        print!(" {:>12}", format!("P1={p1}"));
+    }
+    println!();
+    for block in BLOCKS {
+        print!("{:<10}", fmt_bytes(block));
+        for p1 in P1S {
+            let p99 = bench_one(p1, block).unwrap();
+            print!(" {:>12}", fmt_ns(p99));
+        }
+        println!();
+    }
+    println!("\nexpected shape: large P1 -> single-rail latency at big blocks;");
+    println!("tiny P1 -> overuse of tier-2; best around P1=3 (the default).");
+}

@@ -1,0 +1,211 @@
+//! TEBench — the §5.1.3 microbenchmark harness (NIXLBench-inspired).
+//!
+//! Issues repeated synchronous batched transfer requests from multiple
+//! submission threads with configurable block size, batch size, and thread
+//! count; reports goodput and completion-latency percentiles plus per-rail
+//! byte counters. Every figure bench (`rust/benches/fig*.rs`) is a thin
+//! driver over this module.
+
+use crate::engine::{TentEngine, TransferOp, TransferReq};
+use crate::segment::SegmentId;
+use crate::util::clock;
+use crate::util::hist::Histogram;
+use crate::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One submission thread's endpoints.
+#[derive(Clone, Copy, Debug)]
+pub struct ThreadPair {
+    pub src: SegmentId,
+    pub dst: SegmentId,
+    /// Segment capacity (offsets cycle within it).
+    pub seg_len: u64,
+}
+
+/// Bench knobs.
+#[derive(Clone, Debug)]
+pub struct TeBenchConfig {
+    pub block_size: u64,
+    /// Transfers per submitted batch.
+    pub batch_size: usize,
+    /// Iterations (batches) per thread, measured.
+    pub iters: usize,
+    /// Warmup batches per thread (not measured).
+    pub warmup: usize,
+    pub op: TransferOp,
+    /// Overall wall-clock cap; threads stop early when exceeded.
+    pub time_limit: Duration,
+}
+
+impl Default for TeBenchConfig {
+    fn default() -> Self {
+        TeBenchConfig {
+            block_size: 1 << 20,
+            batch_size: 1,
+            iters: 32,
+            warmup: 2,
+            op: TransferOp::Write,
+            time_limit: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Aggregated result.
+pub struct TeBenchResult {
+    pub bytes_moved: u64,
+    pub wall_ns: u64,
+    /// Per-batch completion latency (ns).
+    pub latency: Histogram,
+    pub batches: u64,
+    pub failed_batches: u64,
+}
+
+impl TeBenchResult {
+    /// Goodput in bytes/sec (sim units).
+    pub fn throughput(&self) -> f64 {
+        self.bytes_moved as f64 / (self.wall_ns as f64 / 1e9)
+    }
+    /// Paper-style Gbps (sim units × 8).
+    pub fn gbps(&self) -> f64 {
+        self.throughput() * 8.0 / 1e9
+    }
+}
+
+/// Run the bench: each `pairs[i]` gets one submission thread.
+pub fn run(engine: &Arc<TentEngine>, pairs: &[ThreadPair], cfg: &TeBenchConfig) -> Result<TeBenchResult> {
+    let latency = Arc::new(Histogram::new());
+    let bytes = Arc::new(AtomicU64::new(0));
+    let batches = Arc::new(AtomicU64::new(0));
+    let failed = Arc::new(AtomicU64::new(0));
+    let deadline = clock::now_ns() + cfg.time_limit.as_nanos() as u64;
+
+    let start = clock::now_ns();
+    std::thread::scope(|scope| {
+        for pair in pairs {
+            let engine = Arc::clone(engine);
+            let latency = Arc::clone(&latency);
+            let bytes = Arc::clone(&bytes);
+            let batches = Arc::clone(&batches);
+            let failed = Arc::clone(&failed);
+            let cfg = cfg.clone();
+            let pair = *pair;
+            scope.spawn(move || {
+                let slots = (pair.seg_len / cfg.block_size).max(1);
+                let mut slot = 0u64;
+                let mut make_batch = |measure: bool| {
+                    let reqs: Vec<TransferReq> = (0..cfg.batch_size)
+                        .map(|_| {
+                            let off = (slot % slots) * cfg.block_size;
+                            slot += 1;
+                            match cfg.op {
+                                TransferOp::Write => {
+                                    TransferReq::write(pair.src, off, pair.dst, off, cfg.block_size)
+                                }
+                                TransferOp::Read => {
+                                    TransferReq::read(pair.src, off, pair.dst, off, cfg.block_size)
+                                }
+                            }
+                        })
+                        .collect();
+                    let t0 = clock::now_ns();
+                    let b = engine.allocate_batch();
+                    let ok = engine.submit(b, &reqs).is_ok()
+                        && engine.wait(b, Duration::from_secs(120)).is_ok();
+                    let _ = engine.release_batch(b);
+                    if measure {
+                        let dt = clock::now_ns() - t0;
+                        latency.record(dt);
+                        batches.fetch_add(1, Ordering::Relaxed);
+                        if ok {
+                            bytes.fetch_add(
+                                cfg.block_size * cfg.batch_size as u64,
+                                Ordering::Relaxed,
+                            );
+                        } else {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                };
+                for _ in 0..cfg.warmup {
+                    make_batch(false);
+                }
+                for _ in 0..cfg.iters {
+                    if clock::now_ns() > deadline {
+                        break;
+                    }
+                    make_batch(true);
+                }
+            });
+        }
+    });
+    let wall_ns = clock::now_ns() - start;
+
+    Ok(TeBenchResult {
+        bytes_moved: bytes.load(Ordering::Relaxed),
+        wall_ns,
+        latency: Arc::try_unwrap(latency).unwrap_or_else(|a| {
+            let h = Histogram::new();
+            h.merge(&a);
+            h
+        }),
+        batches: batches.load(Ordering::Relaxed),
+        failed_batches: failed.load(Ordering::Relaxed),
+    })
+}
+
+/// Pretty row formatting used by the figure benches.
+pub fn fmt_row(label: &str, r: &TeBenchResult) -> String {
+    format!(
+        "{:<14} {:>10} {:>12} {:>12} {:>12} {:>8}",
+        label,
+        crate::util::fmt_bw(r.throughput()),
+        crate::util::fmt_ns(r.latency.p50()),
+        crate::util::fmt_ns(r.latency.p90()),
+        crate::util::fmt_ns(r.latency.p99()),
+        r.batches,
+    )
+}
+
+pub fn header() -> String {
+    format!(
+        "{:<14} {:>10} {:>12} {:>12} {:>12} {:>8}",
+        "config", "goodput", "p50", "p90", "p99", "batches"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::engine::EngineConfig;
+    use crate::segment::Location;
+
+    #[test]
+    fn tebench_moves_expected_bytes() {
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let e = Arc::new(TentEngine::new(&c, EngineConfig::default()).unwrap());
+        let len = 4u64 << 20;
+        let pairs: Vec<ThreadPair> = (0..2)
+            .map(|i| {
+                let src = e.register_segment(Location::host(0, i as u8 % 2), len).unwrap();
+                let dst = e.register_segment(Location::host(1, i as u8 % 2), len).unwrap();
+                ThreadPair { src, dst, seg_len: len }
+            })
+            .collect();
+        let cfg = TeBenchConfig {
+            block_size: 256 << 10,
+            batch_size: 2,
+            iters: 4,
+            warmup: 1,
+            ..Default::default()
+        };
+        let r = run(&e, &pairs, &cfg).unwrap();
+        assert_eq!(r.failed_batches, 0);
+        assert_eq!(r.batches, 2 * 4);
+        assert_eq!(r.bytes_moved, 2 * 4 * 2 * (256 << 10));
+        assert!(r.throughput() > 0.0);
+        assert!(r.latency.p99() >= r.latency.p50());
+    }
+}

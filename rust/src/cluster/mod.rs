@@ -1,0 +1,71 @@
+//! The simulated cluster: topology + fabric + segment manager + transports,
+//! wired together. One `Cluster` hosts all the "nodes" of a deployment; the
+//! engine and benches borrow it.
+
+use crate::fabric::{Fabric, FabricConfig};
+use crate::segment::SegmentManager;
+use crate::topology::profile::build_profile;
+use crate::topology::Topology;
+use crate::transport::TransportRegistry;
+use crate::Result;
+use std::sync::Arc;
+
+pub struct Cluster {
+    pub topo: Arc<Topology>,
+    pub fabric: Arc<Fabric>,
+    pub segments: Arc<SegmentManager>,
+    pub transports: Arc<TransportRegistry>,
+}
+
+impl Cluster {
+    /// Build a cluster from a named profile with the profile's default node
+    /// count (2 — enough for inter-node paths).
+    pub fn from_profile(name: &str) -> Result<Cluster> {
+        Cluster::from_profile_nodes(name, 2, FabricConfig::default())
+    }
+
+    /// Build with explicit node count and fabric config.
+    pub fn from_profile_nodes(name: &str, nodes: u16, cfg: FabricConfig) -> Result<Cluster> {
+        Self::from_topology(Arc::new(build_profile(name, nodes)?), cfg)
+    }
+
+    /// Build from a custom JSON profile file (see `topology::json_profile`).
+    pub fn from_profile_file(path: impl AsRef<std::path::Path>, cfg: FabricConfig) -> Result<Cluster> {
+        Self::from_topology(
+            Arc::new(crate::topology::json_profile::load_profile_file(path.as_ref())?),
+            cfg,
+        )
+    }
+
+    /// Build from an already-constructed topology.
+    pub fn from_topology(topo: Arc<Topology>, cfg: FabricConfig) -> Result<Cluster> {
+        let fabric = Arc::new(Fabric::new(&topo, cfg));
+        let segments = Arc::new(SegmentManager::new());
+        let transports = Arc::new(TransportRegistry::load_all(&topo, Arc::clone(&segments)));
+        Ok(Cluster {
+            topo,
+            fabric,
+            segments,
+            transports,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_builds_and_exposes_parts() {
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        assert_eq!(c.topo.nodes.len(), 2);
+        assert_eq!(c.fabric.rails.len(), c.topo.rails.len());
+        assert!(!c.transports.all().is_empty());
+    }
+
+    #[test]
+    fn custom_node_count() {
+        let c = Cluster::from_profile_nodes("legacy_tcp", 3, FabricConfig::default()).unwrap();
+        assert_eq!(c.topo.nodes.len(), 3);
+    }
+}

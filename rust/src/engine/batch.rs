@@ -1,0 +1,296 @@
+//! Batch control blocks with hierarchical atomic completion counters (§4.4).
+//!
+//! Applications observe only coarse counters (batch X has N transfers
+//! remaining); workers decrement a per-transfer slice counter, and the last
+//! slice of a transfer decrements the batch counter — two levels, all
+//! lock-free on the hot path, with a condvar only for the final wakeup.
+
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+/// Handle to a batch of transfers.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct BatchId(pub u64);
+
+impl std::fmt::Display for BatchId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "batch{}", self.0)
+    }
+}
+
+/// Completion status of a batch.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct BatchStatus {
+    pub total_transfers: u64,
+    pub remaining_transfers: u64,
+    pub failed_transfers: u64,
+}
+
+impl BatchStatus {
+    pub fn done(&self) -> bool {
+        self.remaining_transfers == 0
+    }
+    pub fn ok(&self) -> bool {
+        self.done() && self.failed_transfers == 0
+    }
+}
+
+/// Top level of the counter hierarchy: one per allocated batch.
+pub struct BatchState {
+    pub id: BatchId,
+    total: AtomicU64,
+    remaining: AtomicU64,
+    failed: AtomicU64,
+    mu: Mutex<()>,
+    cv: Condvar,
+}
+
+impl BatchState {
+    fn new(id: BatchId) -> Self {
+        BatchState {
+            id,
+            total: AtomicU64::new(0),
+            remaining: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            mu: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Register `n` more transfers in this batch (called at submit).
+    pub fn add_transfers(&self, n: u64) {
+        self.total.fetch_add(n, Ordering::Relaxed);
+        self.remaining.fetch_add(n, Ordering::Release);
+    }
+
+    /// Called by the datapath when a transfer's last slice completes.
+    pub fn complete_transfer(&self, ok: bool) {
+        if !ok {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = self.mu.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+
+    pub fn status(&self) -> BatchStatus {
+        BatchStatus {
+            total_transfers: self.total.load(Ordering::Relaxed),
+            remaining_transfers: self.remaining.load(Ordering::Acquire),
+            failed_transfers: self.failed.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Block until all transfers submitted so far complete or `timeout`.
+    pub fn wait(&self, timeout: Duration) -> Result<BatchStatus> {
+        let deadline = Instant::now() + timeout;
+        let mut guard = self.mu.lock().unwrap();
+        loop {
+            let st = self.status();
+            if st.done() {
+                return Ok(st);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(Error::Timeout(self.id.0));
+            }
+            let (g, _timeout_res) = self
+                .cv
+                .wait_timeout(guard, deadline - now)
+                .map_err(|_| Error::Shutdown)?;
+            guard = g;
+        }
+    }
+}
+
+/// Second level: one per logical transfer, counting its slices.
+pub struct TransferState {
+    pub batch: Arc<BatchState>,
+    remaining_slices: AtomicU64,
+    failed: AtomicBool,
+}
+
+impl TransferState {
+    pub fn new(batch: Arc<BatchState>, slices: u64) -> Arc<TransferState> {
+        Arc::new(TransferState {
+            batch,
+            remaining_slices: AtomicU64::new(slices),
+            failed: AtomicBool::new(false),
+        })
+    }
+
+    /// Mark the whole transfer failed (retries exhausted on some slice).
+    pub fn mark_failed(&self) {
+        self.failed.store(true, Ordering::Release);
+    }
+
+    pub fn is_failed(&self) -> bool {
+        self.failed.load(Ordering::Acquire)
+    }
+
+    /// One slice finished (successfully or after giving up). Returns true if
+    /// this was the transfer's last slice.
+    pub fn complete_slice(&self) -> bool {
+        if self.remaining_slices.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.batch.complete_transfer(!self.is_failed());
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn remaining(&self) -> u64 {
+        self.remaining_slices.load(Ordering::Acquire)
+    }
+}
+
+/// Registry of live batches.
+pub struct BatchTable {
+    next: AtomicU64,
+    map: RwLock<HashMap<u64, Arc<BatchState>>>,
+}
+
+impl Default for BatchTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BatchTable {
+    pub fn new() -> Self {
+        BatchTable {
+            next: AtomicU64::new(1),
+            map: RwLock::new(HashMap::new()),
+        }
+    }
+
+    pub fn allocate(&self) -> BatchId {
+        let id = BatchId(self.next.fetch_add(1, Ordering::Relaxed));
+        self.map
+            .write()
+            .unwrap()
+            .insert(id.0, Arc::new(BatchState::new(id)));
+        id
+    }
+
+    pub fn get(&self, id: BatchId) -> Result<Arc<BatchState>> {
+        self.map
+            .read()
+            .unwrap()
+            .get(&id.0)
+            .cloned()
+            .ok_or(Error::UnknownBatch(id.0))
+    }
+
+    /// Free a completed batch's control block.
+    pub fn release(&self, id: BatchId) -> Result<()> {
+        self.map
+            .write()
+            .unwrap()
+            .remove(&id.0)
+            .map(|_| ())
+            .ok_or(Error::UnknownBatch(id.0))
+    }
+
+    pub fn live(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn batch_lifecycle() {
+        let t = BatchTable::new();
+        let id = t.allocate();
+        let b = t.get(id).unwrap();
+        b.add_transfers(2);
+        assert!(!b.status().done());
+        b.complete_transfer(true);
+        b.complete_transfer(true);
+        let st = b.status();
+        assert!(st.ok());
+        assert_eq!(st.total_transfers, 2);
+        t.release(id).unwrap();
+        assert!(t.get(id).is_err());
+    }
+
+    #[test]
+    fn failed_transfer_counted() {
+        let t = BatchTable::new();
+        let b = t.get(t.allocate()).unwrap();
+        b.add_transfers(3);
+        b.complete_transfer(true);
+        b.complete_transfer(false);
+        b.complete_transfer(true);
+        let st = b.status();
+        assert!(st.done());
+        assert!(!st.ok());
+        assert_eq!(st.failed_transfers, 1);
+    }
+
+    #[test]
+    fn hierarchical_slice_counting() {
+        let t = BatchTable::new();
+        let b = t.get(t.allocate()).unwrap();
+        b.add_transfers(1);
+        let tr = TransferState::new(Arc::clone(&b), 4);
+        assert!(!tr.complete_slice());
+        assert!(!tr.complete_slice());
+        assert!(!tr.complete_slice());
+        assert!(!b.status().done());
+        assert!(tr.complete_slice()); // last slice completes the transfer
+        assert!(b.status().ok());
+    }
+
+    #[test]
+    fn transfer_failure_propagates_to_batch() {
+        let t = BatchTable::new();
+        let b = t.get(t.allocate()).unwrap();
+        b.add_transfers(1);
+        let tr = TransferState::new(Arc::clone(&b), 2);
+        tr.mark_failed();
+        tr.complete_slice();
+        tr.complete_slice();
+        let st = b.status();
+        assert!(st.done() && !st.ok());
+    }
+
+    #[test]
+    fn wait_blocks_until_done() {
+        let t = BatchTable::new();
+        let b = t.get(t.allocate()).unwrap();
+        b.add_transfers(1);
+        let b2 = Arc::clone(&b);
+        let h = thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            b2.complete_transfer(true);
+        });
+        let st = b.wait(Duration::from_secs(5)).unwrap();
+        assert!(st.ok());
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn wait_times_out() {
+        let t = BatchTable::new();
+        let b = t.get(t.allocate()).unwrap();
+        b.add_transfers(1);
+        let e = b.wait(Duration::from_millis(20));
+        assert!(matches!(e, Err(Error::Timeout(_))));
+    }
+
+    #[test]
+    fn empty_batch_is_immediately_done() {
+        let t = BatchTable::new();
+        let b = t.get(t.allocate()).unwrap();
+        assert!(b.wait(Duration::from_millis(1)).unwrap().ok());
+    }
+}

@@ -1,0 +1,133 @@
+//! Shared engine state referenced by submission threads, rail workers, and
+//! the maintenance thread.
+
+use super::datapath::Datapath;
+use super::sched::{SchedCtx, SchedulerState};
+use super::telemetry::EngineStats;
+use crate::fabric::Fabric;
+use crate::policy::SlicePolicy;
+use crate::segment::SegmentManager;
+use crate::topology::Topology;
+use crate::transport::TransportRegistry;
+use std::sync::atomic::AtomicBool;
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+/// Engine tunables. Defaults follow the paper (§4.2): 64 KB minimum slice,
+/// γ = 0.05, P = {1, 3, ∞}, periodic reset, sub-50 ms probing.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Scheduling policy (TENT or a baseline).
+    pub policy: crate::policy::PolicyKind,
+    /// Minimum slice size (bytes). Paper default: 64 KB.
+    pub min_slice: u64,
+    /// Cap on slices per transfer (bounds control-plane overhead).
+    pub max_slices: usize,
+    /// Algorithm-1 parameters (γ, penalties, EWMA α, ω).
+    pub sched: super::sched::SchedParams,
+    /// Periodic scheduler state reset (paper: ~30 s; benches use shorter).
+    pub reset_interval: Duration,
+    /// Heartbeat probing cadence for excluded rails.
+    pub probe_interval: Duration,
+    /// Per-slice retry budget before the transfer is failed.
+    pub max_retries: u32,
+    /// Capacity of each rail's MPSC ring.
+    pub ring_capacity: usize,
+    /// Telemetry exclusion threshold: exclude a rail whose β1 exceeds this
+    /// multiple of the fleet median (∞ disables).
+    pub degrade_exclude_factor: f64,
+    /// Spawn the maintenance (prober/reset) thread.
+    pub maintenance: bool,
+    /// PRNG seed for jitter streams (deterministic runs).
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            policy: crate::policy::PolicyKind::Tent,
+            min_slice: 64 << 10,
+            max_slices: 512,
+            sched: super::sched::SchedParams::default(),
+            reset_interval: Duration::from_secs(30),
+            probe_interval: Duration::from_millis(20),
+            max_retries: 4,
+            ring_capacity: 4096,
+            degrade_exclude_factor: f64::INFINITY,
+            maintenance: true,
+            seed: 0x7E27,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Convenience: same engine, different policy (for baseline benches).
+    pub fn with_policy(kind: crate::policy::PolicyKind) -> Self {
+        EngineConfig {
+            policy: kind,
+            ..Default::default()
+        }
+    }
+}
+
+/// State shared by every engine thread.
+pub struct EngineCore {
+    pub topo: Arc<Topology>,
+    pub fabric: Arc<Fabric>,
+    pub segments: Arc<SegmentManager>,
+    pub transports: Arc<TransportRegistry>,
+    pub config: EngineConfig,
+    pub policy: Box<dyn SlicePolicy>,
+    pub sched: SchedulerState,
+    pub batches: super::batch::BatchTable,
+    pub stats: EngineStats,
+    pub shutdown: AtomicBool,
+    datapath: OnceLock<Datapath>,
+}
+
+impl EngineCore {
+    pub fn new(
+        topo: Arc<Topology>,
+        fabric: Arc<Fabric>,
+        segments: Arc<SegmentManager>,
+        transports: Arc<TransportRegistry>,
+        config: EngineConfig,
+    ) -> Self {
+        let policy = crate::policy::make_policy(config.policy);
+        let sched = SchedulerState::new(topo.rails.len(), config.sched.clone());
+        EngineCore {
+            topo,
+            fabric,
+            segments,
+            transports,
+            config,
+            policy,
+            sched,
+            batches: super::batch::BatchTable::new(),
+            stats: EngineStats::default(),
+            shutdown: AtomicBool::new(false),
+            datapath: OnceLock::new(),
+        }
+    }
+
+    pub(crate) fn install_datapath(&self, dp: Datapath) {
+        if self.datapath.set(dp).is_err() {
+            panic!("datapath installed twice");
+        }
+    }
+
+    #[inline]
+    pub(crate) fn datapath(&self) -> &Datapath {
+        self.datapath.get().expect("datapath not installed")
+    }
+
+    /// Policy context view.
+    #[inline]
+    pub(crate) fn ctx(&self) -> SchedCtx<'_> {
+        SchedCtx {
+            sched: &self.sched,
+            fabric: &self.fabric,
+            topo: &self.topo,
+        }
+    }
+}

@@ -1,0 +1,606 @@
+//! The TENT engine (§3–§4): declarative batch-transfer API over the
+//! three-phase execution pipeline.
+//!
+//! * **Phase 1** (`plan`) — dynamic orchestration: per-request route
+//!   enumeration across every loaded transport, tier classification, staged
+//!   route synthesis.
+//! * **Phase 2** (`sched` + `policy::TentPolicy`) — telemetry-driven slice
+//!   spraying: Algorithm 1 with EWMA feedback.
+//! * **Phase 3** (`resilience`) — dual-layer self-healing: per-slice
+//!   rerouting and backend substitution inside the data plane.
+//! * `datapath` — the §4.4 lock-free MPSC rings and rail workers.
+//!
+//! ```no_run
+//! use tent::cluster::Cluster;
+//! use tent::engine::{TentEngine, EngineConfig, TransferReq};
+//! use tent::segment::Location;
+//! # fn main() -> tent::Result<()> {
+//! let cluster = Cluster::from_profile("h800_hgx")?;
+//! let engine = TentEngine::new(&cluster, EngineConfig::default())?;
+//! let src = engine.register_segment(Location::host(0, 0), 1 << 20)?;
+//! let dst = engine.register_segment(Location::host(1, 0), 1 << 20)?;
+//! let batch = engine.allocate_batch();
+//! engine.submit(batch, &[TransferReq::write(src, 0, dst, 0, 1 << 20)])?;
+//! engine.wait(batch, std::time::Duration::from_secs(10))?;
+//! # Ok(()) }
+//! ```
+
+pub mod batch;
+pub mod core;
+pub mod datapath;
+pub mod plan;
+pub mod resilience;
+pub mod sched;
+pub mod slice;
+pub mod telemetry;
+
+pub use batch::{BatchId, BatchStatus};
+pub use core::{EngineConfig, EngineCore};
+
+use crate::cluster::Cluster;
+use crate::segment::{Location, Segment, SegmentId};
+use crate::topology::Topology;
+use crate::util::clock;
+use crate::{Error, Result};
+use batch::TransferState;
+use slice::SliceDesc;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+use telemetry::EngineStats;
+
+/// Direction of a declared transfer (recorded for symmetry with the paper's
+/// API; both directions execute as src→dst byte movement).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TransferOp {
+    /// Pull bytes from `src` (typically remote) into `dst`.
+    Read,
+    /// Push bytes from `src` into `dst` (typically remote).
+    Write,
+}
+
+/// A declared transfer: pure intent — segments, offsets, length. No
+/// transport binding (§3.1).
+#[derive(Clone, Copy, Debug)]
+pub struct TransferReq {
+    pub op: TransferOp,
+    pub src: SegmentId,
+    pub src_off: u64,
+    pub dst: SegmentId,
+    pub dst_off: u64,
+    pub len: u64,
+}
+
+impl TransferReq {
+    pub fn write(src: SegmentId, src_off: u64, dst: SegmentId, dst_off: u64, len: u64) -> Self {
+        TransferReq {
+            op: TransferOp::Write,
+            src,
+            src_off,
+            dst,
+            dst_off,
+            len,
+        }
+    }
+    pub fn read(src: SegmentId, src_off: u64, dst: SegmentId, dst_off: u64, len: u64) -> Self {
+        TransferReq {
+            op: TransferOp::Read,
+            src,
+            src_off,
+            dst,
+            dst_off,
+            len,
+        }
+    }
+}
+
+/// The engine: owns the worker threads; cheap to share behind `Arc`.
+pub struct TentEngine {
+    core: Arc<EngineCore>,
+    workers: Vec<JoinHandle<()>>,
+    maint: Option<JoinHandle<()>>,
+}
+
+impl TentEngine {
+    /// Bring up an engine over a cluster: load backends, build the
+    /// scheduler, spawn one worker per rail (+ maintenance).
+    pub fn new(cluster: &Cluster, config: EngineConfig) -> Result<TentEngine> {
+        let maintenance = config.maintenance;
+        let ring_capacity = config.ring_capacity;
+        let seed = config.seed;
+        let core = Arc::new(EngineCore::new(
+            Arc::clone(&cluster.topo),
+            Arc::clone(&cluster.fabric),
+            Arc::clone(&cluster.segments),
+            Arc::clone(&cluster.transports),
+            config,
+        ));
+        let (dp, workers) = datapath::spawn_workers(&core, ring_capacity, seed);
+        core.install_datapath(dp);
+        let maint = maintenance.then(|| resilience::spawn_maintenance(&core));
+        Ok(TentEngine {
+            core,
+            workers,
+            maint,
+        })
+    }
+
+    // ---- segment management (§3.1) ----
+
+    /// Register a memory segment (host DRAM or sim device HBM).
+    pub fn register_segment(&self, loc: Location, len: u64) -> Result<SegmentId> {
+        Ok(self.core.segments.register_memory(loc, len)?.id)
+    }
+
+    /// Register a file-backed (storage) segment.
+    pub fn register_file_segment(&self, loc: Location, len: u64) -> Result<SegmentId> {
+        Ok(self.core.segments.register_file(loc, len)?.id)
+    }
+
+    /// Resolve a segment for direct data access (examples/tests).
+    pub fn segment(&self, id: SegmentId) -> Result<Arc<Segment>> {
+        self.core.segments.get(id)
+    }
+
+    pub fn unregister_segment(&self, id: SegmentId) -> Result<()> {
+        self.core.segments.unregister(id)
+    }
+
+    // ---- batch API (§3.3) ----
+
+    /// Allocate a batch control block.
+    pub fn allocate_batch(&self) -> BatchId {
+        EngineStats::bump(&self.core.stats.batches_allocated);
+        self.core.batches.allocate()
+    }
+
+    /// Submit transfers into a batch. Returns once every slice is planned
+    /// and enqueued (the application thread never blocks on hardware).
+    pub fn submit(&self, batch: BatchId, reqs: &[TransferReq]) -> Result<()> {
+        if self.core.shutdown.load(Ordering::Acquire) {
+            return Err(Error::Shutdown);
+        }
+        let core = &self.core;
+        let b = core.batches.get(batch)?;
+        b.add_transfers(reqs.len() as u64);
+        let mut first_err: Option<Error> = None;
+        for req in reqs {
+            EngineStats::bump(&core.stats.transfers_submitted);
+            core.stats
+                .bytes_submitted
+                .fetch_add(req.len, Ordering::Relaxed);
+            match self.submit_one(&b, req) {
+                Ok(()) => {}
+                Err(e) => {
+                    // Keep counters consistent: the transfer completes failed.
+                    b.complete_transfer(false);
+                    log::warn!("transfer submit failed: {e}");
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    fn submit_one(&self, b: &Arc<batch::BatchState>, req: &TransferReq) -> Result<()> {
+        let core = &self.core;
+        let src = core.segments.get(req.src)?;
+        let dst = core.segments.get(req.dst)?;
+        src.check(req.src_off, req.len)?;
+        dst.check(req.dst_off, req.len)?;
+        if req.len == 0 {
+            b.complete_transfer(true);
+            return Ok(());
+        }
+
+        // Phase 1: plan (full candidate pool), then let the policy shape it
+        // (baselines emulate their static binding here).
+        let mut plan = plan::build_plan(&core.transports, &core.topo, &src, &dst, req.len)?;
+        core.policy.shape_plan(&mut plan, &src, &dst, &core.topo);
+        if plan.candidates.is_empty() {
+            return Err(Error::NoEligibleDevice("plan shaped to empty".into()));
+        }
+        if plan.staged {
+            EngineStats::bump(&core.stats.staged_plans);
+        }
+        let plan = Arc::new(plan);
+
+        // Slice decomposition (§4.2).
+        let spans = slice::decompose(req.len, core.config.min_slice, core.config.max_slices);
+        let transfer = TransferState::new(Arc::clone(b), spans.len() as u64);
+
+        for (off, len) in spans {
+            let s = SliceDesc {
+                src: Arc::clone(&src),
+                src_off: req.src_off + off,
+                dst: Arc::clone(&dst),
+                dst_off: req.dst_off + off,
+                len,
+                cand_idx: 0,
+                predicted_ns: 0.0,
+                serial_ns: 0.0,
+                enqueue_ns: 0,
+                attempt: 0,
+                plan: Arc::clone(&plan),
+                transfer: Arc::clone(&transfer),
+            };
+            if let Err(e) = self.dispatch(s) {
+                // Could not place this slice at all: fail the transfer but
+                // keep the slice ledger balanced.
+                transfer.mark_failed();
+                transfer.complete_slice();
+                EngineStats::bump(&core.stats.permanent_failures);
+                log::warn!("dispatch failed: {e}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Phase 2 for one slice: policy pick + queue accounting + enqueue.
+    fn dispatch(&self, mut s: SliceDesc) -> Result<()> {
+        let core = &self.core;
+        let ctx = core.ctx();
+        let failover = core.policy.failover();
+        // Candidate viability: TENT-style policies skip excluded/dead rails;
+        // state-blind baselines see the raw (shaped) set, faithfully hitting
+        // dead paths.
+        let viable: Vec<usize> = (0..s.plan.candidates.len())
+            .filter(|&i| {
+                if !failover {
+                    return true;
+                }
+                let rail = s.plan.candidates[i].rail;
+                !core.sched.is_excluded(rail)
+                    && core.fabric.rail(rail).health() != crate::fabric::RailHealth::Failed
+            })
+            .collect();
+        let picked = core
+            .policy
+            .pick(&s.plan, &viable, s.len, &ctx)
+            .or_else(|| {
+                // Everything excluded: Algorithm-1 line 2 would error; the
+                // resilience layer instead tries any live rail.
+                if failover {
+                    (0..s.plan.candidates.len()).find(|&i| {
+                        core.fabric.rail(s.plan.candidates[i].rail).health()
+                            != crate::fabric::RailHealth::Failed
+                    })
+                } else {
+                    None
+                }
+            })
+            .ok_or_else(|| Error::NoEligibleDevice("all candidates unavailable".into()))?;
+
+        s.cand_idx = picked;
+        let cand = &s.plan.candidates[picked];
+        let (pred, serial) = core.sched.predict_ns(&core.fabric, cand.rail, s.len, cand.bw);
+        s.predicted_ns = pred;
+        s.serial_ns = serial;
+        s.enqueue_ns = clock::now_ns();
+        core.sched.add_queued(&core.fabric, cand.rail, s.len); // Alg. 1 line 11
+        EngineStats::bump(&core.stats.slices_dispatched);
+        core.datapath().enqueue(core, s)
+    }
+
+    /// Non-blocking batch status query.
+    pub fn status(&self, batch: BatchId) -> Result<BatchStatus> {
+        Ok(self.core.batches.get(batch)?.status())
+    }
+
+    /// Block until the batch completes; single completion event (§3.3).
+    pub fn wait(&self, batch: BatchId, timeout: Duration) -> Result<BatchStatus> {
+        let st = self.core.batches.get(batch)?.wait(timeout)?;
+        if !st.ok() {
+            return Err(Error::TransferFailed(format!(
+                "{batch}: {}/{} transfers failed",
+                st.failed_transfers, st.total_transfers
+            )));
+        }
+        Ok(st)
+    }
+
+    /// Wait without treating failed transfers as `Err` (benches observing
+    /// baseline failure behaviour use this).
+    pub fn wait_any(&self, batch: BatchId, timeout: Duration) -> Result<BatchStatus> {
+        self.core.batches.get(batch)?.wait(timeout)
+    }
+
+    /// Release a batch control block.
+    pub fn release_batch(&self, batch: BatchId) -> Result<()> {
+        self.core.batches.release(batch)
+    }
+
+    /// Convenience: submit one transfer and wait for it.
+    pub fn transfer_sync(&self, req: TransferReq, timeout: Duration) -> Result<()> {
+        let b = self.allocate_batch();
+        self.submit(b, &[req])?;
+        let r = self.wait(b, timeout);
+        let _ = self.release_batch(b);
+        r.map(|_| ())
+    }
+
+    // ---- introspection ----
+
+    pub fn stats(&self) -> telemetry::StatCounters {
+        self.core.stats.snapshot()
+    }
+
+    pub fn rail_snapshots(&self) -> Vec<telemetry::RailSnapshot> {
+        telemetry::rail_snapshots(&self.core.topo, &self.core.fabric, &self.core.sched)
+    }
+
+    pub fn topo(&self) -> &Topology {
+        &self.core.topo
+    }
+
+    pub fn fabric(&self) -> &crate::fabric::Fabric {
+        &self.core.fabric
+    }
+
+    pub fn policy_kind(&self) -> crate::policy::PolicyKind {
+        self.core.policy.kind()
+    }
+
+    /// Stop workers and maintenance; idempotent.
+    pub fn shutdown(&mut self) {
+        self.core.shutdown.store(true, Ordering::Release);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        if let Some(m) = self.maint.take() {
+            let _ = m.join();
+        }
+    }
+}
+
+impl Drop for TentEngine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(profile: &str) -> (Cluster, TentEngine) {
+        let c = Cluster::from_profile(profile).unwrap();
+        let e = TentEngine::new(&c, EngineConfig::default()).unwrap();
+        (c, e)
+    }
+
+    fn fill_pattern(e: &TentEngine, id: SegmentId, len: usize, seed: u8) {
+        let seg = e.segment(id).unwrap();
+        let data: Vec<u8> = (0..len).map(|i| (i as u8).wrapping_mul(31).wrapping_add(seed)).collect();
+        seg.write_at(0, &data).unwrap();
+    }
+
+    fn verify_pattern(e: &TentEngine, id: SegmentId, len: usize, seed: u8) {
+        let seg = e.segment(id).unwrap();
+        let mut buf = vec![0u8; len];
+        seg.read_at(0, &mut buf).unwrap();
+        for (i, &b) in buf.iter().enumerate() {
+            assert_eq!(b, (i as u8).wrapping_mul(31).wrapping_add(seed), "byte {i}");
+        }
+    }
+
+    #[test]
+    fn h2h_transfer_delivers_bytes() {
+        let (_c, e) = engine("h800_hgx");
+        let len = 3 << 20; // 48 slices
+        let a = e.register_segment(Location::host(0, 0), len as u64).unwrap();
+        let b = e.register_segment(Location::host(1, 0), len as u64).unwrap();
+        fill_pattern(&e, a, len, 7);
+        let batch = e.allocate_batch();
+        e.submit(batch, &[TransferReq::write(a, 0, b, 0, len as u64)]).unwrap();
+        let st = e.wait(batch, Duration::from_secs(30)).unwrap();
+        assert!(st.ok());
+        verify_pattern(&e, b, len, 7);
+        let stats = e.stats();
+        assert_eq!(stats.transfers_submitted, 1);
+        assert!(stats.slices_dispatched >= 48);
+        assert_eq!(stats.slices_completed, stats.slices_dispatched);
+    }
+
+    #[test]
+    fn d2d_uses_nvlink_first() {
+        let (_c, e) = engine("h800_hgx");
+        let len = 2u64 << 20;
+        let a = e.register_segment(Location::device(0, 0), len).unwrap();
+        let b = e.register_segment(Location::device(0, 1), len).unwrap();
+        fill_pattern(&e, a, len as usize, 3);
+        e.transfer_sync(TransferReq::write(a, 0, b, 0, len), Duration::from_secs(30))
+            .unwrap();
+        verify_pattern(&e, b, len as usize, 3);
+        // NVLink rail must have carried (nearly) all of it.
+        let nvl_bytes: u64 = e
+            .rail_snapshots()
+            .iter()
+            .filter(|r| r.fabric == "nvlink")
+            .map(|r| r.bytes_carried)
+            .sum();
+        assert!(nvl_bytes >= len / 2, "nvlink carried {nvl_bytes}");
+    }
+
+    #[test]
+    fn mooncake_policy_avoids_nvlink() {
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let e = TentEngine::new(
+            &c,
+            EngineConfig::with_policy(crate::policy::PolicyKind::MooncakeTe),
+        )
+        .unwrap();
+        let len = 1u64 << 20;
+        let a = e.register_segment(Location::device(0, 0), len).unwrap();
+        let b = e.register_segment(Location::device(0, 1), len).unwrap();
+        e.transfer_sync(TransferReq::write(a, 0, b, 0, len), Duration::from_secs(30))
+            .unwrap();
+        let nvl_bytes: u64 = e
+            .rail_snapshots()
+            .iter()
+            .filter(|r| r.fabric == "nvlink")
+            .map(|r| r.bytes_carried)
+            .sum();
+        assert_eq!(nvl_bytes, 0, "TE must not use NVLink");
+    }
+
+    #[test]
+    fn multiple_transfers_one_batch() {
+        let (_c, e) = engine("h800_hgx");
+        let len = 256u64 << 10;
+        let mut reqs = Vec::new();
+        let mut dsts = Vec::new();
+        for i in 0..6u8 {
+            let a = e.register_segment(Location::host(0, 0), len).unwrap();
+            let b = e.register_segment(Location::host(1, 1), len).unwrap();
+            fill_pattern(&e, a, len as usize, i);
+            reqs.push(TransferReq::write(a, 0, b, 0, len));
+            dsts.push((b, i));
+        }
+        let batch = e.allocate_batch();
+        e.submit(batch, &reqs).unwrap();
+        let st = e.wait(batch, Duration::from_secs(30)).unwrap();
+        assert_eq!(st.total_transfers, 6);
+        for (b, i) in dsts {
+            verify_pattern(&e, b, len as usize, i);
+        }
+    }
+
+    #[test]
+    fn zero_length_transfer_completes() {
+        let (_c, e) = engine("h800_hgx");
+        let a = e.register_segment(Location::host(0, 0), 64).unwrap();
+        let b = e.register_segment(Location::host(1, 0), 64).unwrap();
+        e.transfer_sync(TransferReq::write(a, 0, b, 0, 0), Duration::from_secs(5))
+            .unwrap();
+    }
+
+    #[test]
+    fn out_of_bounds_submit_fails_cleanly() {
+        let (_c, e) = engine("h800_hgx");
+        let a = e.register_segment(Location::host(0, 0), 64).unwrap();
+        let b = e.register_segment(Location::host(1, 0), 64).unwrap();
+        let batch = e.allocate_batch();
+        let err = e.submit(batch, &[TransferReq::write(a, 0, b, 0, 128)]);
+        assert!(err.is_err());
+        // Batch still completes (as failed) — no hang.
+        let st = e.wait_any(batch, Duration::from_secs(5)).unwrap();
+        assert!(st.done() && !st.ok());
+    }
+
+    #[test]
+    fn staged_route_end_to_end() {
+        let (_c, e) = engine("no_gpudirect");
+        let len = 1u64 << 20;
+        let a = e.register_segment(Location::device(0, 0), len).unwrap();
+        let b = e.register_segment(Location::device(1, 2), len).unwrap();
+        fill_pattern(&e, a, len as usize, 9);
+        e.transfer_sync(TransferReq::write(a, 0, b, 0, len), Duration::from_secs(60))
+            .unwrap();
+        verify_pattern(&e, b, len as usize, 9);
+        assert!(e.stats().staged_plans >= 1);
+    }
+
+    #[test]
+    fn failover_masks_injected_failure() {
+        let (c, e) = engine("h800_hgx");
+        let len = 4u64 << 20;
+        let a = e.register_segment(Location::host(0, 0), len).unwrap();
+        let b = e.register_segment(Location::host(1, 0), len).unwrap();
+        fill_pattern(&e, a, len as usize, 5);
+        // Kill two NUMA-0 NICs before submitting.
+        let rails = c.topo.rails_of(crate::topology::NodeId(0), crate::topology::FabricKind::Rdma);
+        c.fabric.inject_failure(rails[0]);
+        c.fabric.inject_failure(rails[1]);
+        e.transfer_sync(TransferReq::write(a, 0, b, 0, len), Duration::from_secs(30))
+            .unwrap();
+        verify_pattern(&e, b, len as usize, 5);
+        c.fabric.recover(rails[0]);
+        c.fabric.recover(rails[1]);
+    }
+
+    #[test]
+    fn baseline_surfaces_failure_to_caller() {
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let e = TentEngine::new(
+            &c,
+            EngineConfig::with_policy(crate::policy::PolicyKind::UcclP2p),
+        )
+        .unwrap();
+        let len = 1u64 << 20;
+        let a = e.register_segment(Location::host(0, 0), len).unwrap();
+        let b = e.register_segment(Location::host(1, 0), len).unwrap();
+        // UCCL pins this region to one NIC; kill *all* NICs so it must fail.
+        for r in c.topo.rails_of(crate::topology::NodeId(0), crate::topology::FabricKind::Rdma) {
+            c.fabric.inject_failure(r);
+        }
+        let batch = e.allocate_batch();
+        e.submit(batch, &[TransferReq::write(a, 0, b, 0, len)]).unwrap();
+        let st = e.wait_any(batch, Duration::from_secs(30)).unwrap();
+        assert!(st.done() && !st.ok(), "baseline must surface the failure");
+        for r in c.topo.rails_of(crate::topology::NodeId(0), crate::topology::FabricKind::Rdma) {
+            c.fabric.recover(r);
+        }
+    }
+
+    #[test]
+    fn backend_substitution_rdma_to_tcp() {
+        // Kill every RDMA NIC on the source node: TENT must fall back to the
+        // TCP rail and still deliver.
+        let (c, e) = engine("h800_hgx");
+        let len = 256u64 << 10;
+        let a = e.register_segment(Location::host(0, 0), len).unwrap();
+        let b = e.register_segment(Location::host(1, 0), len).unwrap();
+        fill_pattern(&e, a, len as usize, 11);
+        for r in c.topo.rails_of(crate::topology::NodeId(0), crate::topology::FabricKind::Rdma) {
+            c.fabric.inject_failure(r);
+        }
+        e.transfer_sync(TransferReq::write(a, 0, b, 0, len), Duration::from_secs(60))
+            .unwrap();
+        verify_pattern(&e, b, len as usize, 11);
+        let tcp_bytes: u64 = e
+            .rail_snapshots()
+            .iter()
+            .filter(|r| r.fabric == "tcp")
+            .map(|r| r.bytes_carried)
+            .sum();
+        assert!(tcp_bytes >= len, "tcp carried {tcp_bytes}");
+        for r in c.topo.rails_of(crate::topology::NodeId(0), crate::topology::FabricKind::Rdma) {
+            c.fabric.recover(r);
+        }
+    }
+
+    #[test]
+    fn host_to_file_tiering() {
+        let (_c, e) = engine("h800_hgx");
+        let len = 512u64 << 10;
+        let a = e.register_segment(Location::host(0, 0), len).unwrap();
+        let p = std::env::temp_dir().join(format!("tent_engine_file_{}", std::process::id()));
+        let f = e
+            .register_file_segment(Location::storage(0, p.clone()), len)
+            .unwrap();
+        fill_pattern(&e, a, len as usize, 13);
+        e.transfer_sync(TransferReq::write(a, 0, f, 0, len), Duration::from_secs(30))
+            .unwrap();
+        verify_pattern(&e, f, len as usize, 13);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn wait_times_out_on_unfinished_batch() {
+        let (_c, e) = engine("h800_hgx");
+        let len = 32u64 << 20; // long enough to still be in flight
+        let a = e.register_segment(Location::host(0, 0), len).unwrap();
+        let b = e.register_segment(Location::host(1, 0), len).unwrap();
+        let batch = e.allocate_batch();
+        e.submit(batch, &[TransferReq::write(a, 0, b, 0, len)]).unwrap();
+        let r = e.wait(batch, Duration::from_millis(1));
+        assert!(matches!(r, Err(Error::Timeout(_))));
+        // Then it still finishes.
+        e.wait(batch, Duration::from_secs(60)).unwrap();
+    }
+}

@@ -1,0 +1,192 @@
+//! Phase 1 — dynamic orchestration (§4.1).
+//!
+//! Given source and destination segment metadata, enumerate every reachable
+//! (backend, rail) pair across all loaded transports, classify each by
+//! affinity tier, and retain the full ranked set so that binding can be
+//! deferred: Phase 2 chooses per-slice, Phase 3 steers around failures, and
+//! backend substitution falls out of the plan containing multiple fabrics.
+//!
+//! When no direct path spans the endpoints (e.g. consumer GPUs without
+//! GPUDirect), the planner synthesizes a staged D2H→H2H→H2D route.
+
+use crate::segment::Segment;
+use crate::topology::{RailId, Tier, Topology};
+use crate::transport::{TransportBackend, TransportRegistry};
+use crate::{Error, Result};
+use std::sync::Arc;
+
+/// One feasible way to carry a slice.
+pub struct Candidate {
+    pub backend: Arc<dyn TransportBackend>,
+    pub rail: RailId,
+    /// Affinity tier of the rail relative to the *source* buffer (§3.1).
+    pub tier: Tier,
+    /// Nominal link bandwidth B_d (bytes/sec) — what a state-blind scheduler
+    /// knows; real asymmetries only surface through telemetry.
+    pub bw: f64,
+    /// Physical path asymmetry (invisible to the scheduler, applied by the
+    /// fabric).
+    pub cross_numa: bool,
+    /// Tier-2 asymmetry: device buffer behind a different PCIe root.
+    pub cross_root: bool,
+}
+
+impl std::fmt::Debug for Candidate {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Candidate({} {} tier{:?} {:.0}MB/s)",
+            self.backend.name(),
+            self.rail,
+            self.tier as u8,
+            self.bw / 1e6
+        )
+    }
+}
+
+/// The transport plan for one logical transfer: the full candidate set plus
+/// bookkeeping the policies need.
+pub struct TransferPlan {
+    pub candidates: Vec<Candidate>,
+    /// True if this plan required staged route synthesis.
+    pub staged: bool,
+    /// Total logical transfer length (policies with size thresholds use it).
+    pub transfer_len: u64,
+}
+
+/// Build the plan for `src → dst`.
+pub fn build_plan(
+    registry: &TransportRegistry,
+    topo: &Topology,
+    src: &Arc<Segment>,
+    dst: &Arc<Segment>,
+    transfer_len: u64,
+) -> Result<TransferPlan> {
+    let mut candidates = Vec::new();
+    let src_numa = src.loc.numa();
+    let src_root = src.loc.pcie_root();
+    let mk = |backend: &Arc<dyn TransportBackend>, rail: RailId| {
+        let def = topo.rail(rail);
+        let cross_numa = def.numa != src_numa;
+        Candidate {
+            backend: Arc::clone(backend),
+            rail,
+            tier: topo.classify_tier(rail, src_numa, src_root),
+            bw: def.bw_bytes_per_sec,
+            cross_numa,
+            cross_root: !cross_numa
+                && src_root.map(|r| def.pcie_root != r).unwrap_or(false),
+        }
+    };
+    for backend in registry.all() {
+        for rail in backend.plan_rails(src, dst, topo) {
+            candidates.push(mk(backend, rail));
+        }
+    }
+    let mut staged = false;
+    if candidates.is_empty() {
+        // §4.1: synthesize a staged multi-hop route through host memory.
+        let backend = registry.staged();
+        for rail in backend.plan_rails(src, dst, topo) {
+            candidates.push(mk(&backend, rail));
+        }
+        staged = !candidates.is_empty();
+    }
+    if candidates.is_empty() {
+        return Err(Error::NoEligibleDevice(format!(
+            "no transport can reach {:?} -> {:?}",
+            src.loc, dst.loc
+        )));
+    }
+    Ok(TransferPlan {
+        candidates,
+        staged,
+        transfer_len,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::segment::Location;
+
+    #[test]
+    fn h2h_inter_node_plan_spans_rdma_and_tcp() {
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let a = c.segments.register_memory(Location::host(0, 0), 1024).unwrap();
+        let b = c.segments.register_memory(Location::host(1, 0), 1024).unwrap();
+        let plan = build_plan(&c.transports, &c.topo, &a, &b, 1024).unwrap();
+        assert!(!plan.staged);
+        let names: Vec<&str> = plan.candidates.iter().map(|x| x.backend.name()).collect();
+        assert!(names.contains(&"rdma_sim"));
+        assert!(names.contains(&"tcp"));
+        // 8 NICs + 1 TCP rail.
+        assert_eq!(plan.candidates.len(), 9);
+        // NUMA-local NICs are tier-1, the rest tier-3 for host memory.
+        let t1 = plan
+            .candidates
+            .iter()
+            .filter(|x| x.tier == Tier::T1 && x.backend.name() == "rdma_sim")
+            .count();
+        assert_eq!(t1, 4);
+    }
+
+    #[test]
+    fn d2d_intra_node_prefers_gpu_fabrics_in_plan() {
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let a = c.segments.register_memory(Location::device(0, 0), 1024).unwrap();
+        let b = c.segments.register_memory(Location::device(0, 1), 1024).unwrap();
+        let plan = build_plan(&c.transports, &c.topo, &a, &b, 1024).unwrap();
+        let names: Vec<&str> = plan.candidates.iter().map(|x| x.backend.name()).collect();
+        assert!(names.contains(&"nvlink_sim"));
+        assert!(names.contains(&"rdma_sim")); // GPUDirect rails also feasible
+        // NVLink candidate has the highest nominal bandwidth.
+        let best = plan
+            .candidates
+            .iter()
+            .max_by(|x, y| x.bw.partial_cmp(&y.bw).unwrap())
+            .unwrap();
+        assert_eq!(best.backend.name(), "nvlink_sim");
+    }
+
+    #[test]
+    fn no_gpudirect_pair_gets_staged_plan() {
+        let c = Cluster::from_profile("no_gpudirect").unwrap();
+        let a = c.segments.register_memory(Location::device(0, 0), 1024).unwrap();
+        let b = c.segments.register_memory(Location::device(1, 0), 1024).unwrap();
+        let plan = build_plan(&c.transports, &c.topo, &a, &b, 1024).unwrap();
+        assert!(plan.staged);
+        assert!(plan.candidates.iter().all(|x| x.backend.name() == "staged"));
+    }
+
+    #[test]
+    fn unreachable_pair_is_an_error() {
+        // Storage on one node, memory on another: no direct backend, staged
+        // refuses storage endpoints.
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let a = c.segments.register_memory(Location::host(0, 0), 1024).unwrap();
+        let p = std::env::temp_dir().join(format!("tent_plan_{}", std::process::id()));
+        let s = c
+            .segments
+            .register_file(Location::storage(1, p.clone()), 1024)
+            .unwrap();
+        let e = build_plan(&c.transports, &c.topo, &a, &s, 1024);
+        assert!(matches!(e, Err(Error::NoEligibleDevice(_))));
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn mixed_fleet_cross_silo_gpu_pair_stages() {
+        let c = Cluster::from_profile_nodes(
+            "mixed_fleet",
+            0,
+            crate::fabric::FabricConfig::default(),
+        )
+        .unwrap();
+        let nv = c.segments.register_memory(Location::device(0, 0), 1024).unwrap();
+        let asc = c.segments.register_memory(Location::device(1, 0), 1024).unwrap();
+        let plan = build_plan(&c.transports, &c.topo, &nv, &asc, 1024).unwrap();
+        assert!(plan.staged, "cross-vendor GPU pair must stage via hosts");
+    }
+}

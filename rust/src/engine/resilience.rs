@@ -1,0 +1,169 @@
+//! Phase 3 — proactive dual-layer resilience (§4.3).
+//!
+//! **Link level**: a slice failure soft-excludes its rail (cost → ∞, no
+//! heavyweight reconfiguration) and the slice is re-executed idempotently on
+//! an alternative path chosen for *reliability* (healthiest tier first),
+//! bypassing the predictive cost model — but its bytes still count in the
+//! global queue statistics, so recovery traffic cannot starve other flows.
+//! A background prober heartbeats excluded rails and re-admits them (with a
+//! fresh cost model) once responsive.
+//!
+//! **Transport level**: because Phase 1 plans retain candidates across
+//! *multiple* fabrics, exhausting one backend's rails automatically promotes
+//! the next-best transport (NVLink → RDMA → TCP) for subsequent attempts —
+//! backend substitution with no application involvement.
+
+use super::core::EngineCore;
+use super::slice::SliceDesc;
+use super::telemetry::EngineStats;
+use crate::fabric::RailHealth;
+use crate::util::clock;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Handle a failed slice: exclude the rail, retry on the best alternative,
+/// or give up and mark the transfer failed.
+pub(crate) fn on_slice_failure(core: &Arc<EngineCore>, mut slice: SliceDesc) {
+    let failed_rail = slice.plan.candidates[slice.cand_idx].rail;
+
+    if core.policy.failover() {
+        // Soft exclusion (§4.3): drop the rail from the candidate pool.
+        if core.sched.exclude(failed_rail) {
+            EngineStats::bump(&core.stats.exclusions);
+            log::info!("resilience: soft-excluded {failed_rail}");
+        }
+        if slice.attempt < core.config.max_retries {
+            slice.attempt += 1;
+            EngineStats::bump(&core.stats.retries);
+            // Reliability-first reroute: healthy, non-excluded, best tier.
+            if let Some(idx) = pick_reliable(core, &slice, failed_rail) {
+                slice.cand_idx = idx;
+                let cand = &slice.plan.candidates[idx];
+                let (pred, serial) =
+                    core.sched
+                        .predict_ns(&core.fabric, cand.rail, slice.len, cand.bw);
+                slice.predicted_ns = pred;
+                slice.serial_ns = serial;
+                slice.enqueue_ns = clock::now_ns();
+                core.sched.add_queued(&core.fabric, cand.rail, slice.len);
+                // enqueue fails only on shutdown, where counters are moot.
+                let _ = core.datapath().enqueue(core, slice);
+                return;
+            }
+        }
+    }
+    // Give up: surface the failure through the batch status.
+    EngineStats::bump(&core.stats.permanent_failures);
+    slice.transfer.mark_failed();
+    slice.transfer.complete_slice();
+}
+
+/// Choose the retry path: healthy & non-excluded candidates ordered by tier
+/// (reliability over latency); avoid the just-failed rail. Falls back to
+/// "any rail that is not hard-failed" so a mass exclusion cannot strand the
+/// slice.
+fn pick_reliable(core: &EngineCore, slice: &SliceDesc, avoid: crate::topology::RailId) -> Option<usize> {
+    let cands = &slice.plan.candidates;
+    let healthy = |i: &usize| {
+        let c = &cands[*i];
+        c.rail != avoid && core.fabric.rail(c.rail).health() != RailHealth::Failed
+    };
+    let mut order: Vec<usize> = (0..cands.len())
+        .filter(|i| healthy(i) && !core.sched.is_excluded(cands[*i].rail))
+        .collect();
+    if order.is_empty() {
+        // Backend substitution end-game: everything is excluded — take any
+        // rail that is at least alive (§4.3 "prioritizing reliability").
+        order = (0..cands.len()).filter(healthy).collect();
+    }
+    order
+        .into_iter()
+        .min_by(|&a, &b| {
+            (cands[a].tier as u8)
+                .cmp(&(cands[b].tier as u8))
+                .then(cands[b].bw.partial_cmp(&cands[a].bw).unwrap())
+        })
+}
+
+/// Spawn the maintenance thread: heartbeat prober for excluded rails,
+/// periodic model reset, and implicit-degradation exclusion.
+pub(crate) fn spawn_maintenance(core: &Arc<EngineCore>) -> JoinHandle<()> {
+    let core = Arc::clone(core);
+    std::thread::Builder::new()
+        .name("tent-maint".into())
+        .spawn(move || {
+            let probe_ns = core.config.probe_interval.as_nanos() as u64;
+            let reset_ns = core.config.reset_interval.as_nanos() as u64;
+            let mut last_reset = clock::now_ns();
+            loop {
+                if core.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                std::thread::sleep(core.config.probe_interval.min(std::time::Duration::from_millis(5)));
+                let now = clock::now_ns();
+
+                // --- Prober: heartbeat excluded rails, re-admit responsive ones.
+                for (i, def) in core.topo.rails.iter().enumerate() {
+                    let rail = def.id;
+                    if !core.sched.is_excluded(rail) {
+                        continue;
+                    }
+                    EngineStats::bump(&core.stats.probes);
+                    let responsive = core.fabric.rail(rail).health() != RailHealth::Failed;
+                    if responsive && core.sched.readmit(rail) {
+                        EngineStats::bump(&core.stats.readmissions);
+                        log::info!("resilience: re-admitted {} after probe", def.name);
+                    }
+                    let _ = i;
+                }
+
+                // --- Implicit degradation detection (§4.3): a rail whose
+                // learned β1 is far above its peers' median is struggling;
+                // soft-exclude it even without explicit errors.
+                let factor = core.config.degrade_exclude_factor;
+                if factor.is_finite() && factor > 1.0 {
+                    let mut b1s: Vec<f64> = Vec::new();
+                    for (i, def) in core.topo.rails.iter().enumerate() {
+                        let st = core.fabric.rail(def.id);
+                        let traffic = st.slices_ok.load(Ordering::Relaxed)
+                            + st.slices_failed.load(Ordering::Relaxed);
+                        if traffic >= 32 && !core.sched.is_excluded(def.id) {
+                            b1s.push(core.sched.models[i].beta1());
+                        }
+                    }
+                    if b1s.len() >= 3 {
+                        b1s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                        let median = b1s[b1s.len() / 2];
+                        for (i, def) in core.topo.rails.iter().enumerate() {
+                            let st = core.fabric.rail(def.id);
+                            let traffic = st.slices_ok.load(Ordering::Relaxed)
+                                + st.slices_failed.load(Ordering::Relaxed);
+                            if traffic >= 32
+                                && !core.sched.is_excluded(def.id)
+                                && core.sched.models[i].beta1() > factor * median.max(0.05)
+                                && core.sched.exclude(def.id)
+                            {
+                                EngineStats::bump(&core.stats.exclusions);
+                                log::info!(
+                                    "resilience: telemetry-excluded {} (b1={:.1} median={:.1})",
+                                    def.name,
+                                    core.sched.models[i].beta1(),
+                                    median
+                                );
+                            }
+                        }
+                    }
+                }
+
+                // --- Periodic state reset (§4.2): re-integrate degraded paths.
+                if now.saturating_sub(last_reset) >= reset_ns {
+                    core.sched.reset_models();
+                    EngineStats::bump(&core.stats.model_resets);
+                    last_reset = now;
+                }
+                let _ = probe_ns;
+            }
+        })
+        .expect("spawn maintenance thread")
+}

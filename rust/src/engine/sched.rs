@@ -1,0 +1,239 @@
+//! Phase 2 scheduler state (§4.2): per-rail cost models, queue accounting,
+//! soft-exclusion flags, and the context handed to pluggable policies.
+//!
+//! The actual *choice* (Algorithm 1 for TENT, static striping for the
+//! baselines) lives in [`crate::policy`]; this module owns the shared
+//! telemetry every policy reads and the feedback every completion writes.
+
+use crate::fabric::Fabric;
+use crate::topology::{RailId, Tier, Topology};
+use crate::util::ewma::LinearCostModel;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+/// Tunables shared by scheduler + policies (a copy of the relevant
+/// EngineConfig fields, kept flat for cheap access).
+#[derive(Clone, Debug)]
+pub struct SchedParams {
+    /// Tolerance window γ (Algorithm 1, line 9).
+    pub gamma: f64,
+    /// Topology penalties P_tier for tiers 1..3 (Algorithm 1, line 7).
+    pub tier_penalties: [f64; 3],
+    /// EWMA α for the (β0, β1) feedback filter.
+    pub ewma_alpha: f64,
+    /// Global-load-diffusion weight ω ∈ [0,1]; 0 = local queue only
+    /// (the paper's default: diffusion disabled).
+    pub omega: f64,
+    /// Initial fixed cost β0 (ns).
+    pub init_beta0_ns: f64,
+}
+
+impl Default for SchedParams {
+    fn default() -> Self {
+        SchedParams {
+            gamma: 0.05,
+            tier_penalties: [1.0, 3.0, f64::INFINITY],
+            ewma_alpha: 0.1,
+            omega: 0.0,
+            init_beta0_ns: 20_000.0,
+        }
+    }
+}
+
+/// Per-engine scheduler state, shared across submission threads and workers.
+pub struct SchedulerState {
+    /// Per-rail completion-time models (Eq. 1).
+    pub models: Vec<LinearCostModel>,
+    /// Bytes this engine instance has in flight per rail (A_d^local).
+    pub local_queued: Vec<AtomicU64>,
+    /// Soft exclusion flags set by the resilience layer (§4.3): an excluded
+    /// rail's cost is effectively ∞ without heavyweight reconfiguration.
+    pub excluded: Vec<AtomicBool>,
+    /// Round-robin tie-break cursor (Algorithm 1, line 10).
+    pub rr: AtomicUsize,
+    pub params: SchedParams,
+}
+
+impl SchedulerState {
+    pub fn new(n_rails: usize, params: SchedParams) -> Self {
+        SchedulerState {
+            models: (0..n_rails)
+                .map(|_| LinearCostModel::new(params.init_beta0_ns, 1.0, params.ewma_alpha))
+                .collect(),
+            local_queued: (0..n_rails).map(|_| AtomicU64::new(0)).collect(),
+            excluded: (0..n_rails).map(|_| AtomicBool::new(false)).collect(),
+            rr: AtomicUsize::new(0),
+            params,
+        }
+    }
+
+    #[inline]
+    pub fn is_excluded(&self, rail: RailId) -> bool {
+        self.excluded[rail.0 as usize].load(Ordering::Acquire)
+    }
+
+    pub fn exclude(&self, rail: RailId) -> bool {
+        !self.excluded[rail.0 as usize].swap(true, Ordering::AcqRel)
+    }
+
+    pub fn readmit(&self, rail: RailId) -> bool {
+        let was = self.excluded[rail.0 as usize].swap(false, Ordering::AcqRel);
+        if was {
+            // Fresh start for a re-admitted rail (§4.2 periodic reset).
+            self.models[rail.0 as usize].reset();
+        }
+        was
+    }
+
+    /// Effective queued bytes A_d: local in-flight blended with the global
+    /// (fabric-wide) count when load diffusion is enabled.
+    #[inline]
+    pub fn queued(&self, fabric: &Fabric, rail: RailId) -> u64 {
+        let local = self.local_queued[rail.0 as usize].load(Ordering::Relaxed);
+        let w = self.params.omega;
+        if w <= 0.0 {
+            return local;
+        }
+        let global = fabric.rail(rail).queued_bytes.load(Ordering::Relaxed);
+        ((1.0 - w) * local as f64 + w * global as f64) as u64
+    }
+
+    #[inline]
+    pub fn penalty(&self, tier: Tier) -> f64 {
+        self.params.tier_penalties[(tier as usize) - 1]
+    }
+
+    /// Predict completion time t̂_d (ns) for a slice of `len` on `rail`.
+    #[inline]
+    pub fn predict_ns(&self, fabric: &Fabric, rail: RailId, len: u64, bw: f64) -> (f64, f64) {
+        let a = self.queued(fabric, rail);
+        let serial = (a + len) as f64 / bw.max(1.0) * 1e9;
+        let pred = self.models[rail.0 as usize].predict_ns(len, a, bw);
+        (pred, serial)
+    }
+
+    /// Account a dispatched slice (Algorithm 1, line 11).
+    pub fn add_queued(&self, fabric: &Fabric, rail: RailId, len: u64) {
+        self.local_queued[rail.0 as usize].fetch_add(len, Ordering::Relaxed);
+        fabric.add_queued(rail, len);
+    }
+
+    /// Account a completed / failed slice.
+    pub fn sub_queued(&self, fabric: &Fabric, rail: RailId, len: u64) {
+        let lq = &self.local_queued[rail.0 as usize];
+        let mut cur = lq.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(len);
+            match lq.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+        fabric.sub_queued(rail, len);
+    }
+
+    /// Feedback (§4.2): fold the observed completion time into the rail's
+    /// model.
+    pub fn observe(&self, rail: RailId, predicted_ns: f64, serial_ns: f64, observed_ns: f64) {
+        self.models[rail.0 as usize].observe_ns(predicted_ns, observed_ns, serial_ns);
+    }
+
+    /// Periodic state reset (§4.2): forget learned penalties everywhere so
+    /// recovered paths re-enter the pool.
+    pub fn reset_models(&self) {
+        for m in &self.models {
+            m.reset();
+        }
+    }
+}
+
+/// Everything a policy may consult when picking a rail.
+pub struct SchedCtx<'a> {
+    pub sched: &'a SchedulerState,
+    pub fabric: &'a Fabric,
+    pub topo: &'a Topology,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::FabricConfig;
+    use crate::topology::profile::build_profile;
+    use crate::topology::NodeId;
+    use crate::topology::FabricKind;
+
+    fn setup() -> (Topology, Fabric, SchedulerState) {
+        let t = build_profile("h800_hgx", 1).unwrap();
+        let f = Fabric::new(&t, FabricConfig::default());
+        let s = SchedulerState::new(t.rails.len(), SchedParams::default());
+        (t, f, s)
+    }
+
+    #[test]
+    fn queue_accounting_local_and_global() {
+        let (t, f, s) = setup();
+        let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
+        s.add_queued(&f, rail, 1000);
+        assert_eq!(s.queued(&f, rail), 1000);
+        assert_eq!(f.rail(rail).queued_bytes.load(Ordering::Relaxed), 1000);
+        s.sub_queued(&f, rail, 400);
+        assert_eq!(s.queued(&f, rail), 600);
+        s.sub_queued(&f, rail, 10_000); // saturates
+        assert_eq!(s.queued(&f, rail), 0);
+    }
+
+    #[test]
+    fn diffusion_blends_global_queue() {
+        let t = build_profile("h800_hgx", 1).unwrap();
+        let f = Fabric::new(&t, FabricConfig::default());
+        let mut p = SchedParams::default();
+        p.omega = 0.5;
+        let s1 = SchedulerState::new(t.rails.len(), p.clone());
+        let s2 = SchedulerState::new(t.rails.len(), p);
+        let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
+        // Engine 2 loads the rail; engine 1 must see half of it via ω.
+        s2.add_queued(&f, rail, 10_000);
+        assert_eq!(s1.queued(&f, rail), 5_000);
+    }
+
+    #[test]
+    fn exclusion_roundtrip_resets_model() {
+        let (_t, _f, s) = setup();
+        let rail = RailId(0);
+        // Poison the model.
+        s.observe(rail, 1000.0, 1000.0, 1_000_000.0);
+        assert!(s.models[0].beta1() > 1.0);
+        assert!(s.exclude(rail));
+        assert!(!s.exclude(rail)); // already excluded
+        assert!(s.is_excluded(rail));
+        assert!(s.readmit(rail));
+        assert!(!s.is_excluded(rail));
+        assert_eq!(s.models[0].beta1(), 1.0); // reset on re-admission
+    }
+
+    #[test]
+    fn predict_grows_with_queue() {
+        let (t, f, s) = setup();
+        let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
+        let bw = t.rail(rail).bw_bytes_per_sec;
+        let (p0, _) = s.predict_ns(&f, rail, 64 << 10, bw);
+        s.add_queued(&f, rail, 8 << 20);
+        let (p1, _) = s.predict_ns(&f, rail, 64 << 10, bw);
+        assert!(p1 > 5.0 * p0, "p0={p0} p1={p1}");
+    }
+
+    #[test]
+    fn reset_models_restores_predictions() {
+        let (t, f, s) = setup();
+        let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
+        let bw = t.rail(rail).bw_bytes_per_sec;
+        let (before, _) = s.predict_ns(&f, rail, 1 << 20, bw);
+        for _ in 0..20 {
+            s.observe(rail, before, before, before * 10.0);
+        }
+        let (poisoned, _) = s.predict_ns(&f, rail, 1 << 20, bw);
+        assert!(poisoned > 2.0 * before);
+        s.reset_models();
+        let (after, _) = s.predict_ns(&f, rail, 1 << 20, bw);
+        assert!((after - before).abs() / before < 0.01);
+    }
+}

@@ -1,0 +1,122 @@
+//! Slice decomposition (§4.2 "Slice Decomposition") and the slice
+//! descriptor that flows through the datapath rings.
+//!
+//! Elephant flows are split into slices of a configurable minimum size
+//! (64 KB by default) — small enough that no slice holds a rail for long
+//! (bounding HoL blocking), large enough to amortize enqueue/completion
+//! costs. Extremely large transfers cap the total slice count to bound
+//! control-plane overhead. Every slice writes to an absolute destination
+//! offset, so slices complete in any order and retries are idempotent.
+
+use super::batch::TransferState;
+use super::plan::TransferPlan;
+use crate::segment::Segment;
+use crate::transport::PathAffinity;
+use std::sync::Arc;
+
+/// One schedulable slice.
+pub struct SliceDesc {
+    pub src: Arc<Segment>,
+    pub src_off: u64,
+    pub dst: Arc<Segment>,
+    pub dst_off: u64,
+    pub len: u64,
+    /// Index into `plan.candidates` chosen by the scheduler.
+    pub cand_idx: usize,
+    /// Prediction recorded at dispatch, for the feedback loop.
+    pub predicted_ns: f64,
+    /// The (A_d + L)/B_d serial term at dispatch (feedback denominator).
+    pub serial_ns: f64,
+    /// Dispatch timestamp (ns since process epoch).
+    pub enqueue_ns: u64,
+    /// Retry attempt (0 = first try).
+    pub attempt: u32,
+    pub plan: Arc<TransferPlan>,
+    pub transfer: Arc<TransferState>,
+}
+
+impl SliceDesc {
+    pub fn affinity(&self) -> PathAffinity {
+        let c = &self.plan.candidates[self.cand_idx];
+        PathAffinity {
+            cross_numa: c.cross_numa,
+            cross_root: c.cross_root,
+        }
+    }
+}
+
+/// Compute `(offset, len)` slice spans for a transfer of `len` bytes.
+///
+/// * every slice is at least `min_slice` bytes (except a smaller tail or a
+///   transfer smaller than `min_slice`),
+/// * at most `max_slices` slices are produced.
+pub fn decompose(len: u64, min_slice: u64, max_slices: usize) -> Vec<(u64, u64)> {
+    assert!(min_slice > 0 && max_slices > 0);
+    if len == 0 {
+        return Vec::new();
+    }
+    // Slice size: the minimum unless the count cap forces bigger slices.
+    let by_cap = len.div_ceil(max_slices as u64);
+    let slice = by_cap.max(min_slice);
+    let mut out = Vec::with_capacity(len.div_ceil(slice) as usize);
+    let mut off = 0;
+    while off < len {
+        let l = slice.min(len - off);
+        out.push((off, l));
+        off += l;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_transfer_is_single_slice() {
+        assert_eq!(decompose(1000, 64 << 10, 512), vec![(0, 1000)]);
+        assert_eq!(decompose(64 << 10, 64 << 10, 512), vec![(0, 64 << 10)]);
+    }
+
+    #[test]
+    fn zero_len_empty() {
+        assert!(decompose(0, 64 << 10, 512).is_empty());
+    }
+
+    #[test]
+    fn elephant_flow_uses_min_slice() {
+        let spans = decompose(1 << 20, 64 << 10, 512);
+        assert_eq!(spans.len(), 16);
+        assert!(spans.iter().all(|&(_, l)| l == 64 << 10));
+    }
+
+    #[test]
+    fn slice_count_is_capped() {
+        // 64 MiB at 64 KiB minimum would be 1024 slices; cap at 512.
+        let spans = decompose(64 << 20, 64 << 10, 512);
+        assert_eq!(spans.len(), 512);
+        assert!(spans.iter().all(|&(_, l)| l == 128 << 10));
+    }
+
+    #[test]
+    fn spans_are_contiguous_and_complete() {
+        for len in [1u64, 100, 65_537, 1 << 20, (64 << 20) + 12_345] {
+            let spans = decompose(len, 64 << 10, 512);
+            let mut expect_off = 0;
+            for &(off, l) in &spans {
+                assert_eq!(off, expect_off);
+                assert!(l > 0);
+                expect_off += l;
+            }
+            assert_eq!(expect_off, len, "len={len}");
+            assert!(spans.len() <= 512);
+        }
+    }
+
+    #[test]
+    fn tail_slice_may_be_short() {
+        let spans = decompose((64 << 10) + 5, 64 << 10, 512);
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[1], (64 << 10, 5));
+    }
+}

@@ -1,0 +1,175 @@
+//! Engine-level counters and metric snapshots.
+//!
+//! Per-rail wire statistics live in [`crate::fabric::RailState`]; this module
+//! adds the engine's own event counters (dispatches, retries, exclusions,
+//! probes, …) and a combined snapshot used by the CLI, benches, and tests.
+
+use crate::fabric::{Fabric, RailHealth};
+use crate::topology::{RailId, Topology};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Lock-free engine event counters.
+#[derive(Default)]
+pub struct EngineStats {
+    pub batches_allocated: AtomicU64,
+    pub transfers_submitted: AtomicU64,
+    pub slices_dispatched: AtomicU64,
+    pub slices_completed: AtomicU64,
+    pub slice_failures: AtomicU64,
+    pub retries: AtomicU64,
+    pub exclusions: AtomicU64,
+    pub readmissions: AtomicU64,
+    pub probes: AtomicU64,
+    pub model_resets: AtomicU64,
+    pub permanent_failures: AtomicU64,
+    pub staged_plans: AtomicU64,
+    pub bytes_submitted: AtomicU64,
+}
+
+impl EngineStats {
+    #[inline]
+    pub fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn snapshot(&self) -> StatCounters {
+        StatCounters {
+            batches_allocated: self.batches_allocated.load(Ordering::Relaxed),
+            transfers_submitted: self.transfers_submitted.load(Ordering::Relaxed),
+            slices_dispatched: self.slices_dispatched.load(Ordering::Relaxed),
+            slices_completed: self.slices_completed.load(Ordering::Relaxed),
+            slice_failures: self.slice_failures.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            exclusions: self.exclusions.load(Ordering::Relaxed),
+            readmissions: self.readmissions.load(Ordering::Relaxed),
+            probes: self.probes.load(Ordering::Relaxed),
+            model_resets: self.model_resets.load(Ordering::Relaxed),
+            permanent_failures: self.permanent_failures.load(Ordering::Relaxed),
+            staged_plans: self.staged_plans.load(Ordering::Relaxed),
+            bytes_submitted: self.bytes_submitted.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data copy of the counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StatCounters {
+    pub batches_allocated: u64,
+    pub transfers_submitted: u64,
+    pub slices_dispatched: u64,
+    pub slices_completed: u64,
+    pub slice_failures: u64,
+    pub retries: u64,
+    pub exclusions: u64,
+    pub readmissions: u64,
+    pub probes: u64,
+    pub model_resets: u64,
+    pub permanent_failures: u64,
+    pub staged_plans: u64,
+    pub bytes_submitted: u64,
+}
+
+/// Per-rail view combining topology, fabric counters, and scheduler state.
+#[derive(Clone, Debug)]
+pub struct RailSnapshot {
+    pub rail: RailId,
+    pub name: String,
+    pub fabric: &'static str,
+    pub health: RailHealth,
+    pub excluded: bool,
+    pub queued_bytes: u64,
+    pub bytes_carried: u64,
+    pub slices_ok: u64,
+    pub slices_failed: u64,
+    pub mean_latency_ns: f64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub beta0_ns: f64,
+    pub beta1: f64,
+}
+
+/// Build per-rail snapshots.
+pub fn rail_snapshots(
+    topo: &Topology,
+    fabric: &Fabric,
+    sched: &crate::engine::sched::SchedulerState,
+) -> Vec<RailSnapshot> {
+    topo.rails
+        .iter()
+        .map(|def| {
+            let st = fabric.rail(def.id);
+            let m = &sched.models[def.id.0 as usize];
+            RailSnapshot {
+                rail: def.id,
+                name: def.name.clone(),
+                fabric: def.fabric.name(),
+                health: st.health(),
+                excluded: sched.is_excluded(def.id),
+                queued_bytes: st.queued_bytes.load(Ordering::Relaxed),
+                bytes_carried: st.bytes_carried.load(Ordering::Relaxed),
+                slices_ok: st.slices_ok.load(Ordering::Relaxed),
+                slices_failed: st.slices_failed.load(Ordering::Relaxed),
+                mean_latency_ns: st.latency.mean(),
+                p50_ns: st.latency.p50(),
+                p99_ns: st.latency.p99(),
+                beta0_ns: m.beta0_ns(),
+                beta1: m.beta1(),
+            }
+        })
+        .collect()
+}
+
+/// Render rail snapshots as an aligned table (CLI / bench output).
+pub fn format_rail_table(snaps: &[RailSnapshot]) -> String {
+    let mut s = String::from(
+        "rail           fabric    health    excl  queued      bytes        ok      fail  p50         p99         b1\n",
+    );
+    for r in snaps {
+        s.push_str(&format!(
+            "{:<14} {:<9} {:<9} {:<5} {:<11} {:<12} {:<7} {:<5} {:<11} {:<11} {:.2}\n",
+            r.name,
+            r.fabric,
+            format!("{:?}", r.health),
+            if r.excluded { "yes" } else { "no" },
+            crate::util::fmt_bytes(r.queued_bytes),
+            crate::util::fmt_bytes(r.bytes_carried),
+            r.slices_ok,
+            r.slices_failed,
+            crate::util::fmt_ns(r.p50_ns),
+            crate::util::fmt_ns(r.p99_ns),
+            r.beta1,
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::sched::{SchedParams, SchedulerState};
+    use crate::fabric::FabricConfig;
+    use crate::topology::profile::build_profile;
+
+    #[test]
+    fn counters_snapshot_roundtrip() {
+        let s = EngineStats::default();
+        EngineStats::bump(&s.retries);
+        EngineStats::bump(&s.retries);
+        EngineStats::bump(&s.probes);
+        let snap = s.snapshot();
+        assert_eq!(snap.retries, 2);
+        assert_eq!(snap.probes, 1);
+        assert_eq!(snap.slices_completed, 0);
+    }
+
+    #[test]
+    fn rail_snapshot_covers_all_rails() {
+        let t = build_profile("h800_hgx", 1).unwrap();
+        let f = Fabric::new(&t, FabricConfig::default());
+        let sched = SchedulerState::new(t.rails.len(), SchedParams::default());
+        let snaps = rail_snapshots(&t, &f, &sched);
+        assert_eq!(snaps.len(), t.rails.len());
+        let table = format_rail_table(&snaps);
+        assert!(table.contains("n0-mlx0"));
+        assert!(table.contains("nvlink"));
+    }
+}

@@ -1,0 +1,402 @@
+//! The simulated hardware fabric: per-rail pacing, degradation, failure
+//! injection.
+//!
+//! Every rail is serviced by exactly one pinned worker thread (see
+//! `engine::datapath`), so queueing discipline is physical: a slice's
+//! completion time = time spent waiting in the rail's ring + the service
+//! time computed here. Service time is derived from the rail's nominal
+//! bandwidth, a degradation factor (failure injection / noisy neighbours),
+//! a cross-NUMA penalty (remote-socket DMA runs slower — the §2.2
+//! non-uniformity), and multiplicative jitter.
+//!
+//! Bytes are *actually copied* between segment backings by the transport
+//! backends; the fabric only decides how long the wire would have taken.
+
+pub mod trace;
+
+use crate::topology::{RailId, Topology};
+use crate::util::ewma::AtomicF64;
+use crate::util::hist::Histogram;
+use crate::util::prng::Pcg64;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
+/// Health of a rail as set by failure injection / the prober.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(u8)]
+pub enum RailHealth {
+    Healthy = 0,
+    /// Operating at reduced bandwidth (transient signal degradation).
+    Degraded = 1,
+    /// Hard-failed: slices error out (flapping NIC, dead link).
+    Failed = 2,
+}
+
+impl RailHealth {
+    fn from_u8(v: u8) -> RailHealth {
+        match v {
+            0 => RailHealth::Healthy,
+            1 => RailHealth::Degraded,
+            _ => RailHealth::Failed,
+        }
+    }
+}
+
+/// Runtime state of one rail.
+pub struct RailState {
+    pub id: RailId,
+    health: AtomicU8,
+    /// Bandwidth multiplier ∈ (0, 1]; 1 = nominal. Degradation lowers it.
+    bw_factor: AtomicF64,
+    /// Bytes scheduled onto this rail and not yet completed (the A_d of
+    /// Algorithm 1). Maintained by the scheduler + datapath.
+    pub queued_bytes: AtomicU64,
+    /// Total payload bytes carried (per-NIC byte counters, §5.1.3).
+    pub bytes_carried: AtomicU64,
+    pub slices_ok: AtomicU64,
+    pub slices_failed: AtomicU64,
+    /// Observed per-slice service latency (ns).
+    pub latency: Histogram,
+    /// Generation counter bumped on every health transition (lets the
+    /// resilience layer detect flaps without locks).
+    pub health_gen: AtomicU64,
+    /// Accumulated pacing overshoot (ns): OS sleeps overshoot their
+    /// deadline, especially on small core counts; the debt is repaid by
+    /// shortening subsequent sleeps so long-run rail bandwidth is exact.
+    pace_debt_ns: AtomicU64,
+    /// Static manufacturing/cabling variation (§2.2: "rail performance is
+    /// highly non-uniform"): fixed multiplier on top of the dynamic factor.
+    static_factor: f64,
+}
+
+impl RailState {
+    fn new(id: RailId, static_factor: f64) -> Self {
+        RailState {
+            id,
+            health: AtomicU8::new(RailHealth::Healthy as u8),
+            bw_factor: AtomicF64::new(1.0),
+            queued_bytes: AtomicU64::new(0),
+            bytes_carried: AtomicU64::new(0),
+            slices_ok: AtomicU64::new(0),
+            slices_failed: AtomicU64::new(0),
+            latency: Histogram::new(),
+            health_gen: AtomicU64::new(0),
+            pace_debt_ns: AtomicU64::new(0),
+            static_factor,
+        }
+    }
+
+    pub fn health(&self) -> RailHealth {
+        RailHealth::from_u8(self.health.load(Ordering::Acquire))
+    }
+
+    pub fn bw_factor(&self) -> f64 {
+        self.bw_factor.load()
+    }
+}
+
+/// Fabric-wide jitter / asymmetry knobs.
+#[derive(Clone, Debug)]
+pub struct FabricConfig {
+    /// Multiplicative service-time jitter stddev (e.g. 0.05 = ±5%).
+    pub jitter_sigma: f64,
+    /// Bandwidth multiplier when the transfer's memory is on a different
+    /// NUMA node than the rail (cross-socket DMA penalty, §2.2).
+    pub cross_numa_bw_factor: f64,
+    /// Extra fixed latency (ns) for cross-NUMA submissions.
+    pub cross_numa_extra_ns: u64,
+    /// Bandwidth multiplier for tier-2 paths (device buffer behind a
+    /// different PCIe root than the NIC — traverses the PCIe switch).
+    pub cross_root_bw_factor: f64,
+    /// Extra fixed latency (ns) for cross-root paths.
+    pub cross_root_extra_ns: u64,
+    /// Std-dev of static per-rail bandwidth variation (§2.2 non-uniformity;
+    /// 0 = perfectly uniform rails). Sampled once per rail at construction.
+    pub rail_heterogeneity_sigma: f64,
+    /// Seed for the static variation sampling (deterministic fabrics).
+    pub seed: u64,
+    /// Global speed multiplier for tests (greater = faster wall-clock).
+    pub time_compression: f64,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig {
+            jitter_sigma: 0.04,
+            cross_numa_bw_factor: 0.60,
+            cross_numa_extra_ns: 30_000,
+            cross_root_bw_factor: 0.75,
+            cross_root_extra_ns: 15_000,
+            rail_heterogeneity_sigma: 0.06,
+            seed: 0xFAB,
+            time_compression: 1.0,
+        }
+    }
+}
+
+/// The fabric: rail runtime state + service-time model + failure injection.
+pub struct Fabric {
+    pub rails: Vec<RailState>,
+    pub config: FabricConfig,
+}
+
+impl Fabric {
+    pub fn new(topo: &Topology, config: FabricConfig) -> Fabric {
+        let mut rng = Pcg64::new(config.seed, 0x5747);
+        let rails = topo
+            .rails
+            .iter()
+            .map(|r| {
+                let f = if config.rail_heterogeneity_sigma > 0.0 {
+                    (1.0 + rng.gen_normal(0.0, config.rail_heterogeneity_sigma)).clamp(0.75, 1.2)
+                } else {
+                    1.0
+                };
+                RailState::new(r.id, f)
+            })
+            .collect();
+        Fabric { rails, config }
+    }
+
+    #[inline]
+    pub fn rail(&self, id: RailId) -> &RailState {
+        &self.rails[id.0 as usize]
+    }
+
+    /// Compute the wire service time (ns) for `len` bytes on `rail`.
+    /// `cross_numa` marks transfers whose buffer lives on the remote socket.
+    /// Returns `None` if the rail is hard-failed (slice must error).
+    pub fn service_ns(
+        &self,
+        topo: &Topology,
+        rail: RailId,
+        len: u64,
+        affinity: crate::transport::PathAffinity,
+        rng: &mut Pcg64,
+    ) -> Option<u64> {
+        let st = self.rail(rail);
+        if st.health() == RailHealth::Failed {
+            return None;
+        }
+        let def = topo.rail(rail);
+        let mut bw = def.bw_bytes_per_sec * st.bw_factor() * st.static_factor;
+        let mut lat = def.base_latency_ns as f64;
+        if affinity.cross_numa {
+            bw *= self.config.cross_numa_bw_factor;
+            lat += self.config.cross_numa_extra_ns as f64;
+        }
+        if affinity.cross_root {
+            bw *= self.config.cross_root_bw_factor;
+            lat += self.config.cross_root_extra_ns as f64;
+        }
+        let serial = len as f64 / bw.max(1.0) * 1e9;
+        let jitter = (1.0 + rng.gen_normal(0.0, self.config.jitter_sigma)).max(0.5);
+        let total = (lat + serial) * jitter / self.config.time_compression.max(1e-9);
+        Some(total as u64)
+    }
+
+    /// Pace a slice that started at `start_ns` out to `service_ns` of wire
+    /// time, compensating accumulated OS-sleep overshoot (debt) so that the
+    /// rail's *long-run* throughput equals its configured bandwidth even on
+    /// oversubscribed hosts. Debt is capped so a long stall cannot cause an
+    /// unbounded catch-up burst.
+    pub fn pace(&self, rail: RailId, start_ns: u64, service_ns: u64) {
+        const DEBT_CAP_NS: u64 = 20_000_000; // 20 ms
+        let st = self.rail(rail);
+        let debt = st.pace_debt_ns.swap(0, Ordering::Relaxed);
+        let target = service_ns.saturating_sub(debt);
+        crate::util::clock::sleep_until_ns(start_ns + target);
+        let actual = crate::util::clock::now_ns().saturating_sub(start_ns);
+        // leftover = what we still owe (unused debt) + fresh overshoot.
+        let leftover = (debt + actual).saturating_sub(service_ns).min(DEBT_CAP_NS);
+        if leftover > 0 {
+            st.pace_debt_ns.fetch_add(leftover, Ordering::Relaxed);
+        }
+    }
+
+    // ---- failure injection API (drives Fig 10 / §5.3) ----
+
+    fn set_health(&self, rail: RailId, h: RailHealth) {
+        let st = self.rail(rail);
+        let prev = st.health.swap(h as u8, Ordering::AcqRel);
+        if prev != h as u8 {
+            st.health_gen.fetch_add(1, Ordering::AcqRel);
+        }
+    }
+
+    /// Hard-fail a rail: in-flight and future slices on it error out.
+    pub fn inject_failure(&self, rail: RailId) {
+        log::warn!("fabric: injecting hard failure on {rail}");
+        self.set_health(rail, RailHealth::Failed);
+    }
+
+    /// Degrade a rail to `factor` × nominal bandwidth (0 < factor ≤ 1).
+    pub fn inject_degradation(&self, rail: RailId, factor: f64) {
+        log::warn!("fabric: degrading {rail} to {factor}x");
+        self.rail(rail).bw_factor.store(factor.clamp(0.01, 1.0));
+        self.set_health(rail, RailHealth::Degraded);
+    }
+
+    /// Restore a rail to full health.
+    pub fn recover(&self, rail: RailId) {
+        log::info!("fabric: recovering {rail}");
+        self.rail(rail).bw_factor.store(1.0);
+        self.set_health(rail, RailHealth::Healthy);
+    }
+
+    /// Account bytes entering / leaving a rail's queue (A_d maintenance).
+    #[inline]
+    pub fn add_queued(&self, rail: RailId, len: u64) {
+        self.rail(rail).queued_bytes.fetch_add(len, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn sub_queued(&self, rail: RailId, len: u64) {
+        let r = self.rail(rail);
+        // Saturating subtract: retried slices may be double-counted briefly.
+        let mut cur = r.queued_bytes.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(len);
+            match r.queued_bytes.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    /// Snapshot per-rail byte counters (Fig 6 "per-NIC byte counters").
+    pub fn byte_counters(&self) -> Vec<(RailId, u64)> {
+        self.rails
+            .iter()
+            .map(|r| (r.id, r.bytes_carried.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Reset all statistics (between bench phases).
+    pub fn reset_stats(&self) {
+        for r in &self.rails {
+            r.bytes_carried.store(0, Ordering::Relaxed);
+            r.slices_ok.store(0, Ordering::Relaxed);
+            r.slices_failed.store(0, Ordering::Relaxed);
+            r.latency.reset();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::profile::build_profile;
+    use crate::topology::FabricKind;
+    use crate::topology::NodeId;
+
+    fn fabric() -> (Topology, Fabric) {
+        let t = build_profile("h800_hgx", 1).unwrap();
+        let f = Fabric::new(&t, FabricConfig::default());
+        (t, f)
+    }
+
+    #[test]
+    fn service_time_scales_with_length() {
+        let (t, f) = fabric();
+        let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
+        let mut rng = Pcg64::new(1, 0);
+        let small: u64 = (0..32)
+            .map(|_| f.service_ns(&t, rail, 64 << 10, crate::transport::PathAffinity::default(), &mut rng).unwrap())
+            .sum::<u64>()
+            / 32;
+        let large: u64 = (0..32)
+            .map(|_| f.service_ns(&t, rail, 1 << 20, crate::transport::PathAffinity::default(), &mut rng).unwrap())
+            .sum::<u64>()
+            / 32;
+        // 1 MiB is 16x the bytes of 64 KiB; with base latency the ratio is
+        // a bit under 16 but far above 8.
+        assert!(large > 8 * small, "small={small} large={large}");
+    }
+
+    #[test]
+    fn cross_numa_is_slower() {
+        let (t, f) = fabric();
+        let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
+        let mut rng = Pcg64::new(1, 0);
+        let near: u64 = (0..64)
+            .map(|_| f.service_ns(&t, rail, 1 << 20, crate::transport::PathAffinity::default(), &mut rng).unwrap())
+            .sum();
+        let far: u64 = (0..64)
+            .map(|_| f.service_ns(&t, rail, 1 << 20, crate::transport::PathAffinity { cross_numa: true, cross_root: false }, &mut rng).unwrap())
+            .sum();
+        assert!(far as f64 > 1.4 * near as f64, "near={near} far={far}");
+    }
+
+    #[test]
+    fn failed_rail_returns_none() {
+        let (t, f) = fabric();
+        let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
+        let mut rng = Pcg64::new(1, 0);
+        f.inject_failure(rail);
+        assert!(f.service_ns(&t, rail, 4096, crate::transport::PathAffinity::default(), &mut rng).is_none());
+        f.recover(rail);
+        assert!(f.service_ns(&t, rail, 4096, crate::transport::PathAffinity::default(), &mut rng).is_some());
+    }
+
+    #[test]
+    fn degradation_slows_rail_and_recovery_restores() {
+        let (t, f) = fabric();
+        let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
+        let mut rng = Pcg64::new(1, 0);
+        let avg = |f: &Fabric, rng: &mut Pcg64| -> u64 {
+            (0..32)
+                .map(|_| f.service_ns(&t, rail, 1 << 20, crate::transport::PathAffinity::default(), rng).unwrap())
+                .sum::<u64>()
+                / 32
+        };
+        let healthy = avg(&f, &mut rng);
+        f.inject_degradation(rail, 0.25);
+        assert_eq!(f.rail(rail).health(), RailHealth::Degraded);
+        let degraded = avg(&f, &mut rng);
+        assert!(degraded as f64 > 3.0 * healthy as f64);
+        f.recover(rail);
+        let recovered = avg(&f, &mut rng);
+        assert!((recovered as f64) < 1.3 * healthy as f64);
+    }
+
+    #[test]
+    fn health_generation_counts_transitions() {
+        let (t, f) = fabric();
+        let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
+        let g0 = f.rail(rail).health_gen.load(Ordering::Relaxed);
+        f.inject_failure(rail);
+        f.inject_failure(rail); // same state: no bump
+        f.recover(rail);
+        let g1 = f.rail(rail).health_gen.load(Ordering::Relaxed);
+        assert_eq!(g1 - g0, 2);
+    }
+
+    #[test]
+    fn queued_bytes_accounting_saturates() {
+        let (t, f) = fabric();
+        let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
+        f.add_queued(rail, 100);
+        f.sub_queued(rail, 60);
+        assert_eq!(f.rail(rail).queued_bytes.load(Ordering::Relaxed), 40);
+        f.sub_queued(rail, 100); // must not underflow
+        assert_eq!(f.rail(rail).queued_bytes.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn time_compression_speeds_up() {
+        let t = build_profile("h800_hgx", 1).unwrap();
+        let mut cfg = FabricConfig::default();
+        cfg.time_compression = 10.0;
+        let fast = Fabric::new(&t, cfg);
+        let slow = Fabric::new(&t, FabricConfig::default());
+        let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
+        let mut rng = Pcg64::new(2, 0);
+        let a = fast.service_ns(&t, rail, 1 << 20, crate::transport::PathAffinity::default(), &mut rng).unwrap();
+        let b = slow.service_ns(&t, rail, 1 << 20, crate::transport::PathAffinity::default(), &mut rng).unwrap();
+        assert!(b > 5 * a);
+    }
+}

@@ -1,0 +1,240 @@
+//! Failure-trace generation from the paper's Table 1 datacenter breakdown.
+//!
+//! The paper reports 382 failure events/month in a representative fintech
+//! deployment, with the class mix below. The generator samples that
+//! empirical distribution to drive fault-injection benches: each event maps
+//! to a fabric action (hard-fail / degrade) plus a duration drawn from the
+//! class's recovery profile (T = transient, R = fast-recoverable, H = hard).
+
+use crate::util::prng::Pcg64;
+
+/// Failure event classes, weights exactly as in Table 1 (percent).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum FailureEvent {
+    GpuEccError,               // H    40.2
+    GpuDeviceDropout,          // T/R  24.2
+    GpuXidError,               // T/R   3.2
+    GpuEnumerationFailure,     // R     2.4
+    GpuOverTemperature,        // R     2.5
+    NodeCrash,                 // R/H   7.9
+    NodeBoardFailure,          // H     3.9
+    NetworkCableFault,         // T/R   3.8
+    NetworkLinkFlap,           // T     1.6
+    NetworkNicHardware,        // H     1.0
+    Other,                     // -     9.3
+}
+
+/// Recovery class from Table 1.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum RecoveryClass {
+    Transient,
+    FastRecoverable,
+    Hard,
+}
+
+impl FailureEvent {
+    pub const TABLE1: [(FailureEvent, f64); 11] = [
+        (FailureEvent::GpuEccError, 40.2),
+        (FailureEvent::GpuDeviceDropout, 24.2),
+        (FailureEvent::GpuXidError, 3.2),
+        (FailureEvent::GpuEnumerationFailure, 2.4),
+        (FailureEvent::GpuOverTemperature, 2.5),
+        (FailureEvent::NodeCrash, 7.9),
+        (FailureEvent::NodeBoardFailure, 3.9),
+        (FailureEvent::NetworkCableFault, 3.8),
+        (FailureEvent::NetworkLinkFlap, 1.6),
+        (FailureEvent::NetworkNicHardware, 1.0),
+        (FailureEvent::Other, 9.3),
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FailureEvent::GpuEccError => "GPU: ECC Errors",
+            FailureEvent::GpuDeviceDropout => "GPU: Device Dropout",
+            FailureEvent::GpuXidError => "GPU: XID Errors",
+            FailureEvent::GpuEnumerationFailure => "GPU: Device Enumeration Failures",
+            FailureEvent::GpuOverTemperature => "GPU: Over-Temperature Events",
+            FailureEvent::NodeCrash => "Node: Crashes",
+            FailureEvent::NodeBoardFailure => "Node: Motherboard / PCIe / BMC Failures",
+            FailureEvent::NetworkCableFault => "Network: Cable Fault",
+            FailureEvent::NetworkLinkFlap => "Network: Frequent Link Down Events",
+            FailureEvent::NetworkNicHardware => "Network: NIC Hardware Failures",
+            FailureEvent::Other => "Others",
+        }
+    }
+
+    pub fn recovery_class(&self) -> RecoveryClass {
+        match self {
+            FailureEvent::GpuEccError
+            | FailureEvent::NodeBoardFailure
+            | FailureEvent::NetworkNicHardware => RecoveryClass::Hard,
+            FailureEvent::NetworkLinkFlap => RecoveryClass::Transient,
+            FailureEvent::GpuDeviceDropout
+            | FailureEvent::GpuXidError
+            | FailureEvent::NetworkCableFault => RecoveryClass::Transient, // T/R: lean T
+            _ => RecoveryClass::FastRecoverable,
+        }
+    }
+
+    /// Does this event disturb the *communication* fabric (vs pure compute)?
+    /// GPU-side disturbances frequently cascade into communication
+    /// disruptions (§2.3), so most classes touch rails.
+    pub fn affects_fabric(&self) -> bool {
+        !matches!(self, FailureEvent::Other)
+    }
+}
+
+/// A concrete injected fault: which rail-visible action, when, for how long.
+#[derive(Clone, Debug)]
+pub struct FaultAction {
+    pub event: FailureEvent,
+    /// Offset from trace start (ns, sim wall-clock).
+    pub at_ns: u64,
+    /// How long until recovery (ns). Hard failures get a long horizon.
+    pub duration_ns: u64,
+    /// True → hard-fail the rail; false → degrade it.
+    pub hard: bool,
+    /// Bandwidth factor when degrading.
+    pub degrade_factor: f64,
+}
+
+/// Generates a fault timeline over `horizon_ns` with the Table 1 mix.
+/// `events_per_sec` controls intensity (production: 382/month; benches
+/// compress this to several per second).
+pub struct TraceGenerator {
+    rng: Pcg64,
+    weights_cdf: Vec<(FailureEvent, f64)>,
+}
+
+impl TraceGenerator {
+    pub fn new(seed: u64) -> Self {
+        let total: f64 = FailureEvent::TABLE1.iter().map(|(_, w)| w).sum();
+        let mut acc = 0.0;
+        let weights_cdf = FailureEvent::TABLE1
+            .iter()
+            .map(|&(e, w)| {
+                acc += w / total;
+                (e, acc)
+            })
+            .collect();
+        TraceGenerator {
+            rng: Pcg64::new(seed, 0xFA17),
+            weights_cdf,
+        }
+    }
+
+    /// Sample one event class from the Table 1 distribution.
+    pub fn sample_event(&mut self) -> FailureEvent {
+        let u = self.rng.next_f64();
+        for &(e, cum) in &self.weights_cdf {
+            if u <= cum {
+                return e;
+            }
+        }
+        FailureEvent::Other
+    }
+
+    /// Build a full timeline: Poisson arrivals at `events_per_sec` over
+    /// `horizon_ns`.
+    pub fn generate(&mut self, horizon_ns: u64, events_per_sec: f64) -> Vec<FaultAction> {
+        let mut out = Vec::new();
+        let mean_gap_ns = 1e9 / events_per_sec.max(1e-9);
+        let mut t = 0u64;
+        loop {
+            t += self.rng.gen_exp(mean_gap_ns) as u64;
+            if t >= horizon_ns {
+                break;
+            }
+            let event = self.sample_event();
+            if !event.affects_fabric() {
+                continue;
+            }
+            let (duration_ns, hard, degrade_factor) = match event.recovery_class() {
+                // Transient: tens to hundreds of ms.
+                RecoveryClass::Transient => (
+                    self.rng.gen_between(20_000_000, 400_000_000),
+                    self.rng.gen_bool(0.6),
+                    0.05 + 0.3 * self.rng.next_f64(),
+                ),
+                // Fast-recoverable: seconds.
+                RecoveryClass::FastRecoverable => (
+                    self.rng.gen_between(500_000_000, 3_000_000_000),
+                    self.rng.gen_bool(0.3),
+                    0.1 + 0.4 * self.rng.next_f64(),
+                ),
+                // Hard: does not recover within any bench horizon
+                // (paper MTTR: 160.21 min).
+                RecoveryClass::Hard => (u64::MAX / 4, true, 0.0),
+            };
+            out.push(FaultAction {
+                event,
+                at_ns: t,
+                duration_ns,
+                hard,
+                degrade_factor,
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn distribution_matches_table1() {
+        let mut g = TraceGenerator::new(7);
+        let mut counts: HashMap<&'static str, u32> = HashMap::new();
+        const N: u32 = 100_000;
+        for _ in 0..N {
+            *counts.entry(g.sample_event().name()).or_default() += 1;
+        }
+        for (e, pct) in FailureEvent::TABLE1 {
+            let got = *counts.get(e.name()).unwrap_or(&0) as f64 / N as f64 * 100.0;
+            assert!(
+                (got - pct).abs() < 0.6,
+                "{}: got {got:.2}% expected {pct}%",
+                e.name()
+            );
+        }
+    }
+
+    #[test]
+    fn timeline_sorted_and_within_horizon() {
+        let mut g = TraceGenerator::new(3);
+        let horizon = 10_000_000_000; // 10 s
+        let actions = g.generate(horizon, 5.0);
+        assert!(!actions.is_empty());
+        let mut last = 0;
+        for a in &actions {
+            assert!(a.at_ns >= last && a.at_ns < horizon);
+            last = a.at_ns;
+        }
+    }
+
+    #[test]
+    fn hard_failures_never_recover_in_horizon() {
+        let mut g = TraceGenerator::new(11);
+        let actions = g.generate(60_000_000_000, 20.0);
+        let hard: Vec<_> = actions
+            .iter()
+            .filter(|a| a.event.recovery_class() == RecoveryClass::Hard)
+            .collect();
+        assert!(!hard.is_empty());
+        for a in hard {
+            assert!(a.hard);
+            assert!(a.duration_ns > 60_000_000_000);
+        }
+    }
+
+    #[test]
+    fn intensity_scales_event_count() {
+        let mut g1 = TraceGenerator::new(5);
+        let mut g2 = TraceGenerator::new(5);
+        let sparse = g1.generate(5_000_000_000, 2.0).len();
+        let dense = g2.generate(5_000_000_000, 40.0).len();
+        assert!(dense > 5 * sparse, "sparse={sparse} dense={dense}");
+    }
+}

@@ -1,0 +1,100 @@
+//! # TENT — a declarative slice-spraying data-movement engine
+//!
+//! Reproduction of *"TENT: A Declarative Slice Spraying Engine for Performant
+//! and Resilient Data Movement in Disaggregated LLM Serving"* (CS.DC 2026).
+//!
+//! TENT decouples transfer *intent* from physical *execution*: applications
+//! declare batched transfers between [`segment::Segment`]s, and the engine
+//! decides — per request, at runtime — how to realize each transfer across a
+//! pool of heterogeneous interconnects. Elephant flows are decomposed into
+//! fine-grained slices that are "sprayed" across rails according to a
+//! telemetry-driven cost model (Algorithm 1 of the paper), with dual-layer
+//! resilience (per-slice rerouting + whole-backend substitution) embedded in
+//! the data plane.
+//!
+//! ## Layering
+//!
+//! * [`engine`] — the paper's contribution: batch API, Phase-1 dynamic
+//!   orchestration, Phase-2 telemetry-driven slice spraying, Phase-3
+//!   dual-layer resilience, and the low-overhead lock-free datapath (§4.4).
+//! * [`topology`], [`segment`], [`fabric`], [`transport`] — the substrates:
+//!   device/tier model, unified segment abstraction, the simulated multi-rail
+//!   fabric (real byte movement, paced to scaled hardware profiles), and thin
+//!   pluggable transport backends.
+//! * [`policy`] — scheduling policies, including faithful re-implementations
+//!   of the paper's baselines (Mooncake TE, NIXL, UCCL-P2P, round-robin).
+//! * [`serving`], [`runtime`] — the disaggregated-LLM-serving consumer: a
+//!   HiCache-style multi-tier KV cache, request router, PJRT model runner
+//!   (AOT-compiled JAX/Pallas artifacts), and a checkpoint-engine analog.
+//! * [`bench`] — TEBench, the microbenchmark harness of §5.1.3.
+//! * [`util`] — dependency-free building blocks (PRNG, histograms, EWMA,
+//!   JSON, lock-free MPSC ring, CLI).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use tent::cluster::Cluster;
+//! use tent::engine::{TentEngine, EngineConfig, TransferOp, TransferReq};
+//! use tent::segment::Location;
+//!
+//! let cluster = Cluster::from_profile("h800_hgx").unwrap();
+//! let engine = TentEngine::new(&cluster, EngineConfig::default()).unwrap();
+//! let src = engine.register_segment(Location::host(0, 0), 1 << 20).unwrap();
+//! let dst = engine.register_segment(Location::host(1, 0), 1 << 20).unwrap();
+//! let batch = engine.allocate_batch();
+//! engine.submit(batch, &[TransferReq::write(src, 0, dst, 0, 1 << 20)]).unwrap();
+//! engine.wait(batch, std::time::Duration::from_secs(5)).unwrap();
+//! ```
+
+pub mod util;
+pub mod topology;
+pub mod segment;
+pub mod fabric;
+pub mod transport;
+pub mod engine;
+pub mod policy;
+pub mod cluster;
+pub mod runtime;
+pub mod serving;
+pub mod bench;
+
+pub use cluster::Cluster;
+pub use engine::{EngineConfig, TentEngine};
+
+/// Library-wide result type.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Library-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// No device is eligible to carry a slice (Algorithm 1, line 2).
+    #[error("no eligible device for transfer: {0}")]
+    NoEligibleDevice(String),
+    /// A segment id was not found in the segment manager.
+    #[error("unknown segment {0}")]
+    UnknownSegment(u64),
+    /// Out-of-bounds access into a segment.
+    #[error("segment range out of bounds: {0}")]
+    OutOfBounds(String),
+    /// A batch id was not found or already reaped.
+    #[error("unknown batch {0}")]
+    UnknownBatch(u64),
+    /// The transfer failed on all candidate paths after retries.
+    #[error("transfer failed permanently: {0}")]
+    TransferFailed(String),
+    /// Waiting for a batch exceeded the caller's deadline.
+    #[error("timed out waiting for batch {0}")]
+    Timeout(u64),
+    /// Engine is shutting down.
+    #[error("engine shut down")]
+    Shutdown,
+    /// Configuration / profile errors.
+    #[error("config error: {0}")]
+    Config(String),
+    /// I/O error (file backend, TCP backend, artifact loading).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    /// PJRT runtime error.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+}

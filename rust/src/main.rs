@@ -1,0 +1,275 @@
+//! `tentd` — the TENT coordinator CLI.
+//!
+//! Subcommands:
+//!   topo        dump the discovered topology of a cluster profile
+//!   bench       run a TEBench microbenchmark
+//!   serve       run the multi-turn serving workload (needs artifacts/)
+//!   checkpoint  run a checkpoint-engine weight update
+//!   failover    run a live failure-injection demo
+//!
+//! Common flags: --profile <name> --policy <tent|mooncake|nixl|uccl|rr>
+//!               --nodes <n> --seed <n>
+//! See `tentd help` for per-command flags.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tent::bench::{self, TeBenchConfig, ThreadPair};
+use tent::cluster::Cluster;
+use tent::engine::{EngineConfig, TentEngine};
+use tent::policy::PolicyKind;
+use tent::segment::Location;
+use tent::serving::{
+    build_conversations, CheckpointConfig, CheckpointEngine, ServeConfig, ServeMode,
+};
+use tent::util::cli::Args;
+use tent::util::{fmt_bw, fmt_bytes};
+
+const HELP: &str = r#"tentd — TENT: declarative slice-spraying transfer engine
+
+USAGE: tentd <command> [flags]
+
+COMMANDS:
+  topo        Dump topology: tentd topo --profile h800_hgx --nodes 2
+  bench       TEBench: tentd bench --profile h800_hgx --policy tent \
+                --block 1M --batch 4 --threads 4 --iters 16 \
+                --src host --dst host
+  serve       Multi-turn serving (requires `make artifacts`):
+                tentd serve --mode hicache --policy tent --clients 4 --turns 3
+  checkpoint  Weight update: tentd checkpoint --payload 16M --ranks 8
+  failover    Failure injection demo: tentd failover --fail-at 500 --recover-at 1500
+
+COMMON FLAGS:
+  --profile <name>      h800_hgx | h800_no_nvlink | no_gpudirect | mnnvl_rack |
+                        ascend_ub | legacy_tcp | mixed_fleet   [h800_hgx]
+  --profile-file <path> custom fleet description (JSON; see
+                        rust/src/topology/json_profile.rs for the schema)
+  --policy <name>    tent | mooncake | nixl | uccl | rr        [tent]
+  --nodes <n>        node count                                 [2]
+  --verbose          info-level logging
+"#;
+
+fn main() {
+    let args = Args::from_env();
+    tent::util::logging::init(if args.flag("verbose") {
+        log::Level::Info
+    } else {
+        log::Level::Warn
+    });
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "topo" => cmd_topo(&args),
+        "bench" => cmd_bench(&args),
+        "serve" => cmd_serve(&args),
+        "checkpoint" => cmd_checkpoint(&args),
+        "failover" => cmd_failover(&args),
+        _ => {
+            print!("{HELP}");
+            Ok(())
+        }
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        1
+    });
+    std::process::exit(code);
+}
+
+fn make_engine(args: &Args) -> tent::Result<(Cluster, Arc<TentEngine>)> {
+    let policy = PolicyKind::parse(&args.get_str("policy", "tent"))
+        .ok_or_else(|| tent::Error::Config("unknown --policy".into()))?;
+    // --profile-file <path.json> loads a custom fleet description;
+    // otherwise --profile names a built-in.
+    let cluster = match args.get("profile-file") {
+        Some(path) => Cluster::from_profile_file(path, tent::fabric::FabricConfig::default())?,
+        None => Cluster::from_profile_nodes(
+            &args.get_str("profile", "h800_hgx"),
+            args.get_u64("nodes", 2) as u16,
+            tent::fabric::FabricConfig::default(),
+        )?,
+    };
+    let engine = Arc::new(TentEngine::new(&cluster, EngineConfig::with_policy(policy))?);
+    Ok((cluster, engine))
+}
+
+fn cmd_topo(args: &Args) -> tent::Result<()> {
+    let profile = args.get_str("profile", "h800_hgx");
+    let nodes = args.get_u64("nodes", 2) as u16;
+    let topo = tent::topology::profile::build_profile(&profile, nodes)?;
+    print!("{}", topo.describe());
+    Ok(())
+}
+
+fn parse_loc(kind: &str, node: u16, idx: u8) -> Location {
+    match kind {
+        "gpu" | "device" => Location::device(node, idx),
+        _ => Location::host(node, idx % 2),
+    }
+}
+
+fn cmd_bench(args: &Args) -> tent::Result<()> {
+    let (_cluster, engine) = make_engine(args)?;
+    let block = args.get_u64("block", 1 << 20);
+    let batch = args.get_usize("batch", 1);
+    let threads = args.get_usize("threads", 4);
+    let iters = args.get_usize("iters", 16);
+    let src_kind = args.get_str("src", "host");
+    let dst_kind = args.get_str("dst", "host");
+    let seg_len = (block * batch as u64 * 4).max(8 << 20);
+    let pairs: Vec<ThreadPair> = (0..threads)
+        .map(|i| {
+            let src = engine.register_segment(parse_loc(&src_kind, 0, (i % 8) as u8), seg_len)?;
+            let dst = engine.register_segment(parse_loc(&dst_kind, 1, (i % 8) as u8), seg_len)?;
+            Ok(ThreadPair { src, dst, seg_len })
+        })
+        .collect::<tent::Result<_>>()?;
+    let cfg = TeBenchConfig {
+        block_size: block,
+        batch_size: batch,
+        iters,
+        ..Default::default()
+    };
+    println!("{}", bench::header());
+    let r = bench::run(&engine, &pairs, &cfg)?;
+    println!(
+        "{}",
+        bench::fmt_row(&format!("{}x{}", fmt_bytes(block), batch), &r)
+    );
+    println!("\nper-rail state:");
+    println!(
+        "  {:<14} {:<8} {:>12} {:>8} {:>12} {:>12} {:>8}",
+        "rail", "fabric", "bytes", "slices", "p50", "p99", "b1"
+    );
+    for snap in engine.rail_snapshots() {
+        if snap.bytes_carried > 0 {
+            println!(
+                "  {:<14} {:<8} {:>12} {:>8} {:>12} {:>12} {:>8.2}",
+                snap.name,
+                snap.fabric,
+                fmt_bytes(snap.bytes_carried),
+                snap.slices_ok,
+                tent::util::fmt_ns(snap.p50_ns),
+                tent::util::fmt_ns(snap.p99_ns),
+                snap.beta1,
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> tent::Result<()> {
+    let dir = tent::runtime::default_artifacts_dir();
+    if !tent::runtime::Runtime::artifacts_available(&dir) {
+        return Err(tent::Error::Config(
+            "artifacts not found — run `make artifacts` first".into(),
+        ));
+    }
+    let (_cluster, engine) = make_engine(args)?;
+    let rt = tent::runtime::Runtime::load(&dir)?;
+    let mode = match args.get_str("mode", "hicache").as_str() {
+        "baseline" => ServeMode::Baseline,
+        _ => ServeMode::HiCache,
+    };
+    let cfg = ServeConfig {
+        mode,
+        clients: args.get_usize("clients", 4),
+        turns: args.get_usize("turns", 3),
+        decode_tokens: args.get_usize("decode", 2),
+        seed: args.get_u64("seed", 7),
+        ..Default::default()
+    };
+    let convs = build_conversations(
+        cfg.clients,
+        cfg.turns,
+        rt.meta.t_pre,
+        rt.meta.vocab as i32,
+        cfg.cache.gpus,
+        cfg.seed,
+        cfg.shared_system_prompt,
+    );
+    let report = tent::serving::run_serving(&engine, &rt, &convs, &cfg)?;
+    println!(
+        "mode={:?} policy={} clients={} turns={}",
+        report.mode, report.policy, cfg.clients, cfg.turns
+    );
+    println!(
+        "input throughput: {:.0} tok/s   avg TTFT {:.3}s   P90 TTFT {:.3}s",
+        report.input_throughput_tok_s(),
+        report.avg_ttft_s(),
+        report.p90_ttft_s()
+    );
+    for r in 1..=cfg.turns {
+        println!("  round {r} avg TTFT: {:.3}s", report.round_avg_ttft_s(r));
+    }
+    Ok(())
+}
+
+fn cmd_checkpoint(args: &Args) -> tent::Result<()> {
+    let (_cluster, engine) = make_engine(args)?;
+    let cfg = CheckpointConfig {
+        payload_bytes: args.get_u64("payload", 16 << 20),
+        ranks: args.get_u64("ranks", 8) as u8,
+        chunk_bytes: args.get_u64("chunk", 2 << 20),
+        node: 0,
+    };
+    let ce = CheckpointEngine::new(Arc::clone(&engine), cfg.clone())?;
+    let payload: Vec<u8> = (0..cfg.payload_bytes).map(|i| (i % 253) as u8).collect();
+    ce.stage_weights(&payload)?;
+    let rep = ce.update()?;
+    println!(
+        "updated {} ranks with {} in {:.3}s ({} effective)",
+        rep.ranks,
+        fmt_bytes(rep.payload_bytes),
+        rep.seconds(),
+        fmt_bw(rep.bytes_moved as f64 / rep.seconds())
+    );
+    println!("verify: {}", ce.verify()?);
+    Ok(())
+}
+
+fn cmd_failover(args: &Args) -> tent::Result<()> {
+    let (cluster, engine) = make_engine(args)?;
+    let fail_at = Duration::from_millis(args.get_u64("fail-at", 500));
+    let recover_at = Duration::from_millis(args.get_u64("recover-at", 1500));
+    let total = Duration::from_millis(args.get_u64("duration", 2500));
+    let len = 32u64 << 20;
+    let src = engine.register_segment(Location::host(0, 0), len)?;
+    let dst = engine.register_segment(Location::host(1, 0), len)?;
+    let rail = cluster
+        .topo
+        .rails_of(tent::topology::NodeId(0), tent::topology::FabricKind::Rdma)[0];
+
+    let fabric = Arc::clone(&cluster.fabric);
+    let injector = std::thread::spawn(move || {
+        std::thread::sleep(fail_at);
+        fabric.inject_failure(rail);
+        std::thread::sleep(recover_at - fail_at);
+        fabric.recover(rail);
+    });
+
+    let start = std::time::Instant::now();
+    let mut windows: Vec<(u64, u64)> = Vec::new(); // (ms, bytes/s)
+    while start.elapsed() < total {
+        let t0 = std::time::Instant::now();
+        engine.transfer_sync(
+            tent::engine::TransferReq::write(src, 0, dst, 0, 8 << 20),
+            Duration::from_secs(30),
+        )?;
+        windows.push((
+            start.elapsed().as_millis() as u64,
+            (8u64 << 20) * 1000 / t0.elapsed().as_millis().max(1) as u64,
+        ));
+    }
+    injector.join().unwrap();
+    println!("t(ms)  throughput");
+    for (t, bps) in windows {
+        println!("{t:>6} {}", fmt_bw(bps as f64));
+    }
+    let s = engine.stats();
+    println!(
+        "retries={} exclusions={} readmissions={} permanent_failures={}",
+        s.retries, s.exclusions, s.readmissions, s.permanent_failures
+    );
+    Ok(())
+}

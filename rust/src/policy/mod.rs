@@ -1,0 +1,170 @@
+//! Pluggable slice-scheduling policies.
+//!
+//! [`TentPolicy`] implements the paper's Algorithm 1 (telemetry-driven slice
+//! spraying). The other policies re-implement the baselines exactly as the
+//! paper characterizes them (§2.2, §5.1.3), on the *same* substrate, so the
+//! benches isolate the scheduling variable:
+//!
+//! * [`MooncakePolicy`] — Mooncake TE: static binding to RDMA (GPU↔GPU never
+//!   uses NVLink), fixed GPU→tier-1-NIC mapping, randomized striping among
+//!   NUMA-local NICs for host buffers, no telemetry, no automatic failover.
+//! * [`NixlPolicy`] — NIXL/UCX: a small static set of "best" NICs (two by
+//!   default), multi-rail only above a size threshold.
+//! * [`UcclPolicy`] — UCCL-P2P: each registered memory region pinned to a
+//!   single NIC; no cross-NIC aggregation.
+//! * [`RoundRobinPolicy`] — plain state-blind round-robin (the Fig. 2
+//!   baseline).
+
+mod mooncake;
+mod nixl;
+mod round_robin;
+mod tent;
+mod uccl;
+
+pub use mooncake::MooncakePolicy;
+pub use nixl::NixlPolicy;
+pub use round_robin::RoundRobinPolicy;
+pub use tent::TentPolicy;
+pub use uccl::UcclPolicy;
+
+use crate::engine::plan::TransferPlan;
+use crate::engine::sched::SchedCtx;
+use crate::segment::Segment;
+use crate::topology::{RailId, Topology};
+
+/// Which policy an engine runs.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PolicyKind {
+    /// The paper's contribution: declarative telemetry-driven slice spraying.
+    Tent,
+    /// State-blind round-robin striping.
+    RoundRobin,
+    /// Mooncake Transfer Engine baseline.
+    MooncakeTe,
+    /// NIXL (UCX-based) baseline.
+    Nixl,
+    /// UCCL-P2P baseline.
+    UcclP2p,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        Some(match s {
+            "tent" => PolicyKind::Tent,
+            "rr" | "round_robin" => PolicyKind::RoundRobin,
+            "mooncake" | "te" | "mooncake_te" => PolicyKind::MooncakeTe,
+            "nixl" => PolicyKind::Nixl,
+            "uccl" | "uccl_p2p" => PolicyKind::UcclP2p,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Tent => "TENT",
+            PolicyKind::RoundRobin => "Round-Robin",
+            PolicyKind::MooncakeTe => "Mooncake TE",
+            PolicyKind::Nixl => "NIXL",
+            PolicyKind::UcclP2p => "UCCL-P2P",
+        }
+    }
+}
+
+/// The policy interface: shape the plan once per transfer (static-binding
+/// emulation for baselines), then pick a candidate per slice.
+pub trait SlicePolicy: Send + Sync {
+    fn kind(&self) -> PolicyKind;
+
+    /// Restrict/reorder the candidate set at plan time. TENT keeps the full
+    /// pool (late binding); baselines emulate their static commitments here.
+    fn shape_plan(
+        &self,
+        _plan: &mut TransferPlan,
+        _src: &Segment,
+        _dst: &Segment,
+        _topo: &Topology,
+    ) {
+    }
+
+    /// Choose one of `viable` (indices into `plan.candidates`) for a slice
+    /// of `len` bytes. `None` means no eligible device (Algorithm 1 line 2).
+    fn pick(&self, plan: &TransferPlan, viable: &[usize], len: u64, ctx: &SchedCtx)
+        -> Option<usize>;
+
+    /// Completion feedback hook (TENT's EWMA update; baselines ignore it).
+    fn on_complete(
+        &self,
+        _rail: RailId,
+        _predicted_ns: f64,
+        _serial_ns: f64,
+        _observed_ns: f64,
+        _ctx: &SchedCtx,
+    ) {
+    }
+
+    /// Whether the engine performs in-band per-slice failover for this
+    /// policy (§4.3). Baselines surface transport faults to the caller.
+    fn failover(&self) -> bool;
+}
+
+/// Instantiate a policy.
+pub fn make_policy(kind: PolicyKind) -> Box<dyn SlicePolicy> {
+    match kind {
+        PolicyKind::Tent => Box::new(TentPolicy::default()),
+        PolicyKind::RoundRobin => Box::new(RoundRobinPolicy::default()),
+        PolicyKind::MooncakeTe => Box::new(MooncakePolicy::default()),
+        PolicyKind::Nixl => Box::new(NixlPolicy::default()),
+        PolicyKind::UcclP2p => Box::new(UcclPolicy::default()),
+    }
+}
+
+/// Shared helper: drop every candidate that is not sim-RDMA, if any RDMA
+/// candidate exists (the baselines' "commit to the RDMA stack" behaviour).
+pub(crate) fn restrict_to_rdma(plan: &mut TransferPlan) -> bool {
+    let has = plan
+        .candidates
+        .iter()
+        .any(|c| c.backend.name() == "rdma_sim");
+    if has {
+        plan.candidates.retain(|c| c.backend.name() == "rdma_sim");
+    }
+    has
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(PolicyKind::parse("tent"), Some(PolicyKind::Tent));
+        assert_eq!(PolicyKind::parse("mooncake"), Some(PolicyKind::MooncakeTe));
+        assert_eq!(PolicyKind::parse("rr"), Some(PolicyKind::RoundRobin));
+        assert_eq!(PolicyKind::parse("nixl"), Some(PolicyKind::Nixl));
+        assert_eq!(PolicyKind::parse("uccl"), Some(PolicyKind::UcclP2p));
+        assert_eq!(PolicyKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn factory_builds_each() {
+        for k in [
+            PolicyKind::Tent,
+            PolicyKind::RoundRobin,
+            PolicyKind::MooncakeTe,
+            PolicyKind::Nixl,
+            PolicyKind::UcclP2p,
+        ] {
+            let p = make_policy(k);
+            assert_eq!(p.kind(), k);
+        }
+    }
+
+    #[test]
+    fn only_tent_failover_by_default() {
+        assert!(make_policy(PolicyKind::Tent).failover());
+        assert!(!make_policy(PolicyKind::MooncakeTe).failover());
+        assert!(!make_policy(PolicyKind::Nixl).failover());
+        assert!(!make_policy(PolicyKind::UcclP2p).failover());
+        assert!(!make_policy(PolicyKind::RoundRobin).failover());
+    }
+}

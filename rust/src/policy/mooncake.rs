@@ -1,0 +1,152 @@
+//! Mooncake Transfer Engine baseline, as characterized in §2.2 / §5.1:
+//!
+//! * commits to the RDMA stack at init — GPU↔GPU traffic **always** rides
+//!   RDMA, never NVLink (the Table 2 behavioural difference);
+//! * fixed GPU→NIC mapping: device buffers use the NIC on their own PCIe
+//!   root complex ("tier-1 NIC dictates service time", Fig. 6);
+//! * host buffers stripe with randomized selection among the NUMA-local
+//!   (static-priority tier-1) NICs, ignoring instantaneous load (Fig. 9);
+//! * no automatic cross-transport failover — path faults surface to the
+//!   application (§2.3).
+
+use super::{restrict_to_rdma, PolicyKind, SlicePolicy};
+use crate::engine::plan::TransferPlan;
+use crate::engine::sched::SchedCtx;
+use crate::segment::Segment;
+use crate::topology::{Tier, Topology};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct MooncakePolicy {
+    state: AtomicU64,
+}
+
+impl Default for MooncakePolicy {
+    fn default() -> Self {
+        MooncakePolicy {
+            state: AtomicU64::new(0x9E3779B97F4A7C15),
+        }
+    }
+}
+
+impl MooncakePolicy {
+    /// Randomized selection (xorshift on a shared counter) — "round-robin or
+    /// hashing based solely on static NUMA priorities".
+    fn rand(&self) -> u64 {
+        let mut x = self.state.fetch_add(0x9E3779B97F4A7C15, Ordering::Relaxed);
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xBF58476D1CE4E5B9);
+        x ^= x >> 27;
+        x
+    }
+}
+
+impl SlicePolicy for MooncakePolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::MooncakeTe
+    }
+
+    fn shape_plan(&self, plan: &mut TransferPlan, src: &Segment, dst: &Segment, _t: &Topology) {
+        if !restrict_to_rdma(plan) {
+            return; // no RDMA on this pair; leave whatever exists
+        }
+        if src.loc.is_device() || dst.loc.is_device() {
+            // Fixed GPU-NIC mapping: only the root-local (tier-1) NIC.
+            let dev_root = if src.loc.is_device() {
+                src.loc.pcie_root()
+            } else {
+                dst.loc.pcie_root()
+            };
+            if let Some(root) = dev_root {
+                let before = plan.candidates.len();
+                plan.candidates.retain(|c| c.tier == Tier::T1);
+                // tier-1 relative to the device == same root; keep exactly it.
+                plan.candidates.truncate(1.min(plan.candidates.len()));
+                if plan.candidates.is_empty() && before > 0 {
+                    // Shouldn't happen on GPUDirect profiles; be permissive.
+                }
+                let _ = root;
+            }
+        } else {
+            // Host buffers: static NUMA priority — NUMA-local NICs only.
+            let has_t1 = plan.candidates.iter().any(|c| c.tier == Tier::T1);
+            if has_t1 {
+                plan.candidates.retain(|c| c.tier == Tier::T1);
+            }
+        }
+    }
+
+    fn pick(
+        &self,
+        _plan: &TransferPlan,
+        viable: &[usize],
+        _len: u64,
+        _ctx: &SchedCtx,
+    ) -> Option<usize> {
+        if viable.is_empty() {
+            return None;
+        }
+        Some(viable[(self.rand() % viable.len() as u64) as usize])
+    }
+
+    fn failover(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::engine::plan::build_plan;
+    use crate::segment::Location;
+
+    #[test]
+    fn gpu_traffic_never_uses_nvlink() {
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let a = c.segments.register_memory(Location::device(0, 0), 1 << 20).unwrap();
+        let b = c.segments.register_memory(Location::device(0, 1), 1 << 20).unwrap();
+        let mut plan = build_plan(&c.transports, &c.topo, &a, &b, 1 << 20).unwrap();
+        assert!(plan.candidates.iter().any(|x| x.backend.name() == "nvlink_sim"));
+        MooncakePolicy::default().shape_plan(&mut plan, &a, &b, &c.topo);
+        assert!(plan.candidates.iter().all(|x| x.backend.name() == "rdma_sim"));
+        // Fixed mapping: exactly the one root-local NIC.
+        assert_eq!(plan.candidates.len(), 1);
+        assert_eq!(plan.candidates[0].tier, Tier::T1);
+    }
+
+    #[test]
+    fn host_buffers_stripe_numa_local() {
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let a = c.segments.register_memory(Location::host(0, 1), 1 << 20).unwrap();
+        let b = c.segments.register_memory(Location::host(1, 0), 1 << 20).unwrap();
+        let mut plan = build_plan(&c.transports, &c.topo, &a, &b, 1 << 20).unwrap();
+        MooncakePolicy::default().shape_plan(&mut plan, &a, &b, &c.topo);
+        assert_eq!(plan.candidates.len(), 4); // socket-1 NICs
+        assert!(plan.candidates.iter().all(|x| x.tier == Tier::T1));
+    }
+
+    #[test]
+    fn randomized_pick_covers_pool_unevenly_but_fully() {
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let sched = crate::engine::sched::SchedulerState::new(
+            c.topo.rails.len(),
+            crate::engine::sched::SchedParams::default(),
+        );
+        let a = c.segments.register_memory(Location::host(0, 0), 1 << 20).unwrap();
+        let b = c.segments.register_memory(Location::host(1, 0), 1 << 20).unwrap();
+        let mut plan = build_plan(&c.transports, &c.topo, &a, &b, 1 << 20).unwrap();
+        let p = MooncakePolicy::default();
+        p.shape_plan(&mut plan, &a, &b, &c.topo);
+        let viable: Vec<usize> = (0..plan.candidates.len()).collect();
+        let ctx = SchedCtx {
+            sched: &sched,
+            fabric: &c.fabric,
+            topo: &c.topo,
+        };
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..200 {
+            seen.insert(p.pick(&plan, &viable, 64 << 10, &ctx).unwrap());
+        }
+        assert_eq!(seen.len(), viable.len());
+    }
+}

@@ -1,0 +1,137 @@
+//! NIXL (UCX-based) baseline, as characterized in §5.1.3 / Fig. 9:
+//!
+//! * selects a small static set of "best" NICs — two by default — ranked by
+//!   static transport properties (nominal bandwidth, then id);
+//! * multi-rail striping only kicks in above a size threshold; a 4 MB block
+//!   "is too small to trigger its multi-rail mechanism" and rides one NIC;
+//! * no queue-depth visibility, no failover.
+
+use super::{restrict_to_rdma, PolicyKind, SlicePolicy};
+use crate::engine::plan::TransferPlan;
+use crate::engine::sched::SchedCtx;
+use crate::segment::Segment;
+use crate::topology::Topology;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub struct NixlPolicy {
+    cursor: AtomicUsize,
+    /// How many "best" NICs UCX keeps (default 2).
+    pub max_rails: usize,
+    /// Transfers below this stay single-rail (default 8 MiB).
+    pub multirail_threshold: u64,
+}
+
+impl Default for NixlPolicy {
+    fn default() -> Self {
+        NixlPolicy {
+            cursor: AtomicUsize::new(0),
+            max_rails: 2,
+            multirail_threshold: 8 << 20,
+        }
+    }
+}
+
+impl SlicePolicy for NixlPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Nixl
+    }
+
+    fn shape_plan(&self, plan: &mut TransferPlan, _s: &Segment, _d: &Segment, _t: &Topology) {
+        if !restrict_to_rdma(plan) {
+            return;
+        }
+        // Static bandwidth ranking, id as tie-break; keep the top-N.
+        plan.candidates.sort_by(|a, b| {
+            b.bw.partial_cmp(&a.bw)
+                .unwrap()
+                .then(a.rail.0.cmp(&b.rail.0))
+        });
+        plan.candidates.truncate(self.max_rails);
+    }
+
+    fn pick(
+        &self,
+        plan: &TransferPlan,
+        viable: &[usize],
+        _len: u64,
+        _ctx: &SchedCtx,
+    ) -> Option<usize> {
+        if viable.is_empty() {
+            return None;
+        }
+        if plan.transfer_len < self.multirail_threshold {
+            // Below the threshold: single best NIC.
+            return Some(viable[0]);
+        }
+        let k = self.cursor.fetch_add(1, Ordering::Relaxed) % viable.len();
+        Some(viable[k])
+    }
+
+    fn failover(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::engine::plan::build_plan;
+    use crate::engine::sched::{SchedParams, SchedulerState};
+    use crate::segment::Location;
+
+    fn plan_of(c: &Cluster, len: u64) -> (TransferPlan, SchedulerState) {
+        let a = c.segments.register_memory(Location::host(0, 0), 64 << 20).unwrap();
+        let b = c.segments.register_memory(Location::host(1, 0), 64 << 20).unwrap();
+        let mut plan = build_plan(&c.transports, &c.topo, &a, &b, len).unwrap();
+        let p = NixlPolicy::default();
+        p.shape_plan(&mut plan, &a, &b, &c.topo);
+        (
+            plan,
+            SchedulerState::new(c.topo.rails.len(), SchedParams::default()),
+        )
+    }
+
+    #[test]
+    fn keeps_two_best_nics() {
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let (plan, _) = plan_of(&c, 64 << 20);
+        assert_eq!(plan.candidates.len(), 2);
+    }
+
+    #[test]
+    fn small_blocks_single_rail() {
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let (plan, sched) = plan_of(&c, 4 << 20); // 4 MiB < threshold
+        let p = NixlPolicy::default();
+        let ctx = SchedCtx {
+            sched: &sched,
+            fabric: &c.fabric,
+            topo: &c.topo,
+        };
+        let viable: Vec<usize> = (0..plan.candidates.len()).collect();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..20 {
+            seen.insert(p.pick(&plan, &viable, 64 << 10, &ctx).unwrap());
+        }
+        assert_eq!(seen.len(), 1, "4 MiB must not trigger multi-rail");
+    }
+
+    #[test]
+    fn large_blocks_stripe_over_the_pair() {
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let (plan, sched) = plan_of(&c, 64 << 20);
+        let p = NixlPolicy::default();
+        let ctx = SchedCtx {
+            sched: &sched,
+            fabric: &c.fabric,
+            topo: &c.topo,
+        };
+        let viable: Vec<usize> = (0..plan.candidates.len()).collect();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..20 {
+            seen.insert(p.pick(&plan, &viable, 1 << 20, &ctx).unwrap());
+        }
+        assert_eq!(seen.len(), 2);
+    }
+}

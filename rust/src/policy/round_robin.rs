@@ -1,0 +1,75 @@
+//! State-blind round-robin striping — the Fig. 2 baseline: fixed-size
+//! chunks dealt to NICs in order, no congestion signal, no failover.
+
+use super::{restrict_to_rdma, PolicyKind, SlicePolicy};
+use crate::engine::plan::TransferPlan;
+use crate::engine::sched::SchedCtx;
+use crate::segment::Segment;
+use crate::topology::Topology;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+#[derive(Default)]
+pub struct RoundRobinPolicy {
+    cursor: AtomicUsize,
+}
+
+impl SlicePolicy for RoundRobinPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::RoundRobin
+    }
+
+    fn shape_plan(&self, plan: &mut TransferPlan, _s: &Segment, _d: &Segment, _t: &Topology) {
+        // Stripe over the NIC pool; ignore affinity entirely (state-blind).
+        restrict_to_rdma(plan);
+    }
+
+    fn pick(
+        &self,
+        _plan: &TransferPlan,
+        viable: &[usize],
+        _len: u64,
+        _ctx: &SchedCtx,
+    ) -> Option<usize> {
+        if viable.is_empty() {
+            return None;
+        }
+        let k = self.cursor.fetch_add(1, Ordering::Relaxed) % viable.len();
+        Some(viable[k])
+    }
+
+    fn failover(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::engine::plan::build_plan;
+    use crate::engine::sched::{SchedParams, SchedulerState};
+    use crate::segment::Location;
+
+    #[test]
+    fn cycles_through_all_rails_evenly() {
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let sched = SchedulerState::new(c.topo.rails.len(), SchedParams::default());
+        let a = c.segments.register_memory(Location::host(0, 0), 1 << 20).unwrap();
+        let b = c.segments.register_memory(Location::host(1, 0), 1 << 20).unwrap();
+        let mut plan = build_plan(&c.transports, &c.topo, &a, &b, 1 << 20).unwrap();
+        let p = RoundRobinPolicy::default();
+        p.shape_plan(&mut plan, &a, &b, &c.topo);
+        assert_eq!(plan.candidates.len(), 8, "rdma only after shaping");
+        let viable: Vec<usize> = (0..plan.candidates.len()).collect();
+        let ctx = SchedCtx {
+            sched: &sched,
+            fabric: &c.fabric,
+            topo: &c.topo,
+        };
+        let mut counts = vec![0u32; plan.candidates.len()];
+        for _ in 0..80 {
+            counts[p.pick(&plan, &viable, 64 << 10, &ctx).unwrap()] += 1;
+        }
+        assert!(counts.iter().all(|&n| n == 10), "{counts:?}");
+    }
+}

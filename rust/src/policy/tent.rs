@@ -1,0 +1,263 @@
+//! Algorithm 1 — telemetry-driven slice scheduling, verbatim:
+//!
+//! ```text
+//! Require: request length L, source location ℓ
+//! 1:  D ← candidate devices reachable from ℓ           (the plan)
+//! 2:  if D is empty then return ERROR(NoEligibleDevice)
+//! 3:  s_min ← +∞
+//! 4:  for each device d ∈ D do
+//! 5:      get queue length A_d, bandwidth B_d, model (β0_d, β1_d)
+//! 6:      t̂_d ← β0_d + β1_d · (A_d + L)/B_d
+//! 7:      s_d ← P_tier(d) · t̂_d                        (topology penalty)
+//! 8:      s_min ← min(s_min, s_d)
+//! 9:  C ← { d ∈ D | s_d ≤ (1+γ)·s_min }                (tolerance window)
+//! 10: choose d* from C via round-robin
+//! 11: A_d* ← A_d* + L
+//! 12: return d*
+//! ```
+//!
+//! Plus the feedback loop: on completion the prediction error updates
+//! (β0, β1) via EWMA, and the maintenance thread periodically resets state
+//! so degraded paths are re-admitted (§4.2).
+
+use super::{PolicyKind, SlicePolicy};
+use crate::engine::plan::TransferPlan;
+use crate::engine::sched::SchedCtx;
+use crate::topology::RailId;
+use std::sync::atomic::Ordering;
+
+#[derive(Default)]
+pub struct TentPolicy;
+
+impl SlicePolicy for TentPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Tent
+    }
+
+    fn pick(
+        &self,
+        plan: &TransferPlan,
+        viable: &[usize],
+        len: u64,
+        ctx: &SchedCtx,
+    ) -> Option<usize> {
+        if viable.is_empty() {
+            return None; // line 2: ERROR(NoEligibleDevice)
+        }
+        let sched = ctx.sched;
+        // Bandwidth-class gating: fallback links an order of magnitude
+        // slower than the best candidate (e.g. the TCP rail next to an RDMA
+        // pool) serve as *substitution* targets (§4.3), not spillover
+        // targets — queue-equalizing onto an 80x-slower link would trade a
+        // tiny bandwidth gain for massive tail latency. Keep them out of the
+        // spray unless every fast link is gone.
+        let max_bw = viable
+            .iter()
+            .map(|&i| plan.candidates[i].bw)
+            .fold(0.0f64, f64::max);
+        let gated: Vec<usize> = viable
+            .iter()
+            .copied()
+            .filter(|&i| plan.candidates[i].bw >= max_bw / 10.0)
+            .collect();
+        let viable: &[usize] = if gated.is_empty() { viable } else { &gated };
+        // Lines 3–8: score every candidate.
+        let mut scores: Vec<(usize, f64, f64)> = Vec::with_capacity(viable.len());
+        let mut s_min = f64::INFINITY;
+        let mut t_min = f64::INFINITY;
+        for &i in viable {
+            let c = &plan.candidates[i];
+            let (t_hat, _serial) = sched.predict_ns(ctx.fabric, c.rail, len, c.bw);
+            let s = sched.penalty(c.tier) * t_hat;
+            s_min = s_min.min(s);
+            t_min = t_min.min(t_hat);
+            scores.push((i, s, t_hat));
+        }
+        let gamma = sched.params.gamma;
+        // Line 9: the tolerance window. If every score is infinite (all
+        // candidates are tier-3 / P=∞), fall back to comparing raw t̂ so
+        // NUMA-crossing rails still work when they are the only option.
+        let window: Vec<usize> = if s_min.is_finite() {
+            scores
+                .iter()
+                .filter(|&&(_, s, _)| s <= (1.0 + gamma) * s_min)
+                .map(|&(i, _, _)| i)
+                .collect()
+        } else {
+            scores
+                .iter()
+                .filter(|&&(_, _, t)| t <= (1.0 + gamma) * t_min)
+                .map(|&(i, _, _)| i)
+                .collect()
+        };
+        // Line 10: round-robin within the window.
+        let k = sched.rr.fetch_add(1, Ordering::Relaxed) % window.len();
+        Some(window[k])
+        // Line 11 (A_d* += L) is applied by the dispatcher via add_queued.
+    }
+
+    fn on_complete(
+        &self,
+        rail: RailId,
+        predicted_ns: f64,
+        serial_ns: f64,
+        observed_ns: f64,
+        ctx: &SchedCtx,
+    ) {
+        ctx.sched.observe(rail, predicted_ns, serial_ns, observed_ns);
+    }
+
+    fn failover(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::engine::plan::build_plan;
+    use crate::engine::sched::{SchedParams, SchedulerState};
+    use crate::segment::Location;
+    use crate::topology::Tier;
+
+    fn ctx_for<'a>(
+        c: &'a Cluster,
+        sched: &'a SchedulerState,
+    ) -> SchedCtx<'a> {
+        SchedCtx {
+            sched,
+            fabric: &c.fabric,
+            topo: &c.topo,
+        }
+    }
+
+    fn h2h_plan(c: &Cluster) -> TransferPlan {
+        let a = c.segments.register_memory(Location::host(0, 0), 1 << 26).unwrap();
+        let b = c.segments.register_memory(Location::host(1, 0), 1 << 26).unwrap();
+        build_plan(&c.transports, &c.topo, &a, &b, 1 << 26).unwrap()
+    }
+
+    #[test]
+    fn empty_viable_is_no_eligible_device() {
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let sched = SchedulerState::new(c.topo.rails.len(), SchedParams::default());
+        let plan = h2h_plan(&c);
+        assert!(TentPolicy.pick(&plan, &[], 4096, &ctx_for(&c, &sched)).is_none());
+    }
+
+    #[test]
+    fn idle_pick_prefers_tier1() {
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let sched = SchedulerState::new(c.topo.rails.len(), SchedParams::default());
+        let plan = h2h_plan(&c);
+        let viable: Vec<usize> = (0..plan.candidates.len()).collect();
+        let ctx = ctx_for(&c, &sched);
+        for _ in 0..32 {
+            let i = TentPolicy.pick(&plan, &viable, 64 << 10, &ctx).unwrap();
+            assert_eq!(plan.candidates[i].tier, Tier::T1);
+            assert_eq!(plan.candidates[i].backend.name(), "rdma_sim");
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_within_window() {
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let sched = SchedulerState::new(c.topo.rails.len(), SchedParams::default());
+        let plan = h2h_plan(&c);
+        let viable: Vec<usize> = (0..plan.candidates.len()).collect();
+        let ctx = ctx_for(&c, &sched);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..64 {
+            let i = TentPolicy.pick(&plan, &viable, 64 << 10, &ctx).unwrap();
+            seen.insert(plan.candidates[i].rail);
+        }
+        // 4 tier-1 NICs for a NUMA-0 host buffer.
+        assert_eq!(seen.len(), 4, "expected all 4 tier-1 rails used: {seen:?}");
+    }
+
+    #[test]
+    fn saturated_tier1_spills_to_tier3_window_fallback() {
+        // Host memory: tiers are 1 or 3 in our model. Load tier-1 rails
+        // heavily; the infinite-penalty fallback must then use raw t̂ and
+        // pick an idle remote-socket NIC rather than queueing forever.
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let sched = SchedulerState::new(c.topo.rails.len(), SchedParams::default());
+        let plan = h2h_plan(&c);
+        let ctx = ctx_for(&c, &sched);
+        let viable: Vec<usize> = (0..plan.candidates.len())
+            .filter(|&i| plan.candidates[i].backend.name() == "rdma_sim")
+            .collect();
+        // Pile 64 MiB onto every tier-1 rail.
+        for &i in &viable {
+            if plan.candidates[i].tier == Tier::T1 {
+                sched.add_queued(&c.fabric, plan.candidates[i].rail, 64 << 20);
+            }
+        }
+        // tier-3 candidates only.
+        let t3: Vec<usize> = viable
+            .iter()
+            .copied()
+            .filter(|&i| plan.candidates[i].tier == Tier::T3)
+            .collect();
+        let picked = TentPolicy.pick(&plan, &t3, 1 << 20, &ctx).unwrap();
+        assert_eq!(plan.candidates[picked].tier, Tier::T3);
+    }
+
+    #[test]
+    fn feedback_steers_away_from_degraded_rail() {
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let sched = SchedulerState::new(c.topo.rails.len(), SchedParams::default());
+        let plan = h2h_plan(&c);
+        let ctx = ctx_for(&c, &sched);
+        let viable: Vec<usize> = (0..plan.candidates.len())
+            .filter(|&i| {
+                plan.candidates[i].backend.name() == "rdma_sim"
+                    && plan.candidates[i].tier == Tier::T1
+            })
+            .collect();
+        // Rail of the first tier-1 candidate reports 10x-slow completions.
+        let bad = plan.candidates[viable[0]].rail;
+        let bw = plan.candidates[viable[0]].bw;
+        for _ in 0..30 {
+            let serial = (1u64 << 20) as f64 / bw * 1e9;
+            sched.observe(bad, serial, serial, 10.0 * serial);
+        }
+        // The spray must now avoid `bad`.
+        let mut picks_bad = 0;
+        for _ in 0..64 {
+            let i = TentPolicy.pick(&plan, &viable, 1 << 20, &ctx).unwrap();
+            if plan.candidates[i].rail == bad {
+                picks_bad += 1;
+            }
+        }
+        assert_eq!(picks_bad, 0, "degraded rail must be avoided");
+    }
+
+    #[test]
+    fn d2d_large_blocks_recruit_tier2() {
+        // Fig 6 behaviour: tier-1 NIC saturates, tier-2 NICs are recruited
+        // once P2 · t̂_idle < t̂_tier1_queued.
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let sched = SchedulerState::new(c.topo.rails.len(), SchedParams::default());
+        let g0 = c.segments.register_memory(Location::device(0, 0), 1 << 26).unwrap();
+        let g1 = c.segments.register_memory(Location::device(1, 0), 1 << 26).unwrap();
+        let plan = build_plan(&c.transports, &c.topo, &g0, &g1, 1 << 26).unwrap();
+        let ctx = ctx_for(&c, &sched);
+        let viable: Vec<usize> = (0..plan.candidates.len()).collect();
+        let mut tiers_used = std::collections::HashSet::new();
+        // Spray a 64 MiB flow in 1 MiB slices, accounting the queue like the
+        // dispatcher would.
+        for _ in 0..64 {
+            let i = TentPolicy.pick(&plan, &viable, 1 << 20, &ctx).unwrap();
+            let cnd = &plan.candidates[i];
+            sched.add_queued(&c.fabric, cnd.rail, 1 << 20);
+            tiers_used.insert(cnd.tier);
+        }
+        assert!(tiers_used.contains(&Tier::T1));
+        assert!(
+            tiers_used.contains(&Tier::T2),
+            "large flow must spill to tier-2: {tiers_used:?}"
+        );
+    }
+}

@@ -1,0 +1,85 @@
+//! UCCL-P2P baseline, as characterized in §5.1.3: each registered memory
+//! region is bound to a single NIC (per-region pinning), so throughput is
+//! capped at per-NIC limits and there is no cross-NIC aggregation.
+
+use super::{restrict_to_rdma, PolicyKind, SlicePolicy};
+use crate::engine::plan::TransferPlan;
+use crate::engine::sched::SchedCtx;
+use crate::segment::Segment;
+use crate::topology::{Tier, Topology};
+
+#[derive(Default)]
+pub struct UcclPolicy;
+
+impl SlicePolicy for UcclPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::UcclP2p
+    }
+
+    fn shape_plan(&self, plan: &mut TransferPlan, src: &Segment, _d: &Segment, _t: &Topology) {
+        if !restrict_to_rdma(plan) {
+            return;
+        }
+        // Deterministic region→NIC pinning: hash the source segment id over
+        // its NUMA-local NICs (or the whole pool if none are local).
+        let local: Vec<usize> = (0..plan.candidates.len())
+            .filter(|&i| plan.candidates[i].tier == Tier::T1)
+            .collect();
+        let pool = if local.is_empty() {
+            (0..plan.candidates.len()).collect::<Vec<_>>()
+        } else {
+            local
+        };
+        let pin = pool[(src.id.0 as usize) % pool.len()];
+        let chosen = plan.candidates.swap_remove(pin);
+        plan.candidates.clear();
+        plan.candidates.push(chosen);
+    }
+
+    fn pick(
+        &self,
+        _plan: &TransferPlan,
+        viable: &[usize],
+        _len: u64,
+        _ctx: &SchedCtx,
+    ) -> Option<usize> {
+        viable.first().copied()
+    }
+
+    fn failover(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::engine::plan::build_plan;
+    use crate::segment::Location;
+
+    #[test]
+    fn region_is_pinned_to_one_nic() {
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let a = c.segments.register_memory(Location::host(0, 0), 1 << 20).unwrap();
+        let b = c.segments.register_memory(Location::host(1, 0), 1 << 20).unwrap();
+        let mut plan = build_plan(&c.transports, &c.topo, &a, &b, 1 << 20).unwrap();
+        UcclPolicy.shape_plan(&mut plan, &a, &b, &c.topo);
+        assert_eq!(plan.candidates.len(), 1);
+        assert_eq!(plan.candidates[0].tier, Tier::T1);
+    }
+
+    #[test]
+    fn different_regions_may_pin_to_different_nics() {
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let b = c.segments.register_memory(Location::host(1, 0), 1 << 20).unwrap();
+        let mut rails = std::collections::HashSet::new();
+        for _ in 0..8 {
+            let a = c.segments.register_memory(Location::host(0, 0), 1 << 20).unwrap();
+            let mut plan = build_plan(&c.transports, &c.topo, &a, &b, 1 << 20).unwrap();
+            UcclPolicy.shape_plan(&mut plan, &a, &b, &c.topo);
+            rails.insert(plan.candidates[0].rail);
+        }
+        assert!(rails.len() > 1, "hashing should spread distinct regions");
+    }
+}

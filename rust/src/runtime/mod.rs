@@ -1,0 +1,342 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts and execute
+//! them from the Rust serving path. Python never runs at request time.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile`,
+//! compiled once per model phase and reused for every request.
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Model dimensions read from `artifacts/model_meta.json` (written by
+/// `python -m compile.aot`).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub t_max: usize,
+    pub t_pre: usize,
+    pub param_count: usize,
+    pub kv_shape: Vec<i64>,
+    pub kv_bytes: u64,
+    pub kv_bytes_per_token: u64,
+}
+
+impl ModelMeta {
+    pub fn load(dir: &Path) -> Result<ModelMeta> {
+        let text = std::fs::read_to_string(dir.join("model_meta.json"))?;
+        let j = Json::parse(&text).map_err(Error::Config)?;
+        let get = |k: &str| -> Result<u64> {
+            j.get(k)
+                .as_u64()
+                .ok_or_else(|| Error::Config(format!("model_meta missing {k}")))
+        };
+        Ok(ModelMeta {
+            vocab: get("vocab")? as usize,
+            d_model: get("d_model")? as usize,
+            layers: get("layers")? as usize,
+            heads: get("heads")? as usize,
+            head_dim: get("head_dim")? as usize,
+            t_max: get("t_max")? as usize,
+            t_pre: get("t_pre")? as usize,
+            param_count: get("param_count")? as usize,
+            kv_shape: j
+                .get("kv_shape")
+                .as_arr()
+                .ok_or_else(|| Error::Config("model_meta missing kv_shape".into()))?
+                .iter()
+                .map(|v| v.as_u64().unwrap_or(0) as i64)
+                .collect(),
+            kv_bytes: get("kv_bytes")?,
+            kv_bytes_per_token: get("kv_bytes_per_token")?,
+        })
+    }
+}
+
+/// A request's KV cache on the runtime side (host-resident literal; the
+/// serving layer owns where its *bytes of record* live in the tiered store).
+pub struct KvCache(pub xla::Literal);
+
+impl KvCache {
+    /// Raw little-endian f32 bytes of the cache (for segment upload).
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let v: Vec<f32> = self
+            .0
+            .to_vec()
+            .map_err(|e| Error::Runtime(format!("kv to_vec: {e:?}")))?;
+        let mut out = vec![0u8; v.len() * 4];
+        for (i, x) in v.iter().enumerate() {
+            out[i * 4..i * 4 + 4].copy_from_slice(&x.to_le_bytes());
+        }
+        Ok(out)
+    }
+}
+
+/// The compiled model: PJRT CPU client + one executable per phase.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    prefill_exe: xla::PjRtLoadedExecutable,
+    decode_exe: xla::PjRtLoadedExecutable,
+    params: xla::Literal,
+    pub meta: ModelMeta,
+    pub artifacts_dir: PathBuf,
+}
+
+fn xerr(e: xla::Error) -> Error {
+    Error::Runtime(format!("{e:?}"))
+}
+
+impl Runtime {
+    /// Load artifacts (HLO text + params.bin + meta) and compile.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref();
+        let meta = ModelMeta::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::Config("bad artifacts path".into()))?,
+            )
+            .map_err(xerr)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).map_err(xerr)
+        };
+        let prefill_exe = compile("prefill.hlo.txt")?;
+        let decode_exe = compile("decode.hlo.txt")?;
+        let params = Self::load_params(&dir.join("params.bin"), meta.param_count)?;
+        log::info!(
+            "runtime: loaded TinyGPT ({} params, kv {} per request) on {}",
+            meta.param_count,
+            crate::util::fmt_bytes(meta.kv_bytes),
+            client.platform_name()
+        );
+        Ok(Runtime {
+            client,
+            prefill_exe,
+            decode_exe,
+            params,
+            meta,
+            artifacts_dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Artifacts present? (tests/examples skip gracefully when not built).
+    pub fn artifacts_available(dir: impl AsRef<Path>) -> bool {
+        let d = dir.as_ref();
+        ["prefill.hlo.txt", "decode.hlo.txt", "params.bin", "model_meta.json"]
+            .iter()
+            .all(|f| d.join(f).exists())
+    }
+
+    fn load_params(path: &Path, count: usize) -> Result<xla::Literal> {
+        let raw = std::fs::read(path)?;
+        if raw.len() != count * 4 {
+            return Err(Error::Config(format!(
+                "params.bin is {} bytes, expected {}",
+                raw.len(),
+                count * 4
+            )));
+        }
+        let floats: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(xla::Literal::vec1(&floats))
+    }
+
+    /// Replace the weights (checkpoint-engine integration: the new flat
+    /// param vector just arrived over TENT).
+    pub fn install_params(&mut self, flat: &[f32]) -> Result<()> {
+        if flat.len() != self.meta.param_count {
+            return Err(Error::Config(format!(
+                "param vector has {} elements, expected {}",
+                flat.len(),
+                self.meta.param_count
+            )));
+        }
+        self.params = xla::Literal::vec1(flat);
+        Ok(())
+    }
+
+    /// Current weights as raw f32 (checkpoint source payload).
+    pub fn params_f32(&self) -> Result<Vec<f32>> {
+        self.params
+            .to_vec()
+            .map_err(|e| Error::Runtime(format!("{e:?}")))
+    }
+
+    /// Fresh zero KV cache.
+    pub fn empty_kv(&self) -> Result<KvCache> {
+        let zeros = vec![0f32; (self.meta.kv_bytes / 4) as usize];
+        Ok(KvCache(
+            xla::Literal::vec1(&zeros)
+                .reshape(&self.meta.kv_shape)
+                .map_err(xerr)?,
+        ))
+    }
+
+    /// KV cache from raw little-endian f32 bytes (fetched from the tiered
+    /// store over TENT).
+    pub fn kv_from_bytes(&self, raw: &[u8]) -> Result<KvCache> {
+        if raw.len() as u64 != self.meta.kv_bytes {
+            return Err(Error::Config(format!(
+                "kv bytes {} != expected {}",
+                raw.len(),
+                self.meta.kv_bytes
+            )));
+        }
+        let floats: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(KvCache(
+            xla::Literal::vec1(&floats)
+                .reshape(&self.meta.kv_shape)
+                .map_err(xerr)?,
+        ))
+    }
+
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        tokens: &[i32],
+        kv: KvCache,
+        offset: i32,
+    ) -> Result<(i32, KvCache)> {
+        let tok_lit = xla::Literal::vec1(tokens);
+        let off_lit = xla::Literal::scalar(offset);
+        let outs = exe
+            .execute::<xla::Literal>(&[self.params.clone_literal()?, tok_lit, kv.0, off_lit])
+            .map_err(xerr)?;
+        let result = outs[0][0].to_literal_sync().map_err(xerr)?;
+        let (next, kv_out) = result.to_tuple2().map_err(xerr)?;
+        let next_token = next
+            .get_first_element::<i32>()
+            .map_err(xerr)?;
+        Ok((next_token, KvCache(kv_out)))
+    }
+
+    /// Run a prefill chunk (exactly `t_pre` tokens) at `offset`.
+    pub fn prefill(&self, tokens: &[i32], kv: KvCache, offset: i32) -> Result<(i32, KvCache)> {
+        if tokens.len() != self.meta.t_pre {
+            return Err(Error::Config(format!(
+                "prefill needs {} tokens, got {}",
+                self.meta.t_pre,
+                tokens.len()
+            )));
+        }
+        self.run(&self.prefill_exe, tokens, kv, offset)
+    }
+
+    /// Run one decode step at `pos`.
+    pub fn decode(&self, token: i32, kv: KvCache, pos: i32) -> Result<(i32, KvCache)> {
+        self.run(&self.decode_exe, &[token], kv, pos)
+    }
+}
+
+/// Helper used by Runtime::run — the xla crate's Literal has no public
+/// clone; round-trip through raw data.
+trait CloneLiteral {
+    fn clone_literal(&self) -> Result<xla::Literal>;
+}
+
+impl CloneLiteral for xla::Literal {
+    fn clone_literal(&self) -> Result<xla::Literal> {
+        let v: Vec<f32> = self.to_vec().map_err(|e| Error::Runtime(format!("{e:?}")))?;
+        Ok(xla::Literal::vec1(&v))
+    }
+}
+
+/// Default artifacts directory: `$TENT_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("TENT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir() -> PathBuf {
+        // Unit tests run from the crate root.
+        default_artifacts_dir()
+    }
+
+    #[test]
+    fn meta_parses_when_artifacts_exist() {
+        if !Runtime::artifacts_available(dir()) {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let m = ModelMeta::load(&dir()).unwrap();
+        assert_eq!(m.kv_shape.len(), 5);
+        assert_eq!(m.kv_bytes_per_token * m.t_max as u64, m.kv_bytes);
+    }
+
+    #[test]
+    fn prefill_and_decode_execute() {
+        if !Runtime::artifacts_available(dir()) {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let rt = Runtime::load(dir()).unwrap();
+        let kv = rt.empty_kv().unwrap();
+        let tokens: Vec<i32> = (0..rt.meta.t_pre as i32).collect();
+        let (next, kv) = rt.prefill(&tokens, kv, 0).unwrap();
+        assert!((0..rt.meta.vocab as i32).contains(&next));
+        let (next2, _kv) = rt.decode(next, kv, rt.meta.t_pre as i32).unwrap();
+        assert!((0..rt.meta.vocab as i32).contains(&next2));
+    }
+
+    #[test]
+    fn determinism_across_runs() {
+        if !Runtime::artifacts_available(dir()) {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::load(dir()).unwrap();
+        let tokens: Vec<i32> = (0..rt.meta.t_pre as i32).map(|i| i * 7 % 4096).collect();
+        let (a, _) = rt.prefill(&tokens, rt.empty_kv().unwrap(), 0).unwrap();
+        let (b, _) = rt.prefill(&tokens, rt.empty_kv().unwrap(), 0).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn kv_roundtrip_preserves_prediction() {
+        if !Runtime::artifacts_available(dir()) {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::load(dir()).unwrap();
+        let tokens: Vec<i32> = (0..rt.meta.t_pre as i32).collect();
+        let (_, kv) = rt.prefill(&tokens, rt.empty_kv().unwrap(), 0).unwrap();
+        let bytes = kv.to_bytes().unwrap();
+        assert_eq!(bytes.len() as u64, rt.meta.kv_bytes);
+        let kv2 = rt.kv_from_bytes(&bytes).unwrap();
+        // Continuing from the roundtripped cache must match.
+        let t2: Vec<i32> = (0..rt.meta.t_pre as i32).map(|i| (i * 13) % 4096).collect();
+        let (a, _) = rt.prefill(&t2, kv2, rt.meta.t_pre as i32).unwrap();
+        let (_, kv_orig) = rt.prefill(&tokens, rt.empty_kv().unwrap(), 0).unwrap();
+        let (b, _) = rt.prefill(&t2, kv_orig, rt.meta.t_pre as i32).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn install_params_validates_length() {
+        if !Runtime::artifacts_available(dir()) {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = Runtime::load(dir()).unwrap();
+        assert!(rt.install_params(&[0.0; 3]).is_err());
+        let p = rt.params_f32().unwrap();
+        rt.install_params(&p).unwrap();
+    }
+}

@@ -1,0 +1,435 @@
+//! The segment abstraction (§3.1): a unified, transport-agnostic way to name
+//! data wherever it lives — host DRAM, accelerator HBM, or persistent
+//! storage.
+//!
+//! Applications interact exclusively with `(SegmentId, offset, len)` triples;
+//! device-specific metadata (the sim analogue of RDMA rkeys / GPU memory
+//! handles / fds) is encapsulated inside the segment and opaque to the core
+//! engine — only backends look at it.
+
+use crate::topology::NodeId;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::os::unix::fs::FileExt;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Unique id of a registered segment.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct SegmentId(pub u64);
+
+impl std::fmt::Display for SegmentId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "seg{}", self.0)
+    }
+}
+
+/// Where a segment's bytes physically live.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub enum Location {
+    /// Host DRAM on `node`, NUMA domain `numa`.
+    Host { node: NodeId, numa: u8 },
+    /// Accelerator memory (sim HBM) on `node`, device `gpu`.
+    Device { node: NodeId, gpu: u8 },
+    /// A file on `node`'s local SSD.
+    Storage { node: NodeId, path: PathBuf },
+}
+
+impl Location {
+    pub fn host(node: u16, numa: u8) -> Location {
+        Location::Host {
+            node: NodeId(node),
+            numa,
+        }
+    }
+    pub fn device(node: u16, gpu: u8) -> Location {
+        Location::Device {
+            node: NodeId(node),
+            gpu,
+        }
+    }
+    pub fn storage(node: u16, path: impl Into<PathBuf>) -> Location {
+        Location::Storage {
+            node: NodeId(node),
+            path: path.into(),
+        }
+    }
+
+    pub fn node(&self) -> NodeId {
+        match self {
+            Location::Host { node, .. }
+            | Location::Device { node, .. }
+            | Location::Storage { node, .. } => *node,
+        }
+    }
+
+    /// NUMA affinity of the location (GPUs: their root's socket).
+    pub fn numa(&self) -> u8 {
+        match self {
+            Location::Host { numa, .. } => *numa,
+            Location::Device { gpu, .. } => gpu / 4,
+            Location::Storage { .. } => 0,
+        }
+    }
+
+    /// PCIe root complex, if the location is behind one.
+    pub fn pcie_root(&self) -> Option<u8> {
+        match self {
+            Location::Device { gpu, .. } => Some(*gpu),
+            _ => None,
+        }
+    }
+
+    pub fn is_device(&self) -> bool {
+        matches!(self, Location::Device { .. })
+    }
+    pub fn is_storage(&self) -> bool {
+        matches!(self, Location::Storage { .. })
+    }
+}
+
+/// The physical backing of a segment.
+pub enum Backing {
+    /// Heap memory we own (simulated DRAM or HBM). Accessed by raw pointer
+    /// from rail workers — the engine, like RDMA hardware, performs
+    /// one-sided reads/writes without synchronizing overlapping app access.
+    Memory(MemRegion),
+    /// A real file, accessed with positional I/O (io_uring analogue).
+    File(File),
+}
+
+/// Raw owned memory region, shareable across worker threads.
+pub struct MemRegion {
+    ptr: *mut u8,
+    len: usize,
+    layout: std::alloc::Layout,
+}
+
+unsafe impl Send for MemRegion {}
+unsafe impl Sync for MemRegion {}
+
+impl MemRegion {
+    pub fn alloc(len: usize) -> MemRegion {
+        let layout = std::alloc::Layout::from_size_align(len.max(1), 64).unwrap();
+        let ptr = unsafe { std::alloc::alloc_zeroed(layout) };
+        assert!(!ptr.is_null(), "allocation of {len} bytes failed");
+        MemRegion { ptr, len, layout }
+    }
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+    /// Raw base pointer — used by backends for one-sided copies.
+    #[inline]
+    pub fn as_ptr(&self) -> *mut u8 {
+        self.ptr
+    }
+}
+
+impl Drop for MemRegion {
+    fn drop(&mut self) {
+        unsafe { std::alloc::dealloc(self.ptr, self.layout) };
+    }
+}
+
+/// Transport-opaque per-segment metadata (§3.1 "Building Segment Metadata").
+/// The sim analogue of rkeys / dmabuf handles / fds; backends downcast by
+/// field, the core engine never reads it.
+#[derive(Clone, Debug, Default)]
+pub struct TransportMeta {
+    /// Sim-RDMA "rkey" (existence = memory is registered with the RNIC).
+    pub rdma_rkey: Option<u64>,
+    /// Sim GPU memory handle (existence = P2P-mappable).
+    pub gpu_handle: Option<u64>,
+    /// File descriptor number for storage segments.
+    pub fd: Option<i32>,
+}
+
+/// A registered segment.
+pub struct Segment {
+    pub id: SegmentId,
+    pub loc: Location,
+    pub len: u64,
+    pub backing: Backing,
+    pub meta: TransportMeta,
+}
+
+impl Segment {
+    /// Bounds-check an access.
+    pub fn check(&self, off: u64, len: u64) -> Result<()> {
+        if off.checked_add(len).map(|end| end <= self.len) != Some(true) {
+            return Err(Error::OutOfBounds(format!(
+                "{}: off={off} len={len} seg_len={}",
+                self.id, self.len
+            )));
+        }
+        Ok(())
+    }
+
+    /// Read bytes into `dst`. For memory segments this is a raw copy
+    /// (one-sided semantics); for storage it is positional file I/O.
+    pub fn read_at(&self, off: u64, dst: &mut [u8]) -> Result<()> {
+        self.check(off, dst.len() as u64)?;
+        match &self.backing {
+            Backing::Memory(m) => {
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        m.as_ptr().add(off as usize),
+                        dst.as_mut_ptr(),
+                        dst.len(),
+                    );
+                }
+                Ok(())
+            }
+            Backing::File(f) => {
+                f.read_exact_at(dst, off)?;
+                Ok(())
+            }
+        }
+    }
+
+    /// Write bytes from `src` at `off` (one-sided; absolute destination
+    /// offset, so retried slices are idempotent — §4.3).
+    pub fn write_at(&self, off: u64, src: &[u8]) -> Result<()> {
+        self.check(off, src.len() as u64)?;
+        match &self.backing {
+            Backing::Memory(m) => {
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        src.as_ptr(),
+                        m.as_ptr().add(off as usize),
+                        src.len(),
+                    );
+                }
+                Ok(())
+            }
+            Backing::File(f) => {
+                f.write_all_at(src, off)?;
+                Ok(())
+            }
+        }
+    }
+
+    /// Direct memory-to-memory copy between two memory segments (zero
+    /// intermediate buffer). Errors if either side is a file.
+    pub fn copy_mem_to_mem(
+        src: &Segment,
+        src_off: u64,
+        dst: &Segment,
+        dst_off: u64,
+        len: u64,
+    ) -> Result<()> {
+        src.check(src_off, len)?;
+        dst.check(dst_off, len)?;
+        match (&src.backing, &dst.backing) {
+            (Backing::Memory(s), Backing::Memory(d)) => {
+                unsafe {
+                    // May overlap if src==dst with overlapping ranges; use memmove.
+                    std::ptr::copy(
+                        s.as_ptr().add(src_off as usize),
+                        d.as_ptr().add(dst_off as usize),
+                        len as usize,
+                    );
+                }
+                Ok(())
+            }
+            _ => Err(Error::TransferFailed(
+                "copy_mem_to_mem on non-memory segment".into(),
+            )),
+        }
+    }
+}
+
+/// The segment manager: registry + metadata authority (§3.1).
+pub struct SegmentManager {
+    next_id: AtomicU64,
+    segments: RwLock<HashMap<SegmentId, Arc<Segment>>>,
+}
+
+impl Default for SegmentManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SegmentManager {
+    pub fn new() -> Self {
+        SegmentManager {
+            next_id: AtomicU64::new(1),
+            segments: RwLock::new(HashMap::new()),
+        }
+    }
+
+    /// Register a memory segment (host or device); allocates backing.
+    pub fn register_memory(&self, loc: Location, len: u64) -> Result<Arc<Segment>> {
+        if loc.is_storage() {
+            return Err(Error::Config(
+                "use register_file for storage locations".into(),
+            ));
+        }
+        let id = SegmentId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        let meta = TransportMeta {
+            rdma_rkey: Some(0x7000_0000 + id.0),
+            gpu_handle: loc.is_device().then(|| 0x6000_0000 + id.0),
+            fd: None,
+        };
+        let seg = Arc::new(Segment {
+            id,
+            loc,
+            len,
+            backing: Backing::Memory(MemRegion::alloc(len as usize)),
+            meta,
+        });
+        self.segments.write().unwrap().insert(id, Arc::clone(&seg));
+        Ok(seg)
+    }
+
+    /// Register a file-backed segment (created/truncated to `len`).
+    pub fn register_file(&self, loc: Location, len: u64) -> Result<Arc<Segment>> {
+        let path = match &loc {
+            Location::Storage { path, .. } => path.clone(),
+            _ => return Err(Error::Config("register_file needs Storage location".into())),
+        };
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let f = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(&path)?;
+        f.set_len(len)?;
+        let id = SegmentId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        use std::os::unix::io::AsRawFd;
+        let fd = f.as_raw_fd();
+        let seg = Arc::new(Segment {
+            id,
+            loc,
+            len,
+            backing: Backing::File(f),
+            meta: TransportMeta {
+                rdma_rkey: None,
+                gpu_handle: None,
+                fd: Some(fd),
+            },
+        });
+        self.segments.write().unwrap().insert(id, Arc::clone(&seg));
+        Ok(seg)
+    }
+
+    pub fn get(&self, id: SegmentId) -> Result<Arc<Segment>> {
+        self.segments
+            .read()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .ok_or(Error::UnknownSegment(id.0))
+    }
+
+    pub fn unregister(&self, id: SegmentId) -> Result<()> {
+        self.segments
+            .write()
+            .unwrap()
+            .remove(&id)
+            .map(|_| ())
+            .ok_or(Error::UnknownSegment(id.0))
+    }
+
+    pub fn count(&self) -> usize {
+        self.segments.read().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr() -> SegmentManager {
+        SegmentManager::new()
+    }
+
+    #[test]
+    fn register_and_rw_host_segment() {
+        let m = mgr();
+        let s = m.register_memory(Location::host(0, 0), 4096).unwrap();
+        s.write_at(100, b"hello").unwrap();
+        let mut buf = [0u8; 5];
+        s.read_at(100, &mut buf).unwrap();
+        assert_eq!(&buf, b"hello");
+    }
+
+    #[test]
+    fn device_segment_has_gpu_handle() {
+        let m = mgr();
+        let s = m.register_memory(Location::device(0, 3), 1024).unwrap();
+        assert!(s.meta.gpu_handle.is_some());
+        assert!(s.meta.rdma_rkey.is_some());
+        assert_eq!(s.loc.pcie_root(), Some(3));
+        assert_eq!(s.loc.numa(), 0);
+    }
+
+    #[test]
+    fn bounds_are_enforced() {
+        let m = mgr();
+        let s = m.register_memory(Location::host(0, 0), 100).unwrap();
+        assert!(s.check(90, 10).is_ok());
+        assert!(s.check(90, 11).is_err());
+        assert!(s.check(u64::MAX, 2).is_err()); // overflow
+        let mut buf = [0u8; 32];
+        assert!(s.read_at(80, &mut buf).is_err());
+    }
+
+    #[test]
+    fn file_segment_roundtrip() {
+        let m = mgr();
+        let path = std::env::temp_dir().join(format!("tent_seg_test_{}", std::process::id()));
+        let s = m
+            .register_file(Location::storage(0, path.clone()), 8192)
+            .unwrap();
+        s.write_at(4000, b"persist").unwrap();
+        let mut buf = [0u8; 7];
+        s.read_at(4000, &mut buf).unwrap();
+        assert_eq!(&buf, b"persist");
+        assert!(s.meta.fd.is_some());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn mem_to_mem_copy() {
+        let m = mgr();
+        let a = m.register_memory(Location::host(0, 0), 1024).unwrap();
+        let b = m.register_memory(Location::device(0, 1), 1024).unwrap();
+        a.write_at(0, &[7u8; 512]).unwrap();
+        Segment::copy_mem_to_mem(&a, 0, &b, 256, 512).unwrap();
+        let mut buf = [0u8; 512];
+        b.read_at(256, &mut buf).unwrap();
+        assert!(buf.iter().all(|&x| x == 7));
+    }
+
+    #[test]
+    fn lookup_and_unregister() {
+        let m = mgr();
+        let s = m.register_memory(Location::host(1, 1), 64).unwrap();
+        assert_eq!(m.get(s.id).unwrap().id, s.id);
+        assert_eq!(m.count(), 1);
+        m.unregister(s.id).unwrap();
+        assert!(m.get(s.id).is_err());
+        assert!(m.unregister(s.id).is_err());
+    }
+
+    #[test]
+    fn zeroed_on_alloc() {
+        let m = mgr();
+        let s = m.register_memory(Location::host(0, 0), 4096).unwrap();
+        let mut buf = vec![1u8; 4096];
+        s.read_at(0, &mut buf).unwrap();
+        assert!(buf.iter().all(|&x| x == 0));
+    }
+}

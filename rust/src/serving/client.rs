@@ -1,0 +1,99 @@
+//! Synthetic multi-turn conversation workload (the SGLang multi-turn
+//! benchmark analogue used for Table 2).
+//!
+//! Every client issues `turns` requests; each turn appends one fresh
+//! `t_pre`-token chunk to the conversation history, so turn `t` carries
+//! `t` chunks of reusable prefix. Clients share a common system-prompt
+//! chunk (cross-client prefix reuse, as in production serving).
+
+use crate::util::prng::Pcg64;
+
+/// One client's scripted conversation.
+#[derive(Clone, Debug)]
+pub struct Conversation {
+    pub client: usize,
+    /// The GPU this client's requests are served on (TP-group analogue).
+    pub gpu: u8,
+    /// `turns` chunks of exactly `t_pre` tokens each.
+    pub chunks: Vec<Vec<i32>>,
+}
+
+/// Build deterministic conversation scripts.
+pub fn build_conversations(
+    clients: usize,
+    turns: usize,
+    t_pre: usize,
+    vocab: i32,
+    gpus: u8,
+    seed: u64,
+    shared_system_prompt: bool,
+) -> Vec<Conversation> {
+    let mut rng = Pcg64::new(seed, 0xC11E);
+    let system: Vec<i32> = (0..t_pre).map(|_| rng.gen_range(vocab as u64) as i32).collect();
+    (0..clients)
+        .map(|c| {
+            let mut chunks = Vec::with_capacity(turns);
+            for t in 0..turns {
+                if t == 0 && shared_system_prompt {
+                    chunks.push(system.clone());
+                } else {
+                    let mut rng_c = Pcg64::new(seed ^ 0xBEEF, (c * 1000 + t) as u64);
+                    chunks.push(
+                        (0..t_pre)
+                            .map(|_| rng_c.gen_range(vocab as u64) as i32)
+                            .collect(),
+                    );
+                }
+            }
+            Conversation {
+                client: c,
+                gpu: (c % gpus as usize) as u8,
+                chunks,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_well_shaped() {
+        let a = build_conversations(4, 3, 128, 4096, 8, 7, true);
+        let b = build_conversations(4, 3, 128, 4096, 8, 7, true);
+        assert_eq!(a.len(), 4);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.chunks, y.chunks);
+            assert_eq!(x.chunks.len(), 3);
+            assert!(x.chunks.iter().all(|c| c.len() == 128));
+            assert!(x
+                .chunks
+                .iter()
+                .flatten()
+                .all(|&t| (0..4096).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn shared_system_prompt_is_shared() {
+        let convs = build_conversations(3, 2, 64, 4096, 8, 1, true);
+        assert_eq!(convs[0].chunks[0], convs[1].chunks[0]);
+        assert_eq!(convs[1].chunks[0], convs[2].chunks[0]);
+        assert_ne!(convs[0].chunks[1], convs[1].chunks[1]);
+    }
+
+    #[test]
+    fn unshared_prompts_differ() {
+        let convs = build_conversations(2, 1, 64, 4096, 8, 1, false);
+        assert_ne!(convs[0].chunks[0], convs[1].chunks[0]);
+    }
+
+    #[test]
+    fn gpu_assignment_round_robins() {
+        let convs = build_conversations(10, 1, 16, 100, 4, 1, true);
+        assert_eq!(convs[0].gpu, 0);
+        assert_eq!(convs[5].gpu, 1);
+        assert_eq!(convs[9].gpu, 1);
+    }
+}

@@ -1,0 +1,450 @@
+//! HiCache-style multi-tier KV cache.
+//!
+//! KV blocks (one prefill chunk = 128 tokens ≈ 1 MiB of cache) live in a
+//! three-tier hierarchy — per-GPU HBM pools, a host-DRAM pool, and an
+//! SSD-backed file pool — indexed by a prefix chain hash (the block-granular
+//! equivalent of RadixAttention's prefix tree). Every promotion / demotion /
+//! fetch moves *real bytes* through the TENT engine as batched transfers, so
+//! the transfer policy (TENT vs Mooncake TE) is the only variable in the
+//! Table 2 comparison:
+//!
+//! * peer-GPU block fetch → D2D (TENT: NVLink first; TE: always RDMA),
+//! * host-tier fetch → H2D (TENT: PCIe rail; TE: GPUDirect-RDMA loopback),
+//! * disk-tier fetch → file I/O.
+//!
+//! A block in the working KV layout `[L, 2, H, T, D]` is **strided**: 2·L·H
+//! planes of `128·D` floats. Fetch/store therefore issue one batched
+//! transfer of 2·L·H sub-requests per block — exactly the gather/scatter
+//! shape of production KV movement.
+
+use crate::engine::{TentEngine, TransferReq};
+use crate::runtime::ModelMeta;
+use crate::segment::{Location, SegmentId};
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// FNV-1a chain hash over a token chunk: `h_k = fnv(h_{k-1} ‖ chunk_k)`.
+/// Equal prefixes → equal chains, so a chunk's hash identifies the whole
+/// prefix up to and including it (radix-tree equivalence at block
+/// granularity).
+pub fn chain_hash(parent: u64, chunk: &[i32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64 ^ parent.rotate_left(17);
+    for t in chunk {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// Hash chain for a full history of chunks.
+pub fn hash_chunks(chunks: &[Vec<i32>]) -> Vec<u64> {
+    let mut out = Vec::with_capacity(chunks.len());
+    let mut parent = 0;
+    for c in chunks {
+        parent = chain_hash(parent, c);
+        out.push(parent);
+    }
+    out
+}
+
+/// Which tier a block's *primary* copy lives in.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TierId {
+    Gpu(u8),
+    Cpu,
+    Disk,
+}
+
+#[derive(Clone, Debug)]
+struct Entry {
+    tier: TierId,
+    /// Block index within the tier's pool segment.
+    slot: usize,
+    /// CPU write-through shadow slot (present while primary is on a GPU).
+    cpu_shadow: Option<usize>,
+    last_use: u64,
+}
+
+struct Pool {
+    seg: SegmentId,
+    free: Vec<usize>,
+}
+
+struct CacheState {
+    gpu_pools: Vec<Pool>,
+    cpu_pool: Pool,
+    disk_pool: Pool,
+    index: HashMap<u64, Entry>,
+}
+
+/// Cache configuration (block counts per tier).
+#[derive(Clone, Debug)]
+pub struct KvCacheConfig {
+    pub gpus: u8,
+    pub gpu_blocks_per_gpu: usize,
+    pub cpu_blocks: usize,
+    pub disk_blocks: usize,
+    pub node: u16,
+    pub disk_path: std::path::PathBuf,
+}
+
+impl Default for KvCacheConfig {
+    fn default() -> Self {
+        KvCacheConfig {
+            gpus: 8,
+            gpu_blocks_per_gpu: 3,
+            cpu_blocks: 200,
+            disk_blocks: 1024,
+            node: 0,
+            disk_path: std::env::temp_dir().join(format!("tent_kv_{}.pool", std::process::id())),
+        }
+    }
+}
+
+/// Counters for the serving report.
+#[derive(Default)]
+pub struct CacheStats {
+    pub lookups: AtomicU64,
+    pub hit_blocks: AtomicU64,
+    pub miss_blocks: AtomicU64,
+    pub fetched_blocks: AtomicU64,
+    pub fetched_bytes: AtomicU64,
+    pub stored_blocks: AtomicU64,
+    pub gpu_evictions: AtomicU64,
+    pub cpu_demotions: AtomicU64,
+    pub fetch_gpu_tier: AtomicU64,
+    pub fetch_cpu_tier: AtomicU64,
+    pub fetch_disk_tier: AtomicU64,
+}
+
+/// The tiered store.
+pub struct TieredKvCache {
+    cfg: KvCacheConfig,
+    /// Base byte offset of each (l, s, h) plane in the working KV layout.
+    stride_bases: Vec<u64>,
+    /// Bytes of one block within one plane (= T_pre · D · 4).
+    plane_chunk_bytes: u64,
+    /// Total bytes of one block (= planes · plane_chunk_bytes).
+    block_bytes: u64,
+    tokens_per_block: usize,
+    state: Mutex<CacheState>,
+    clock: AtomicU64,
+    pub stats: CacheStats,
+}
+
+impl TieredKvCache {
+    /// Build pools + index; registers one pool segment per GPU, one host
+    /// pool, one file pool.
+    pub fn new(engine: &TentEngine, meta: &ModelMeta, cfg: KvCacheConfig) -> Result<TieredKvCache> {
+        let tokens_per_block = meta.t_pre;
+        let d = meta.head_dim;
+        let plane_chunk_bytes = (tokens_per_block * d * 4) as u64;
+        let planes = meta.layers * 2 * meta.heads;
+        let block_bytes = plane_chunk_bytes * planes as u64;
+        let mut stride_bases = Vec::with_capacity(planes);
+        for l in 0..meta.layers {
+            for s in 0..2 {
+                for h in 0..meta.heads {
+                    let plane = ((l * 2 + s) * meta.heads + h) as u64;
+                    stride_bases.push(plane * (meta.t_max * d * 4) as u64);
+                }
+            }
+        }
+        let gpu_pools = (0..cfg.gpus)
+            .map(|g| {
+                let len = block_bytes * cfg.gpu_blocks_per_gpu as u64;
+                let seg = engine.register_segment(Location::device(cfg.node, g), len)?;
+                Ok(Pool {
+                    seg,
+                    free: (0..cfg.gpu_blocks_per_gpu).rev().collect(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let cpu_pool = Pool {
+            seg: engine
+                .register_segment(Location::host(cfg.node, 0), block_bytes * cfg.cpu_blocks as u64)?,
+            free: (0..cfg.cpu_blocks).rev().collect(),
+        };
+        let disk_pool = Pool {
+            seg: engine.register_file_segment(
+                Location::storage(cfg.node, cfg.disk_path.clone()),
+                block_bytes * cfg.disk_blocks as u64,
+            )?,
+            free: (0..cfg.disk_blocks).rev().collect(),
+        };
+        Ok(TieredKvCache {
+            stride_bases,
+            plane_chunk_bytes,
+            block_bytes,
+            tokens_per_block,
+            state: Mutex::new(CacheState {
+                gpu_pools,
+                cpu_pool,
+                disk_pool,
+                index: HashMap::new(),
+            }),
+            clock: AtomicU64::new(1),
+            cfg,
+            stats: CacheStats::default(),
+        })
+    }
+
+    pub fn block_bytes(&self) -> u64 {
+        self.block_bytes
+    }
+    pub fn tokens_per_block(&self) -> usize {
+        self.tokens_per_block
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// How many leading blocks of `hashes` are cached (any tier).
+    pub fn lookup_prefix(&self, hashes: &[u64]) -> usize {
+        self.stats.lookups.fetch_add(1, Ordering::Relaxed);
+        let t = self.tick();
+        let mut st = self.state.lock().unwrap();
+        let mut n = 0;
+        for h in hashes {
+            match st.index.get_mut(h) {
+                Some(e) => {
+                    e.last_use = t;
+                    n += 1;
+                }
+                None => break,
+            }
+        }
+        self.stats.hit_blocks.fetch_add(n as u64, Ordering::Relaxed);
+        self.stats
+            .miss_blocks
+            .fetch_add((hashes.len() - n) as u64, Ordering::Relaxed);
+        n
+    }
+
+    /// Transfer requests moving pool block `slot` ↔ the strided planes of
+    /// block position `k` in a working KV segment.
+    fn block_reqs(
+        &self,
+        pool_seg: SegmentId,
+        slot: usize,
+        working: SegmentId,
+        k: usize,
+        to_working: bool,
+        out: &mut Vec<TransferReq>,
+    ) {
+        let row = k as u64 * self.plane_chunk_bytes;
+        let pool_base = slot as u64 * self.block_bytes;
+        for (i, &base) in self.stride_bases.iter().enumerate() {
+            let w_off = base + row;
+            let p_off = pool_base + i as u64 * self.plane_chunk_bytes;
+            out.push(if to_working {
+                TransferReq::read(pool_seg, p_off, working, w_off, self.plane_chunk_bytes)
+            } else {
+                TransferReq::write(working, w_off, pool_seg, p_off, self.plane_chunk_bytes)
+            });
+        }
+    }
+
+    /// Fetch the first `n` blocks of `hashes` into the working segment
+    /// (block `i` lands at chunk position `i`); one engine batch for the
+    /// whole gather. Returns bytes moved.
+    pub fn fetch_prefix(
+        &self,
+        engine: &TentEngine,
+        hashes: &[u64],
+        n: usize,
+        working: SegmentId,
+    ) -> Result<u64> {
+        if n == 0 {
+            return Ok(0);
+        }
+        let mut reqs = Vec::with_capacity(n * self.stride_bases.len());
+        {
+            let t = self.tick();
+            let mut st = self.state.lock().unwrap();
+            for (k, h) in hashes.iter().take(n).enumerate() {
+                let e = st
+                    .index
+                    .get_mut(h)
+                    .ok_or_else(|| Error::TransferFailed(format!("block {h:#x} vanished")))?
+                    .clone();
+                st.index.get_mut(h).unwrap().last_use = t;
+                let (seg, counter) = match e.tier {
+                    TierId::Gpu(g) => (st.gpu_pools[g as usize].seg, &self.stats.fetch_gpu_tier),
+                    TierId::Cpu => (st.cpu_pool.seg, &self.stats.fetch_cpu_tier),
+                    TierId::Disk => (st.disk_pool.seg, &self.stats.fetch_disk_tier),
+                };
+                counter.fetch_add(1, Ordering::Relaxed);
+                self.block_reqs(seg, e.slot, working, k, true, &mut reqs);
+            }
+        }
+        let batch = engine.allocate_batch();
+        engine.submit(batch, &reqs)?;
+        engine.wait(batch, Duration::from_secs(120))?;
+        engine.release_batch(batch)?;
+        let bytes = n as u64 * self.block_bytes;
+        self.stats.fetched_blocks.fetch_add(n as u64, Ordering::Relaxed);
+        self.stats.fetched_bytes.fetch_add(bytes, Ordering::Relaxed);
+        Ok(bytes)
+    }
+
+    /// Store block `k` of the working segment under `hash`, homed on
+    /// `home_gpu` with write-through to the CPU tier. No-op if cached.
+    pub fn store_block(
+        &self,
+        engine: &TentEngine,
+        hash: u64,
+        home_gpu: u8,
+        working: SegmentId,
+        k: usize,
+    ) -> Result<()> {
+        let (gpu_seg, gpu_slot, cpu_seg, cpu_slot) = {
+            let mut st = self.state.lock().unwrap();
+            if st.index.contains_key(&hash) {
+                return Ok(());
+            }
+            let gpu_slot = self.alloc_gpu_slot(&mut st, home_gpu)?;
+            let cpu_slot = self.alloc_cpu_slot(engine, &mut st)?;
+            let gpu_seg = st.gpu_pools[home_gpu as usize].seg;
+            let cpu_seg = st.cpu_pool.seg;
+            st.index.insert(
+                hash,
+                Entry {
+                    tier: TierId::Gpu(home_gpu),
+                    slot: gpu_slot,
+                    cpu_shadow: Some(cpu_slot),
+                    last_use: self.tick(),
+                },
+            );
+            (gpu_seg, gpu_slot, cpu_seg, cpu_slot)
+        };
+        let mut reqs = Vec::with_capacity(2 * self.stride_bases.len());
+        self.block_reqs(gpu_seg, gpu_slot, working, k, false, &mut reqs);
+        self.block_reqs(cpu_seg, cpu_slot, working, k, false, &mut reqs);
+        let batch = engine.allocate_batch();
+        engine.submit(batch, &reqs)?;
+        engine.wait(batch, Duration::from_secs(120))?;
+        engine.release_batch(batch)?;
+        self.stats.stored_blocks.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Allocate a slot in `gpu`'s pool, evicting the pool's LRU block to its
+    /// CPU shadow (metadata-only flip; write-through already put the bytes
+    /// there) when full.
+    fn alloc_gpu_slot(&self, st: &mut CacheState, gpu: u8) -> Result<usize> {
+        if let Some(s) = st.gpu_pools[gpu as usize].free.pop() {
+            return Ok(s);
+        }
+        let victim = st
+            .index
+            .iter()
+            .filter(|(_, e)| e.tier == TierId::Gpu(gpu))
+            .min_by_key(|(_, e)| e.last_use)
+            .map(|(h, e)| (*h, e.slot, e.cpu_shadow));
+        let (vh, vslot, shadow) = victim.ok_or_else(|| {
+            Error::Config(format!("gpu{gpu} pool exhausted with no evictable blocks"))
+        })?;
+        let shadow = shadow.ok_or_else(|| Error::Config("evicted block lost its shadow".into()))?;
+        let e = st.index.get_mut(&vh).unwrap();
+        e.tier = TierId::Cpu;
+        e.slot = shadow;
+        e.cpu_shadow = None;
+        st.gpu_pools[gpu as usize].free.push(vslot);
+        self.stats.gpu_evictions.fetch_add(1, Ordering::Relaxed);
+        Ok(st.gpu_pools[gpu as usize].free.pop().unwrap())
+    }
+
+    /// Allocate a CPU slot, demoting the LRU CPU-primary block to disk
+    /// (real copy) when full.
+    fn alloc_cpu_slot(&self, engine: &TentEngine, st: &mut CacheState) -> Result<usize> {
+        if let Some(s) = st.cpu_pool.free.pop() {
+            return Ok(s);
+        }
+        let victim = st
+            .index
+            .iter()
+            .filter(|(_, e)| e.tier == TierId::Cpu)
+            .min_by_key(|(_, e)| e.last_use)
+            .map(|(h, e)| (*h, e.slot));
+        let (vh, vslot) = victim.ok_or_else(|| {
+            // All CPU slots are shadows of GPU blocks; reclaim the LRU
+            // GPU block's shadow instead (it keeps its GPU primary).
+            Error::Config("cpu pool exhausted (all slots are live shadows)".into())
+        })?;
+        let disk_slot = st
+            .disk_pool
+            .free
+            .pop()
+            .ok_or_else(|| Error::Config("disk pool exhausted".into()))?;
+        engine.transfer_sync(
+            TransferReq::write(
+                st.cpu_pool.seg,
+                vslot as u64 * self.block_bytes,
+                st.disk_pool.seg,
+                disk_slot as u64 * self.block_bytes,
+                self.block_bytes,
+            ),
+            Duration::from_secs(120),
+        )?;
+        let e = st.index.get_mut(&vh).unwrap();
+        e.tier = TierId::Disk;
+        e.slot = disk_slot;
+        st.cpu_pool.free.push(vslot);
+        self.stats.cpu_demotions.fetch_add(1, Ordering::Relaxed);
+        Ok(st.cpu_pool.free.pop().unwrap())
+    }
+
+    /// Tier occupancy for reports: (gpu, cpu, disk) primary-block counts.
+    pub fn occupancy(&self) -> (usize, usize, usize) {
+        let st = self.state.lock().unwrap();
+        let (mut g, mut c, mut d) = (0, 0, 0);
+        for e in st.index.values() {
+            match e.tier {
+                TierId::Gpu(_) => g += 1,
+                TierId::Cpu => c += 1,
+                TierId::Disk => d += 1,
+            }
+        }
+        (g, c, d)
+    }
+
+    pub fn config(&self) -> &KvCacheConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_hash_prefix_property() {
+        let a = vec![1i32, 2, 3];
+        let b = vec![4i32, 5, 6];
+        let c = vec![7i32, 8, 9];
+        let h1 = hash_chunks(&[a.clone(), b.clone()]);
+        let h2 = hash_chunks(&[a.clone(), b.clone(), c.clone()]);
+        assert_eq!(h1[0], h2[0]);
+        assert_eq!(h1[1], h2[1]);
+        let h3 = hash_chunks(&[c, b]);
+        assert_ne!(h1[0], h3[0]);
+        assert_ne!(h1[1], h3[1]);
+    }
+
+    #[test]
+    fn chain_hash_sensitive_to_order() {
+        assert_ne!(chain_hash(0, &[1, 2]), chain_hash(0, &[2, 1]));
+    }
+
+    #[test]
+    fn chain_hash_sensitive_to_parent() {
+        assert_ne!(chain_hash(1, &[1, 2]), chain_hash(2, &[1, 2]));
+    }
+}

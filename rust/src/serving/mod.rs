@@ -1,0 +1,18 @@
+//! Disaggregated-LLM-serving consumers of the TENT data plane.
+//!
+//! * [`kvcache`] — HiCache-style multi-tier KV block store (GPU pools, host
+//!   pool, SSD pool) whose tier movement rides the engine.
+//! * [`router`] — the multi-turn serving loop producing Table 2's metrics.
+//! * [`client`] — deterministic conversation workload generator.
+//! * [`checkpoint`] — Moonshot-Checkpoint-Engine analogue: pipelined
+//!   weight-update broadcast (Table 3).
+
+pub mod checkpoint;
+pub mod client;
+pub mod kvcache;
+pub mod router;
+
+pub use checkpoint::{CheckpointConfig, CheckpointEngine, UpdateReport};
+pub use client::{build_conversations, Conversation};
+pub use kvcache::{KvCacheConfig, TieredKvCache};
+pub use router::{run_serving, ServeConfig, ServeMode, ServeReport};

@@ -1,0 +1,244 @@
+//! Custom cluster profiles from JSON files — operators describe their own
+//! fleet instead of using a built-in profile (the deployment-config path of
+//! a production transfer engine).
+//!
+//! Schema (see `describe_schema()`):
+//! ```json
+//! {
+//!   "name": "my_fleet",
+//!   "nodes": [
+//!     { "id": 0, "numa_domains": 2,
+//!       "gpus": [ {"idx": 0, "numa": 0, "pcie_root": 0}, ... ],
+//!       "rails": [
+//!         { "fabric": "rdma", "name": "mlx0", "numa": 0, "pcie_root": 0,
+//!           "bw_gbps_paper": 25.0, "base_latency_us": 20,
+//!           "gpudirect": true },
+//!         { "fabric": "nvlink", "name": "nvl0", "numa": 0, "pcie_root": 0,
+//!           "bw_gbps_paper": 204.5, "base_latency_us": 3, "gpu_idx": 0 }
+//!       ] }
+//!   ]
+//! }
+//! ```
+//! Bandwidths are given in *paper* GB/s and scaled by 1:SCALE like the
+//! built-ins, so custom profiles stay comparable.
+
+use super::profile::SCALE;
+use super::*;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+fn fabric_kind(s: &str) -> Result<FabricKind> {
+    FabricKind::ALL
+        .iter()
+        .copied()
+        .find(|f| f.name() == s)
+        .ok_or_else(|| Error::Config(format!("unknown fabric '{s}'")))
+}
+
+/// Parse a topology from JSON text.
+pub fn parse_profile(text: &str) -> Result<Topology> {
+    let j = Json::parse(text).map_err(|e| Error::Config(format!("profile json: {e}")))?;
+    let name = j
+        .get("name")
+        .as_str()
+        .ok_or_else(|| Error::Config("profile needs a 'name'".into()))?
+        .to_string();
+    let mut topo = Topology {
+        profile_name: name,
+        ..Default::default()
+    };
+    let nodes = j
+        .get("nodes")
+        .as_arr()
+        .ok_or_else(|| Error::Config("profile needs 'nodes' array".into()))?;
+    if nodes.is_empty() {
+        return Err(Error::Config("profile has no nodes".into()));
+    }
+    for n in nodes {
+        let id = NodeId(
+            n.get("id")
+                .as_u64()
+                .ok_or_else(|| Error::Config("node needs 'id'".into()))? as u16,
+        );
+        if topo.nodes.contains(&id) {
+            return Err(Error::Config(format!("duplicate node id {}", id.0)));
+        }
+        topo.nodes.push(id);
+        let numa_domains = n.get("numa_domains").as_u64().unwrap_or(1) as u8;
+        for numa in 0..numa_domains {
+            topo.devices.push(Device {
+                node: id,
+                kind: DeviceKind::CpuNuma { numa },
+            });
+        }
+        if let Some(gpus) = n.get("gpus").as_arr() {
+            for g in gpus {
+                let idx = g
+                    .get("idx")
+                    .as_u64()
+                    .ok_or_else(|| Error::Config("gpu needs 'idx'".into()))?
+                    as u8;
+                topo.devices.push(Device {
+                    node: id,
+                    kind: DeviceKind::Gpu {
+                        idx,
+                        numa: g.get("numa").as_u64().unwrap_or(0) as u8,
+                        pcie_root: g.get("pcie_root").as_u64().unwrap_or(idx as u64) as u8,
+                    },
+                });
+            }
+        }
+        let rails = n
+            .get("rails")
+            .as_arr()
+            .ok_or_else(|| Error::Config(format!("node {} needs 'rails'", id.0)))?;
+        for r in rails {
+            let fabric = fabric_kind(
+                r.get("fabric")
+                    .as_str()
+                    .ok_or_else(|| Error::Config("rail needs 'fabric'".into()))?,
+            )?;
+            let bw_paper = r
+                .get("bw_gbps_paper")
+                .as_f64()
+                .ok_or_else(|| Error::Config("rail needs 'bw_gbps_paper'".into()))?;
+            if bw_paper <= 0.0 {
+                return Err(Error::Config("rail bandwidth must be positive".into()));
+            }
+            let rail_id = RailId(topo.rails.len() as u32);
+            topo.rails.push(RailDef {
+                id: rail_id,
+                name: format!(
+                    "n{}-{}",
+                    id.0,
+                    r.get("name").as_str().unwrap_or(fabric.name())
+                ),
+                fabric,
+                node: id,
+                numa: r.get("numa").as_u64().unwrap_or(0) as u8,
+                pcie_root: r.get("pcie_root").as_u64().unwrap_or(255) as u8,
+                bw_bytes_per_sec: bw_paper * 1e9 / SCALE,
+                base_latency_ns: r.get("base_latency_us").as_u64().unwrap_or(20) * 1000,
+                gpu_idx: r.get("gpu_idx").as_u64().map(|v| v as u8),
+                gpudirect: r.get("gpudirect").as_bool().unwrap_or(false),
+            });
+            if !topo.node_in_fabric(id, fabric) {
+                topo.fabrics.push((id, fabric));
+            }
+        }
+    }
+    Ok(topo)
+}
+
+/// Load a topology from a JSON file path.
+pub fn load_profile_file(path: &std::path::Path) -> Result<Topology> {
+    parse_profile(&std::fs::read_to_string(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "custom_duo",
+      "nodes": [
+        { "id": 0, "numa_domains": 2,
+          "gpus": [ {"idx": 0, "numa": 0, "pcie_root": 0} ],
+          "rails": [
+            { "fabric": "rdma", "name": "mlx0", "numa": 0, "pcie_root": 0,
+              "bw_gbps_paper": 25.0, "base_latency_us": 20, "gpudirect": true },
+            { "fabric": "rdma", "name": "mlx1", "numa": 1, "pcie_root": 4,
+              "bw_gbps_paper": 12.5, "base_latency_us": 25 },
+            { "fabric": "nvlink", "name": "nvl0", "numa": 0, "pcie_root": 0,
+              "bw_gbps_paper": 204.5, "base_latency_us": 3, "gpu_idx": 0,
+              "gpudirect": true },
+            { "fabric": "tcp", "bw_gbps_paper": 1.25, "base_latency_us": 80 }
+          ] },
+        { "id": 1, "numa_domains": 1,
+          "rails": [
+            { "fabric": "rdma", "name": "mlx0", "numa": 0, "pcie_root": 0,
+              "bw_gbps_paper": 25.0 },
+            { "fabric": "tcp", "bw_gbps_paper": 1.25 }
+          ] }
+      ]
+    }"#;
+
+    #[test]
+    fn parses_custom_profile() {
+        let t = parse_profile(SAMPLE).unwrap();
+        assert_eq!(t.profile_name, "custom_duo");
+        assert_eq!(t.nodes.len(), 2);
+        assert_eq!(t.rails.len(), 6);
+        assert_eq!(t.rails_of(NodeId(0), FabricKind::Rdma).len(), 2);
+        assert!(t.node_in_fabric(NodeId(0), FabricKind::NvLink));
+        assert!(!t.node_in_fabric(NodeId(1), FabricKind::NvLink));
+        // Scaled like built-ins: 25 GB/s paper → 250 MB/s sim.
+        let r = t.rail(t.rails_of(NodeId(0), FabricKind::Rdma)[0]);
+        assert!((r.bw_bytes_per_sec - 250e6).abs() < 1.0);
+        assert!(r.gpudirect);
+        assert_eq!(r.base_latency_ns, 20_000);
+        // Rail ids dense.
+        for (i, r) in t.rails.iter().enumerate() {
+            assert_eq!(r.id.0 as usize, i);
+        }
+    }
+
+    #[test]
+    fn custom_profile_drives_a_real_engine() {
+        use crate::engine::{EngineConfig, TentEngine, TransferReq};
+        use crate::fabric::{Fabric, FabricConfig};
+        use crate::segment::{Location, SegmentManager};
+        use crate::transport::TransportRegistry;
+        use std::sync::Arc;
+
+        let topo = Arc::new(parse_profile(SAMPLE).unwrap());
+        let segments = Arc::new(SegmentManager::new());
+        let cluster = crate::cluster::Cluster {
+            fabric: Arc::new(Fabric::new(&topo, FabricConfig::default())),
+            transports: Arc::new(TransportRegistry::load_all(&topo, Arc::clone(&segments))),
+            topo,
+            segments,
+        };
+        let e = TentEngine::new(&cluster, EngineConfig::default()).unwrap();
+        let a = e.register_segment(Location::host(0, 0), 1 << 20).unwrap();
+        let b = e.register_segment(Location::host(1, 0), 1 << 20).unwrap();
+        e.segment(a).unwrap().write_at(0, &[9u8; 1 << 20]).unwrap();
+        e.transfer_sync(
+            TransferReq::write(a, 0, b, 0, 1 << 20),
+            std::time::Duration::from_secs(60),
+        )
+        .unwrap();
+        let mut buf = vec![0u8; 1 << 20];
+        e.segment(b).unwrap().read_at(0, &mut buf).unwrap();
+        assert!(buf.iter().all(|&x| x == 9));
+    }
+
+    #[test]
+    fn rejects_malformed_profiles() {
+        assert!(parse_profile("{}").is_err()); // no name
+        assert!(parse_profile(r#"{"name":"x"}"#).is_err()); // no nodes
+        assert!(parse_profile(r#"{"name":"x","nodes":[]}"#).is_err());
+        // unknown fabric
+        let bad = r#"{"name":"x","nodes":[{"id":0,"rails":[
+            {"fabric":"warp","bw_gbps_paper":1}]}]}"#;
+        assert!(parse_profile(bad).is_err());
+        // negative bandwidth
+        let bad2 = r#"{"name":"x","nodes":[{"id":0,"rails":[
+            {"fabric":"tcp","bw_gbps_paper":-1}]}]}"#;
+        assert!(parse_profile(bad2).is_err());
+        // duplicate node ids
+        let bad3 = r#"{"name":"x","nodes":[
+            {"id":0,"rails":[{"fabric":"tcp","bw_gbps_paper":1}]},
+            {"id":0,"rails":[{"fabric":"tcp","bw_gbps_paper":1}]}]}"#;
+        assert!(parse_profile(bad3).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let p = std::env::temp_dir().join(format!("tent_prof_{}.json", std::process::id()));
+        std::fs::write(&p, SAMPLE).unwrap();
+        let t = load_profile_file(&p).unwrap();
+        assert_eq!(t.profile_name, "custom_duo");
+        std::fs::remove_file(p).ok();
+    }
+}

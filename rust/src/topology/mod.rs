@@ -1,0 +1,296 @@
+//! Device model, topology graph, affinity tiers, and reachability (§3.1).
+//!
+//! At initialization TENT performs automated topology discovery (here: from a
+//! cluster profile — the simulation analogue of walking sysfs/NVML), builds a
+//! tiered topology graph, and derives per-segment transport capabilities.
+//! Links are classified into protocol-independent affinity tiers:
+//!
+//! * **tier-1** — optimal paths (NVLink peer, GPUDirect NIC on the same PCIe
+//!   root complex as the GPU, NIC local to the buffer's NUMA node),
+//! * **tier-2** — cross-root but same NUMA domain,
+//! * **tier-3** — NUMA-crossing fallbacks.
+//!
+//! Algorithm 1 applies penalty P = {1, 3, ∞} to tiers 1–3.
+
+pub mod json_profile;
+pub mod profile;
+
+use std::fmt;
+
+/// A physical host ("node") in the simulated cluster.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct NodeId(pub u16);
+
+/// Index of a rail (schedulable transport channel) in the fabric.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct RailId(pub u32);
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "node{}", self.0)
+    }
+}
+impl fmt::Display for RailId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "rail{}", self.0)
+    }
+}
+
+/// Kinds of devices in the topology.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum DeviceKind {
+    /// CPU socket / NUMA domain.
+    CpuNuma { numa: u8 },
+    /// Accelerator (GPU/NPU) with its NUMA affinity and PCIe root.
+    Gpu { idx: u8, numa: u8, pcie_root: u8 },
+    /// NIC with NUMA affinity and PCIe root complex.
+    Nic { idx: u8, numa: u8, pcie_root: u8 },
+    /// Local SSD.
+    Ssd { idx: u8, numa: u8 },
+}
+
+/// A device entry in a node's inventory.
+#[derive(Clone, Debug)]
+pub struct Device {
+    pub node: NodeId,
+    pub kind: DeviceKind,
+}
+
+/// Fabric families a node may participate in. A backend is *feasible* for a
+/// transfer only if both endpoints' nodes share the fabric (or the fabric is
+/// intra-node and the endpoints are colocated).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum FabricKind {
+    /// Multi-rail RDMA (RoCE). Inter- and intra-node.
+    Rdma,
+    /// Intra-node GPU-to-GPU (NVLink / Infinity Fabric).
+    NvLink,
+    /// Rack-scale GPU fabric (Multi-Node NVLink). GPU↔GPU only.
+    Mnnvl,
+    /// Ascend UB / HIXL rack fabric. NPU↔NPU only.
+    AscendUb,
+    /// Plain TCP (always available between nodes that list it).
+    Tcp,
+    /// Intra-node shared-memory (host↔host same node).
+    Shm,
+    /// Intra-node PCIe host↔device staging path.
+    Pcie,
+    /// Local storage via io_uring-style file I/O.
+    FileIo,
+}
+
+impl FabricKind {
+    pub const ALL: [FabricKind; 8] = [
+        FabricKind::Rdma,
+        FabricKind::NvLink,
+        FabricKind::Mnnvl,
+        FabricKind::AscendUb,
+        FabricKind::Tcp,
+        FabricKind::Shm,
+        FabricKind::Pcie,
+        FabricKind::FileIo,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FabricKind::Rdma => "rdma",
+            FabricKind::NvLink => "nvlink",
+            FabricKind::Mnnvl => "mnnvl",
+            FabricKind::AscendUb => "ascend_ub",
+            FabricKind::Tcp => "tcp",
+            FabricKind::Shm => "shm",
+            FabricKind::Pcie => "pcie",
+            FabricKind::FileIo => "file_io",
+        }
+    }
+}
+
+/// Affinity tier of a rail relative to a memory location (§3.1).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub enum Tier {
+    T1 = 1,
+    T2 = 2,
+    T3 = 3,
+}
+
+impl Tier {
+    /// The paper's default penalties P_tier = {1, 3, ∞}.
+    pub fn default_penalty(&self) -> f64 {
+        match self {
+            Tier::T1 => 1.0,
+            Tier::T2 => 3.0,
+            Tier::T3 => f64::INFINITY,
+        }
+    }
+}
+
+/// A rail definition produced by discovery: the schedulable unit.
+#[derive(Clone, Debug)]
+pub struct RailDef {
+    pub id: RailId,
+    pub name: String,
+    pub fabric: FabricKind,
+    pub node: NodeId,
+    /// NUMA domain the rail's device hangs off.
+    pub numa: u8,
+    /// PCIe root complex id (for tier-1 vs tier-2 classification).
+    pub pcie_root: u8,
+    /// Nominal bandwidth in bytes/sec (sim-scaled).
+    pub bw_bytes_per_sec: f64,
+    /// Fixed per-slice base latency (ns): posting + propagation.
+    pub base_latency_ns: u64,
+    /// For GPU fabrics: which local GPU this rail serves (NVLink port).
+    pub gpu_idx: Option<u8>,
+    /// Whether this NIC supports GPUDirect (device memory access).
+    pub gpudirect: bool,
+}
+
+/// The discovered cluster topology: nodes, devices, rails, fabric membership.
+#[derive(Clone, Debug, Default)]
+pub struct Topology {
+    pub profile_name: String,
+    pub devices: Vec<Device>,
+    pub rails: Vec<RailDef>,
+    /// (node, fabric) membership pairs.
+    pub fabrics: Vec<(NodeId, FabricKind)>,
+    pub nodes: Vec<NodeId>,
+}
+
+impl Topology {
+    pub fn rail(&self, id: RailId) -> &RailDef {
+        &self.rails[id.0 as usize]
+    }
+
+    pub fn node_in_fabric(&self, node: NodeId, fabric: FabricKind) -> bool {
+        self.fabrics.iter().any(|&(n, f)| n == node && f == fabric)
+    }
+
+    /// All rails of a fabric kind on a node.
+    pub fn rails_of(&self, node: NodeId, fabric: FabricKind) -> Vec<RailId> {
+        self.rails
+            .iter()
+            .filter(|r| r.node == node && r.fabric == fabric)
+            .map(|r| r.id)
+            .collect()
+    }
+
+    /// GPUs present on a node.
+    pub fn gpus(&self, node: NodeId) -> Vec<(u8, u8, u8)> {
+        self.devices
+            .iter()
+            .filter_map(|d| match d.kind {
+                DeviceKind::Gpu { idx, numa, pcie_root } if d.node == node => {
+                    Some((idx, numa, pcie_root))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Classify a rail's affinity tier relative to a memory location
+    /// described by (numa, pcie_root). `pcie_root == None` means the location
+    /// is host memory without a device root (NUMA affinity only).
+    pub fn classify_tier(&self, rail: RailId, loc_numa: u8, loc_root: Option<u8>) -> Tier {
+        let r = self.rail(rail);
+        match loc_root {
+            Some(root) => {
+                if r.pcie_root == root {
+                    Tier::T1
+                } else if r.numa == loc_numa {
+                    Tier::T2
+                } else {
+                    Tier::T3
+                }
+            }
+            None => {
+                // Host memory: NUMA-local NICs are tier-1, the rest tier-3
+                // (crossing the socket interconnect).
+                if r.numa == loc_numa {
+                    Tier::T1
+                } else {
+                    Tier::T3
+                }
+            }
+        }
+    }
+
+    /// Dump a human-readable topology description.
+    pub fn describe(&self) -> String {
+        let mut s = format!("profile: {}\n", self.profile_name);
+        for &n in &self.nodes {
+            s.push_str(&format!("{}:\n", n));
+            for d in self.devices.iter().filter(|d| d.node == n) {
+                s.push_str(&format!("  {:?}\n", d.kind));
+            }
+            for r in self.rails.iter().filter(|r| r.node == n) {
+                s.push_str(&format!(
+                    "  {} {} numa{} root{} {} lat={}ns{}\n",
+                    r.name,
+                    r.fabric.name(),
+                    r.numa,
+                    r.pcie_root,
+                    crate::util::fmt_bw(r.bw_bytes_per_sec),
+                    r.base_latency_ns,
+                    if r.gpudirect { " gpudirect" } else { "" },
+                ));
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::profile::build_profile;
+    use super::*;
+
+    #[test]
+    fn h800_profile_shape() {
+        let t = build_profile("h800_hgx", 2).unwrap();
+        assert_eq!(t.nodes.len(), 2);
+        // 8 RDMA NICs per node.
+        assert_eq!(t.rails_of(NodeId(0), FabricKind::Rdma).len(), 8);
+        // 8 NVLink ports per node (one per GPU).
+        assert_eq!(t.rails_of(NodeId(0), FabricKind::NvLink).len(), 8);
+        assert_eq!(t.gpus(NodeId(0)).len(), 8);
+        assert!(t.node_in_fabric(NodeId(0), FabricKind::Rdma));
+        assert!(!t.node_in_fabric(NodeId(0), FabricKind::Mnnvl));
+    }
+
+    #[test]
+    fn tier_classification_gpu_affinity() {
+        let t = build_profile("h800_hgx", 1).unwrap();
+        // GPU 0 is on numa 0, pcie root 0. Exactly one tier-1 RDMA NIC.
+        let rails = t.rails_of(NodeId(0), FabricKind::Rdma);
+        let tiers: Vec<Tier> = rails
+            .iter()
+            .map(|&r| t.classify_tier(r, 0, Some(0)))
+            .collect();
+        assert_eq!(tiers.iter().filter(|&&x| x == Tier::T1).count(), 1);
+        assert_eq!(tiers.iter().filter(|&&x| x == Tier::T2).count(), 3);
+        assert_eq!(tiers.iter().filter(|&&x| x == Tier::T3).count(), 4);
+    }
+
+    #[test]
+    fn tier_classification_host_numa() {
+        let t = build_profile("h800_hgx", 1).unwrap();
+        let rails = t.rails_of(NodeId(0), FabricKind::Rdma);
+        let t1 = rails
+            .iter()
+            .filter(|&&r| t.classify_tier(r, 0, None) == Tier::T1)
+            .count();
+        assert_eq!(t1, 4); // 4 NICs per socket
+    }
+
+    #[test]
+    fn penalties_match_paper() {
+        assert_eq!(Tier::T1.default_penalty(), 1.0);
+        assert_eq!(Tier::T2.default_penalty(), 3.0);
+        assert!(Tier::T3.default_penalty().is_infinite());
+    }
+
+    #[test]
+    fn unknown_profile_rejected() {
+        assert!(build_profile("warp_drive", 1).is_err());
+    }
+}

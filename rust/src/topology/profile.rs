@@ -1,0 +1,465 @@
+//! Built-in cluster profiles — the simulation analogue of topology discovery.
+//!
+//! All bandwidths are the paper's hardware scaled 1:100 (`SCALE`), so an
+//! 8-rail H800 node's 8×25 GB/s RDMA fabric becomes 8×250 MB/s of *actually
+//! copied* bytes, and benches complete in seconds while preserving every
+//! ratio the paper reports.
+
+use super::*;
+use crate::{Error, Result};
+
+/// Bandwidth scale factor versus the paper's hardware.
+pub const SCALE: f64 = 100.0;
+
+/// GB/s (paper units) → bytes/sec (sim units).
+pub fn gbps_paper(gb_per_s: f64) -> f64 {
+    gb_per_s * 1e9 / SCALE
+}
+
+/// Paper-reported theoretical bandwidths (GB/s, *unscaled*), used by the
+/// Table 4 bench to print the theoretical column.
+pub mod theoretical {
+    /// Per 200 Gbps RoCE rail.
+    pub const RDMA_RAIL_GBPS: f64 = 25.0;
+    /// NVLink GPU↔GPU (26.562 × 8).
+    pub const NVLINK_GBPS: f64 = 204.496;
+    /// Multi-Node NVLink.
+    pub const MNNVL_GBPS: f64 = 956.2;
+    /// Ascend UB.
+    pub const ASCEND_GBPS: f64 = 196.0;
+    /// Host PCIe gen5 x16 staging path.
+    pub const PCIE_GBPS: f64 = 64.0;
+}
+
+struct Builder {
+    topo: Topology,
+}
+
+impl Builder {
+    fn new(name: &str) -> Self {
+        Builder {
+            topo: Topology {
+                profile_name: name.to_string(),
+                ..Default::default()
+            },
+        }
+    }
+
+    fn node(&mut self, id: u16) -> NodeId {
+        let n = NodeId(id);
+        self.topo.nodes.push(n);
+        n
+    }
+
+    fn fabric(&mut self, node: NodeId, f: FabricKind) {
+        self.topo.fabrics.push((node, f));
+    }
+
+    fn device(&mut self, node: NodeId, kind: DeviceKind) {
+        self.topo.devices.push(Device { node, kind });
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn rail(
+        &mut self,
+        node: NodeId,
+        fabric: FabricKind,
+        name: String,
+        numa: u8,
+        pcie_root: u8,
+        bw: f64,
+        lat_ns: u64,
+        gpu_idx: Option<u8>,
+        gpudirect: bool,
+    ) -> RailId {
+        let id = RailId(self.topo.rails.len() as u32);
+        self.topo.rails.push(RailDef {
+            id,
+            name,
+            fabric,
+            node,
+            numa,
+            pcie_root,
+            bw_bytes_per_sec: bw,
+            base_latency_ns: lat_ns,
+            gpu_idx,
+            gpudirect,
+        });
+        id
+    }
+
+    /// A standard H800 HGX node: 2 sockets, 8 GPUs, 8 NICs (one per PCIe
+    /// root, shared with its GPU), NVLink among GPUs, 1 NVMe, SHM + PCIe +
+    /// TCP rails.
+    fn h800_node(&mut self, id: u16, gpudirect: bool, nvlink: bool) -> NodeId {
+        let n = self.node(id);
+        self.fabric(n, FabricKind::Rdma);
+        self.fabric(n, FabricKind::Tcp);
+        self.fabric(n, FabricKind::Shm);
+        self.fabric(n, FabricKind::Pcie);
+        self.fabric(n, FabricKind::FileIo);
+        if nvlink {
+            self.fabric(n, FabricKind::NvLink);
+        }
+        for numa in 0..2u8 {
+            self.device(n, DeviceKind::CpuNuma { numa });
+        }
+        for g in 0..8u8 {
+            let numa = g / 4;
+            self.device(
+                n,
+                DeviceKind::Gpu {
+                    idx: g,
+                    numa,
+                    pcie_root: g,
+                },
+            );
+            // One 200 Gbps NIC per PCIe root complex, adjacent to GPU g.
+            self.rail(
+                n,
+                FabricKind::Rdma,
+                format!("n{id}-mlx{g}"),
+                numa,
+                g,
+                gbps_paper(theoretical::RDMA_RAIL_GBPS),
+                20_000,
+                None,
+                gpudirect,
+            );
+            self.device(
+                n,
+                DeviceKind::Nic {
+                    idx: g,
+                    numa,
+                    pcie_root: g,
+                },
+            );
+            if nvlink {
+                // Each GPU's NVLink port into the NVSwitch plane.
+                self.rail(
+                    n,
+                    FabricKind::NvLink,
+                    format!("n{id}-nvl{g}"),
+                    numa,
+                    g,
+                    gbps_paper(theoretical::NVLINK_GBPS / 8.0) * 8.0, // full per-pair path
+                    3_000,
+                    Some(g),
+                    true,
+                );
+            }
+            // PCIe H2D/D2H staging rail for this GPU.
+            self.rail(
+                n,
+                FabricKind::Pcie,
+                format!("n{id}-pcie{g}"),
+                numa,
+                g,
+                gbps_paper(theoretical::PCIE_GBPS),
+                10_000,
+                Some(g),
+                true,
+            );
+        }
+        // Intra-node host<->host shared memory, one rail per socket.
+        for numa in 0..2u8 {
+            self.rail(
+                n,
+                FabricKind::Shm,
+                format!("n{id}-shm{numa}"),
+                numa,
+                255,
+                gbps_paper(500.0),
+                2_000,
+                None,
+                false,
+            );
+        }
+        // TCP fallback rail (real loopback sockets, paced to 10 Gbps/SCALE).
+        self.rail(
+            n,
+            FabricKind::Tcp,
+            format!("n{id}-tcp"),
+            0,
+            255,
+            gbps_paper(1.25),
+            80_000,
+            None,
+            false,
+        );
+        // One NVMe SSD, io_uring-style file backend (real file I/O, unpaced).
+        self.device(n, DeviceKind::Ssd { idx: 0, numa: 0 });
+        self.rail(
+            n,
+            FabricKind::FileIo,
+            format!("n{id}-nvme0"),
+            0,
+            255,
+            gbps_paper(6.0),
+            30_000,
+            None,
+            false,
+        );
+        n
+    }
+
+    fn ascend_node(&mut self, id: u16) -> NodeId {
+        let n = self.node(id);
+        self.fabric(n, FabricKind::AscendUb);
+        self.fabric(n, FabricKind::Rdma);
+        self.fabric(n, FabricKind::Tcp);
+        self.fabric(n, FabricKind::Shm);
+        self.fabric(n, FabricKind::Pcie);
+        for numa in 0..2u8 {
+            self.device(n, DeviceKind::CpuNuma { numa });
+        }
+        for g in 0..8u8 {
+            let numa = g / 4;
+            self.device(
+                n,
+                DeviceKind::Gpu {
+                    idx: g,
+                    numa,
+                    pcie_root: g,
+                },
+            );
+            // Ascend UB port per NPU.
+            self.rail(
+                n,
+                FabricKind::AscendUb,
+                format!("n{id}-ub{g}"),
+                numa,
+                g,
+                gbps_paper(theoretical::ASCEND_GBPS),
+                4_000,
+                Some(g),
+                true,
+            );
+            self.rail(
+                n,
+                FabricKind::Pcie,
+                format!("n{id}-pcie{g}"),
+                numa,
+                g,
+                gbps_paper(theoretical::PCIE_GBPS / 2.0),
+                12_000,
+                Some(g),
+                true,
+            );
+        }
+        // 4 RoCE NICs (no GPUDirect on this stack — HIXL handles NPU mem).
+        for i in 0..4u8 {
+            self.rail(
+                n,
+                FabricKind::Rdma,
+                format!("n{id}-roce{i}"),
+                i / 2,
+                2 * i,
+                gbps_paper(theoretical::RDMA_RAIL_GBPS / 2.0),
+                25_000,
+                None,
+                false,
+            );
+        }
+        for numa in 0..2u8 {
+            self.rail(
+                n,
+                FabricKind::Shm,
+                format!("n{id}-shm{numa}"),
+                numa,
+                255,
+                gbps_paper(400.0),
+                2_000,
+                None,
+                false,
+            );
+        }
+        self.rail(
+            n,
+            FabricKind::Tcp,
+            format!("n{id}-tcp"),
+            0,
+            255,
+            gbps_paper(1.25),
+            80_000,
+            None,
+            false,
+        );
+        n
+    }
+
+    fn tcp_only_node(&mut self, id: u16) -> NodeId {
+        let n = self.node(id);
+        self.fabric(n, FabricKind::Tcp);
+        self.fabric(n, FabricKind::Shm);
+        self.device(n, DeviceKind::CpuNuma { numa: 0 });
+        self.rail(
+            n,
+            FabricKind::Shm,
+            format!("n{id}-shm0"),
+            0,
+            255,
+            gbps_paper(300.0),
+            2_500,
+            None,
+            false,
+        );
+        self.rail(
+            n,
+            FabricKind::Tcp,
+            format!("n{id}-tcp"),
+            0,
+            255,
+            gbps_paper(1.25),
+            90_000,
+            None,
+            false,
+        );
+        n
+    }
+
+    fn mnnvl_node(&mut self, id: u16) -> NodeId {
+        let n = self.h800_node(id, true, true);
+        self.fabric(n, FabricKind::Mnnvl);
+        for g in 0..8u8 {
+            let numa = g / 4;
+            self.rail(
+                n,
+                FabricKind::Mnnvl,
+                format!("n{id}-mnnvl{g}"),
+                numa,
+                g,
+                gbps_paper(theoretical::MNNVL_GBPS),
+                5_000,
+                Some(g),
+                true,
+            );
+        }
+        n
+    }
+}
+
+/// Build a named profile with `nodes` hosts (where the profile is
+/// node-count-parametric).
+///
+/// Profiles:
+/// * `h800_hgx` — the paper's primary testbed: 8×GPU + 8×200 Gbps RoCE +
+///   NVLink per node.
+/// * `h800_no_nvlink` — same, NVLink disabled (the Mooncake-TE deployment
+///   shape where GPU↔GPU goes over RDMA).
+/// * `no_gpudirect` — consumer-GPU shape: RDMA NICs cannot reach device
+///   memory, NVLink absent → the orchestrator must synthesize staged routes.
+/// * `mnnvl_rack` — GB200-NVL72-like rack: adds MNNVL GPU fabric.
+/// * `ascend_ub` — Huawei Ascend node with UB/HIXL + RoCE.
+/// * `legacy_tcp` — hosts with TCP only.
+/// * `mixed_fleet` — one H800 node, one Ascend node, one legacy node
+///   (the paper's communication-silo scenario).
+pub fn build_profile(name: &str, nodes: u16) -> Result<Topology> {
+    let mut b = Builder::new(name);
+    match name {
+        "h800_hgx" => {
+            for i in 0..nodes.max(1) {
+                b.h800_node(i, true, true);
+            }
+        }
+        "h800_no_nvlink" => {
+            for i in 0..nodes.max(1) {
+                b.h800_node(i, true, false);
+            }
+        }
+        "no_gpudirect" => {
+            for i in 0..nodes.max(1) {
+                b.h800_node(i, false, false);
+            }
+        }
+        "mnnvl_rack" => {
+            for i in 0..nodes.max(1) {
+                b.mnnvl_node(i);
+            }
+        }
+        "ascend_ub" => {
+            for i in 0..nodes.max(1) {
+                b.ascend_node(i);
+            }
+        }
+        "legacy_tcp" => {
+            for i in 0..nodes.max(1) {
+                b.tcp_only_node(i);
+            }
+        }
+        "mixed_fleet" => {
+            b.h800_node(0, true, true);
+            b.ascend_node(1);
+            b.tcp_only_node(2);
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "unknown profile '{other}' (try h800_hgx, h800_no_nvlink, no_gpudirect, \
+                 mnnvl_rack, ascend_ub, legacy_tcp, mixed_fleet)"
+            )))
+        }
+    }
+    Ok(b.topo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_profiles_build() {
+        for p in [
+            "h800_hgx",
+            "h800_no_nvlink",
+            "no_gpudirect",
+            "mnnvl_rack",
+            "ascend_ub",
+            "legacy_tcp",
+            "mixed_fleet",
+        ] {
+            let t = build_profile(p, 2).unwrap();
+            assert!(!t.rails.is_empty(), "{p} has rails");
+            assert!(!t.nodes.is_empty());
+            // Rail ids must be dense and self-consistent.
+            for (i, r) in t.rails.iter().enumerate() {
+                assert_eq!(r.id.0 as usize, i);
+            }
+        }
+    }
+
+    #[test]
+    fn scale_is_1_to_100() {
+        let t = build_profile("h800_hgx", 1).unwrap();
+        let r = &t.rails[t.rails_of(NodeId(0), FabricKind::Rdma)[0].0 as usize];
+        assert!((r.bw_bytes_per_sec - 250e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn no_gpudirect_profile_has_no_device_capable_nics() {
+        let t = build_profile("no_gpudirect", 1).unwrap();
+        assert!(t
+            .rails_of(NodeId(0), FabricKind::Rdma)
+            .iter()
+            .all(|&r| !t.rail(r).gpudirect));
+        assert!(t.rails_of(NodeId(0), FabricKind::NvLink).is_empty());
+    }
+
+    #[test]
+    fn mixed_fleet_is_heterogeneous() {
+        let t = build_profile("mixed_fleet", 0).unwrap();
+        assert!(t.node_in_fabric(NodeId(0), FabricKind::NvLink));
+        assert!(t.node_in_fabric(NodeId(1), FabricKind::AscendUb));
+        assert!(!t.node_in_fabric(NodeId(2), FabricKind::Rdma));
+        // TCP is the only fabric shared by all three.
+        for n in [NodeId(0), NodeId(1), NodeId(2)] {
+            assert!(t.node_in_fabric(n, FabricKind::Tcp));
+        }
+    }
+
+    #[test]
+    fn mnnvl_rack_has_mnnvl_rails() {
+        let t = build_profile("mnnvl_rack", 2).unwrap();
+        assert_eq!(t.rails_of(NodeId(0), FabricKind::Mnnvl).len(), 8);
+        assert!(t.node_in_fabric(NodeId(1), FabricKind::Mnnvl));
+    }
+}

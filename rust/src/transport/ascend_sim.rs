@@ -1,0 +1,81 @@
+//! Ascend UB / HIXL backend: vendor-exclusive NPU↔NPU fabric. Only present
+//! on Ascend nodes — on a mixed fleet this is exactly the "communication
+//! silo" hardware of §2.1 that TENT's late binding has to bridge (via
+//! staged host routes when peers live on different vendor stacks).
+
+use super::*;
+use crate::fabric::Fabric;
+use crate::segment::Segment;
+use crate::topology::{FabricKind, RailId, Topology};
+use crate::util::prng::Pcg64;
+use crate::Result;
+
+pub struct AscendBackend;
+
+impl TransportBackend for AscendBackend {
+    fn fabric(&self) -> FabricKind {
+        FabricKind::AscendUb
+    }
+    fn name(&self) -> &'static str {
+        "ascend_hixl_sim"
+    }
+
+    fn plan_rails(&self, src: &Segment, dst: &Segment, topo: &Topology) -> Vec<RailId> {
+        if !src.loc.is_device() || !dst.loc.is_device() {
+            return Vec::new();
+        }
+        let (sn, dn) = (src.loc.node(), dst.loc.node());
+        if !topo.node_in_fabric(sn, FabricKind::AscendUb)
+            || !topo.node_in_fabric(dn, FabricKind::AscendUb)
+        {
+            return Vec::new();
+        }
+        let src_gpu = src.loc.pcie_root();
+        topo.rails_of(sn, FabricKind::AscendUb)
+            .into_iter()
+            .filter(|&r| topo.rail(r).gpu_idx == src_gpu)
+            .collect()
+    }
+
+    fn execute(
+        &self,
+        io: &SliceIo,
+        topo: &Topology,
+        fabric: &Fabric,
+        rng: &mut Pcg64,
+    ) -> Result<ExecOutcome> {
+        paced_mem_copy(io, topo, fabric, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::segment::{Location, SegmentManager};
+    use crate::topology::profile::build_profile;
+
+    #[test]
+    fn npu_pair_reachable_on_ascend_profile() {
+        let t = build_profile("ascend_ub", 1).unwrap();
+        let m = SegmentManager::new();
+        let a = m.register_memory(Location::device(0, 0), 1024).unwrap();
+        let b = m.register_memory(Location::device(0, 7), 1024).unwrap();
+        assert_eq!(AscendBackend.plan_rails(&a, &b, &t).len(), 1);
+    }
+
+    #[test]
+    fn silo_boundary_in_mixed_fleet() {
+        // NVIDIA-node GPU ↔ Ascend-node NPU: neither NVLink, Ascend, nor
+        // (cross-silo) direct fabric applies.
+        let t = build_profile("mixed_fleet", 0).unwrap();
+        let m = SegmentManager::new();
+        let nv = m.register_memory(Location::device(0, 0), 1024).unwrap();
+        let asc = m.register_memory(Location::device(1, 0), 1024).unwrap();
+        assert!(AscendBackend.plan_rails(&nv, &asc, &t).is_empty());
+        assert!(
+            crate::transport::nvlink_sim::NvLinkBackend
+                .plan_rails(&nv, &asc, &t)
+                .is_empty()
+        );
+    }
+}

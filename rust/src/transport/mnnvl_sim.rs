@@ -1,0 +1,85 @@
+//! Multi-Node NVLink (MNNVL) backend: rack-scale GPU↔GPU fabric
+//! (GB200-NVL72 shape). GPU-to-GPU **only** — it cannot carry host↔host
+//! paths (§2.1), which is precisely the capability gap that forces
+//! heterogeneous orchestration.
+
+use super::*;
+use crate::fabric::Fabric;
+use crate::segment::Segment;
+use crate::topology::{FabricKind, RailId, Topology};
+use crate::util::prng::Pcg64;
+use crate::Result;
+
+pub struct MnnvlBackend;
+
+impl TransportBackend for MnnvlBackend {
+    fn fabric(&self) -> FabricKind {
+        FabricKind::Mnnvl
+    }
+    fn name(&self) -> &'static str {
+        "mnnvl_sim"
+    }
+
+    fn plan_rails(&self, src: &Segment, dst: &Segment, topo: &Topology) -> Vec<RailId> {
+        if !src.loc.is_device() || !dst.loc.is_device() {
+            return Vec::new(); // GPU↔GPU only
+        }
+        let (sn, dn) = (src.loc.node(), dst.loc.node());
+        if !topo.node_in_fabric(sn, FabricKind::Mnnvl)
+            || !topo.node_in_fabric(dn, FabricKind::Mnnvl)
+        {
+            return Vec::new();
+        }
+        let src_gpu = src.loc.pcie_root();
+        topo.rails_of(sn, FabricKind::Mnnvl)
+            .into_iter()
+            .filter(|&r| topo.rail(r).gpu_idx == src_gpu)
+            .collect()
+    }
+
+    fn execute(
+        &self,
+        io: &SliceIo,
+        topo: &Topology,
+        fabric: &Fabric,
+        rng: &mut Pcg64,
+    ) -> Result<ExecOutcome> {
+        paced_mem_copy(io, topo, fabric, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::segment::{Location, SegmentManager};
+    use crate::topology::profile::build_profile;
+
+    #[test]
+    fn cross_node_gpu_pair_reachable_on_rack() {
+        let t = build_profile("mnnvl_rack", 2).unwrap();
+        let m = SegmentManager::new();
+        let a = m.register_memory(Location::device(0, 2), 1024).unwrap();
+        let b = m.register_memory(Location::device(1, 6), 1024).unwrap();
+        assert_eq!(MnnvlBackend.plan_rails(&a, &b, &t).len(), 1);
+    }
+
+    #[test]
+    fn host_paths_rejected() {
+        let t = build_profile("mnnvl_rack", 2).unwrap();
+        let m = SegmentManager::new();
+        let h0 = m.register_memory(Location::host(0, 0), 1024).unwrap();
+        let h1 = m.register_memory(Location::host(1, 0), 1024).unwrap();
+        let g = m.register_memory(Location::device(0, 0), 1024).unwrap();
+        assert!(MnnvlBackend.plan_rails(&h0, &h1, &t).is_empty());
+        assert!(MnnvlBackend.plan_rails(&g, &h1, &t).is_empty());
+    }
+
+    #[test]
+    fn not_available_off_rack() {
+        let t = build_profile("h800_hgx", 2).unwrap();
+        let m = SegmentManager::new();
+        let a = m.register_memory(Location::device(0, 0), 1024).unwrap();
+        let b = m.register_memory(Location::device(1, 0), 1024).unwrap();
+        assert!(MnnvlBackend.plan_rails(&a, &b, &t).is_empty());
+    }
+}

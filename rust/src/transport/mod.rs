@@ -1,0 +1,204 @@
+//! Pluggable transport backends (§3.2).
+//!
+//! Each fabric is a *thin* backend conforming to [`TransportBackend`]:
+//! it declares reachability/capabilities and executes single slices. All
+//! scheduling, telemetry, and resilience live above this interface, so new
+//! fabrics integrate without touching the engine — exactly the paper's
+//! design (each production backend is < 800 LOC; ours are < 200).
+//!
+//! Backends *really move the bytes* (memcpy / TCP / file I/O); the
+//! [`crate::fabric::Fabric`] decides how long the wire would have taken and
+//! the backend paces completion to that deadline.
+
+pub mod ascend_sim;
+pub mod file_io;
+pub mod mnnvl_sim;
+pub mod nvlink_sim;
+pub mod pcie_sim;
+pub mod rdma_sim;
+pub mod shm;
+pub mod staged;
+pub mod tcp;
+
+use crate::fabric::Fabric;
+use crate::segment::Segment;
+use crate::topology::{FabricKind, RailId, Topology};
+use crate::util::clock;
+use crate::util::prng::Pcg64;
+use crate::Result;
+use std::sync::Arc;
+
+/// Physical path asymmetries that affect wire time (but are invisible to
+/// state-blind schedulers — they only surface through telemetry).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PathAffinity {
+    /// Buffer lives on a different NUMA node than the rail.
+    pub cross_numa: bool,
+    /// Device buffer hangs off a different PCIe root complex than the rail
+    /// (tier-2 paths traverse the PCIe switch — measurably more expensive).
+    pub cross_root: bool,
+}
+
+/// Outcome of executing one slice.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecOutcome {
+    /// Wire service time (ns) charged by the fabric (excludes queueing).
+    pub service_ns: u64,
+}
+
+/// One slice execution request as seen by a backend.
+pub struct SliceIo<'a> {
+    pub src: &'a Segment,
+    pub src_off: u64,
+    pub dst: &'a Segment,
+    pub dst_off: u64,
+    pub len: u64,
+    pub rail: RailId,
+    pub affinity: PathAffinity,
+}
+
+/// The uniform transport backend interface (§3.2).
+pub trait TransportBackend: Send + Sync {
+    /// Which fabric this backend drives.
+    fn fabric(&self) -> FabricKind;
+
+    /// Human-readable name.
+    fn name(&self) -> &'static str;
+
+    /// Enumerate the local rails able to carry bytes from `src` to `dst`,
+    /// or an empty vector if this backend cannot serve the pair at all.
+    /// This is the capability intersection of §4.1.
+    fn plan_rails(&self, src: &Segment, dst: &Segment, topo: &Topology) -> Vec<RailId>;
+
+    /// Execute one slice on the worker thread that owns `io.rail`.
+    /// Blocking; returns after the bytes are delivered and paced.
+    fn execute(&self, io: &SliceIo, topo: &Topology, fabric: &Fabric, rng: &mut Pcg64)
+        -> Result<ExecOutcome>;
+}
+
+/// Paced memory→memory copy shared by the sim backends: compute wire time,
+/// move the bytes, sleep out the remainder, maintain rail counters.
+pub(crate) fn paced_mem_copy(
+    io: &SliceIo,
+    topo: &Topology,
+    fabric: &Fabric,
+    rng: &mut Pcg64,
+) -> Result<ExecOutcome> {
+    let service = fabric
+        .service_ns(topo, io.rail, io.len, io.affinity, rng)
+        .ok_or_else(|| {
+            crate::Error::TransferFailed(format!("{} failed (rail down)", io.rail))
+        })?;
+    let start = clock::now_ns();
+    Segment::copy_mem_to_mem(io.src, io.src_off, io.dst, io.dst_off, io.len)?;
+    fabric.pace(io.rail, start, service);
+    // A rail that died *while* we were on the wire aborts the slice —
+    // models in-flight work-request failure (§2.3).
+    if fabric.rail(io.rail).health() == crate::fabric::RailHealth::Failed {
+        return Err(crate::Error::TransferFailed(format!(
+            "{} died mid-flight",
+            io.rail
+        )));
+    }
+    Ok(ExecOutcome { service_ns: service })
+}
+
+/// Registry of loaded backends; the orchestrator iterates this to build
+/// candidate plans. Order = static preference used only for tie-breaking
+/// (fast GPU fabrics first).
+pub struct TransportRegistry {
+    backends: Vec<Arc<dyn TransportBackend>>,
+    /// The synthesized compound route (§4.1); consulted only when no direct
+    /// backend reaches the pair.
+    staged: Arc<dyn TransportBackend>,
+}
+
+impl TransportRegistry {
+    /// Load every backend whose fabric appears in the topology — the
+    /// "dynamic backend loading" of §3.2.
+    pub fn load_all(topo: &Topology, segments: Arc<crate::segment::SegmentManager>) -> Self {
+        let present = |f: FabricKind| topo.fabrics.iter().any(|&(_, ff)| ff == f);
+        let mut backends: Vec<Arc<dyn TransportBackend>> = Vec::new();
+        if present(FabricKind::NvLink) {
+            backends.push(Arc::new(nvlink_sim::NvLinkBackend));
+        }
+        if present(FabricKind::Mnnvl) {
+            backends.push(Arc::new(mnnvl_sim::MnnvlBackend));
+        }
+        if present(FabricKind::AscendUb) {
+            backends.push(Arc::new(ascend_sim::AscendBackend));
+        }
+        if present(FabricKind::Rdma) {
+            backends.push(Arc::new(rdma_sim::RdmaBackend));
+        }
+        if present(FabricKind::Pcie) {
+            backends.push(Arc::new(pcie_sim::PcieBackend));
+        }
+        if present(FabricKind::Shm) {
+            backends.push(Arc::new(shm::ShmBackend));
+        }
+        if present(FabricKind::FileIo) {
+            backends.push(Arc::new(file_io::FileIoBackend));
+        }
+        if present(FabricKind::Tcp) {
+            backends.push(Arc::new(tcp::TcpBackend::new(segments)));
+        }
+        TransportRegistry {
+            backends,
+            staged: Arc::new(staged::StagedBackend),
+        }
+    }
+
+    pub fn all(&self) -> &[Arc<dyn TransportBackend>] {
+        &self.backends
+    }
+
+    /// The staged-route synthesizer (always available).
+    pub fn staged(&self) -> Arc<dyn TransportBackend> {
+        Arc::clone(&self.staged)
+    }
+
+    pub fn by_fabric(&self, f: FabricKind) -> Option<Arc<dyn TransportBackend>> {
+        self.backends.iter().find(|b| b.fabric() == f).cloned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::segment::SegmentManager;
+    use crate::topology::profile::build_profile;
+
+    #[test]
+    fn registry_loads_backends_for_profile() {
+        let topo = build_profile("h800_hgx", 2).unwrap();
+        let segs = Arc::new(SegmentManager::new());
+        let reg = TransportRegistry::load_all(&topo, segs);
+        let kinds: Vec<FabricKind> = reg.all().iter().map(|b| b.fabric()).collect();
+        assert!(kinds.contains(&FabricKind::NvLink));
+        assert!(kinds.contains(&FabricKind::Rdma));
+        assert!(kinds.contains(&FabricKind::Tcp));
+        assert!(!kinds.contains(&FabricKind::Mnnvl));
+    }
+
+    #[test]
+    fn legacy_tcp_profile_loads_only_thin_set() {
+        let topo = build_profile("legacy_tcp", 2).unwrap();
+        let segs = Arc::new(SegmentManager::new());
+        let reg = TransportRegistry::load_all(&topo, segs);
+        let kinds: Vec<FabricKind> = reg.all().iter().map(|b| b.fabric()).collect();
+        assert!(kinds.contains(&FabricKind::Tcp));
+        assert!(kinds.contains(&FabricKind::Shm));
+        assert!(!kinds.contains(&FabricKind::Rdma));
+        assert!(!kinds.contains(&FabricKind::NvLink));
+    }
+
+    #[test]
+    fn by_fabric_lookup() {
+        let topo = build_profile("mnnvl_rack", 1).unwrap();
+        let segs = Arc::new(SegmentManager::new());
+        let reg = TransportRegistry::load_all(&topo, segs);
+        assert!(reg.by_fabric(FabricKind::Mnnvl).is_some());
+        assert!(reg.by_fabric(FabricKind::AscendUb).is_none());
+    }
+}

@@ -1,0 +1,83 @@
+//! PCIe backend: host↔device staging hops within one node (cudaMemcpy
+//! analogue). These rails carry the D2H / H2D legs of synthesized staged
+//! routes (§4.1) and the KV-cache tier promotions/demotions in serving.
+
+use super::*;
+use crate::fabric::Fabric;
+use crate::segment::Segment;
+use crate::topology::{FabricKind, RailId, Topology};
+use crate::util::prng::Pcg64;
+use crate::Result;
+
+pub struct PcieBackend;
+
+impl TransportBackend for PcieBackend {
+    fn fabric(&self) -> FabricKind {
+        FabricKind::Pcie
+    }
+    fn name(&self) -> &'static str {
+        "pcie_sim"
+    }
+
+    fn plan_rails(&self, src: &Segment, dst: &Segment, topo: &Topology) -> Vec<RailId> {
+        // Exactly one endpoint is a device; same node.
+        let gpu = match (src.loc.is_device(), dst.loc.is_device()) {
+            (true, false) => src.loc.pcie_root(),
+            (false, true) => dst.loc.pcie_root(),
+            _ => return Vec::new(),
+        };
+        if src.loc.is_storage() || dst.loc.is_storage() {
+            return Vec::new();
+        }
+        let n = src.loc.node();
+        if n != dst.loc.node() || !topo.node_in_fabric(n, FabricKind::Pcie) {
+            return Vec::new();
+        }
+        topo.rails_of(n, FabricKind::Pcie)
+            .into_iter()
+            .filter(|&r| topo.rail(r).gpu_idx == gpu)
+            .collect()
+    }
+
+    fn execute(
+        &self,
+        io: &SliceIo,
+        topo: &Topology,
+        fabric: &Fabric,
+        rng: &mut Pcg64,
+    ) -> Result<ExecOutcome> {
+        paced_mem_copy(io, topo, fabric, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::segment::{Location, SegmentManager};
+    use crate::topology::profile::build_profile;
+
+    #[test]
+    fn h2d_and_d2h_reachable() {
+        let t = build_profile("h800_hgx", 1).unwrap();
+        let m = SegmentManager::new();
+        let h = m.register_memory(Location::host(0, 0), 64).unwrap();
+        let g = m.register_memory(Location::device(0, 3), 64).unwrap();
+        let up = PcieBackend.plan_rails(&h, &g, &t);
+        let down = PcieBackend.plan_rails(&g, &h, &t);
+        assert_eq!(up.len(), 1);
+        assert_eq!(up, down);
+        assert_eq!(t.rail(up[0]).gpu_idx, Some(3));
+    }
+
+    #[test]
+    fn d2d_and_h2h_rejected() {
+        let t = build_profile("h800_hgx", 1).unwrap();
+        let m = SegmentManager::new();
+        let g0 = m.register_memory(Location::device(0, 0), 64).unwrap();
+        let g1 = m.register_memory(Location::device(0, 1), 64).unwrap();
+        let h0 = m.register_memory(Location::host(0, 0), 64).unwrap();
+        let h1 = m.register_memory(Location::host(0, 1), 64).unwrap();
+        assert!(PcieBackend.plan_rails(&g0, &g1, &t).is_empty());
+        assert!(PcieBackend.plan_rails(&h0, &h1, &t).is_empty());
+    }
+}

@@ -1,0 +1,74 @@
+//! Shared-memory backend: host↔host within one node (NUMA-paced memcpy).
+
+use super::*;
+use crate::fabric::Fabric;
+use crate::segment::{Location, Segment};
+use crate::topology::{FabricKind, RailId, Topology};
+use crate::util::prng::Pcg64;
+use crate::Result;
+
+pub struct ShmBackend;
+
+impl TransportBackend for ShmBackend {
+    fn fabric(&self) -> FabricKind {
+        FabricKind::Shm
+    }
+    fn name(&self) -> &'static str {
+        "shm"
+    }
+
+    fn plan_rails(&self, src: &Segment, dst: &Segment, topo: &Topology) -> Vec<RailId> {
+        let (Location::Host { node: sn, numa }, Location::Host { node: dn, .. }) =
+            (&src.loc, &dst.loc)
+        else {
+            return Vec::new();
+        };
+        if sn != dn || !topo.node_in_fabric(*sn, FabricKind::Shm) {
+            return Vec::new();
+        }
+        // The source socket's SHM rail carries the copy.
+        topo.rails_of(*sn, FabricKind::Shm)
+            .into_iter()
+            .filter(|&r| topo.rail(r).numa == *numa)
+            .collect()
+    }
+
+    fn execute(
+        &self,
+        io: &SliceIo,
+        topo: &Topology,
+        fabric: &Fabric,
+        rng: &mut Pcg64,
+    ) -> Result<ExecOutcome> {
+        paced_mem_copy(io, topo, fabric, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::segment::SegmentManager;
+    use crate::topology::profile::build_profile;
+
+    #[test]
+    fn same_node_hosts_reachable() {
+        let t = build_profile("h800_hgx", 2).unwrap();
+        let m = SegmentManager::new();
+        let a = m.register_memory(Location::host(0, 1), 64).unwrap();
+        let b = m.register_memory(Location::host(0, 0), 64).unwrap();
+        let rails = ShmBackend.plan_rails(&a, &b, &t);
+        assert_eq!(rails.len(), 1);
+        assert_eq!(t.rail(rails[0]).numa, 1);
+    }
+
+    #[test]
+    fn cross_node_or_device_rejected() {
+        let t = build_profile("h800_hgx", 2).unwrap();
+        let m = SegmentManager::new();
+        let a = m.register_memory(Location::host(0, 0), 64).unwrap();
+        let b = m.register_memory(Location::host(1, 0), 64).unwrap();
+        let g = m.register_memory(Location::device(0, 0), 64).unwrap();
+        assert!(ShmBackend.plan_rails(&a, &b, &t).is_empty());
+        assert!(ShmBackend.plan_rails(&a, &g, &t).is_empty());
+    }
+}

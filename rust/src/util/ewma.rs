@@ -1,0 +1,239 @@
+//! EWMA filter and the per-rail linear completion-time model of Algorithm 1.
+//!
+//! The paper models the expected completion time of a slice of length `L` on
+//! device `d` as
+//!
+//! ```text
+//!   t̂_d = β0_d + β1_d · (A_d + L) / B_d          (Eq. 1)
+//! ```
+//!
+//! where `A_d` is the queued bytes on the rail, `B_d` its nominal bandwidth,
+//! and (β0, β1) are *dynamic correction factors* updated from the observed
+//! prediction error via an exponential weighted moving average. A periodic
+//! state reset re-admits previously degraded paths (§4.2 "Feedback").
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Plain EWMA over f64 values.
+#[derive(Clone, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    /// `alpha` ∈ (0,1]: weight of the newest observation.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0);
+        Ewma { alpha, value: None }
+    }
+
+    /// Fold in an observation, returning the new smoothed value.
+    pub fn observe(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => prev + self.alpha * (x - prev),
+        };
+        self.value = Some(v);
+        v
+    }
+
+    /// Current smoothed value (None until first observation).
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+
+    /// Forget all history (periodic reset, §4.2).
+    pub fn reset(&mut self) {
+        self.value = None;
+    }
+}
+
+/// Atomic f64 (bit-cast through u64) so the cost model can be shared between
+/// submission threads (prediction) and rail workers (feedback) without locks.
+#[derive(Debug)]
+pub struct AtomicF64(AtomicU64);
+
+impl AtomicF64 {
+    pub fn new(v: f64) -> Self {
+        AtomicF64(AtomicU64::new(v.to_bits()))
+    }
+    #[inline]
+    pub fn load(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+    #[inline]
+    pub fn store(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed)
+    }
+    /// Lock-free read-modify-write.
+    pub fn update<F: Fn(f64) -> f64>(&self, f: F) -> f64 {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = f(f64::from_bits(cur)).to_bits();
+            match self
+                .0
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return f64::from_bits(next),
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+/// The per-rail linear completion-time model (Eq. 1), shared across threads.
+///
+/// β0 is in **nanoseconds** (fixed per-slice cost: posting, doorbell, base
+/// propagation); β1 is dimensionless (corrects the bandwidth term for incast,
+/// switch congestion, pacing error). Both adapt online.
+#[derive(Debug)]
+pub struct LinearCostModel {
+    beta0_ns: AtomicF64,
+    beta1: AtomicF64,
+    alpha: f64,
+    init_beta0_ns: f64,
+    init_beta1: f64,
+}
+
+impl LinearCostModel {
+    pub fn new(init_beta0_ns: f64, init_beta1: f64, alpha: f64) -> Self {
+        LinearCostModel {
+            beta0_ns: AtomicF64::new(init_beta0_ns),
+            beta1: AtomicF64::new(init_beta1),
+            alpha,
+            init_beta0_ns,
+            init_beta1,
+        }
+    }
+
+    /// Predict completion time (ns) for a slice of `len` bytes given
+    /// `queued` bytes already in flight and nominal bandwidth `bw` (B/s).
+    #[inline]
+    pub fn predict_ns(&self, len: u64, queued: u64, bw_bytes_per_sec: f64) -> f64 {
+        let serial_ns = (queued + len) as f64 / bw_bytes_per_sec.max(1.0) * 1e9;
+        self.beta0_ns.load() + self.beta1.load() * serial_ns
+    }
+
+    /// Maximum fixed-cost estimate (ns). β0 models per-slice posting /
+    /// propagation costs (tens of µs); letting it absorb queueing noise
+    /// destabilizes scores at deep queues (a β0 spread larger than γ·s_min
+    /// collapses the tolerance window onto one rail and causes bursts).
+    const BETA0_CAP_NS: f64 = 250_000.0;
+
+    /// Feedback (§4.2): decompose the observed completion time into a slope
+    /// against the serial term (→ β1: bandwidth mis-estimate, congestion,
+    /// incast) and a bounded fixed residual (→ β0: posting/propagation).
+    /// Both move by EWMA and are clamped so a single outlier cannot wedge
+    /// the model.
+    pub fn observe_ns(&self, _predicted_ns: f64, observed_ns: f64, serial_ns: f64) {
+        let alpha = self.alpha;
+        let mut b1_now = self.beta1.load();
+        if serial_ns > 1.0 {
+            let target_b1 = ((observed_ns - self.beta0_ns.load()) / serial_ns).clamp(0.05, 100.0);
+            b1_now = self
+                .beta1
+                .update(|b1| (b1 + alpha * (target_b1 - b1)).clamp(0.05, 100.0));
+        }
+        // Fixed residual after the learned slope explains the serial part.
+        let resid = (observed_ns - b1_now * serial_ns).clamp(0.0, Self::BETA0_CAP_NS);
+        self.beta0_ns
+            .update(|b0| (b0 + alpha * (resid - b0)).clamp(0.0, Self::BETA0_CAP_NS));
+    }
+
+    /// Periodic state reset (§4.2): forget learned penalties so degraded
+    /// paths are re-probed once they recover.
+    pub fn reset(&self) {
+        self.beta0_ns.store(self.init_beta0_ns);
+        self.beta1.store(self.init_beta1);
+    }
+
+    pub fn beta0_ns(&self) -> f64 {
+        self.beta0_ns.load()
+    }
+    pub fn beta1(&self) -> f64 {
+        self.beta1.load()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_converges_to_constant() {
+        let mut e = Ewma::new(0.3);
+        for _ in 0..100 {
+            e.observe(5.0);
+        }
+        assert!((e.get().unwrap() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ewma_tracks_step_change() {
+        let mut e = Ewma::new(0.5);
+        for _ in 0..20 {
+            e.observe(1.0);
+        }
+        for _ in 0..20 {
+            e.observe(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn ewma_reset_forgets() {
+        let mut e = Ewma::new(0.5);
+        e.observe(42.0);
+        e.reset();
+        assert!(e.get().is_none());
+    }
+
+    #[test]
+    fn atomic_f64_roundtrip_and_update() {
+        let a = AtomicF64::new(1.5);
+        assert_eq!(a.load(), 1.5);
+        a.store(-2.25);
+        assert_eq!(a.load(), -2.25);
+        a.update(|v| v * 2.0);
+        assert_eq!(a.load(), -4.5);
+    }
+
+    #[test]
+    fn cost_model_predicts_linear_in_queue() {
+        let m = LinearCostModel::new(10_000.0, 1.0, 0.2);
+        let bw = 250e6; // 250 MB/s
+        let t_empty = m.predict_ns(65_536, 0, bw);
+        let t_loaded = m.predict_ns(65_536, 10 * 65_536, bw);
+        assert!(t_loaded > t_empty);
+        // 64 KiB at 250 MB/s ≈ 262 µs serial + 10 µs fixed.
+        assert!((t_empty - (10_000.0 + 65_536.0 / 250e6 * 1e9)).abs() < 1.0);
+    }
+
+    #[test]
+    fn cost_model_learns_degraded_link() {
+        let m = LinearCostModel::new(0.0, 1.0, 0.3);
+        let bw = 250e6;
+        let len = 1 << 20;
+        // Link actually runs at 1/4 the nominal bandwidth: observed = 4x predicted.
+        for _ in 0..50 {
+            let serial = len as f64 / bw * 1e9;
+            let pred = m.predict_ns(len as u64, 0, bw);
+            m.observe_ns(pred, 4.0 * serial, serial);
+        }
+        assert!(m.beta1() > 3.0, "beta1={}", m.beta1());
+        // After learning, predictions on this link are ~4x those of a healthy one.
+        let healthy = LinearCostModel::new(0.0, 1.0, 0.3);
+        assert!(m.predict_ns(len, 0, bw) > 3.0 * healthy.predict_ns(len, 0, bw));
+    }
+
+    #[test]
+    fn cost_model_reset_restores_initial() {
+        let m = LinearCostModel::new(5.0, 1.0, 0.5);
+        m.observe_ns(100.0, 10_000.0, 50.0);
+        assert!(m.beta1() != 1.0 || m.beta0_ns() != 5.0);
+        m.reset();
+        assert_eq!(m.beta0_ns(), 5.0);
+        assert_eq!(m.beta1(), 1.0);
+    }
+}

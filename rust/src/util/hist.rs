@@ -1,0 +1,247 @@
+//! Log-bucketed latency histogram with percentile queries.
+//!
+//! HdrHistogram-style: values are bucketed with bounded relative error
+//! (~1/32 per octave sub-bucket), so P50/P90/P99 queries over millions of
+//! slice latencies cost O(buckets) and recording is a single atomic add —
+//! safe to share between rail workers.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const SUB_BITS: u32 = 5; // 32 sub-buckets per octave → ≤ ~3% relative error
+const SUB: usize = 1 << SUB_BITS;
+const OCTAVES: usize = 50; // covers 1 ns .. ~35 years
+const NBUCKETS: usize = OCTAVES * SUB;
+
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    let v = v.max(1);
+    let msb = 63 - v.leading_zeros() as usize;
+    if msb < SUB_BITS as usize {
+        return v as usize;
+    }
+    let octave = msb - SUB_BITS as usize + 1;
+    let sub = (v >> (octave - 1)) as usize - SUB;
+    (octave * SUB + sub).min(NBUCKETS - 1)
+}
+
+#[inline]
+fn bucket_upper(idx: usize) -> u64 {
+    if idx < SUB {
+        return idx as u64;
+    }
+    let octave = idx / SUB;
+    let sub = idx % SUB;
+    ((SUB + sub + 1) as u64) << (octave - 1)
+}
+
+/// Concurrent histogram; record from any thread, snapshot for queries.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    min: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+        }
+    }
+
+    /// Record one value (e.g. slice latency in ns).
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    pub fn min(&self) -> u64 {
+        let m = self.min.load(Ordering::Relaxed);
+        if m == u64::MAX {
+            0
+        } else {
+            m
+        }
+    }
+
+    /// Value at quantile `q` ∈ [0,1] (upper bucket bound; ≤ ~3% high).
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return bucket_upper(i).min(self.max());
+            }
+        }
+        self.max()
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+    pub fn p90(&self) -> u64 {
+        self.quantile(0.90)
+    }
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Zero all state.
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+        self.min.store(u64::MAX, Ordering::Relaxed);
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&self, other: &Histogram) {
+        for (a, b) in self.buckets.iter().zip(other.buckets.iter()) {
+            a.fetch_add(b.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum
+            .fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max
+            .fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.min
+            .fetch_min(other.min.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p99(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0);
+    }
+
+    #[test]
+    fn single_value() {
+        let h = Histogram::new();
+        h.record(1_000_000);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.max(), 1_000_000);
+        let p = h.p50();
+        assert!(p >= 1_000_000 && p as f64 <= 1_000_000.0 * 1.04, "p={p}");
+    }
+
+    #[test]
+    fn quantiles_bounded_relative_error() {
+        let h = Histogram::new();
+        for v in 1..=100_000u64 {
+            h.record(v);
+        }
+        for (q, expect) in [(0.5, 50_000.0), (0.9, 90_000.0), (0.99, 99_000.0)] {
+            let got = h.quantile(q) as f64;
+            assert!(
+                (got - expect).abs() / expect < 0.05,
+                "q={q} got={got} expect={expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn small_values_exact() {
+        let h = Histogram::new();
+        for v in 0..32u64 {
+            h.record(v);
+        }
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 31);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for v in 0..1000 {
+            a.record(v);
+            b.record(v + 10_000);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 2000);
+        assert!(a.quantile(0.75) > 9_000);
+    }
+
+    #[test]
+    fn random_values_mean_matches() {
+        let h = Histogram::new();
+        let mut r = Pcg64::new(7, 0);
+        let mut sum = 0u64;
+        for _ in 0..100_000 {
+            let v = r.gen_range(1 << 30);
+            h.record(v);
+            sum += v;
+        }
+        let expect = sum as f64 / 100_000.0;
+        assert!((h.mean() - expect).abs() < 1.0);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let h = Histogram::new();
+        h.record(5);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p99(), 0);
+    }
+
+    #[test]
+    fn bucket_monotonicity() {
+        let mut last = 0;
+        for v in (0..10_000_000u64).step_by(997) {
+            let b = bucket_of(v);
+            assert!(b >= last || bucket_upper(b) >= v, "v={v}");
+            last = last.max(b);
+        }
+    }
+}

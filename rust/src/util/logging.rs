@@ -1,0 +1,47 @@
+//! Minimal `log` facade backend writing to stderr with relative timestamps.
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger {
+    level: Level,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let t = crate::util::clock::now_ns() as f64 / 1e9;
+            eprintln!(
+                "[{t:10.4}s {:5} {}] {}",
+                record.level(),
+                record.target().split("::").last().unwrap_or(""),
+                record.args()
+            );
+        }
+    }
+    fn flush(&self) {}
+}
+
+/// Install the logger once. `TENT_LOG` env var overrides: error|warn|info|debug|trace.
+pub fn init(default_level: Level) {
+    let level = std::env::var("TENT_LOG")
+        .ok()
+        .and_then(|s| s.parse::<Level>().ok())
+        .unwrap_or(default_level);
+    let _ = log::set_boxed_logger(Box::new(StderrLogger { level }));
+    log::set_max_level(LevelFilter::from(level.to_level_filter()));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_idempotent() {
+        init(Level::Warn);
+        init(Level::Info); // second call must not panic
+        log::warn!("logging smoke test");
+    }
+}

@@ -1,0 +1,70 @@
+//! Dependency-free building blocks.
+//!
+//! The build environment has no network access to crates.io, so the usual
+//! suspects (tokio, clap, serde, criterion, proptest, rand) are unavailable.
+//! Everything in this module is hand-rolled — which happens to be faithful to
+//! the paper's own datapath (§4.4): pinned workers draining lock-free MPSC
+//! rings, hierarchical atomic completion counters, no async runtime.
+
+pub mod cli;
+pub mod clock;
+pub mod ewma;
+pub mod hist;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod ring;
+
+/// Format a byte count human-readably (e.g. `64.0 KiB`).
+pub fn fmt_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", n, UNITS[0])
+    } else {
+        format!("{:.1} {}", v, UNITS[u])
+    }
+}
+
+/// Format a bandwidth in bytes/sec as MB/s (sim units).
+pub fn fmt_bw(bytes_per_sec: f64) -> String {
+    format!("{:.1} MB/s", bytes_per_sec / 1e6)
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: u64) -> String {
+    if ns < 1_000 {
+        format!("{} ns", ns)
+    } else if ns < 1_000_000 {
+        format!("{:.1} us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(64 * 1024), "64.0 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0 MiB");
+    }
+
+    #[test]
+    fn ns_formatting() {
+        assert_eq!(fmt_ns(20), "20 ns");
+        assert_eq!(fmt_ns(1_500), "1.5 us");
+        assert_eq!(fmt_ns(2_000_000), "2.00 ms");
+        assert_eq!(fmt_ns(1_500_000_000), "1.500 s");
+    }
+}

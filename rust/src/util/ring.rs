@@ -1,0 +1,282 @@
+//! Lock-free bounded multi-producer / single-consumer ring buffer.
+//!
+//! This is the §4.4 datapath primitive: submission threads push slice
+//! descriptors, a pinned rail worker drains them in batches. The design is a
+//! classic Vyukov-style MPSC array queue: producers claim a slot with a
+//! single `fetch_add`-free CAS loop on `tail`, publish by storing a sequence
+//! number; the consumer reads sequenced slots without any atomics contention
+//! with other consumers (there are none).
+
+use crossbeam_utils::CachePadded;
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+struct Slot<T> {
+    seq: AtomicUsize,
+    value: UnsafeCell<MaybeUninit<T>>,
+}
+
+/// The shared ring state.
+pub struct Ring<T> {
+    buf: Box<[Slot<T>]>,
+    mask: usize,
+    tail: CachePadded<AtomicUsize>, // producers
+    head: CachePadded<AtomicUsize>, // consumer
+    /// Bytes enqueued minus bytes dequeued — exported so the scheduler can
+    /// see backlog *before* it reaches the rail (part of A_d).
+    pub backlog_items: CachePadded<AtomicU64>,
+}
+
+unsafe impl<T: Send> Send for Ring<T> {}
+unsafe impl<T: Send> Sync for Ring<T> {}
+
+/// Producer handle (clonable).
+pub struct Producer<T> {
+    ring: Arc<Ring<T>>,
+}
+
+impl<T> Clone for Producer<T> {
+    fn clone(&self) -> Self {
+        Producer {
+            ring: Arc::clone(&self.ring),
+        }
+    }
+}
+
+/// Consumer handle (exactly one per ring).
+pub struct Consumer<T> {
+    ring: Arc<Ring<T>>,
+}
+
+/// Create a ring with capacity rounded up to a power of two.
+pub fn ring<T>(capacity: usize) -> (Producer<T>, Consumer<T>) {
+    let cap = capacity.next_power_of_two().max(2);
+    let buf: Box<[Slot<T>]> = (0..cap)
+        .map(|i| Slot {
+            seq: AtomicUsize::new(i),
+            value: UnsafeCell::new(MaybeUninit::uninit()),
+        })
+        .collect();
+    let ring = Arc::new(Ring {
+        buf,
+        mask: cap - 1,
+        tail: CachePadded::new(AtomicUsize::new(0)),
+        head: CachePadded::new(AtomicUsize::new(0)),
+        backlog_items: CachePadded::new(AtomicU64::new(0)),
+    });
+    (
+        Producer {
+            ring: Arc::clone(&ring),
+        },
+        Consumer { ring },
+    )
+}
+
+impl<T> Producer<T> {
+    /// Push; returns `Err(v)` if the ring is full (caller decides whether to
+    /// spin, yield, or apply backpressure — the engine yields).
+    pub fn push(&self, v: T) -> Result<(), T> {
+        let r = &*self.ring;
+        let mut tail = r.tail.load(Ordering::Relaxed);
+        loop {
+            let slot = &r.buf[tail & r.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            if seq == tail {
+                match r.tail.compare_exchange_weak(
+                    tail,
+                    tail.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        unsafe { (*slot.value.get()).write(v) };
+                        slot.seq.store(tail.wrapping_add(1), Ordering::Release);
+                        r.backlog_items.fetch_add(1, Ordering::Relaxed);
+                        return Ok(());
+                    }
+                    Err(actual) => tail = actual,
+                }
+            } else if (seq as isize).wrapping_sub(tail as isize) < 0 {
+                return Err(v); // full
+            } else {
+                tail = r.tail.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Push, yielding the thread while the ring is full.
+    pub fn push_blocking(&self, mut v: T) {
+        loop {
+            match self.push(v) {
+                Ok(()) => return,
+                Err(back) => {
+                    v = back;
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+
+    /// Items currently enqueued (approximate).
+    pub fn backlog(&self) -> u64 {
+        self.ring.backlog_items.load(Ordering::Relaxed)
+    }
+}
+
+impl<T> Consumer<T> {
+    /// Pop one item, non-blocking.
+    pub fn pop(&mut self) -> Option<T> {
+        let r = &*self.ring;
+        let head = r.head.load(Ordering::Relaxed);
+        let slot = &r.buf[head & r.mask];
+        let seq = slot.seq.load(Ordering::Acquire);
+        if seq == head.wrapping_add(1) {
+            let v = unsafe { (*slot.value.get()).assume_init_read() };
+            slot.seq
+                .store(head.wrapping_add(r.mask + 1), Ordering::Release);
+            r.head.store(head.wrapping_add(1), Ordering::Relaxed);
+            r.backlog_items.fetch_sub(1, Ordering::Relaxed);
+            Some(v)
+        } else {
+            None
+        }
+    }
+
+    /// Drain up to `max` items into `out` (batched dequeue, §4.4).
+    pub fn pop_batch(&mut self, out: &mut Vec<T>, max: usize) -> usize {
+        let mut n = 0;
+        while n < max {
+            match self.pop() {
+                Some(v) => {
+                    out.push(v);
+                    n += 1;
+                }
+                None => break,
+            }
+        }
+        n
+    }
+
+    /// Items currently enqueued (approximate).
+    pub fn backlog(&self) -> u64 {
+        self.ring.backlog_items.load(Ordering::Relaxed)
+    }
+}
+
+impl<T> Drop for Ring<T> {
+    fn drop(&mut self) {
+        // Drop any undelivered items.
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Relaxed);
+        let mut i = head;
+        while i != tail {
+            let slot = &self.buf[i & self.mask];
+            if slot.seq.load(Ordering::Relaxed) == i.wrapping_add(1) {
+                unsafe { (*slot.value.get()).assume_init_drop() };
+            }
+            i = i.wrapping_add(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::thread;
+
+    #[test]
+    fn fifo_single_thread() {
+        let (p, mut c) = ring::<u32>(8);
+        for i in 0..8 {
+            p.push(i).unwrap();
+        }
+        assert!(p.push(99).is_err(), "ring should be full");
+        for i in 0..8 {
+            assert_eq!(c.pop(), Some(i));
+        }
+        assert_eq!(c.pop(), None);
+    }
+
+    #[test]
+    fn backlog_tracks() {
+        let (p, mut c) = ring::<u32>(16);
+        assert_eq!(p.backlog(), 0);
+        p.push(1).unwrap();
+        p.push(2).unwrap();
+        assert_eq!(p.backlog(), 2);
+        c.pop();
+        assert_eq!(c.backlog(), 1);
+    }
+
+    #[test]
+    fn wraparound() {
+        let (p, mut c) = ring::<u64>(4);
+        for round in 0..100u64 {
+            p.push(round).unwrap();
+            assert_eq!(c.pop(), Some(round));
+        }
+    }
+
+    #[test]
+    fn batch_pop() {
+        let (p, mut c) = ring::<u32>(32);
+        for i in 0..20 {
+            p.push(i).unwrap();
+        }
+        let mut out = Vec::new();
+        assert_eq!(c.pop_batch(&mut out, 16), 16);
+        assert_eq!(c.pop_batch(&mut out, 16), 4);
+        assert_eq!(out, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn mpsc_all_items_delivered_once() {
+        let (p, mut c) = ring::<u64>(1024);
+        const PRODUCERS: u64 = 8;
+        const PER: u64 = 10_000;
+        let handles: Vec<_> = (0..PRODUCERS)
+            .map(|t| {
+                let p = p.clone();
+                thread::spawn(move || {
+                    for i in 0..PER {
+                        p.push_blocking(t * PER + i);
+                    }
+                })
+            })
+            .collect();
+        let mut seen = HashSet::new();
+        while seen.len() < (PRODUCERS * PER) as usize {
+            if let Some(v) = c.pop() {
+                assert!(seen.insert(v), "duplicate {v}");
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.pop(), None);
+        assert_eq!(seen.len(), (PRODUCERS * PER) as usize);
+    }
+
+    #[test]
+    fn drops_undelivered_items() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct D;
+        impl Drop for D {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        {
+            let (p, mut c) = ring::<D>(8);
+            p.push(D).ok();
+            p.push(D).ok();
+            p.push(D).ok();
+            drop(c.pop()); // one delivered + dropped
+        }
+        assert_eq!(DROPS.load(Ordering::SeqCst), 3);
+    }
+}

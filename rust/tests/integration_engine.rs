@@ -1,0 +1,237 @@
+//! End-to-end engine integration: data integrity across profiles, fabrics,
+//! and concurrency patterns.
+
+use std::sync::Arc;
+use std::time::Duration;
+use tent::cluster::Cluster;
+use tent::engine::{EngineConfig, TentEngine, TransferReq};
+use tent::segment::{Location, SegmentId};
+
+fn engine(profile: &str) -> (Cluster, Arc<TentEngine>) {
+    let c = Cluster::from_profile(profile).unwrap();
+    let e = Arc::new(TentEngine::new(&c, EngineConfig::default()).unwrap());
+    (c, e)
+}
+
+fn fill(e: &TentEngine, id: SegmentId, len: usize, seed: u8) -> Vec<u8> {
+    let data: Vec<u8> = (0..len)
+        .map(|i| (i as u8).wrapping_mul(97).wrapping_add(seed))
+        .collect();
+    e.segment(id).unwrap().write_at(0, &data).unwrap();
+    data
+}
+
+fn read_back(e: &TentEngine, id: SegmentId, len: usize) -> Vec<u8> {
+    let mut buf = vec![0u8; len];
+    e.segment(id).unwrap().read_at(0, &mut buf).unwrap();
+    buf
+}
+
+#[test]
+fn large_transfer_integrity_h2h() {
+    let (_c, e) = engine("h800_hgx");
+    let len = 24usize << 20; // 384 slices → all 8 rails + spraying
+    let a = e.register_segment(Location::host(0, 0), len as u64).unwrap();
+    let b = e.register_segment(Location::host(1, 1), len as u64).unwrap();
+    let want = fill(&e, a, len, 1);
+    e.transfer_sync(
+        TransferReq::write(a, 0, b, 0, len as u64),
+        Duration::from_secs(120),
+    )
+    .unwrap();
+    assert_eq!(read_back(&e, b, len), want);
+    // Spraying must have used several rails.
+    let used = e
+        .rail_snapshots()
+        .iter()
+        .filter(|r| r.fabric == "rdma" && r.bytes_carried > 0)
+        .count();
+    assert!(used >= 4, "expected multi-rail spray, used {used}");
+}
+
+#[test]
+fn concurrent_batches_from_many_threads() {
+    let (_c, e) = engine("h800_hgx");
+    let len = 1u64 << 20;
+    let mut handles = Vec::new();
+    for t in 0..6u8 {
+        let e = Arc::clone(&e);
+        handles.push(std::thread::spawn(move || {
+            let a = e.register_segment(Location::host(0, t % 2), len).unwrap();
+            let b = e.register_segment(Location::host(1, t % 2), len).unwrap();
+            let seg = e.segment(a).unwrap();
+            let data = vec![t ^ 0x5c; len as usize];
+            seg.write_at(0, &data).unwrap();
+            for _ in 0..4 {
+                e.transfer_sync(TransferReq::write(a, 0, b, 0, len), Duration::from_secs(60))
+                    .unwrap();
+            }
+            let mut buf = vec![0u8; len as usize];
+            e.segment(b).unwrap().read_at(0, &mut buf).unwrap();
+            assert_eq!(buf, data);
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let s = e.stats();
+    assert_eq!(s.permanent_failures, 0);
+    assert_eq!(s.slices_completed, s.slices_dispatched + s.retries);
+}
+
+#[test]
+fn offsets_are_respected() {
+    let (_c, e) = engine("h800_hgx");
+    let a = e.register_segment(Location::host(0, 0), 1 << 20).unwrap();
+    let b = e.register_segment(Location::host(1, 0), 1 << 20).unwrap();
+    fill(&e, a, 1 << 20, 9);
+    // Move bytes [128K..384K) of src to [512K..768K) of dst.
+    e.transfer_sync(
+        TransferReq::write(a, 128 << 10, b, 512 << 10, 256 << 10),
+        Duration::from_secs(30),
+    )
+    .unwrap();
+    let got = read_back(&e, b, 1 << 20);
+    let want = read_back(&e, a, 1 << 20);
+    assert_eq!(&got[512 << 10..768 << 10], &want[128 << 10..384 << 10]);
+    assert!(got[..512 << 10].iter().all(|&x| x == 0));
+    assert!(got[768 << 10..].iter().all(|&x| x == 0));
+}
+
+#[test]
+fn mnnvl_cross_node_gpu_path() {
+    let (_c, e) = engine("mnnvl_rack");
+    let len = 4usize << 20;
+    let a = e.register_segment(Location::device(0, 1), len as u64).unwrap();
+    let b = e.register_segment(Location::device(1, 6), len as u64).unwrap();
+    let want = fill(&e, a, len, 2);
+    e.transfer_sync(
+        TransferReq::write(a, 0, b, 0, len as u64),
+        Duration::from_secs(60),
+    )
+    .unwrap();
+    assert_eq!(read_back(&e, b, len), want);
+    let mnnvl: u64 = e
+        .rail_snapshots()
+        .iter()
+        .filter(|r| r.fabric == "mnnvl")
+        .map(|r| r.bytes_carried)
+        .sum();
+    assert!(mnnvl >= len as u64 / 2, "MNNVL must carry the flow");
+}
+
+#[test]
+fn ascend_ub_path() {
+    let (_c, e) = engine("ascend_ub");
+    let len = 2usize << 20;
+    let a = e.register_segment(Location::device(0, 0), len as u64).unwrap();
+    let b = e.register_segment(Location::device(0, 7), len as u64).unwrap();
+    let want = fill(&e, a, len, 3);
+    e.transfer_sync(
+        TransferReq::write(a, 0, b, 0, len as u64),
+        Duration::from_secs(60),
+    )
+    .unwrap();
+    assert_eq!(read_back(&e, b, len), want);
+    let ub: u64 = e
+        .rail_snapshots()
+        .iter()
+        .filter(|r| r.fabric == "ascend_ub")
+        .map(|r| r.bytes_carried)
+        .sum();
+    assert!(ub > 0, "Ascend UB must carry intra-node NPU traffic");
+}
+
+#[test]
+fn legacy_tcp_only_cluster_works() {
+    let (_c, e) = engine("legacy_tcp");
+    let len = 512usize << 10;
+    let a = e.register_segment(Location::host(0, 0), len as u64).unwrap();
+    let b = e.register_segment(Location::host(1, 0), len as u64).unwrap();
+    let want = fill(&e, a, len, 4);
+    e.transfer_sync(
+        TransferReq::write(a, 0, b, 0, len as u64),
+        Duration::from_secs(120),
+    )
+    .unwrap();
+    assert_eq!(read_back(&e, b, len), want);
+}
+
+#[test]
+fn same_node_host_uses_shm() {
+    let (_c, e) = engine("h800_hgx");
+    let len = 2usize << 20;
+    let a = e.register_segment(Location::host(0, 0), len as u64).unwrap();
+    let b = e.register_segment(Location::host(0, 1), len as u64).unwrap();
+    let want = fill(&e, a, len, 5);
+    e.transfer_sync(
+        TransferReq::write(a, 0, b, 0, len as u64),
+        Duration::from_secs(30),
+    )
+    .unwrap();
+    assert_eq!(read_back(&e, b, len), want);
+    let shm: u64 = e
+        .rail_snapshots()
+        .iter()
+        .filter(|r| r.fabric == "shm")
+        .map(|r| r.bytes_carried)
+        .sum();
+    // SHM is the fastest rail and must carry the bulk; once its queue
+    // builds, TENT legitimately spills the tail onto idle RDMA rails.
+    assert!(
+        shm >= len as u64 / 2,
+        "SHM should carry the majority intra-node (got {shm}/{len})"
+    );
+}
+
+#[test]
+fn mixed_fleet_cross_silo_staged_delivery() {
+    let c = Cluster::from_profile_nodes("mixed_fleet", 0, tent::fabric::FabricConfig::default())
+        .unwrap();
+    let e = Arc::new(TentEngine::new(&c, EngineConfig::default()).unwrap());
+    let len = 1usize << 20;
+    let a = e.register_segment(Location::device(0, 0), len as u64).unwrap();
+    let b = e.register_segment(Location::device(1, 3), len as u64).unwrap();
+    let want = fill(&e, a, len, 6);
+    e.transfer_sync(
+        TransferReq::write(a, 0, b, 0, len as u64),
+        Duration::from_secs(120),
+    )
+    .unwrap();
+    assert_eq!(read_back(&e, b, len), want);
+    assert!(e.stats().staged_plans >= 1, "cross-silo pair must stage");
+}
+
+#[test]
+fn many_small_transfers_in_one_batch() {
+    let (_c, e) = engine("h800_hgx");
+    let n = 64;
+    let len = 16u64 << 10;
+    let a = e.register_segment(Location::host(0, 0), n * len).unwrap();
+    let b = e.register_segment(Location::host(1, 0), n * len).unwrap();
+    let want = fill(&e, a, (n * len) as usize, 7);
+    let reqs: Vec<TransferReq> = (0..n)
+        .map(|i| TransferReq::write(a, i * len, b, i * len, len))
+        .collect();
+    let batch = e.allocate_batch();
+    e.submit(batch, &reqs).unwrap();
+    let st = e.wait(batch, Duration::from_secs(60)).unwrap();
+    assert_eq!(st.total_transfers, n);
+    assert_eq!(read_back(&e, b, (n * len) as usize), want);
+}
+
+#[test]
+fn batch_status_progresses() {
+    let (_c, e) = engine("h800_hgx");
+    let len = 16u64 << 20;
+    let a = e.register_segment(Location::host(0, 0), len).unwrap();
+    let b = e.register_segment(Location::host(1, 0), len).unwrap();
+    let batch = e.allocate_batch();
+    e.submit(batch, &[TransferReq::write(a, 0, b, 0, len)]).unwrap();
+    let st0 = e.status(batch).unwrap();
+    assert_eq!(st0.total_transfers, 1);
+    let st1 = e.wait(batch, Duration::from_secs(60)).unwrap();
+    assert!(st1.ok());
+    e.release_batch(batch).unwrap();
+    assert!(e.status(batch).is_err());
+}

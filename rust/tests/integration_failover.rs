@@ -1,0 +1,208 @@
+//! Resilience integration: dual-layer self-healing under injected faults
+//! (§4.3 / §5.3) including a Table-1-driven chaos run.
+
+use std::sync::Arc;
+use std::time::Duration;
+use tent::cluster::Cluster;
+use tent::engine::{EngineConfig, TentEngine, TransferReq};
+use tent::fabric::trace::TraceGenerator;
+use tent::segment::Location;
+use tent::topology::{FabricKind, NodeId};
+
+fn engine_with(profile: &str, cfg: EngineConfig) -> (Cluster, Arc<TentEngine>) {
+    let c = Cluster::from_profile(profile).unwrap();
+    let e = Arc::new(TentEngine::new(&c, cfg).unwrap());
+    (c, e)
+}
+
+fn checked_transfer(e: &TentEngine, len: u64) -> (Vec<u8>, Vec<u8>) {
+    let a = e.register_segment(Location::host(0, 0), len).unwrap();
+    let b = e.register_segment(Location::host(1, 0), len).unwrap();
+    let data: Vec<u8> = (0..len as usize).map(|i| (i % 241) as u8).collect();
+    e.segment(a).unwrap().write_at(0, &data).unwrap();
+    e.transfer_sync(TransferReq::write(a, 0, b, 0, len), Duration::from_secs(120))
+        .unwrap();
+    let mut got = vec![0u8; len as usize];
+    e.segment(b).unwrap().read_at(0, &mut got).unwrap();
+    (data, got)
+}
+
+#[test]
+fn mid_flight_failure_is_masked_and_retried() {
+    let mut cfg = EngineConfig::default();
+    cfg.probe_interval = Duration::from_millis(10);
+    let (c, e) = engine_with("h800_hgx", cfg);
+    let rails = c.topo.rails_of(NodeId(0), FabricKind::Rdma);
+    // Fail a rail *while* a large transfer is in flight.
+    let fabric = Arc::clone(&c.fabric);
+    let rail = rails[2];
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(30));
+        fabric.inject_failure(rail);
+    });
+    let (want, got) = checked_transfer(&e, 32 << 20);
+    killer.join().unwrap();
+    assert_eq!(want, got);
+    let s = e.stats();
+    assert_eq!(s.permanent_failures, 0, "failure must be masked: {s:?}");
+    c.fabric.recover(rail);
+}
+
+#[test]
+fn recovered_rail_is_readmitted_and_reused() {
+    let mut cfg = EngineConfig::default();
+    cfg.probe_interval = Duration::from_millis(5);
+    let (c, e) = engine_with("h800_hgx", cfg);
+    let rail = c.topo.rails_of(NodeId(0), FabricKind::Rdma)[0];
+
+    c.fabric.inject_failure(rail);
+    checked_transfer(&e, 4 << 20); // forces exclusion via failures
+    let excluded_now = e.rail_snapshots()[rail.0 as usize].excluded;
+
+    c.fabric.recover(rail);
+    // Prober readmits within a few intervals.
+    let deadline = std::time::Instant::now() + Duration::from_millis(500);
+    loop {
+        if !e.rail_snapshots()[rail.0 as usize].excluded {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "rail not readmitted in 500ms"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // And it carries traffic again.
+    c.fabric.reset_stats();
+    checked_transfer(&e, 16 << 20);
+    let bytes = e.rail_snapshots()[rail.0 as usize].bytes_carried;
+    assert!(bytes > 0, "recovered rail unused (was excluded: {excluded_now})");
+    let s = e.stats();
+    assert!(s.readmissions >= 1 || !excluded_now);
+}
+
+#[test]
+fn all_rdma_down_substitutes_tcp_backend() {
+    let (c, e) = engine_with("h800_hgx", EngineConfig::default());
+    for r in c.topo.rails_of(NodeId(0), FabricKind::Rdma) {
+        c.fabric.inject_failure(r);
+    }
+    let (want, got) = checked_transfer(&e, 1 << 20);
+    assert_eq!(want, got);
+    let tcp: u64 = e
+        .rail_snapshots()
+        .iter()
+        .filter(|r| r.fabric == "tcp")
+        .map(|r| r.bytes_carried)
+        .sum();
+    assert!(tcp >= 1 << 20, "tcp substitution must carry the payload");
+    for r in c.topo.rails_of(NodeId(0), FabricKind::Rdma) {
+        c.fabric.recover(r);
+    }
+}
+
+#[test]
+fn nvlink_failure_substitutes_rdma_for_gpu_traffic() {
+    let (c, e) = engine_with("h800_hgx", EngineConfig::default());
+    // "Driver bug invalidates all NVLink paths on the node" (§4.3).
+    for r in c.topo.rails_of(NodeId(0), FabricKind::NvLink) {
+        c.fabric.inject_failure(r);
+    }
+    let len = 2u64 << 20;
+    let a = e.register_segment(Location::device(0, 0), len).unwrap();
+    let b = e.register_segment(Location::device(0, 1), len).unwrap();
+    let data = vec![0xEE; len as usize];
+    e.segment(a).unwrap().write_at(0, &data).unwrap();
+    e.transfer_sync(TransferReq::write(a, 0, b, 0, len), Duration::from_secs(60))
+        .unwrap();
+    let mut got = vec![0u8; len as usize];
+    e.segment(b).unwrap().read_at(0, &mut got).unwrap();
+    assert_eq!(got, data);
+    let rdma: u64 = e
+        .rail_snapshots()
+        .iter()
+        .filter(|r| r.fabric == "rdma")
+        .map(|r| r.bytes_carried)
+        .sum();
+    assert!(rdma >= len, "RDMA must substitute for dead NVLink");
+}
+
+#[test]
+fn degraded_rail_is_steered_around_by_telemetry() {
+    let mut cfg = EngineConfig::default();
+    cfg.sched.ewma_alpha = 0.4; // learn fast in a short test
+    let (c, e) = engine_with("h800_hgx", cfg);
+    let rails = c.topo.rails_of(NodeId(0), FabricKind::Rdma);
+    let slow = rails[1];
+    c.fabric.inject_degradation(slow, 0.05); // 20x slower, no hard error
+
+    // Warm the models, then measure steering.
+    checked_transfer(&e, 8 << 20);
+    c.fabric.reset_stats();
+    checked_transfer(&e, 16 << 20);
+
+    let snaps = e.rail_snapshots();
+    let slow_bytes = snaps[slow.0 as usize].bytes_carried;
+    let healthy_max = rails
+        .iter()
+        .filter(|&&r| r != slow)
+        .map(|&r| snaps[r.0 as usize].bytes_carried)
+        .max()
+        .unwrap();
+    assert!(
+        slow_bytes < healthy_max / 2,
+        "telemetry must steer away from the degraded rail (slow={slow_bytes}, max={healthy_max})"
+    );
+    c.fabric.recover(slow);
+}
+
+#[test]
+fn chaos_run_with_table1_failure_mix() {
+    // Compressed production churn: inject the Table-1 mix at high rate
+    // while transfers stream; TENT must complete every one.
+    let mut cfg = EngineConfig::default();
+    cfg.probe_interval = Duration::from_millis(5);
+    cfg.max_retries = 8;
+    let (c, e) = engine_with("h800_hgx", cfg);
+    let rails = c.topo.rails_of(NodeId(0), FabricKind::Rdma);
+
+    let mut gen = TraceGenerator::new(99);
+    let actions = gen.generate(2_000_000_000, 15.0); // 2 s horizon, ~30 events
+    let fabric = Arc::clone(&c.fabric);
+    let rails2 = rails.clone();
+    let injector = std::thread::spawn(move || {
+        let t0 = std::time::Instant::now();
+        for a in actions {
+            let at = Duration::from_nanos(a.at_ns);
+            if at > t0.elapsed() {
+                std::thread::sleep(at - t0.elapsed());
+            }
+            // Never kill rail 0..2 simultaneously forever: map hard failures
+            // onto rails 3..8 cyclically, transient onto any.
+            let rail = rails2[(a.at_ns as usize) % rails2.len()];
+            if a.hard {
+                fabric.inject_failure(rail);
+            } else {
+                fabric.inject_degradation(rail, a.degrade_factor.max(0.05));
+            }
+            // Recover transients quickly (compressed durations).
+            if a.duration_ns < 1_000_000_000 {
+                let f2 = std::sync::Arc::clone(&fabric);
+                std::thread::spawn(move || {
+                    std::thread::sleep(Duration::from_nanos(a.duration_ns.min(300_000_000)));
+                    f2.recover(rail);
+                });
+            }
+        }
+    });
+
+    for i in 0..6 {
+        let (want, got) = checked_transfer(&e, 8 << 20);
+        assert_eq!(want, got, "iteration {i}");
+    }
+    injector.join().unwrap();
+    assert_eq!(e.stats().permanent_failures, 0);
+    for r in rails {
+        c.fabric.recover(r);
+    }
+}

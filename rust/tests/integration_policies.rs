@@ -1,0 +1,194 @@
+//! Policy-level behavioural contrasts at the whole-engine level — the
+//! mechanisms behind the paper's figures, asserted as invariants.
+
+use std::sync::Arc;
+use std::time::Duration;
+use tent::bench::{self, TeBenchConfig, ThreadPair};
+use tent::cluster::Cluster;
+use tent::engine::{EngineConfig, TentEngine, TransferOp, TransferReq};
+use tent::policy::PolicyKind;
+use tent::segment::Location;
+
+fn engine(policy: PolicyKind) -> (Cluster, Arc<TentEngine>) {
+    let c = Cluster::from_profile("h800_hgx").unwrap();
+    let e = Arc::new(TentEngine::new(&c, EngineConfig::with_policy(policy)).unwrap());
+    (c, e)
+}
+
+fn rdma_rails_used(e: &TentEngine) -> usize {
+    e.rail_snapshots()
+        .iter()
+        .filter(|r| r.fabric == "rdma" && r.bytes_carried > 0)
+        .count()
+}
+
+fn d2d_bench(e: &Arc<TentEngine>, block: u64, iters: usize) -> bench::TeBenchResult {
+    let seg_len = (block * 2).max(8 << 20);
+    let src = e.register_segment(Location::device(0, 0), seg_len).unwrap();
+    let dst = e.register_segment(Location::device(1, 0), seg_len).unwrap();
+    bench::run(
+        e,
+        &[ThreadPair { src, dst, seg_len }],
+        &TeBenchConfig {
+            block_size: block,
+            batch_size: 1,
+            iters,
+            warmup: 1,
+            op: TransferOp::Write,
+            time_limit: Duration::from_secs(30),
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn uccl_uses_exactly_one_rail() {
+    let (_c, e) = engine(PolicyKind::UcclP2p);
+    let len = 8u64 << 20;
+    let a = e.register_segment(Location::host(0, 0), len).unwrap();
+    let b = e.register_segment(Location::host(1, 0), len).unwrap();
+    e.transfer_sync(TransferReq::write(a, 0, b, 0, len), Duration::from_secs(60))
+        .unwrap();
+    assert_eq!(rdma_rails_used(&e), 1, "UCCL pins a region to one NIC");
+}
+
+#[test]
+fn nixl_uses_at_most_two_rails() {
+    let (_c, e) = engine(PolicyKind::Nixl);
+    let len = 32u64 << 20; // above its multirail threshold
+    let a = e.register_segment(Location::host(0, 0), len).unwrap();
+    let b = e.register_segment(Location::host(1, 0), len).unwrap();
+    e.transfer_sync(TransferReq::write(a, 0, b, 0, len), Duration::from_secs(60))
+        .unwrap();
+    let used = rdma_rails_used(&e);
+    assert!(used <= 2 && used >= 1, "NIXL keeps 2 best NICs, used {used}");
+}
+
+#[test]
+fn round_robin_spreads_evenly_over_all_rails() {
+    let (_c, e) = engine(PolicyKind::RoundRobin);
+    let len = 16u64 << 20;
+    let a = e.register_segment(Location::host(0, 0), len).unwrap();
+    let b = e.register_segment(Location::host(1, 0), len).unwrap();
+    e.transfer_sync(TransferReq::write(a, 0, b, 0, len), Duration::from_secs(60))
+        .unwrap();
+    // Only the source node's 8 NICs carry slices (node-1 rails stay idle).
+    let counts: Vec<u64> = e
+        .rail_snapshots()
+        .iter()
+        .filter(|r| r.fabric == "rdma" && r.slices_ok > 0)
+        .map(|r| r.slices_ok)
+        .collect();
+    assert_eq!(counts.len(), 8);
+    let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+    assert!(max - min <= 1, "RR must be even: {counts:?}");
+}
+
+#[test]
+fn tent_beats_te_on_cross_node_gpu_writes() {
+    // Fig. 6 mechanism: TE is capped at the tier-1 NIC, TENT spills over.
+    let (_c1, te) = engine(PolicyKind::MooncakeTe);
+    let te_bw = d2d_bench(&te, 16 << 20, 6).throughput();
+    let (_c2, tnt) = engine(PolicyKind::Tent);
+    let tnt_bw = d2d_bench(&tnt, 16 << 20, 6).throughput();
+    assert!(
+        tnt_bw > 1.3 * te_bw,
+        "TENT {tnt_bw:.0} must beat TE {te_bw:.0} by a clear margin"
+    );
+}
+
+#[test]
+fn tent_spill_respects_small_blocks() {
+    // For small blocks the tier-1 NIC should dominate (no pointless spill).
+    let (_c, e) = engine(PolicyKind::Tent);
+    d2d_bench(&e, 256 << 10, 24);
+    let snaps = e.rail_snapshots();
+    let t1_bytes = snaps
+        .iter()
+        .filter(|r| r.fabric == "rdma" && r.name == "n0-mlx0")
+        .map(|r| r.bytes_carried)
+        .sum::<u64>();
+    let total: u64 = snaps
+        .iter()
+        .filter(|r| r.fabric == "rdma")
+        .map(|r| r.bytes_carried)
+        .sum();
+    assert!(
+        t1_bytes * 2 >= total,
+        "tier-1 should carry most small-block bytes ({t1_bytes}/{total})"
+    );
+}
+
+#[test]
+fn te_routes_gpu_traffic_over_rdma_never_nvlink() {
+    let (_c, e) = engine(PolicyKind::MooncakeTe);
+    let len = 4u64 << 20;
+    let a = e.register_segment(Location::device(0, 0), len).unwrap();
+    let b = e.register_segment(Location::device(0, 2), len).unwrap();
+    e.transfer_sync(TransferReq::write(a, 0, b, 0, len), Duration::from_secs(60))
+        .unwrap();
+    let snaps = e.rail_snapshots();
+    let nvl: u64 = snaps.iter().filter(|r| r.fabric == "nvlink").map(|r| r.bytes_carried).sum();
+    let rdma: u64 = snaps.iter().filter(|r| r.fabric == "rdma").map(|r| r.bytes_carried).sum();
+    assert_eq!(nvl, 0);
+    assert!(rdma >= len);
+}
+
+#[test]
+fn tent_prefers_nvlink_for_intra_node_gpu_traffic() {
+    let (_c, e) = engine(PolicyKind::Tent);
+    let len = 4u64 << 20;
+    let a = e.register_segment(Location::device(0, 0), len).unwrap();
+    let b = e.register_segment(Location::device(0, 2), len).unwrap();
+    e.transfer_sync(TransferReq::write(a, 0, b, 0, len), Duration::from_secs(60))
+        .unwrap();
+    let nvl: u64 = e
+        .rail_snapshots()
+        .iter()
+        .filter(|r| r.fabric == "nvlink")
+        .map(|r| r.bytes_carried)
+        .sum();
+    assert!(nvl >= len / 2, "NVLink must be first-class for TENT");
+}
+
+#[test]
+fn global_load_diffusion_balances_two_engines() {
+    // Two engine instances share the same fabric (same NICs). With ω > 0,
+    // engine 2 sees engine 1's queued bytes and avoids its hot rail.
+    let c = Cluster::from_profile("h800_hgx").unwrap();
+    let mut cfg1 = EngineConfig::default();
+    cfg1.sched.omega = 0.5;
+    let e1 = Arc::new(TentEngine::new(&c, cfg1.clone()).unwrap());
+    let e2 = Arc::new(TentEngine::new(&c, cfg1).unwrap());
+    let len = 16u64 << 20;
+    let mk = |e: &Arc<TentEngine>| {
+        let a = e.register_segment(Location::host(0, 0), len).unwrap();
+        let b = e.register_segment(Location::host(1, 0), len).unwrap();
+        (a, b)
+    };
+    let (a1, b1) = mk(&e1);
+    let (a2, b2) = mk(&e2);
+    let h1 = {
+        let e1 = Arc::clone(&e1);
+        std::thread::spawn(move || {
+            e1.transfer_sync(TransferReq::write(a1, 0, b1, 0, len), Duration::from_secs(60))
+                .unwrap()
+        })
+    };
+    let h2 = {
+        let e2 = Arc::clone(&e2);
+        std::thread::spawn(move || {
+            e2.transfer_sync(TransferReq::write(a2, 0, b2, 0, len), Duration::from_secs(60))
+                .unwrap()
+        })
+    };
+    h1.join().unwrap();
+    h2.join().unwrap();
+    // Both engines share fabric counters: all four NUMA-0 rails busy.
+    let used: usize = e1
+        .rail_snapshots()
+        .iter()
+        .filter(|r| r.fabric == "rdma" && r.bytes_carried > 0)
+        .count();
+    assert!(used >= 4, "diffusion should spread both engines' load, used {used}");
+}

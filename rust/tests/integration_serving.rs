@@ -1,0 +1,194 @@
+//! Serving-stack integration over the full three layers. Tests that need
+//! the AOT artifacts skip gracefully when `make artifacts` hasn't run.
+
+use std::sync::Arc;
+use tent::cluster::Cluster;
+use tent::engine::{EngineConfig, TentEngine};
+use tent::policy::PolicyKind;
+use tent::runtime::Runtime;
+use tent::serving::kvcache::{hash_chunks, KvCacheConfig, TieredKvCache};
+use tent::serving::{
+    build_conversations, run_serving, CheckpointConfig, CheckpointEngine, ServeConfig, ServeMode,
+};
+
+fn artifacts() -> Option<Runtime> {
+    let dir = tent::runtime::default_artifacts_dir();
+    if Runtime::artifacts_available(&dir) {
+        Some(Runtime::load(&dir).unwrap())
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn engine(policy: PolicyKind) -> Arc<TentEngine> {
+    let c = Cluster::from_profile_nodes("h800_hgx", 1, tent::fabric::FabricConfig::default())
+        .unwrap();
+    Arc::new(TentEngine::new(&c, EngineConfig::with_policy(policy)).unwrap())
+}
+
+fn small_cfg(mode: ServeMode) -> ServeConfig {
+    ServeConfig {
+        mode,
+        clients: 3,
+        turns: 3,
+        decode_tokens: 2,
+        seed: 11,
+        cache: KvCacheConfig {
+            gpu_blocks_per_gpu: 2,
+            cpu_blocks: 64,
+            disk_blocks: 128,
+            disk_path: std::env::temp_dir()
+                .join(format!("tent_itest_kv_{}.pool", std::process::id())),
+            ..Default::default()
+        },
+        shared_system_prompt: true,
+    }
+}
+
+#[test]
+fn hicache_serving_end_to_end_with_cache_hits() {
+    let Some(rt) = artifacts() else { return };
+    let e = engine(PolicyKind::Tent);
+    let cfg = small_cfg(ServeMode::HiCache);
+    let convs = build_conversations(cfg.clients, cfg.turns, rt.meta.t_pre, 4096, 8, cfg.seed, true);
+    let rep = run_serving(&e, &rt, &convs, &cfg).unwrap();
+    assert_eq!(rep.turns.len(), cfg.clients * cfg.turns);
+    // Turn 0 has nothing to reuse; later turns must hit the cache.
+    let t0_hits: usize = rep.turns.iter().filter(|t| t.turn == 0).map(|t| t.cached_blocks).sum();
+    assert_eq!(t0_hits, 0);
+    let t2_hits: usize = rep.turns.iter().filter(|t| t.turn == 2).map(|t| t.cached_blocks).sum();
+    assert!(t2_hits >= cfg.clients * 2, "turn 2 must reuse 2 blocks per client");
+    // And real bytes flowed through the engine for those hits.
+    let fetched: u64 = rep.turns.iter().map(|t| t.fetched_bytes).sum();
+    assert!(fetched > 0);
+    std::fs::remove_file(&cfg.cache.disk_path).ok();
+}
+
+#[test]
+fn hicache_ttft_beats_baseline_in_later_rounds() {
+    let Some(rt) = artifacts() else { return };
+    let base_cfg = small_cfg(ServeMode::Baseline);
+    let hc_cfg = ServeConfig {
+        cache: KvCacheConfig {
+            disk_path: std::env::temp_dir()
+                .join(format!("tent_itest_kv2_{}.pool", std::process::id())),
+            ..base_cfg.cache.clone()
+        },
+        mode: ServeMode::HiCache,
+        ..base_cfg.clone()
+    };
+    let convs = build_conversations(base_cfg.clients, base_cfg.turns, rt.meta.t_pre, 4096, 8, 11, true);
+    let base = run_serving(&engine(PolicyKind::Tent), &rt, &convs, &base_cfg).unwrap();
+    let hc = run_serving(&engine(PolicyKind::Tent), &rt, &convs, &hc_cfg).unwrap();
+    let last = base_cfg.turns;
+    assert!(
+        hc.round_avg_ttft_s(last) < base.round_avg_ttft_s(last),
+        "HiCache R{last} TTFT {:.3}s must beat baseline {:.3}s",
+        hc.round_avg_ttft_s(last),
+        base.round_avg_ttft_s(last)
+    );
+    std::fs::remove_file(&hc_cfg.cache.disk_path).ok();
+}
+
+#[test]
+fn serving_results_identical_across_policies() {
+    // The transfer engine must be *transparent*: serving output (cache hit
+    // pattern, token counts) is identical under TENT and TE; only timing
+    // differs.
+    let Some(rt) = artifacts() else { return };
+    let mk_cfg = |tag: &str| ServeConfig {
+        cache: KvCacheConfig {
+            disk_path: std::env::temp_dir()
+                .join(format!("tent_itest_kv3{tag}_{}.pool", std::process::id())),
+            ..small_cfg(ServeMode::HiCache).cache
+        },
+        ..small_cfg(ServeMode::HiCache)
+    };
+    let convs = build_conversations(3, 3, rt.meta.t_pre, 4096, 8, 11, true);
+    let cfg_a = mk_cfg("a");
+    let cfg_b = mk_cfg("b");
+    let a = run_serving(&engine(PolicyKind::Tent), &rt, &convs, &cfg_a).unwrap();
+    let b = run_serving(&engine(PolicyKind::MooncakeTe), &rt, &convs, &cfg_b).unwrap();
+    let hits = |r: &tent::serving::ServeReport| -> Vec<(usize, usize, usize)> {
+        r.turns.iter().map(|t| (t.client, t.turn, t.cached_blocks)).collect()
+    };
+    assert_eq!(hits(&a), hits(&b), "policy must not change cache semantics");
+    std::fs::remove_file(&cfg_a.cache.disk_path).ok();
+    std::fs::remove_file(&cfg_b.cache.disk_path).ok();
+}
+
+#[test]
+fn tiered_cache_spill_and_refetch_roundtrip() {
+    // Pure L3 test (no model): store more blocks than GPU capacity, verify
+    // eviction to CPU + refetch returns identical bytes.
+    let Some(rt) = artifacts() else { return };
+    let e = engine(PolicyKind::Tent);
+    let cfg = KvCacheConfig {
+        gpu_blocks_per_gpu: 1,
+        cpu_blocks: 32,
+        disk_blocks: 64,
+        disk_path: std::env::temp_dir().join(format!("tent_itest_kv4_{}.pool", std::process::id())),
+        ..Default::default()
+    };
+    let cache = TieredKvCache::new(&e, &rt.meta, cfg.clone()).unwrap();
+    let working = e
+        .register_segment(tent::segment::Location::device(0, 0), rt.meta.kv_bytes)
+        .unwrap();
+    // Fill the working segment with a pattern and store 4 chunks under one home GPU.
+    let pattern: Vec<u8> = (0..rt.meta.kv_bytes as usize).map(|i| (i % 239) as u8).collect();
+    e.segment(working).unwrap().write_at(0, &pattern).unwrap();
+    let chunks: Vec<Vec<i32>> = (0..4).map(|i| vec![i as i32; rt.meta.t_pre]).collect();
+    let hashes = hash_chunks(&chunks);
+    for (k, h) in hashes.iter().enumerate() {
+        cache.store_block(&e, *h, 0, working, k).unwrap();
+    }
+    // GPU pool holds 1 block → 3 evictions to CPU shadows.
+    assert!(cache.stats.gpu_evictions.load(std::sync::atomic::Ordering::Relaxed) >= 3);
+    assert_eq!(cache.lookup_prefix(&hashes), 4);
+    // Wipe the working segment, refetch all 4, compare the strided planes.
+    let zero = vec![0u8; rt.meta.kv_bytes as usize];
+    e.segment(working).unwrap().write_at(0, &zero).unwrap();
+    cache.fetch_prefix(&e, &hashes, 4, working).unwrap();
+    let mut got = vec![0u8; rt.meta.kv_bytes as usize];
+    e.segment(working).unwrap().read_at(0, &mut got).unwrap();
+    // Positions belonging to the first 4 chunks must match the pattern.
+    let d = rt.meta.head_dim;
+    let plane_len = rt.meta.t_max * d * 4;
+    let chunk_len = rt.meta.t_pre * d * 4;
+    for plane in 0..(rt.meta.layers * 2 * rt.meta.heads) {
+        let base = plane * plane_len;
+        for k in 0..4 {
+            let s = base + k * chunk_len;
+            assert_eq!(&got[s..s + chunk_len], &pattern[s..s + chunk_len], "plane {plane} chunk {k}");
+        }
+    }
+    std::fs::remove_file(&cfg.disk_path).ok();
+}
+
+#[test]
+fn checkpoint_update_then_inference() {
+    let Some(mut rt) = artifacts() else { return };
+    let e = engine(PolicyKind::Tent);
+    let payload = std::fs::read(rt.artifacts_dir.join("params.bin")).unwrap();
+    let ce = CheckpointEngine::new(
+        Arc::clone(&e),
+        CheckpointConfig {
+            payload_bytes: payload.len() as u64,
+            ranks: 4,
+            chunk_bytes: 4 << 20,
+            node: 0,
+        },
+    )
+    .unwrap();
+    ce.stage_weights(&payload).unwrap();
+    let rep = ce.update().unwrap();
+    assert!(ce.verify().unwrap());
+    assert!(rep.seconds() > 0.0);
+    // Install rank-2's weights and run a forward pass.
+    let params = ce.rank_params_f32(2).unwrap();
+    rt.install_params(&params).unwrap();
+    let tokens: Vec<i32> = (0..rt.meta.t_pre as i32).collect();
+    let (tok, _) = rt.prefill(&tokens, rt.empty_kv().unwrap(), 0).unwrap();
+    assert!((0..rt.meta.vocab as i32).contains(&tok));
+}

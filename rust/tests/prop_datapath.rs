@@ -1,0 +1,180 @@
+//! Property tests on the datapath primitives: the MPSC ring against a
+//! reference queue, histogram quantiles against exact computation, and the
+//! hierarchical batch-counter ledger.
+
+use std::collections::VecDeque;
+use tent::engine::batch::{BatchTable, TransferState};
+use tent::util::hist::Histogram;
+use tent::util::prng::Pcg64;
+use tent::util::ring::ring;
+
+const CASES: usize = 100;
+
+#[test]
+fn prop_ring_matches_reference_queue() {
+    let mut rng = Pcg64::new(0x414e, 0);
+    for case in 0..CASES {
+        let cap = 1usize << rng.gen_between(1, 8);
+        let (p, mut c) = ring::<u64>(cap);
+        let mut model: VecDeque<u64> = VecDeque::new();
+        let real_cap = cap.next_power_of_two().max(2);
+        let mut next = 0u64;
+        for _ in 0..500 {
+            if rng.gen_bool(0.55) {
+                // push
+                match p.push(next) {
+                    Ok(()) => {
+                        assert!(model.len() < real_cap, "push succeeded on full (case {case})");
+                        model.push_back(next);
+                        next += 1;
+                    }
+                    Err(v) => {
+                        assert_eq!(v, next);
+                        assert_eq!(model.len(), real_cap, "push failed but not full");
+                    }
+                }
+            } else {
+                assert_eq!(c.pop(), model.pop_front(), "case {case}");
+            }
+            assert_eq!(p.backlog() as usize, model.len());
+        }
+        // Drain.
+        while let Some(want) = model.pop_front() {
+            assert_eq!(c.pop(), Some(want));
+        }
+        assert_eq!(c.pop(), None);
+    }
+}
+
+#[test]
+fn prop_ring_mpsc_no_loss_no_dup_random_producers() {
+    let mut rng = Pcg64::new(0x414f, 0);
+    for _ in 0..8 {
+        let producers = rng.gen_between(2, 9) as usize;
+        let per = rng.gen_between(500, 3_000);
+        let (p, mut c) = ring::<u64>(256);
+        let handles: Vec<_> = (0..producers)
+            .map(|t| {
+                let p = p.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        p.push_blocking((t as u64) << 32 | i);
+                    }
+                })
+            })
+            .collect();
+        let total = producers as u64 * per;
+        let mut seen = std::collections::HashSet::with_capacity(total as usize);
+        let mut per_producer_last: Vec<i64> = vec![-1; producers];
+        while seen.len() < total as usize {
+            if let Some(v) = c.pop() {
+                assert!(seen.insert(v), "duplicate {v:#x}");
+                // FIFO per producer.
+                let (t, i) = ((v >> 32) as usize, (v & 0xffff_ffff) as i64);
+                assert!(i > per_producer_last[t], "per-producer order violated");
+                per_producer_last[t] = i;
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}
+
+#[test]
+fn prop_histogram_quantiles_close_to_exact() {
+    let mut rng = Pcg64::new(0x4157, 0);
+    for _ in 0..20 {
+        let n = rng.gen_between(100, 20_000) as usize;
+        let h = Histogram::new();
+        let mut xs: Vec<u64> = Vec::with_capacity(n);
+        for _ in 0..n {
+            // Log-uniform values 1ns .. ~100s.
+            let v = (10f64.powf(rng.next_f64() * 11.0)) as u64 + 1;
+            h.record(v);
+            xs.push(v);
+        }
+        xs.sort_unstable();
+        for q in [0.5, 0.9, 0.99] {
+            let exact = xs[((q * n as f64).ceil() as usize - 1).min(n - 1)];
+            let got = h.quantile(q);
+            // Bucketed value within ~4% relative error of the exact one.
+            let rel = (got as f64 - exact as f64).abs() / exact as f64;
+            assert!(rel < 0.05, "q={q} got={got} exact={exact} rel={rel}");
+        }
+        assert_eq!(h.count(), n as u64);
+        assert_eq!(h.max(), *xs.last().unwrap());
+        assert_eq!(h.min(), xs[0]);
+    }
+}
+
+#[test]
+fn prop_batch_ledger_always_balances() {
+    // Random batches × transfers × slices, completed in random interleaved
+    // order (with random failures): every batch must end done, with failed
+    // counts equal to the number of failed transfers.
+    let mut rng = Pcg64::new(0x4158, 0);
+    for _ in 0..CASES {
+        let table = BatchTable::new();
+        let b = table.get(table.allocate()).unwrap();
+        let transfers = rng.gen_between(1, 12) as usize;
+        b.add_transfers(transfers as u64);
+        let mut pending: Vec<(std::sync::Arc<TransferState>, u64, bool)> = (0..transfers)
+            .map(|_| {
+                let slices = rng.gen_between(1, 40);
+                let fail = rng.gen_bool(0.25);
+                (TransferState::new(std::sync::Arc::clone(&b), slices), slices, fail)
+            })
+            .collect();
+        let expected_failures = pending.iter().filter(|(_, _, f)| *f).count() as u64;
+        // Interleave completions randomly.
+        while !pending.is_empty() {
+            let i = rng.gen_range(pending.len() as u64) as usize;
+            let (ts, remaining, fail) = &mut pending[i];
+            if *fail && *remaining == 1 {
+                ts.mark_failed(); // fail on the last slice
+            }
+            ts.complete_slice();
+            *remaining -= 1;
+            if *remaining == 0 {
+                pending.swap_remove(i);
+            }
+        }
+        let st = b.status();
+        assert!(st.done());
+        assert_eq!(st.failed_transfers, expected_failures);
+        assert_eq!(st.total_transfers, transfers as u64);
+    }
+}
+
+#[test]
+fn prop_ring_drop_cleans_everything() {
+    // No leaks/double-drops under random fill levels (instrumented drops).
+    use std::sync::atomic::{AtomicI64, Ordering};
+    static LIVE: AtomicI64 = AtomicI64::new(0);
+    struct Token;
+    impl Token {
+        fn new() -> Token {
+            LIVE.fetch_add(1, Ordering::SeqCst);
+            Token
+        }
+    }
+    impl Drop for Token {
+        fn drop(&mut self) {
+            LIVE.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+    let mut rng = Pcg64::new(0x4159, 0);
+    for _ in 0..CASES {
+        {
+            let (p, mut c) = ring::<Token>(16);
+            for _ in 0..rng.gen_between(0, 16) {
+                let _ = p.push(Token::new());
+            }
+            for _ in 0..rng.gen_between(0, 20) {
+                drop(c.pop());
+            }
+        }
+        assert_eq!(LIVE.load(Ordering::SeqCst), 0, "tokens leaked or double-dropped");
+    }
+}

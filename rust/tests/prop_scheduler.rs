@@ -1,0 +1,276 @@
+//! Property-based tests on Algorithm 1 and slice decomposition, driven by
+//! the crate's own PRNG (proptest is not in the offline vendor set — the
+//! generators below randomize shapes/loads/tiers across many cases).
+
+use std::sync::Arc;
+use tent::cluster::Cluster;
+use tent::engine::plan::build_plan;
+use tent::engine::sched::{SchedCtx, SchedParams, SchedulerState};
+use tent::engine::slice::decompose;
+use tent::engine::{EngineConfig, TentEngine};
+use tent::policy::{make_policy, PolicyKind};
+use tent::segment::Location;
+use tent::topology::Tier;
+use tent::util::prng::Pcg64;
+
+const CASES: usize = 200;
+
+// ---------- slice decomposition ----------
+
+#[test]
+fn prop_decompose_partitions_exactly() {
+    let mut rng = Pcg64::new(0xD1CE, 0);
+    for _ in 0..CASES {
+        let len = rng.gen_between(1, 256 << 20);
+        let min_slice = 1u64 << rng.gen_between(10, 21); // 1K..1M
+        let max_slices = rng.gen_between(1, 1024) as usize;
+        let spans = decompose(len, min_slice, max_slices);
+        assert!(spans.len() <= max_slices);
+        let mut off = 0;
+        for &(o, l) in &spans {
+            assert_eq!(o, off, "contiguous");
+            assert!(l > 0);
+            off += l;
+        }
+        assert_eq!(off, len, "complete partition");
+        // All but the tail are at least min_slice (unless capped).
+        if spans.len() > 1 {
+            for &(_, l) in &spans[..spans.len() - 1] {
+                assert!(l >= min_slice);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_decompose_slice_sizes_uniform_except_tail() {
+    let mut rng = Pcg64::new(0xD1CF, 0);
+    for _ in 0..CASES {
+        let len = rng.gen_between(1 << 20, 64 << 20);
+        let spans = decompose(len, 64 << 10, 512);
+        if spans.len() > 2 {
+            let first = spans[0].1;
+            for &(_, l) in &spans[..spans.len() - 1] {
+                assert_eq!(l, first, "uniform slice size before tail");
+            }
+        }
+    }
+}
+
+// ---------- Algorithm 1 invariants ----------
+
+struct Fixture {
+    cluster: Cluster,
+    sched: SchedulerState,
+    plan: tent::engine::plan::TransferPlan,
+}
+
+fn fixture(gamma: f64) -> Fixture {
+    let cluster = Cluster::from_profile("h800_hgx").unwrap();
+    let mut params = SchedParams::default();
+    params.gamma = gamma;
+    let sched = SchedulerState::new(cluster.topo.rails.len(), params);
+    let a = cluster
+        .segments
+        .register_memory(Location::device(0, 0), 64 << 20)
+        .unwrap();
+    let b = cluster
+        .segments
+        .register_memory(Location::device(1, 0), 64 << 20)
+        .unwrap();
+    let plan = build_plan(&cluster.transports, &cluster.topo, &a, &b, 64 << 20).unwrap();
+    Fixture {
+        cluster,
+        sched,
+        plan,
+    }
+}
+
+#[test]
+fn prop_pick_always_within_viable_set() {
+    let mut rng = Pcg64::new(0xA160, 0);
+    let f = fixture(0.05);
+    let policy = make_policy(PolicyKind::Tent);
+    let ctx = SchedCtx {
+        sched: &f.sched,
+        fabric: &f.cluster.fabric,
+        topo: &f.cluster.topo,
+    };
+    for _ in 0..CASES {
+        // Random viable subset + random queue state.
+        let n = f.plan.candidates.len();
+        let viable: Vec<usize> = (0..n).filter(|_| rng.gen_bool(0.6)).collect();
+        for c in &f.plan.candidates {
+            f.sched.local_queued[c.rail.0 as usize]
+                .store(rng.gen_range(64 << 20), std::sync::atomic::Ordering::Relaxed);
+        }
+        let len = rng.gen_between(4 << 10, 4 << 20);
+        match policy.pick(&f.plan, &viable, len, &ctx) {
+            Some(i) => assert!(viable.contains(&i), "picked {i} not in viable"),
+            None => assert!(viable.is_empty()),
+        }
+    }
+}
+
+#[test]
+fn prop_tolerance_window_respected() {
+    let mut rng = Pcg64::new(0xA161, 0);
+    for _ in 0..50 {
+        let gamma = rng.next_f64() * 0.3;
+        let f = fixture(gamma);
+        let policy = make_policy(PolicyKind::Tent);
+        let ctx = SchedCtx {
+            sched: &f.sched,
+            fabric: &f.cluster.fabric,
+            topo: &f.cluster.topo,
+        };
+        for c in &f.plan.candidates {
+            f.sched.local_queued[c.rail.0 as usize]
+                .store(rng.gen_range(32 << 20), std::sync::atomic::Ordering::Relaxed);
+        }
+        let len = 1 << 20;
+        let viable: Vec<usize> = (0..f.plan.candidates.len()).collect();
+        // Compute scores the same way the policy does.
+        let score = |i: usize| {
+            let c = &f.plan.candidates[i];
+            let (t, _) = f.sched.predict_ns(&f.cluster.fabric, c.rail, len, c.bw);
+            f.sched.penalty(c.tier) * t
+        };
+        let s_min = viable
+            .iter()
+            .map(|&i| score(i))
+            .fold(f64::INFINITY, f64::min);
+        let picked = policy.pick(&f.plan, &viable, len, &ctx).unwrap();
+        if s_min.is_finite() {
+            assert!(
+                score(picked) <= (1.0 + gamma) * s_min * 1.0001,
+                "window violated: s={} s_min={s_min} gamma={gamma}",
+                score(picked)
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_excluded_rails_never_picked_via_dispatch_filter() {
+    // The engine filters excluded rails out of `viable`; combined with the
+    // previous property, an excluded rail can never be chosen. Model that
+    // filter and assert none of the picks land on excluded rails.
+    let mut rng = Pcg64::new(0xA162, 0);
+    let f = fixture(0.05);
+    let policy = make_policy(PolicyKind::Tent);
+    let ctx = SchedCtx {
+        sched: &f.sched,
+        fabric: &f.cluster.fabric,
+        topo: &f.cluster.topo,
+    };
+    for _ in 0..CASES {
+        for c in &f.plan.candidates {
+            if rng.gen_bool(0.3) {
+                f.sched.exclude(c.rail);
+            } else {
+                f.sched.readmit(c.rail);
+            }
+        }
+        let viable: Vec<usize> = (0..f.plan.candidates.len())
+            .filter(|&i| !f.sched.is_excluded(f.plan.candidates[i].rail))
+            .collect();
+        if let Some(i) = policy.pick(&f.plan, &viable, 64 << 10, &ctx) {
+            assert!(!f.sched.is_excluded(f.plan.candidates[i].rail));
+        }
+    }
+}
+
+#[test]
+fn prop_idle_pick_minimizes_penalized_cost() {
+    // With zero queues everywhere, the pick must be a tier-1 candidate of
+    // maximal bandwidth class (NVLink absent cross-node → tier-1 RDMA).
+    let f = fixture(0.0);
+    let policy = make_policy(PolicyKind::Tent);
+    let ctx = SchedCtx {
+        sched: &f.sched,
+        fabric: &f.cluster.fabric,
+        topo: &f.cluster.topo,
+    };
+    let viable: Vec<usize> = (0..f.plan.candidates.len()).collect();
+    for _ in 0..64 {
+        let i = policy.pick(&f.plan, &viable, 1 << 20, &ctx).unwrap();
+        assert_eq!(f.plan.candidates[i].tier, Tier::T1);
+    }
+}
+
+fn host_fixture(gamma: f64) -> Fixture {
+    let cluster = Cluster::from_profile("h800_hgx").unwrap();
+    let mut params = SchedParams::default();
+    params.gamma = gamma;
+    let sched = SchedulerState::new(cluster.topo.rails.len(), params);
+    let a = cluster
+        .segments
+        .register_memory(Location::host(0, 0), 64 << 20)
+        .unwrap();
+    let b = cluster
+        .segments
+        .register_memory(Location::host(1, 0), 64 << 20)
+        .unwrap();
+    let plan = build_plan(&cluster.transports, &cluster.topo, &a, &b, 64 << 20).unwrap();
+    Fixture {
+        cluster,
+        sched,
+        plan,
+    }
+}
+
+#[test]
+fn prop_loaded_rail_eventually_avoided() {
+    let mut rng = Pcg64::new(0xA163, 0);
+    // Host plan: 4 tier-1 NICs, so there is always an alternative.
+    let f = host_fixture(0.05);
+    let policy = make_policy(PolicyKind::Tent);
+    let ctx = SchedCtx {
+        sched: &f.sched,
+        fabric: &f.cluster.fabric,
+        topo: &f.cluster.topo,
+    };
+    let viable: Vec<usize> = (0..f.plan.candidates.len())
+        .filter(|&i| f.plan.candidates[i].tier == Tier::T1)
+        .collect();
+    for _ in 0..40 {
+        // Load one random tier-1 rail far beyond the others.
+        let hot = *rng.choose(&viable);
+        for &i in &viable {
+            let c = &f.plan.candidates[i];
+            f.sched.local_queued[c.rail.0 as usize].store(
+                if i == hot { 512 << 20 } else { 0 },
+                std::sync::atomic::Ordering::Relaxed,
+            );
+        }
+        for _ in 0..8 {
+            let picked = policy.pick(&f.plan, &viable, 1 << 20, &ctx).unwrap();
+            assert_ne!(picked, hot, "saturated rail must lose the pick");
+        }
+    }
+}
+
+#[test]
+fn prop_queue_accounting_balances_under_load() {
+    // Ledger invariant: after any mix of successful transfers, every rail's
+    // queued-bytes counter returns to zero.
+    let mut rng = Pcg64::new(0xA164, 0);
+    let cluster = Cluster::from_profile("h800_hgx").unwrap();
+    let engine = Arc::new(TentEngine::new(&cluster, EngineConfig::default()).unwrap());
+    let len = 4u64 << 20;
+    let a = engine.register_segment(Location::host(0, 0), len).unwrap();
+    let b = engine.register_segment(Location::host(1, 0), len).unwrap();
+    for _ in 0..5 {
+        let sz = rng.gen_between(64 << 10, len);
+        engine
+            .transfer_sync(
+                tent::engine::TransferReq::write(a, 0, b, 0, sz),
+                std::time::Duration::from_secs(60),
+            )
+            .unwrap();
+    }
+    for snap in engine.rail_snapshots() {
+        assert_eq!(snap.queued_bytes, 0, "rail {} leaked queue", snap.name);
+    }
+}
