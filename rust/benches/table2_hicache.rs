@@ -36,7 +36,7 @@ fn main() {
     println!("== Table 2: multi-turn HiCache serving (Baseline / Mooncake TE / TENT) ==");
     let dir = tent::runtime::default_artifacts_dir();
     if !Runtime::artifacts_available(&dir) {
-        println!("SKIPPED: artifacts not built (run `make artifacts`)");
+        println!("SKIPPED: model runtime unavailable (AOT artifacts + real PJRT backend required; this offline build stubs PJRT)");
         return;
     }
     let rt = Runtime::load(&dir).unwrap();

@@ -10,6 +10,7 @@
 use std::sync::Arc;
 use tent::cluster::Cluster;
 use tent::engine::{EngineConfig, TentEngine};
+use tent::log;
 use tent::policy::PolicyKind;
 use tent::runtime::Runtime;
 use tent::serving::{CheckpointConfig, CheckpointEngine};
@@ -36,7 +37,11 @@ fn main() -> tent::Result<()> {
     tent::util::logging::init(log::Level::Warn);
     let dir = tent::runtime::default_artifacts_dir();
     if !Runtime::artifacts_available(&dir) {
-        eprintln!("artifacts not found — run `make artifacts` first");
+        eprintln!(
+            "model runtime unavailable: needs AOT artifacts in {} AND a real PJRT \
+             backend (this offline build stubs PJRT — see README \"Model runtime status\")",
+            dir.display()
+        );
         std::process::exit(2);
     }
     let mut rt = Runtime::load(&dir)?;

@@ -8,6 +8,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 use tent::cluster::Cluster;
 use tent::engine::{EngineConfig, TentEngine, TransferReq};
+use tent::log;
 use tent::segment::Location;
 use tent::topology::{FabricKind, NodeId};
 

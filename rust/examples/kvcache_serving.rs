@@ -15,6 +15,7 @@
 use std::sync::Arc;
 use tent::cluster::Cluster;
 use tent::engine::{EngineConfig, TentEngine};
+use tent::log;
 use tent::policy::PolicyKind;
 use tent::runtime::Runtime;
 use tent::serving::{build_conversations, run_serving, ServeConfig, ServeMode, ServeReport};
@@ -45,7 +46,11 @@ fn main() -> tent::Result<()> {
     let args = Args::from_env();
     let dir = tent::runtime::default_artifacts_dir();
     if !Runtime::artifacts_available(&dir) {
-        eprintln!("artifacts not found — run `make artifacts` first");
+        eprintln!(
+            "model runtime unavailable: needs AOT artifacts in {} AND a real PJRT \
+             backend (this offline build stubs PJRT — see README \"Model runtime status\")",
+            dir.display()
+        );
         std::process::exit(2);
     }
     let rt = Runtime::load(&dir)?;

@@ -10,6 +10,7 @@ use std::sync::Arc;
 use std::time::Duration;
 use tent::cluster::Cluster;
 use tent::engine::{EngineConfig, TentEngine, TransferReq};
+use tent::log;
 use tent::segment::Location;
 
 fn main() -> tent::Result<()> {

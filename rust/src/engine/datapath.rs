@@ -11,6 +11,7 @@ use super::core::EngineCore;
 use super::slice::SliceDesc;
 use super::telemetry::EngineStats;
 use crate::fabric::RailHealth;
+use crate::log;
 use crate::topology::RailId;
 use crate::transport::SliceIo;
 use crate::util::clock;

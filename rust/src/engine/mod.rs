@@ -35,9 +35,12 @@ pub mod slice;
 pub mod telemetry;
 
 pub use batch::{BatchId, BatchStatus};
-pub use core::{EngineConfig, EngineCore};
+// `self::` disambiguates the submodule from the built-in `core` crate in
+// the extern prelude (bare `use core::…` is ambiguous here).
+pub use self::core::{EngineConfig, EngineCore};
 
 use crate::cluster::Cluster;
+use crate::log;
 use crate::segment::{Location, Segment, SegmentId};
 use crate::topology::Topology;
 use crate::util::clock;

@@ -17,6 +17,7 @@ use super::core::EngineCore;
 use super::slice::SliceDesc;
 use super::telemetry::EngineStats;
 use crate::fabric::RailHealth;
+use crate::log;
 use crate::util::clock;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;

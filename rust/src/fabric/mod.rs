@@ -14,6 +14,7 @@
 
 pub mod trace;
 
+use crate::log;
 use crate::topology::{RailId, Topology};
 use crate::util::ewma::AtomicF64;
 use crate::util::hist::Histogram;

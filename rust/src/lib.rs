@@ -32,9 +32,12 @@
 //!
 //! ## Quickstart
 //!
-//! ```no_run
+//! This example runs as a doctest — `cargo test --doc` actually moves the
+//! megabyte across the simulated 8-rail fabric:
+//!
+//! ```
 //! use tent::cluster::Cluster;
-//! use tent::engine::{TentEngine, EngineConfig, TransferOp, TransferReq};
+//! use tent::engine::{TentEngine, EngineConfig, TransferReq};
 //! use tent::segment::Location;
 //!
 //! let cluster = Cluster::from_profile("h800_hgx").unwrap();
@@ -43,9 +46,12 @@
 //! let dst = engine.register_segment(Location::host(1, 0), 1 << 20).unwrap();
 //! let batch = engine.allocate_batch();
 //! engine.submit(batch, &[TransferReq::write(src, 0, dst, 0, 1 << 20)]).unwrap();
-//! engine.wait(batch, std::time::Duration::from_secs(5)).unwrap();
+//! // `wait` errors if any transfer in the batch failed — no status-checking
+//! // needed after a successful return.
+//! engine.wait(batch, std::time::Duration::from_secs(30)).unwrap();
 //! ```
 
+pub mod log;
 pub mod util;
 pub mod topology;
 pub mod segment;
@@ -65,36 +71,61 @@ pub use engine::{EngineConfig, TentEngine};
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Library-wide error type.
-#[derive(Debug, thiserror::Error)]
+///
+/// Display/From are hand-implemented (`thiserror` is not in the offline
+/// vendor set); the messages match the originals one-for-one.
+#[derive(Debug)]
 pub enum Error {
     /// No device is eligible to carry a slice (Algorithm 1, line 2).
-    #[error("no eligible device for transfer: {0}")]
     NoEligibleDevice(String),
     /// A segment id was not found in the segment manager.
-    #[error("unknown segment {0}")]
     UnknownSegment(u64),
     /// Out-of-bounds access into a segment.
-    #[error("segment range out of bounds: {0}")]
     OutOfBounds(String),
     /// A batch id was not found or already reaped.
-    #[error("unknown batch {0}")]
     UnknownBatch(u64),
     /// The transfer failed on all candidate paths after retries.
-    #[error("transfer failed permanently: {0}")]
     TransferFailed(String),
     /// Waiting for a batch exceeded the caller's deadline.
-    #[error("timed out waiting for batch {0}")]
     Timeout(u64),
     /// Engine is shutting down.
-    #[error("engine shut down")]
     Shutdown,
     /// Configuration / profile errors.
-    #[error("config error: {0}")]
     Config(String),
     /// I/O error (file backend, TCP backend, artifact loading).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
     /// PJRT runtime error.
-    #[error("runtime error: {0}")]
     Runtime(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::NoEligibleDevice(s) => write!(f, "no eligible device for transfer: {s}"),
+            Error::UnknownSegment(id) => write!(f, "unknown segment {id}"),
+            Error::OutOfBounds(s) => write!(f, "segment range out of bounds: {s}"),
+            Error::UnknownBatch(id) => write!(f, "unknown batch {id}"),
+            Error::TransferFailed(s) => write!(f, "transfer failed permanently: {s}"),
+            Error::Timeout(id) => write!(f, "timed out waiting for batch {id}"),
+            Error::Shutdown => write!(f, "engine shut down"),
+            Error::Config(s) => write!(f, "config error: {s}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Runtime(s) => write!(f, "runtime error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e)
+    }
 }

@@ -16,6 +16,7 @@ use std::time::Duration;
 
 use tent::bench::{self, TeBenchConfig, ThreadPair};
 use tent::cluster::Cluster;
+use tent::log;
 use tent::engine::{EngineConfig, TentEngine};
 use tent::policy::PolicyKind;
 use tent::segment::Location;
@@ -161,9 +162,11 @@ fn cmd_bench(args: &Args) -> tent::Result<()> {
 fn cmd_serve(args: &Args) -> tent::Result<()> {
     let dir = tent::runtime::default_artifacts_dir();
     if !tent::runtime::Runtime::artifacts_available(&dir) {
-        return Err(tent::Error::Config(
-            "artifacts not found — run `make artifacts` first".into(),
-        ));
+        return Err(tent::Error::Config(format!(
+            "model runtime unavailable: needs AOT artifacts in {} AND a real PJRT \
+             backend (this offline build stubs PJRT — see README)",
+            dir.display()
+        )));
     }
     let (_cluster, engine) = make_engine(args)?;
     let rt = tent::runtime::Runtime::load(&dir)?;

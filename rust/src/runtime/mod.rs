@@ -4,7 +4,15 @@
 //! Pattern (see /opt/xla-example/load_hlo): HLO **text** →
 //! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile`,
 //! compiled once per model phase and reused for every request.
+//!
+//! This build ships an offline stand-in for the `xla` binding (see
+//! [`xla`]): literal data ops work, compilation/execution report PJRT as
+//! unavailable, and [`Runtime::artifacts_available`] folds that in so the
+//! serving tests, benches, and examples skip instead of failing.
 
+pub mod xla;
+
+use crate::log;
 use crate::util::json::Json;
 use crate::{Error, Result};
 use std::path::{Path, PathBuf};
@@ -126,12 +134,15 @@ impl Runtime {
         })
     }
 
-    /// Artifacts present? (tests/examples skip gracefully when not built).
+    /// Can `Runtime::load` succeed? Requires both the AOT artifacts on disk
+    /// *and* a working PJRT backend (absent in the offline shim build) —
+    /// tests/examples skip gracefully when either is missing.
     pub fn artifacts_available(dir: impl AsRef<Path>) -> bool {
         let d = dir.as_ref();
-        ["prefill.hlo.txt", "decode.hlo.txt", "params.bin", "model_meta.json"]
-            .iter()
-            .all(|f| d.join(f).exists())
+        xla::is_available()
+            && ["prefill.hlo.txt", "decode.hlo.txt", "params.bin", "model_meta.json"]
+                .iter()
+                .all(|f| d.join(f).exists())
     }
 
     fn load_params(path: &Path, count: usize) -> Result<xla::Literal> {
@@ -271,8 +282,10 @@ mod tests {
 
     #[test]
     fn meta_parses_when_artifacts_exist() {
-        if !Runtime::artifacts_available(dir()) {
-            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        // Needs only the on-disk artifacts, not PJRT — gate on the file, so
+        // this coverage fires as soon as `python -m compile.aot` has run.
+        if !dir().join("model_meta.json").exists() {
+            eprintln!("skipping: model_meta.json not built (run `python -m compile.aot`)");
             return;
         }
         let m = ModelMeta::load(&dir()).unwrap();
@@ -283,7 +296,7 @@ mod tests {
     #[test]
     fn prefill_and_decode_execute() {
         if !Runtime::artifacts_available(dir()) {
-            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            eprintln!("skipping: model runtime unavailable (AOT artifacts + real PJRT backend required)");
             return;
         }
         let rt = Runtime::load(dir()).unwrap();
@@ -298,7 +311,7 @@ mod tests {
     #[test]
     fn determinism_across_runs() {
         if !Runtime::artifacts_available(dir()) {
-            eprintln!("skipping: artifacts not built");
+            eprintln!("skipping: model runtime unavailable (AOT artifacts + real PJRT backend required)");
             return;
         }
         let rt = Runtime::load(dir()).unwrap();
@@ -311,7 +324,7 @@ mod tests {
     #[test]
     fn kv_roundtrip_preserves_prediction() {
         if !Runtime::artifacts_available(dir()) {
-            eprintln!("skipping: artifacts not built");
+            eprintln!("skipping: model runtime unavailable (AOT artifacts + real PJRT backend required)");
             return;
         }
         let rt = Runtime::load(dir()).unwrap();
@@ -331,7 +344,7 @@ mod tests {
     #[test]
     fn install_params_validates_length() {
         if !Runtime::artifacts_available(dir()) {
-            eprintln!("skipping: artifacts not built");
+            eprintln!("skipping: model runtime unavailable (AOT artifacts + real PJRT backend required)");
             return;
         }
         let mut rt = Runtime::load(dir()).unwrap();

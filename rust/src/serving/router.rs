@@ -12,6 +12,7 @@
 use super::client::Conversation;
 use super::kvcache::{hash_chunks, KvCacheConfig, TieredKvCache};
 use crate::engine::TentEngine;
+use crate::log;
 use crate::runtime::Runtime;
 use crate::segment::Location;
 use crate::util::clock;

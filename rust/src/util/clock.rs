@@ -3,15 +3,15 @@
 //! All engine-internal timestamps are `u64` nanoseconds since an arbitrary
 //! process-local epoch, so they fit in atomics and subtract cheaply.
 
-use once_cell::sync::Lazy;
+use std::sync::OnceLock;
 use std::time::{Duration, Instant};
 
-static EPOCH: Lazy<Instant> = Lazy::new(Instant::now);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
 
 /// Nanoseconds since process epoch (monotonic).
 #[inline]
 pub fn now_ns() -> u64 {
-    EPOCH.elapsed().as_nanos() as u64
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
 }
 
 /// Sleep until the given epoch-relative deadline with a short yield tail.

@@ -1,42 +1,25 @@
-//! Minimal `log` facade backend writing to stderr with relative timestamps.
+//! Stderr logging backend with relative timestamps.
+//!
+//! The macro facade lives in [`crate::log`] (the offline stand-in for the
+//! `log` crate); this module keeps the `util::logging::init` entry point the
+//! binaries and examples call.
 
-use log::{Level, LevelFilter, Metadata, Record};
+pub use crate::log::Level;
 
-struct StderrLogger {
-    level: Level,
-}
-
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= self.level
-    }
-    fn log(&self, record: &Record) {
-        if self.enabled(record.metadata()) {
-            let t = crate::util::clock::now_ns() as f64 / 1e9;
-            eprintln!(
-                "[{t:10.4}s {:5} {}] {}",
-                record.level(),
-                record.target().split("::").last().unwrap_or(""),
-                record.args()
-            );
-        }
-    }
-    fn flush(&self) {}
-}
-
-/// Install the logger once. `TENT_LOG` env var overrides: error|warn|info|debug|trace.
+/// Install the logger. `TENT_LOG` env var overrides the level:
+/// error|warn|info|debug|trace. Idempotent; the last call wins.
 pub fn init(default_level: Level) {
     let level = std::env::var("TENT_LOG")
         .ok()
         .and_then(|s| s.parse::<Level>().ok())
         .unwrap_or(default_level);
-    let _ = log::set_boxed_logger(Box::new(StderrLogger { level }));
-    log::set_max_level(LevelFilter::from(level.to_level_filter()));
+    crate::log::set_max_level(level);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::log;
 
     #[test]
     fn init_is_idempotent() {

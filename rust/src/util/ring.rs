@@ -7,11 +7,39 @@
 //! number; the consumer reads sequenced slots without any atomics contention
 //! with other consumers (there are none).
 
-use crossbeam_utils::CachePadded;
 use std::cell::UnsafeCell;
 use std::mem::MaybeUninit;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
+
+/// Aligns a value to 128 bytes so the producer cursor, consumer cursor, and
+/// backlog counter land on distinct cache lines (no false sharing between
+/// submission threads and the rail worker). Stand-in for crossbeam's
+/// `CachePadded`; 128 covers the spatial prefetcher pair on x86 and the
+/// 128-byte lines on newer aarch64.
+#[repr(align(128))]
+pub struct CachePadded<T>(T);
+
+impl<T> CachePadded<T> {
+    pub const fn new(t: T) -> Self {
+        CachePadded(t)
+    }
+}
+
+impl<T> std::ops::Deref for CachePadded<T> {
+    type Target = T;
+    #[inline]
+    fn deref(&self) -> &T {
+        &self.0
+    }
+}
+
+impl<T> std::ops::DerefMut for CachePadded<T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.0
+    }
+}
 
 struct Slot<T> {
     seq: AtomicUsize,

@@ -16,7 +16,7 @@ fn artifacts() -> Option<Runtime> {
     if Runtime::artifacts_available(&dir) {
         Some(Runtime::load(&dir).unwrap())
     } else {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        eprintln!("skipping: model runtime unavailable (AOT artifacts + real PJRT backend required)");
         None
     }
 }

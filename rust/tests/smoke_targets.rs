@@ -1,0 +1,47 @@
+//! Target-rot guard: every example and bench target must keep compiling.
+//!
+//! `cargo test` only builds the lib, bin, tests, and examples — bench
+//! targets (declared `test = false` so their long workloads stay out of the
+//! test run) would otherwise rot silently. This test shells back into cargo
+//! and builds all of them. CI runs the same command as a dedicated step;
+//! this test makes the guarantee hold for plain local `cargo test` too.
+
+use std::process::Command;
+
+#[test]
+fn examples_and_benches_compile() {
+    // Opt-out for runs where a dedicated `cargo build --examples --benches`
+    // step already covers this (CI sets it on the tier-1 job to avoid
+    // building everything twice).
+    if std::env::var_os("TENT_SKIP_TARGET_SMOKE").is_some() {
+        eprintln!("skipping: TENT_SKIP_TARGET_SMOKE set (covered by a dedicated build step)");
+        return;
+    }
+    // The cargo that spawned this test run; skip if invoked outside cargo
+    // (e.g. running the test binary directly).
+    let Some(cargo) = std::env::var_os("CARGO") else {
+        eprintln!("skipping: CARGO not set (test binary run outside cargo)");
+        return;
+    };
+    let manifest = concat!(env!("CARGO_MANIFEST_DIR"), "/Cargo.toml");
+    // Build into a dedicated target dir: never contends with an outer
+    // cargo's directory lock, never clobbers its artifacts.
+    let target = concat!(env!("CARGO_MANIFEST_DIR"), "/target/smoke-targets");
+    let out = Command::new(cargo)
+        .args([
+            "build",
+            "--examples",
+            "--benches",
+            "--manifest-path",
+            manifest,
+            "--target-dir",
+            target,
+        ])
+        .output()
+        .expect("failed to spawn cargo");
+    assert!(
+        out.status.success(),
+        "`cargo build --examples --benches` failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
