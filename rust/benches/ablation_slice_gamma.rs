@@ -19,8 +19,10 @@ use tent::util::{fmt_bw, fmt_bytes, fmt_ns};
 
 fn run(min_slice: u64, gamma: f64) -> (f64, u64) {
     let cluster = Cluster::from_profile("h800_hgx").unwrap();
-    let mut cfg = EngineConfig::default();
-    cfg.min_slice = min_slice;
+    let mut cfg = EngineConfig {
+        min_slice,
+        ..Default::default()
+    };
     cfg.sched.gamma = gamma;
     let engine = Arc::new(TentEngine::new(&cluster, cfg).unwrap());
     let seg_len = 32u64 << 20;

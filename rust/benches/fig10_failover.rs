@@ -19,8 +19,10 @@ use tent::util::clock;
 fn main() {
     println!("== Figure 10: throughput timeline under rail failure/recovery ==");
     let cluster = Cluster::from_profile("h800_hgx").unwrap();
-    let mut cfg = EngineConfig::default();
-    cfg.probe_interval = Duration::from_millis(10);
+    let cfg = EngineConfig {
+        probe_interval: Duration::from_millis(10),
+        ..Default::default()
+    };
     let engine = Arc::new(TentEngine::new(&cluster, cfg).unwrap());
 
     let len = 64u64 << 20;

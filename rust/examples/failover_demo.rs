@@ -15,8 +15,10 @@ use tent::topology::{FabricKind, NodeId};
 fn main() -> tent::Result<()> {
     tent::util::logging::init(log::Level::Info);
     let cluster = Cluster::from_profile("h800_hgx")?;
-    let mut cfg = EngineConfig::default();
-    cfg.probe_interval = Duration::from_millis(10); // Fig 10: fast re-admission
+    let cfg = EngineConfig {
+        probe_interval: Duration::from_millis(10), // Fig 10: fast re-admission
+        ..Default::default()
+    };
     let engine = Arc::new(TentEngine::new(&cluster, cfg)?);
 
     let len = 64u64 << 20;

@@ -4,6 +4,7 @@
 use super::datapath::Datapath;
 use super::sched::{SchedCtx, SchedulerState};
 use super::telemetry::EngineStats;
+use super::TransferClass;
 use crate::fabric::Fabric;
 use crate::policy::SlicePolicy;
 use crate::segment::SegmentManager;
@@ -31,8 +32,21 @@ pub struct EngineConfig {
     pub probe_interval: Duration,
     /// Per-slice retry budget before the transfer is failed.
     pub max_retries: u32,
-    /// Capacity of each rail's MPSC ring.
+    /// Capacity of each rail's MPSC ring (each QoS lane gets its own ring
+    /// of this capacity).
     pub ring_capacity: usize,
+    /// Dual-lane QoS datapath: per rail, a latency lane drained ahead of
+    /// the bulk lane. `false` falls back to the single shared ring (the
+    /// ablation baseline for `benches/qos_multiplex.rs`) and also disables
+    /// per-class queue isolation in the scheduler.
+    pub qos_lanes: bool,
+    /// Max bulk-lane slices a worker executes per wakeup while
+    /// latency-class work is pending (anti-starvation weight; clamped ≥ 1).
+    pub bulk_quantum: usize,
+    /// Cap on the worker idle-backoff sleep. Workers are unparked on every
+    /// enqueue, so this is only a safety net — but a large value directly
+    /// inflates latency-class tails on sparse traffic if a wakeup is lost.
+    pub idle_backoff_max: Duration,
     /// Telemetry exclusion threshold: exclude a rail whose β1 exceeds this
     /// multiple of the fleet median (∞ disables).
     pub degrade_exclude_factor: f64,
@@ -53,6 +67,9 @@ impl Default for EngineConfig {
             probe_interval: Duration::from_millis(20),
             max_retries: 4,
             ring_capacity: 4096,
+            qos_lanes: true,
+            bulk_quantum: 4,
+            idle_backoff_max: Duration::from_micros(50),
             degrade_exclude_factor: f64::INFINITY,
             maintenance: true,
             seed: 0x7E27,
@@ -94,7 +111,11 @@ impl EngineCore {
         config: EngineConfig,
     ) -> Self {
         let policy = crate::policy::make_policy(config.policy);
-        let sched = SchedulerState::new(topo.rails.len(), config.sched.clone());
+        // The scheduler's per-class queue isolation only holds when the
+        // datapath actually runs dual lanes; keep the two in lockstep.
+        let mut sched_params = config.sched.clone();
+        sched_params.class_isolation = config.qos_lanes;
+        let sched = SchedulerState::new(topo.rails.len(), sched_params);
         EngineCore {
             topo,
             fabric,
@@ -121,13 +142,14 @@ impl EngineCore {
         self.datapath.get().expect("datapath not installed")
     }
 
-    /// Policy context view.
+    /// Policy context view for a slice of the given QoS class.
     #[inline]
-    pub(crate) fn ctx(&self) -> SchedCtx<'_> {
+    pub(crate) fn ctx(&self, class: TransferClass) -> SchedCtx<'_> {
         SchedCtx {
             sched: &self.sched,
             fabric: &self.fabric,
             topo: &self.topo,
+            class,
         }
     }
 }

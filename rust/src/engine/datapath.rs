@@ -1,15 +1,29 @@
 //! The low-overhead datapath (§4.4): per-rail lock-free MPSC rings drained
-//! by dedicated worker threads.
+//! by dedicated worker threads, split into **two QoS lanes per rail**.
 //!
 //! Submission threads push slice descriptors and return immediately; each
 //! worker owns one rail (its "queue pair"), dequeues in batches, executes
 //! slices through the transport backend, and drives the completion /
 //! feedback / failure paths. All completion accounting is hierarchical
 //! atomic counters — the hot path takes no locks.
+//!
+//! The lanes implement the production multiplexing scenario: the latency
+//! lane (KV-cache fetches) drains ahead of the bulk lane (checkpoint /
+//! parameter traffic), so a queued bulk burst can no longer head-of-line
+//! block a latency fetch. Bulk is never starved: while latency work is
+//! pending the worker still executes up to `EngineConfig::bulk_quantum`
+//! bulk slices per wakeup, and latency arrivals preempt a bulk batch only
+//! at slice granularity. `EngineConfig::qos_lanes = false` collapses
+//! everything onto the bulk lane (the single-ring baseline).
+//!
+//! Idle workers park with a bounded escalating timeout
+//! (`EngineConfig::idle_backoff_max` cap) and are **unparked on every
+//! enqueue**, so a sparse latency slice never waits out the backoff.
 
 use super::core::EngineCore;
 use super::slice::SliceDesc;
 use super::telemetry::EngineStats;
+use super::TransferClass;
 use crate::fabric::RailHealth;
 use crate::log;
 use crate::topology::RailId;
@@ -20,10 +34,17 @@ use crate::util::ring::{ring, Consumer, Producer};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
-/// Per-rail producer handles (indexed by RailId).
+/// Per-rail, per-lane producer handles plus worker wakeup handles.
 pub struct Datapath {
-    pub producers: Vec<Producer<SliceDesc>>,
+    /// `lanes[rail][TransferClass::index()]` — one ring per QoS lane.
+    lanes: Vec<[Producer<SliceDesc>; TransferClass::COUNT]>,
+    /// Rail-worker thread handles, for prompt wakeup from idle backoff.
+    wakers: Vec<std::thread::Thread>,
+    /// Cached `EngineConfig::qos_lanes`; `false` routes every class onto
+    /// the bulk lane (single-ring fallback).
+    qos: bool,
 }
 
 /// Spawn one worker per rail; returns the producer set and join handles.
@@ -33,48 +54,90 @@ pub fn spawn_workers(
     seed: u64,
 ) -> (Datapath, Vec<JoinHandle<()>>) {
     let n = core.topo.rails.len();
-    let mut producers = Vec::with_capacity(n);
+    let qos = core.config.qos_lanes;
+    let mut lanes = Vec::with_capacity(n);
+    let mut wakers = Vec::with_capacity(n);
     let mut handles = Vec::with_capacity(n);
-    for i in 0..n {
-        let (tx, rx) = ring::<SliceDesc>(ring_capacity);
-        producers.push(tx);
+    for (i, def) in core.topo.rails.iter().enumerate() {
+        let (lat_tx, lat_rx) = ring::<SliceDesc>(ring_capacity);
+        let (bulk_tx, bulk_rx) = ring::<SliceDesc>(ring_capacity);
+        lanes.push([lat_tx, bulk_tx]);
         let core = Arc::clone(core);
-        let name = format!("tent-{}", core.topo.rails[i].name);
-        handles.push(
-            std::thread::Builder::new()
-                .name(name)
-                .spawn(move || worker_loop(core, RailId(i as u32), rx, seed))
-                .expect("spawn rail worker"),
-        );
+        let name = format!("tent-{}", def.name);
+        let handle = std::thread::Builder::new()
+            .name(name)
+            .spawn(move || worker_loop(core, RailId(i as u32), lat_rx, bulk_rx, seed))
+            .expect("spawn rail worker");
+        wakers.push(handle.thread().clone());
+        handles.push(handle);
     }
-    (Datapath { producers }, handles)
+    (Datapath { lanes, wakers, qos }, handles)
 }
 
-fn worker_loop(core: Arc<EngineCore>, rail: RailId, mut rx: Consumer<SliceDesc>, seed: u64) {
+fn worker_loop(
+    core: Arc<EngineCore>,
+    rail: RailId,
+    mut lat_rx: Consumer<SliceDesc>,
+    mut bulk_rx: Consumer<SliceDesc>,
+    seed: u64,
+) {
     let mut rng = Pcg64::new(seed ^ 0xDA7A_0000, rail.0 as u64);
-    let mut batch: Vec<SliceDesc> = Vec::with_capacity(64);
+    let qos = core.config.qos_lanes;
+    let bulk_quantum = core.config.bulk_quantum.max(1);
+    let max_sleep = core.config.idle_backoff_max.max(Duration::from_micros(1));
+    let mut lat_batch: Vec<SliceDesc> = Vec::with_capacity(64);
+    let mut bulk_batch: Vec<SliceDesc> = Vec::with_capacity(64);
     let mut idle_spins: u32 = 0;
     loop {
-        // Batched dequeue (§4.4): drain up to 64 descriptors per wakeup.
-        let n = rx.pop_batch(&mut batch, 64);
-        if n == 0 {
+        // Batched dequeue (§4.4), latency lane first. While latency work is
+        // pending, bulk advances by at most `bulk_quantum` slices per
+        // wakeup — strict priority with an anti-starvation floor.
+        let n_lat = if qos {
+            lat_rx.pop_batch(&mut lat_batch, 64)
+        } else {
+            0
+        };
+        let bulk_budget = if qos && (n_lat > 0 || lat_rx.backlog() > 0) {
+            bulk_quantum
+        } else {
+            64
+        };
+        let n_bulk = bulk_rx.pop_batch(&mut bulk_batch, bulk_budget);
+        if n_lat + n_bulk == 0 {
             if core.shutdown.load(Ordering::Acquire) {
                 return;
             }
             // Adaptive backoff: yield first (single-core friendly), then
-            // sleep with escalating intervals while idle.
+            // park with escalating-but-capped timeouts while idle.
+            // `Datapath::enqueue` unparks this worker, so the cap only
+            // bounds the damage of a lost wakeup.
             idle_spins = (idle_spins + 1).min(20);
             if idle_spins < 4 {
                 std::thread::yield_now();
             } else {
-                std::thread::sleep(std::time::Duration::from_micros(
-                    20 * (idle_spins as u64 - 3),
-                ));
+                let backoff = Duration::from_micros(20 * (idle_spins as u64 - 3));
+                std::thread::park_timeout(backoff.min(max_sleep));
             }
             continue;
         }
         idle_spins = 0;
-        for slice in batch.drain(..) {
+        for slice in lat_batch.drain(..) {
+            execute_slice(&core, slice, &mut rng);
+        }
+        for slice in bulk_batch.drain(..) {
+            if qos {
+                // Latency arrivals during bulk service preempt the rest of
+                // the bulk batch at slice granularity — bounded to one
+                // batch per bulk slice, so even a sustained stream of
+                // latency submissions cannot indefinitely defer the bulk
+                // work already popped (the quantum guarantee holds).
+                for _ in 0..64 {
+                    match lat_rx.pop() {
+                        Some(l) => execute_slice(&core, l, &mut rng),
+                        None => break,
+                    }
+                }
+            }
             execute_slice(&core, slice, &mut rng);
         }
     }
@@ -103,7 +166,7 @@ pub(crate) fn execute_slice(core: &Arc<EngineCore>, slice: SliceDesc, rng: &mut 
         cand.backend.execute(&io, &core.topo, &core.fabric, rng)
     };
 
-    core.sched.sub_queued(&core.fabric, rail, slice.len);
+    core.sched.sub_queued(&core.fabric, rail, slice.len, slice.class);
 
     match result {
         Ok(_out) => {
@@ -111,14 +174,16 @@ pub(crate) fn execute_slice(core: &Arc<EngineCore>, slice: SliceDesc, rng: &mut 
             rail_state.bytes_carried.fetch_add(slice.len, Ordering::Relaxed);
             rail_state.slices_ok.fetch_add(1, Ordering::Relaxed);
             rail_state.latency.record(observed);
+            rail_state.class_latency[slice.class.index()].record(observed);
             EngineStats::bump(&core.stats.slices_completed);
+            EngineStats::bump(&core.stats.slices_completed_class[slice.class.index()]);
             // Feedback (§4.2): observed completion vs prediction.
             core.policy.on_complete(
                 rail,
                 slice.predicted_ns,
                 slice.serial_ns,
                 observed as f64,
-                &core.ctx(),
+                &core.ctx(slice.class),
             );
             slice.transfer.complete_slice();
         }
@@ -132,19 +197,44 @@ pub(crate) fn execute_slice(core: &Arc<EngineCore>, slice: SliceDesc, rng: &mut 
 }
 
 impl Datapath {
-    /// Push a dispatched slice onto its rail's ring, yielding while full.
+    /// Lane a slice of `class` rides; everything shares the bulk lane when
+    /// QoS lanes are disabled.
+    #[inline]
+    fn lane_idx(&self, class: TransferClass) -> usize {
+        if self.qos {
+            class.index()
+        } else {
+            TransferClass::Bulk.index()
+        }
+    }
+
+    /// Push a dispatched slice onto its rail's lane, yielding while full
+    /// (each stall episode is counted in `EngineStats::ring_full_stalls`).
     /// Errors only on engine shutdown.
     pub fn enqueue(&self, core: &EngineCore, slice: SliceDesc) -> crate::Result<()> {
-        let rail = slice.plan.candidates[slice.cand_idx].rail;
-        let producer = &self.producers[rail.0 as usize];
+        let rail = slice.plan.candidates[slice.cand_idx].rail.0 as usize;
+        let lane = self.lane_idx(slice.class);
+        let producer = &self.lanes[rail][lane];
         let mut item = slice;
+        let mut stalled = false;
         loop {
             match producer.push(item) {
-                Ok(()) => return Ok(()),
+                Ok(()) => {
+                    // Prompt wakeup: the worker may be in idle backoff.
+                    self.wakers[rail].unpark();
+                    return Ok(());
+                }
                 Err(back) => {
                     if core.shutdown.load(Ordering::Acquire) {
                         return Err(crate::Error::Shutdown);
                     }
+                    if !stalled {
+                        stalled = true;
+                        EngineStats::bump(&core.stats.ring_full_stalls);
+                    }
+                    // A full lane means the worker is busy, but kick it
+                    // anyway in case it parked behind the other lane.
+                    self.wakers[rail].unpark();
                     item = back;
                     std::thread::yield_now();
                 }
@@ -152,8 +242,16 @@ impl Datapath {
         }
     }
 
-    /// Ring backlog for a rail (used in tests / telemetry).
+    /// Ring backlog for a rail, summed over both lanes (tests / telemetry).
     pub fn backlog(&self, rail: RailId) -> u64 {
-        self.producers[rail.0 as usize].backlog()
+        self.lanes[rail.0 as usize].iter().map(|p| p.backlog()).sum()
+    }
+
+    /// Unpark every rail worker (shutdown: don't wait out a parked
+    /// worker's idle-backoff timeout).
+    pub(crate) fn wake_all(&self) {
+        for w in &self.wakers {
+            w.unpark();
+        }
     }
 }

@@ -8,7 +8,10 @@
 //!   spraying: Algorithm 1 with EWMA feedback.
 //! * **Phase 3** (`resilience`) — dual-layer self-healing: per-slice
 //!   rerouting and backend substitution inside the data plane.
-//! * `datapath` — the §4.4 lock-free MPSC rings and rail workers.
+//! * `datapath` — the §4.4 lock-free MPSC rings and rail workers, split
+//!   into two QoS lanes per rail: the latency lane (KV-cache fetches)
+//!   drains ahead of the bulk lane (checkpoint/parameter traffic) with an
+//!   anti-starvation quantum.
 //!
 //! ```no_run
 //! use tent::cluster::Cluster;
@@ -63,8 +66,49 @@ pub enum TransferOp {
     Write,
 }
 
-/// A declared transfer: pure intent — segments, offsets, length. No
-/// transport binding (§3.1).
+/// QoS class of a transfer. Production deployments multiplex
+/// latency-critical KV-cache fetches with bulk checkpoint/parameter traffic
+/// on the same rails; the class decides which datapath lane a slice rides
+/// and which queue statistics its cost prediction sees.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, Default)]
+pub enum TransferClass {
+    /// Latency-critical foreground traffic (e.g. KV-cache fetches): every
+    /// rail worker drains this lane first.
+    Latency,
+    /// Bulk background traffic (checkpoints, parameter broadcast). The
+    /// default; never starved — workers still execute a bounded quantum of
+    /// bulk slices per wakeup under latency load.
+    #[default]
+    Bulk,
+}
+
+impl TransferClass {
+    /// Number of classes (= datapath lanes per rail).
+    pub const COUNT: usize = 2;
+
+    /// Lane index in the dual-lane datapath and per-class accounting.
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            TransferClass::Latency => 0,
+            TransferClass::Bulk => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransferClass::Latency => "latency",
+            TransferClass::Bulk => "bulk",
+        }
+    }
+}
+
+// The fabric's per-class telemetry arrays are sized independently (fabric
+// cannot depend on engine types); fail the build if the two ever diverge.
+const _: () = assert!(TransferClass::COUNT == crate::fabric::QOS_CLASSES);
+
+/// A declared transfer: pure intent — segments, offsets, length, QoS class.
+/// No transport binding (§3.1).
 #[derive(Clone, Copy, Debug)]
 pub struct TransferReq {
     pub op: TransferOp,
@@ -73,6 +117,7 @@ pub struct TransferReq {
     pub dst: SegmentId,
     pub dst_off: u64,
     pub len: u64,
+    pub class: TransferClass,
 }
 
 impl TransferReq {
@@ -84,6 +129,7 @@ impl TransferReq {
             dst,
             dst_off,
             len,
+            class: TransferClass::Bulk,
         }
     }
     pub fn read(src: SegmentId, src_off: u64, dst: SegmentId, dst_off: u64, len: u64) -> Self {
@@ -94,7 +140,14 @@ impl TransferReq {
             dst,
             dst_off,
             len,
+            class: TransferClass::Bulk,
         }
+    }
+
+    /// Builder-style QoS class override (constructors default to `Bulk`).
+    pub fn class(mut self, class: TransferClass) -> Self {
+        self.class = class;
+        self
     }
 }
 
@@ -203,6 +256,7 @@ impl TentEngine {
         // Phase 1: plan (full candidate pool), then let the policy shape it
         // (baselines emulate their static binding here).
         let mut plan = plan::build_plan(&core.transports, &core.topo, &src, &dst, req.len)?;
+        plan.class = req.class;
         core.policy.shape_plan(&mut plan, &src, &dst, &core.topo);
         if plan.candidates.is_empty() {
             return Err(Error::NoEligibleDevice("plan shaped to empty".into()));
@@ -223,6 +277,7 @@ impl TentEngine {
                 dst: Arc::clone(&dst),
                 dst_off: req.dst_off + off,
                 len,
+                class: plan.class,
                 cand_idx: 0,
                 predicted_ns: 0.0,
                 serial_ns: 0.0,
@@ -246,7 +301,7 @@ impl TentEngine {
     /// Phase 2 for one slice: policy pick + queue accounting + enqueue.
     fn dispatch(&self, mut s: SliceDesc) -> Result<()> {
         let core = &self.core;
-        let ctx = core.ctx();
+        let ctx = core.ctx(s.class);
         let failover = core.policy.failover();
         // Candidate viability: TENT-style policies skip excluded/dead rails;
         // state-blind baselines see the raw (shaped) set, faithfully hitting
@@ -280,11 +335,13 @@ impl TentEngine {
 
         s.cand_idx = picked;
         let cand = &s.plan.candidates[picked];
-        let (pred, serial) = core.sched.predict_ns(&core.fabric, cand.rail, s.len, cand.bw);
+        let (pred, serial) =
+            core.sched
+                .predict_ns(&core.fabric, cand.rail, s.len, cand.bw, s.class);
         s.predicted_ns = pred;
         s.serial_ns = serial;
         s.enqueue_ns = clock::now_ns();
-        core.sched.add_queued(&core.fabric, cand.rail, s.len); // Alg. 1 line 11
+        core.sched.add_queued(&core.fabric, cand.rail, s.len, s.class); // Alg. 1 line 11
         EngineStats::bump(&core.stats.slices_dispatched);
         core.datapath().enqueue(core, s)
     }
@@ -351,6 +408,9 @@ impl TentEngine {
     /// Stop workers and maintenance; idempotent.
     pub fn shutdown(&mut self) {
         self.core.shutdown.store(true, Ordering::Release);
+        // Kick parked workers so join latency never depends on the
+        // idle-backoff timeout expiring.
+        self.core.datapath().wake_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -471,6 +531,26 @@ mod tests {
         for (b, i) in dsts {
             verify_pattern(&e, b, len as usize, i);
         }
+    }
+
+    #[test]
+    fn class_defaults_to_bulk_and_builder_overrides() {
+        let (_c, e) = engine("h800_hgx");
+        let len = 256u64 << 10;
+        let a = e.register_segment(Location::host(0, 0), len).unwrap();
+        let b = e.register_segment(Location::host(1, 0), len).unwrap();
+        let req = TransferReq::write(a, 0, b, 0, len);
+        assert_eq!(req.class, TransferClass::Bulk);
+        let req = req.class(TransferClass::Latency);
+        assert_eq!(req.class, TransferClass::Latency);
+        fill_pattern(&e, a, len as usize, 21);
+        e.transfer_sync(req, Duration::from_secs(30)).unwrap();
+        verify_pattern(&e, b, len as usize, 21);
+        // Every completed slice must be accounted under the latency class.
+        let s = e.stats();
+        assert!(s.slices_completed > 0);
+        assert_eq!(s.slices_completed_latency, s.slices_completed);
+        assert_eq!(s.slices_completed_bulk, 0);
     }
 
     #[test]

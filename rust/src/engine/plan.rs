@@ -9,6 +9,7 @@
 //! When no direct path spans the endpoints (e.g. consumer GPUs without
 //! GPUDirect), the planner synthesizes a staged D2H→H2H→H2D route.
 
+use super::TransferClass;
 use crate::segment::Segment;
 use crate::topology::{RailId, Tier, Topology};
 use crate::transport::{TransportBackend, TransportRegistry};
@@ -52,6 +53,9 @@ pub struct TransferPlan {
     pub staged: bool,
     /// Total logical transfer length (policies with size thresholds use it).
     pub transfer_len: u64,
+    /// QoS class declared on the transfer. Set by the engine after
+    /// planning (before `shape_plan`); slices inherit it from here.
+    pub class: TransferClass,
 }
 
 /// Build the plan for `src → dst`.
@@ -102,6 +106,7 @@ pub fn build_plan(
         candidates,
         staged,
         transfer_len,
+        class: TransferClass::default(),
     })
 }
 

@@ -38,16 +38,22 @@ pub(crate) fn on_slice_failure(core: &Arc<EngineCore>, mut slice: SliceDesc) {
             slice.attempt += 1;
             EngineStats::bump(&core.stats.retries);
             // Reliability-first reroute: healthy, non-excluded, best tier.
+            // The slice keeps its QoS class — a rerouted latency slice
+            // re-enters the latency lane and latency-class accounting.
             if let Some(idx) = pick_reliable(core, &slice, failed_rail) {
                 slice.cand_idx = idx;
                 let cand = &slice.plan.candidates[idx];
-                let (pred, serial) =
-                    core.sched
-                        .predict_ns(&core.fabric, cand.rail, slice.len, cand.bw);
+                let (pred, serial) = core.sched.predict_ns(
+                    &core.fabric,
+                    cand.rail,
+                    slice.len,
+                    cand.bw,
+                    slice.class,
+                );
                 slice.predicted_ns = pred;
                 slice.serial_ns = serial;
                 slice.enqueue_ns = clock::now_ns();
-                core.sched.add_queued(&core.fabric, cand.rail, slice.len);
+                core.sched.add_queued(&core.fabric, cand.rail, slice.len, slice.class);
                 // enqueue fails only on shutdown, where counters are moot.
                 let _ = core.datapath().enqueue(core, slice);
                 return;

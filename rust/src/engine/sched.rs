@@ -5,6 +5,7 @@
 //! baselines) lives in [`crate::policy`]; this module owns the shared
 //! telemetry every policy reads and the feedback every completion writes.
 
+use super::TransferClass;
 use crate::fabric::Fabric;
 use crate::topology::{RailId, Tier, Topology};
 use crate::util::ewma::LinearCostModel;
@@ -25,6 +26,12 @@ pub struct SchedParams {
     pub omega: f64,
     /// Initial fixed cost β0 (ns).
     pub init_beta0_ns: f64,
+    /// Per-class queue isolation: latency-class predictions see only
+    /// latency-class queued bytes, because the dual-lane datapath
+    /// guarantees bulk backlog cannot delay them. The engine forces this to
+    /// `EngineConfig::qos_lanes`; standalone `SchedulerState` users may
+    /// toggle it directly.
+    pub class_isolation: bool,
 }
 
 impl Default for SchedParams {
@@ -35,6 +42,7 @@ impl Default for SchedParams {
             ewma_alpha: 0.1,
             omega: 0.0,
             init_beta0_ns: 20_000.0,
+            class_isolation: true,
         }
     }
 }
@@ -43,8 +51,10 @@ impl Default for SchedParams {
 pub struct SchedulerState {
     /// Per-rail completion-time models (Eq. 1).
     pub models: Vec<LinearCostModel>,
-    /// Bytes this engine instance has in flight per rail (A_d^local).
-    pub local_queued: Vec<AtomicU64>,
+    /// Bytes this engine instance has in flight per rail and QoS class
+    /// (A_d^local split by lane: `[latency, bulk]`, indexed by
+    /// [`TransferClass::index`]).
+    pub local_queued: Vec<[AtomicU64; TransferClass::COUNT]>,
     /// Soft exclusion flags set by the resilience layer (§4.3): an excluded
     /// rail's cost is effectively ∞ without heavyweight reconfiguration.
     pub excluded: Vec<AtomicBool>,
@@ -59,7 +69,7 @@ impl SchedulerState {
             models: (0..n_rails)
                 .map(|_| LinearCostModel::new(params.init_beta0_ns, 1.0, params.ewma_alpha))
                 .collect(),
-            local_queued: (0..n_rails).map(|_| AtomicU64::new(0)).collect(),
+            local_queued: (0..n_rails).map(|_| Default::default()).collect(),
             excluded: (0..n_rails).map(|_| AtomicBool::new(false)).collect(),
             rr: AtomicUsize::new(0),
             params,
@@ -84,11 +94,25 @@ impl SchedulerState {
         was
     }
 
-    /// Effective queued bytes A_d: local in-flight blended with the global
-    /// (fabric-wide) count when load diffusion is enabled.
+    /// Effective queued bytes A_d for a slice of `class`: local in-flight
+    /// blended with the global (fabric-wide) count when load diffusion is
+    /// enabled.
+    ///
+    /// With class isolation a latency slice only waits behind the latency
+    /// lane, so its A_d excludes bulk backlog (which would otherwise poison
+    /// latency-cost predictions); a bulk slice waits behind both lanes.
+    /// Without isolation (single-lane fallback) every class shares one FIFO
+    /// and both see the total.
     #[inline]
-    pub fn queued(&self, fabric: &Fabric, rail: RailId) -> u64 {
-        let local = self.local_queued[rail.0 as usize].load(Ordering::Relaxed);
+    pub fn queued(&self, fabric: &Fabric, rail: RailId, class: TransferClass) -> u64 {
+        let lq = &self.local_queued[rail.0 as usize];
+        let lat = lq[TransferClass::Latency.index()].load(Ordering::Relaxed);
+        let bulk = lq[TransferClass::Bulk.index()].load(Ordering::Relaxed);
+        let local = if self.params.class_isolation && class == TransferClass::Latency {
+            lat
+        } else {
+            lat + bulk
+        };
         let w = self.params.omega;
         if w <= 0.0 {
             return local;
@@ -102,32 +126,36 @@ impl SchedulerState {
         self.params.tier_penalties[(tier as usize) - 1]
     }
 
-    /// Predict completion time t̂_d (ns) for a slice of `len` on `rail`.
+    /// Predict completion time t̂_d (ns) for a slice of `len` and `class`
+    /// on `rail`.
     #[inline]
-    pub fn predict_ns(&self, fabric: &Fabric, rail: RailId, len: u64, bw: f64) -> (f64, f64) {
-        let a = self.queued(fabric, rail);
+    pub fn predict_ns(
+        &self,
+        fabric: &Fabric,
+        rail: RailId,
+        len: u64,
+        bw: f64,
+        class: TransferClass,
+    ) -> (f64, f64) {
+        let a = self.queued(fabric, rail, class);
         let serial = (a + len) as f64 / bw.max(1.0) * 1e9;
         let pred = self.models[rail.0 as usize].predict_ns(len, a, bw);
         (pred, serial)
     }
 
     /// Account a dispatched slice (Algorithm 1, line 11).
-    pub fn add_queued(&self, fabric: &Fabric, rail: RailId, len: u64) {
-        self.local_queued[rail.0 as usize].fetch_add(len, Ordering::Relaxed);
+    pub fn add_queued(&self, fabric: &Fabric, rail: RailId, len: u64, class: TransferClass) {
+        self.local_queued[rail.0 as usize][class.index()].fetch_add(len, Ordering::Relaxed);
         fabric.add_queued(rail, len);
     }
 
-    /// Account a completed / failed slice.
-    pub fn sub_queued(&self, fabric: &Fabric, rail: RailId, len: u64) {
-        let lq = &self.local_queued[rail.0 as usize];
-        let mut cur = lq.load(Ordering::Relaxed);
-        loop {
-            let next = cur.saturating_sub(len);
-            match lq.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
-                Ok(_) => break,
-                Err(c) => cur = c,
-            }
-        }
+    /// Account a completed / failed slice (saturating: retried slices may
+    /// be double-counted briefly).
+    pub fn sub_queued(&self, fabric: &Fabric, rail: RailId, len: u64, class: TransferClass) {
+        let lq = &self.local_queued[rail.0 as usize][class.index()];
+        let _ = lq.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(len))
+        });
         fabric.sub_queued(rail, len);
     }
 
@@ -151,6 +179,9 @@ pub struct SchedCtx<'a> {
     pub sched: &'a SchedulerState,
     pub fabric: &'a Fabric,
     pub topo: &'a Topology,
+    /// QoS class of the slice being placed (selects which per-class queue
+    /// statistics cost predictions read).
+    pub class: TransferClass,
 }
 
 #[cfg(test)]
@@ -172,27 +203,59 @@ mod tests {
     fn queue_accounting_local_and_global() {
         let (t, f, s) = setup();
         let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
-        s.add_queued(&f, rail, 1000);
-        assert_eq!(s.queued(&f, rail), 1000);
+        s.add_queued(&f, rail, 1000, TransferClass::Bulk);
+        assert_eq!(s.queued(&f, rail, TransferClass::Bulk), 1000);
         assert_eq!(f.rail(rail).queued_bytes.load(Ordering::Relaxed), 1000);
-        s.sub_queued(&f, rail, 400);
-        assert_eq!(s.queued(&f, rail), 600);
-        s.sub_queued(&f, rail, 10_000); // saturates
-        assert_eq!(s.queued(&f, rail), 0);
+        s.sub_queued(&f, rail, 400, TransferClass::Bulk);
+        assert_eq!(s.queued(&f, rail, TransferClass::Bulk), 600);
+        s.sub_queued(&f, rail, 10_000, TransferClass::Bulk); // saturates
+        assert_eq!(s.queued(&f, rail, TransferClass::Bulk), 0);
+    }
+
+    #[test]
+    fn class_isolation_splits_accounting() {
+        let (t, f, s) = setup();
+        let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
+        s.add_queued(&f, rail, 10_000, TransferClass::Bulk);
+        s.add_queued(&f, rail, 1_000, TransferClass::Latency);
+        // A latency slice only sees latency bytes ahead of it; a bulk slice
+        // waits behind both lanes. The fabric-global count stays total.
+        assert_eq!(s.queued(&f, rail, TransferClass::Latency), 1_000);
+        assert_eq!(s.queued(&f, rail, TransferClass::Bulk), 11_000);
+        assert_eq!(f.rail(rail).queued_bytes.load(Ordering::Relaxed), 11_000);
+        s.sub_queued(&f, rail, 1_000, TransferClass::Latency);
+        assert_eq!(s.queued(&f, rail, TransferClass::Latency), 0);
+        assert_eq!(s.queued(&f, rail, TransferClass::Bulk), 10_000);
+    }
+
+    #[test]
+    fn without_isolation_latency_sees_total() {
+        let t = build_profile("h800_hgx", 1).unwrap();
+        let f = Fabric::new(&t, FabricConfig::default());
+        let p = SchedParams {
+            class_isolation: false,
+            ..Default::default()
+        };
+        let s = SchedulerState::new(t.rails.len(), p);
+        let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
+        s.add_queued(&f, rail, 10_000, TransferClass::Bulk);
+        assert_eq!(s.queued(&f, rail, TransferClass::Latency), 10_000);
     }
 
     #[test]
     fn diffusion_blends_global_queue() {
         let t = build_profile("h800_hgx", 1).unwrap();
         let f = Fabric::new(&t, FabricConfig::default());
-        let mut p = SchedParams::default();
-        p.omega = 0.5;
+        let p = SchedParams {
+            omega: 0.5,
+            ..Default::default()
+        };
         let s1 = SchedulerState::new(t.rails.len(), p.clone());
         let s2 = SchedulerState::new(t.rails.len(), p);
         let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
         // Engine 2 loads the rail; engine 1 must see half of it via ω.
-        s2.add_queued(&f, rail, 10_000);
-        assert_eq!(s1.queued(&f, rail), 5_000);
+        s2.add_queued(&f, rail, 10_000, TransferClass::Bulk);
+        assert_eq!(s1.queued(&f, rail, TransferClass::Bulk), 5_000);
     }
 
     #[test]
@@ -215,10 +278,13 @@ mod tests {
         let (t, f, s) = setup();
         let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
         let bw = t.rail(rail).bw_bytes_per_sec;
-        let (p0, _) = s.predict_ns(&f, rail, 64 << 10, bw);
-        s.add_queued(&f, rail, 8 << 20);
-        let (p1, _) = s.predict_ns(&f, rail, 64 << 10, bw);
+        let (p0, _) = s.predict_ns(&f, rail, 64 << 10, bw, TransferClass::Bulk);
+        s.add_queued(&f, rail, 8 << 20, TransferClass::Bulk);
+        let (p1, _) = s.predict_ns(&f, rail, 64 << 10, bw, TransferClass::Bulk);
         assert!(p1 > 5.0 * p0, "p0={p0} p1={p1}");
+        // Bulk backlog must not poison a latency-class prediction.
+        let (pl, _) = s.predict_ns(&f, rail, 64 << 10, bw, TransferClass::Latency);
+        assert!((pl - p0).abs() / p0 < 0.01, "p0={p0} pl={pl}");
     }
 
     #[test]
@@ -226,14 +292,14 @@ mod tests {
         let (t, f, s) = setup();
         let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
         let bw = t.rail(rail).bw_bytes_per_sec;
-        let (before, _) = s.predict_ns(&f, rail, 1 << 20, bw);
+        let (before, _) = s.predict_ns(&f, rail, 1 << 20, bw, TransferClass::Bulk);
         for _ in 0..20 {
             s.observe(rail, before, before, before * 10.0);
         }
-        let (poisoned, _) = s.predict_ns(&f, rail, 1 << 20, bw);
+        let (poisoned, _) = s.predict_ns(&f, rail, 1 << 20, bw, TransferClass::Bulk);
         assert!(poisoned > 2.0 * before);
         s.reset_models();
-        let (after, _) = s.predict_ns(&f, rail, 1 << 20, bw);
+        let (after, _) = s.predict_ns(&f, rail, 1 << 20, bw, TransferClass::Bulk);
         assert!((after - before).abs() / before < 0.01);
     }
 }

@@ -10,6 +10,7 @@
 
 use super::batch::TransferState;
 use super::plan::TransferPlan;
+use super::TransferClass;
 use crate::segment::Segment;
 use crate::transport::PathAffinity;
 use std::sync::Arc;
@@ -21,6 +22,10 @@ pub struct SliceDesc {
     pub dst: Arc<Segment>,
     pub dst_off: u64,
     pub len: u64,
+    /// QoS class inherited from the parent transfer; decides the datapath
+    /// lane and the per-class queue statistics, and is preserved across
+    /// resilience reroutes.
+    pub class: TransferClass,
     /// Index into `plan.candidates` chosen by the scheduler.
     pub cand_idx: usize,
     /// Prediction recorded at dispatch, for the feedback loop.

@@ -4,6 +4,7 @@
 //! adds the engine's own event counters (dispatches, retries, exclusions,
 //! probes, …) and a combined snapshot used by the CLI, benches, and tests.
 
+use super::TransferClass;
 use crate::fabric::{Fabric, RailHealth};
 use crate::topology::{RailId, Topology};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -15,6 +16,9 @@ pub struct EngineStats {
     pub transfers_submitted: AtomicU64,
     pub slices_dispatched: AtomicU64,
     pub slices_completed: AtomicU64,
+    /// Completed slices split by QoS class (`[latency, bulk]`, indexed by
+    /// [`TransferClass::index`]).
+    pub slices_completed_class: [AtomicU64; TransferClass::COUNT],
     pub slice_failures: AtomicU64,
     pub retries: AtomicU64,
     pub exclusions: AtomicU64,
@@ -24,6 +28,10 @@ pub struct EngineStats {
     pub permanent_failures: AtomicU64,
     pub staged_plans: AtomicU64,
     pub bytes_submitted: AtomicU64,
+    /// Enqueue attempts that found a full datapath lane and had to spin
+    /// (one bump per stall episode, not per retry) — the backpressure
+    /// signal for undersized rings.
+    pub ring_full_stalls: AtomicU64,
 }
 
 impl EngineStats {
@@ -32,11 +40,15 @@ impl EngineStats {
         counter.fetch_add(1, Ordering::Relaxed);
     }
     pub fn snapshot(&self) -> StatCounters {
+        let lat = TransferClass::Latency.index();
+        let bulk = TransferClass::Bulk.index();
         StatCounters {
             batches_allocated: self.batches_allocated.load(Ordering::Relaxed),
             transfers_submitted: self.transfers_submitted.load(Ordering::Relaxed),
             slices_dispatched: self.slices_dispatched.load(Ordering::Relaxed),
             slices_completed: self.slices_completed.load(Ordering::Relaxed),
+            slices_completed_latency: self.slices_completed_class[lat].load(Ordering::Relaxed),
+            slices_completed_bulk: self.slices_completed_class[bulk].load(Ordering::Relaxed),
             slice_failures: self.slice_failures.load(Ordering::Relaxed),
             retries: self.retries.load(Ordering::Relaxed),
             exclusions: self.exclusions.load(Ordering::Relaxed),
@@ -46,6 +58,7 @@ impl EngineStats {
             permanent_failures: self.permanent_failures.load(Ordering::Relaxed),
             staged_plans: self.staged_plans.load(Ordering::Relaxed),
             bytes_submitted: self.bytes_submitted.load(Ordering::Relaxed),
+            ring_full_stalls: self.ring_full_stalls.load(Ordering::Relaxed),
         }
     }
 }
@@ -57,6 +70,8 @@ pub struct StatCounters {
     pub transfers_submitted: u64,
     pub slices_dispatched: u64,
     pub slices_completed: u64,
+    pub slices_completed_latency: u64,
+    pub slices_completed_bulk: u64,
     pub slice_failures: u64,
     pub retries: u64,
     pub exclusions: u64,
@@ -66,6 +81,7 @@ pub struct StatCounters {
     pub permanent_failures: u64,
     pub staged_plans: u64,
     pub bytes_submitted: u64,
+    pub ring_full_stalls: u64,
 }
 
 /// Per-rail view combining topology, fabric counters, and scheduler state.
@@ -83,6 +99,12 @@ pub struct RailSnapshot {
     pub mean_latency_ns: f64,
     pub p50_ns: u64,
     pub p99_ns: u64,
+    /// Latency-class slice count / P99 on this rail.
+    pub latency_class_slices: u64,
+    pub latency_class_p99_ns: u64,
+    /// Bulk-class slice count / P99 on this rail.
+    pub bulk_class_slices: u64,
+    pub bulk_class_p99_ns: u64,
     pub beta0_ns: f64,
     pub beta1: f64,
 }
@@ -111,6 +133,10 @@ pub fn rail_snapshots(
                 mean_latency_ns: st.latency.mean(),
                 p50_ns: st.latency.p50(),
                 p99_ns: st.latency.p99(),
+                latency_class_slices: st.class_latency[TransferClass::Latency.index()].count(),
+                latency_class_p99_ns: st.class_latency[TransferClass::Latency.index()].p99(),
+                bulk_class_slices: st.class_latency[TransferClass::Bulk.index()].count(),
+                bulk_class_p99_ns: st.class_latency[TransferClass::Bulk.index()].p99(),
                 beta0_ns: m.beta0_ns(),
                 beta1: m.beta1(),
             }
@@ -155,10 +181,15 @@ mod tests {
         EngineStats::bump(&s.retries);
         EngineStats::bump(&s.retries);
         EngineStats::bump(&s.probes);
+        EngineStats::bump(&s.ring_full_stalls);
+        EngineStats::bump(&s.slices_completed_class[TransferClass::Latency.index()]);
         let snap = s.snapshot();
         assert_eq!(snap.retries, 2);
         assert_eq!(snap.probes, 1);
         assert_eq!(snap.slices_completed, 0);
+        assert_eq!(snap.ring_full_stalls, 1);
+        assert_eq!(snap.slices_completed_latency, 1);
+        assert_eq!(snap.slices_completed_bulk, 0);
     }
 
     #[test]

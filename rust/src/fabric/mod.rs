@@ -21,6 +21,11 @@ use crate::util::hist::Histogram;
 use crate::util::prng::Pcg64;
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 
+/// Number of QoS classes the per-rail telemetry is sized for. Kept in
+/// compile-time lockstep with `engine::TransferClass::COUNT` (a const
+/// assert in `engine` fails the build if they diverge).
+pub const QOS_CLASSES: usize = 2;
+
 /// Health of a rail as set by failure injection / the prober.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 #[repr(u8)]
@@ -57,6 +62,10 @@ pub struct RailState {
     pub slices_failed: AtomicU64,
     /// Observed per-slice service latency (ns).
     pub latency: Histogram,
+    /// Per-QoS-class observed slice latency, `[latency, bulk]` — indexed by
+    /// `engine::TransferClass::index` (the fabric itself is class-agnostic;
+    /// the datapath records here).
+    pub class_latency: [Histogram; QOS_CLASSES],
     /// Generation counter bumped on every health transition (lets the
     /// resilience layer detect flaps without locks).
     pub health_gen: AtomicU64,
@@ -80,6 +89,7 @@ impl RailState {
             slices_ok: AtomicU64::new(0),
             slices_failed: AtomicU64::new(0),
             latency: Histogram::new(),
+            class_latency: [Histogram::new(), Histogram::new()],
             health_gen: AtomicU64::new(0),
             pace_debt_ns: AtomicU64::new(0),
             static_factor,
@@ -251,21 +261,12 @@ impl Fabric {
     }
     #[inline]
     pub fn sub_queued(&self, rail: RailId, len: u64) {
-        let r = self.rail(rail);
         // Saturating subtract: retried slices may be double-counted briefly.
-        let mut cur = r.queued_bytes.load(Ordering::Relaxed);
-        loop {
-            let next = cur.saturating_sub(len);
-            match r.queued_bytes.compare_exchange_weak(
-                cur,
-                next,
-                Ordering::Relaxed,
-                Ordering::Relaxed,
-            ) {
-                Ok(_) => return,
-                Err(c) => cur = c,
-            }
-        }
+        let _ = self.rail(rail).queued_bytes.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |v| Some(v.saturating_sub(len)),
+        );
     }
 
     /// Snapshot per-rail byte counters (Fig 6 "per-NIC byte counters").
@@ -283,6 +284,9 @@ impl Fabric {
             r.slices_ok.store(0, Ordering::Relaxed);
             r.slices_failed.store(0, Ordering::Relaxed);
             r.latency.reset();
+            for h in &r.class_latency {
+                h.reset();
+            }
         }
     }
 }
@@ -390,8 +394,10 @@ mod tests {
     #[test]
     fn time_compression_speeds_up() {
         let t = build_profile("h800_hgx", 1).unwrap();
-        let mut cfg = FabricConfig::default();
-        cfg.time_compression = 10.0;
+        let cfg = FabricConfig {
+            time_compression: 10.0,
+            ..Default::default()
+        };
         let fast = Fabric::new(&t, cfg);
         let slow = Fabric::new(&t, FabricConfig::default());
         let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];

@@ -142,6 +142,7 @@ mod tests {
             sched: &sched,
             fabric: &c.fabric,
             topo: &c.topo,
+            class: crate::engine::TransferClass::Bulk,
         };
         let mut seen = std::collections::HashSet::new();
         for _ in 0..200 {

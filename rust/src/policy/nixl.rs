@@ -108,6 +108,7 @@ mod tests {
             sched: &sched,
             fabric: &c.fabric,
             topo: &c.topo,
+            class: crate::engine::TransferClass::Bulk,
         };
         let viable: Vec<usize> = (0..plan.candidates.len()).collect();
         let mut seen = std::collections::HashSet::new();
@@ -126,6 +127,7 @@ mod tests {
             sched: &sched,
             fabric: &c.fabric,
             topo: &c.topo,
+            class: crate::engine::TransferClass::Bulk,
         };
         let viable: Vec<usize> = (0..plan.candidates.len()).collect();
         let mut seen = std::collections::HashSet::new();

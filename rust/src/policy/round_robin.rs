@@ -65,6 +65,7 @@ mod tests {
             sched: &sched,
             fabric: &c.fabric,
             topo: &c.topo,
+            class: crate::engine::TransferClass::Bulk,
         };
         let mut counts = vec![0u32; plan.candidates.len()];
         for _ in 0..80 {

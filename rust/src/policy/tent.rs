@@ -67,7 +67,7 @@ impl SlicePolicy for TentPolicy {
         let mut t_min = f64::INFINITY;
         for &i in viable {
             let c = &plan.candidates[i];
-            let (t_hat, _serial) = sched.predict_ns(ctx.fabric, c.rail, len, c.bw);
+            let (t_hat, _serial) = sched.predict_ns(ctx.fabric, c.rail, len, c.bw, ctx.class);
             let s = sched.penalty(c.tier) * t_hat;
             s_min = s_min.min(s);
             t_min = t_min.min(t_hat);
@@ -118,6 +118,7 @@ mod tests {
     use crate::cluster::Cluster;
     use crate::engine::plan::build_plan;
     use crate::engine::sched::{SchedParams, SchedulerState};
+    use crate::engine::TransferClass;
     use crate::segment::Location;
     use crate::topology::Tier;
 
@@ -129,6 +130,7 @@ mod tests {
             sched,
             fabric: &c.fabric,
             topo: &c.topo,
+            class: TransferClass::Bulk,
         }
     }
 
@@ -191,7 +193,12 @@ mod tests {
         // Pile 64 MiB onto every tier-1 rail.
         for &i in &viable {
             if plan.candidates[i].tier == Tier::T1 {
-                sched.add_queued(&c.fabric, plan.candidates[i].rail, 64 << 20);
+                sched.add_queued(
+                    &c.fabric,
+                    plan.candidates[i].rail,
+                    64 << 20,
+                    TransferClass::Bulk,
+                );
             }
         }
         // tier-3 candidates only.
@@ -251,7 +258,7 @@ mod tests {
         for _ in 0..64 {
             let i = TentPolicy.pick(&plan, &viable, 1 << 20, &ctx).unwrap();
             let cnd = &plan.candidates[i];
-            sched.add_queued(&c.fabric, cnd.rail, 1 << 20);
+            sched.add_queued(&c.fabric, cnd.rail, 1 << 20, TransferClass::Bulk);
             tiers_used.insert(cnd.tier);
         }
         assert!(tiers_used.contains(&Tier::T1));

@@ -9,7 +9,7 @@
 //! engine-policy variable the paper measures: TENT rides PCIe for H2D and
 //! NVLink for the D2D hops; Mooncake TE pins everything to RDMA.
 
-use crate::engine::{TentEngine, TransferReq};
+use crate::engine::{TentEngine, TransferClass, TransferReq};
 use crate::segment::{Location, SegmentId};
 use crate::util::clock;
 use crate::Result;
@@ -122,8 +122,12 @@ impl CheckpointEngine {
                     }
                     let off = c as u64 * chunk;
                     let len = chunk.min(payload - off);
+                    // Weight broadcast is the canonical bulk flow: explicit
+                    // `Bulk` class keeps it out of the latency lane shared
+                    // with KV-cache fetches.
                     engine.transfer_sync(
-                        TransferReq::write(src_seg, off, dst_seg, off, len),
+                        TransferReq::write(src_seg, off, dst_seg, off, len)
+                            .class(TransferClass::Bulk),
                         Duration::from_secs(300),
                     )?;
                     done[hop][c].store(1, Ordering::Release);
@@ -198,6 +202,10 @@ mod tests {
         assert_eq!(rep.chunks, 4);
         assert!(ce.verify().unwrap());
         assert!(rep.total_ns > 0);
+        // Checkpoint traffic must be accounted entirely under the bulk class.
+        let s = e.stats();
+        assert!(s.slices_completed_bulk > 0);
+        assert_eq!(s.slices_completed_latency, 0);
     }
 
     #[test]

@@ -17,7 +17,7 @@
 //! transfer of 2·L·H sub-requests per block — exactly the gather/scatter
 //! shape of production KV movement.
 
-use crate::engine::{TentEngine, TransferReq};
+use crate::engine::{TentEngine, TransferClass, TransferReq};
 use crate::runtime::ModelMeta;
 use crate::segment::{Location, SegmentId};
 use crate::{Error, Result};
@@ -243,10 +243,15 @@ impl TieredKvCache {
         for (i, &base) in self.stride_bases.iter().enumerate() {
             let w_off = base + row;
             let p_off = pool_base + i as u64 * self.plane_chunk_bytes;
+            // KV-block movement gates prefill/decode, so it rides the
+            // latency lane — a concurrent checkpoint burst on the same
+            // rails can no longer head-of-line block it.
             out.push(if to_working {
                 TransferReq::read(pool_seg, p_off, working, w_off, self.plane_chunk_bytes)
+                    .class(TransferClass::Latency)
             } else {
                 TransferReq::write(working, w_off, pool_seg, p_off, self.plane_chunk_bytes)
+                    .class(TransferClass::Latency)
             });
         }
     }
@@ -383,6 +388,8 @@ impl TieredKvCache {
             .free
             .pop()
             .ok_or_else(|| Error::Config("disk pool exhausted".into()))?;
+        // Tier demotion is background housekeeping: it rides the bulk lane
+        // so it cannot delay concurrent latency-class KV fetches.
         engine.transfer_sync(
             TransferReq::write(
                 st.cpu_pool.seg,
@@ -390,7 +397,8 @@ impl TieredKvCache {
                 st.disk_pool.seg,
                 disk_slot as u64 * self.block_bytes,
                 self.block_bytes,
-            ),
+            )
+            .class(TransferClass::Bulk),
             Duration::from_secs(120),
         )?;
         let e = st.index.get_mut(&vh).unwrap();

@@ -29,8 +29,10 @@ fn checked_transfer(e: &TentEngine, len: u64) -> (Vec<u8>, Vec<u8>) {
 
 #[test]
 fn mid_flight_failure_is_masked_and_retried() {
-    let mut cfg = EngineConfig::default();
-    cfg.probe_interval = Duration::from_millis(10);
+    let cfg = EngineConfig {
+        probe_interval: Duration::from_millis(10),
+        ..Default::default()
+    };
     let (c, e) = engine_with("h800_hgx", cfg);
     let rails = c.topo.rails_of(NodeId(0), FabricKind::Rdma);
     // Fail a rail *while* a large transfer is in flight.
@@ -50,8 +52,10 @@ fn mid_flight_failure_is_masked_and_retried() {
 
 #[test]
 fn recovered_rail_is_readmitted_and_reused() {
-    let mut cfg = EngineConfig::default();
-    cfg.probe_interval = Duration::from_millis(5);
+    let cfg = EngineConfig {
+        probe_interval: Duration::from_millis(5),
+        ..Default::default()
+    };
     let (c, e) = engine_with("h800_hgx", cfg);
     let rail = c.topo.rails_of(NodeId(0), FabricKind::Rdma)[0];
 
@@ -160,8 +164,10 @@ fn degraded_rail_is_steered_around_by_telemetry() {
 fn chaos_run_with_table1_failure_mix() {
     // Compressed production churn: inject the Table-1 mix at high rate
     // while transfers stream; TENT must complete every one.
-    let mut cfg = EngineConfig::default();
-    cfg.probe_interval = Duration::from_millis(5);
+    let mut cfg = EngineConfig {
+        probe_interval: Duration::from_millis(5),
+        ..Default::default()
+    };
     cfg.max_retries = 8;
     let (c, e) = engine_with("h800_hgx", cfg);
     let rails = c.topo.rails_of(NodeId(0), FabricKind::Rdma);

@@ -1,0 +1,168 @@
+//! QoS integration: the dual-lane datapath's end-to-end guarantees.
+//!
+//! * a latency-class transfer overtakes an already-queued bulk burst on the
+//!   same rail (the `legacy_tcp` profile has exactly one inter-node rail,
+//!   so both classes share it deterministically),
+//! * bulk is not starved under sustained latency load (anti-starvation
+//!   quantum),
+//! * the class survives resilience rerouting (per-class counters account
+//!   retried slices under their original class),
+//! * ring-full backpressure is counted, not silent.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+use tent::cluster::Cluster;
+use tent::engine::{EngineConfig, TentEngine, TransferClass, TransferReq};
+use tent::fabric::FabricConfig;
+use tent::segment::Location;
+use tent::topology::{FabricKind, NodeId};
+
+/// One inter-node TCP rail, 10x time compression so the slow legacy link
+/// doesn't dominate test wall-clock.
+fn tcp_cluster() -> Cluster {
+    let fcfg = FabricConfig {
+        time_compression: 10.0,
+        ..Default::default()
+    };
+    Cluster::from_profile_nodes("legacy_tcp", 2, fcfg).unwrap()
+}
+
+fn host_pair(e: &TentEngine, len: u64) -> (tent::segment::SegmentId, tent::segment::SegmentId) {
+    let a = e.register_segment(Location::host(0, 0), len).unwrap();
+    let b = e.register_segment(Location::host(1, 0), len).unwrap();
+    (a, b)
+}
+
+#[test]
+fn latency_overtakes_queued_bulk_burst_on_same_rail() {
+    let c = tcp_cluster();
+    let e = TentEngine::new(&c, EngineConfig::default()).unwrap();
+    let (a, b) = host_pair(&e, 32 << 20);
+
+    // Queue a deep bulk burst (16 MiB = 256 slices on the single rail)…
+    let bulk = e.allocate_batch();
+    e.submit(bulk, &[TransferReq::write(a, 0, b, 0, 16 << 20)])
+        .unwrap();
+    // …then a small latency fetch. It must finish while the bulk burst is
+    // still draining: on a single shared FIFO it would sit behind all 256
+    // bulk slices instead.
+    e.transfer_sync(
+        TransferReq::write(a, 24 << 20, b, 24 << 20, 128 << 10).class(TransferClass::Latency),
+        Duration::from_secs(30),
+    )
+    .unwrap();
+    let bulk_status = e.status(bulk).unwrap();
+    assert!(
+        !bulk_status.done(),
+        "latency transfer should complete while the bulk backlog remains"
+    );
+    let s = e.stats();
+    assert_eq!(s.slices_completed_latency, 2, "128 KiB = 2 latency slices");
+
+    e.wait(bulk, Duration::from_secs(120)).unwrap();
+    e.release_batch(bulk).unwrap();
+}
+
+#[test]
+fn bulk_is_not_starved_under_sustained_latency_load() {
+    let c = tcp_cluster();
+    let e = Arc::new(TentEngine::new(&c, EngineConfig::default()).unwrap());
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // Two pumps keep the latency lane busy for the whole bulk transfer.
+    let pumps: Vec<_> = (0..2)
+        .map(|i| {
+            let e = Arc::clone(&e);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let (a, b) = host_pair(&e, 256 << 10);
+                while !stop.load(Ordering::Acquire) {
+                    e.transfer_sync(
+                        TransferReq::write(a, 0, b, 0, 64 << 10).class(TransferClass::Latency),
+                        Duration::from_secs(30),
+                    )
+                    .unwrap_or_else(|err| panic!("pump {i}: {err}"));
+                }
+            })
+        })
+        .collect();
+
+    // The anti-starvation quantum must let this 4 MiB bulk transfer (64
+    // slices) through despite the latency pumps.
+    let (a, b) = host_pair(&e, 4 << 20);
+    e.transfer_sync(
+        TransferReq::write(a, 0, b, 0, 4 << 20),
+        Duration::from_secs(60),
+    )
+    .expect("bulk transfer starved under latency load");
+
+    stop.store(true, Ordering::Release);
+    for p in pumps {
+        p.join().unwrap();
+    }
+    let s = e.stats();
+    assert!(s.slices_completed_bulk >= 64, "{s:?}");
+    assert!(s.slices_completed_latency > 0, "{s:?}");
+}
+
+#[test]
+fn class_survives_resilience_rerouting() {
+    let c = Cluster::from_profile("h800_hgx").unwrap();
+    let e = TentEngine::new(&c, EngineConfig::default()).unwrap();
+    let len = 64u64 << 20;
+    let (a, b) = host_pair(&e, len);
+    let data: Vec<u8> = (0..len as usize).map(|i| (i % 233) as u8).collect();
+    e.segment(a).unwrap().write_at(0, &data).unwrap();
+
+    // Kill two rails while the (latency-class) transfer is in flight so
+    // queued slices flush with error and reroute.
+    let rails = c.topo.rails_of(NodeId(0), FabricKind::Rdma);
+    let fabric = Arc::clone(&c.fabric);
+    let (r0, r1) = (rails[0], rails[1]);
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(15));
+        fabric.inject_failure(r0);
+        fabric.inject_failure(r1);
+    });
+    e.transfer_sync(
+        TransferReq::write(a, 0, b, 0, len).class(TransferClass::Latency),
+        Duration::from_secs(120),
+    )
+    .unwrap();
+    killer.join().unwrap();
+
+    let mut got = vec![0u8; len as usize];
+    e.segment(b).unwrap().read_at(0, &mut got).unwrap();
+    assert_eq!(got, data);
+
+    let s = e.stats();
+    assert_eq!(s.permanent_failures, 0, "{s:?}");
+    assert!(s.retries >= 1, "mid-flight kill must force reroutes: {s:?}");
+    // Every completion — including every rerouted slice — must be
+    // accounted under the latency class it was submitted with.
+    assert_eq!(s.slices_completed_latency, s.slices_completed, "{s:?}");
+    assert_eq!(s.slices_completed_bulk, 0, "{s:?}");
+    c.fabric.recover(r0);
+    c.fabric.recover(r1);
+}
+
+#[test]
+fn ring_full_backpressure_is_counted() {
+    let c = tcp_cluster();
+    // Tiny lane capacity: a 4 MiB transfer (64 slices) onto the single
+    // rail must hit ring-full backpressure in `Datapath::enqueue`.
+    let cfg = EngineConfig {
+        ring_capacity: 8,
+        ..Default::default()
+    };
+    let e = TentEngine::new(&c, cfg).unwrap();
+    let (a, b) = host_pair(&e, 4 << 20);
+    e.transfer_sync(
+        TransferReq::write(a, 0, b, 0, 4 << 20),
+        Duration::from_secs(60),
+    )
+    .unwrap();
+    let s = e.stats();
+    assert!(s.ring_full_stalls > 0, "stalls must be observable: {s:?}");
+}

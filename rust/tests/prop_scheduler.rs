@@ -7,7 +7,7 @@ use tent::cluster::Cluster;
 use tent::engine::plan::build_plan;
 use tent::engine::sched::{SchedCtx, SchedParams, SchedulerState};
 use tent::engine::slice::decompose;
-use tent::engine::{EngineConfig, TentEngine};
+use tent::engine::{EngineConfig, TentEngine, TransferClass};
 use tent::policy::{make_policy, PolicyKind};
 use tent::segment::Location;
 use tent::topology::Tier;
@@ -67,8 +67,10 @@ struct Fixture {
 
 fn fixture(gamma: f64) -> Fixture {
     let cluster = Cluster::from_profile("h800_hgx").unwrap();
-    let mut params = SchedParams::default();
-    params.gamma = gamma;
+    let params = SchedParams {
+        gamma,
+        ..Default::default()
+    };
     let sched = SchedulerState::new(cluster.topo.rails.len(), params);
     let a = cluster
         .segments
@@ -95,13 +97,14 @@ fn prop_pick_always_within_viable_set() {
         sched: &f.sched,
         fabric: &f.cluster.fabric,
         topo: &f.cluster.topo,
+        class: TransferClass::Bulk,
     };
     for _ in 0..CASES {
         // Random viable subset + random queue state.
         let n = f.plan.candidates.len();
         let viable: Vec<usize> = (0..n).filter(|_| rng.gen_bool(0.6)).collect();
         for c in &f.plan.candidates {
-            f.sched.local_queued[c.rail.0 as usize]
+            f.sched.local_queued[c.rail.0 as usize][TransferClass::Bulk.index()]
                 .store(rng.gen_range(64 << 20), std::sync::atomic::Ordering::Relaxed);
         }
         let len = rng.gen_between(4 << 10, 4 << 20);
@@ -123,9 +126,10 @@ fn prop_tolerance_window_respected() {
             sched: &f.sched,
             fabric: &f.cluster.fabric,
             topo: &f.cluster.topo,
+            class: TransferClass::Bulk,
         };
         for c in &f.plan.candidates {
-            f.sched.local_queued[c.rail.0 as usize]
+            f.sched.local_queued[c.rail.0 as usize][TransferClass::Bulk.index()]
                 .store(rng.gen_range(32 << 20), std::sync::atomic::Ordering::Relaxed);
         }
         let len = 1 << 20;
@@ -133,7 +137,9 @@ fn prop_tolerance_window_respected() {
         // Compute scores the same way the policy does.
         let score = |i: usize| {
             let c = &f.plan.candidates[i];
-            let (t, _) = f.sched.predict_ns(&f.cluster.fabric, c.rail, len, c.bw);
+            let (t, _) =
+                f.sched
+                    .predict_ns(&f.cluster.fabric, c.rail, len, c.bw, TransferClass::Bulk);
             f.sched.penalty(c.tier) * t
         };
         let s_min = viable
@@ -163,6 +169,7 @@ fn prop_excluded_rails_never_picked_via_dispatch_filter() {
         sched: &f.sched,
         fabric: &f.cluster.fabric,
         topo: &f.cluster.topo,
+        class: TransferClass::Bulk,
     };
     for _ in 0..CASES {
         for c in &f.plan.candidates {
@@ -191,6 +198,7 @@ fn prop_idle_pick_minimizes_penalized_cost() {
         sched: &f.sched,
         fabric: &f.cluster.fabric,
         topo: &f.cluster.topo,
+        class: TransferClass::Bulk,
     };
     let viable: Vec<usize> = (0..f.plan.candidates.len()).collect();
     for _ in 0..64 {
@@ -201,8 +209,10 @@ fn prop_idle_pick_minimizes_penalized_cost() {
 
 fn host_fixture(gamma: f64) -> Fixture {
     let cluster = Cluster::from_profile("h800_hgx").unwrap();
-    let mut params = SchedParams::default();
-    params.gamma = gamma;
+    let params = SchedParams {
+        gamma,
+        ..Default::default()
+    };
     let sched = SchedulerState::new(cluster.topo.rails.len(), params);
     let a = cluster
         .segments
@@ -230,6 +240,7 @@ fn prop_loaded_rail_eventually_avoided() {
         sched: &f.sched,
         fabric: &f.cluster.fabric,
         topo: &f.cluster.topo,
+        class: TransferClass::Bulk,
     };
     let viable: Vec<usize> = (0..f.plan.candidates.len())
         .filter(|&i| f.plan.candidates[i].tier == Tier::T1)
@@ -239,7 +250,7 @@ fn prop_loaded_rail_eventually_avoided() {
         let hot = *rng.choose(&viable);
         for &i in &viable {
             let c = &f.plan.candidates[i];
-            f.sched.local_queued[c.rail.0 as usize].store(
+            f.sched.local_queued[c.rail.0 as usize][TransferClass::Bulk.index()].store(
                 if i == hot { 512 << 20 } else { 0 },
                 std::sync::atomic::Ordering::Relaxed,
             );
