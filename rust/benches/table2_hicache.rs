@@ -2,55 +2,86 @@
 //! tiered KV cache: Baseline (no HiCache) vs HiCache+Mooncake TE vs
 //! HiCache+TENT.
 //!
-//! Full three-layer stack: Pallas-kernel HLO executed via PJRT, KV blocks
-//! moved between GPU/CPU/SSD tiers by the transfer engine. Requires
-//! `make artifacts` (prints SKIPPED otherwise). Scaled workload: the paper
-//! runs 60 clients × 10 turns on Qwen3-235B; we run 6 × 4 on TinyGPT —
-//! the *ratios* are the reproduction target.
+//! Full three-layer stack: a pluggable model executor (deterministic
+//! synthetic model by default — no artifacts needed; `--model pjrt` for the
+//! Pallas-kernel HLO via PJRT) with KV blocks moved between GPU/CPU/SSD
+//! tiers by the transfer engine. Scaled workload: the paper runs 60 clients
+//! × 10 turns on Qwen3-235B; we run 6 × 4 on TinyGPT dims — the *ratios*
+//! are the reproduction target.
+//!
+//! `--smoke` shrinks the workload to a seconds-long CI-sized run (2 clients
+//! × 2 turns, tiny pools) that still prints the full Table-2 shape.
 
 use std::sync::Arc;
 use tent::cluster::Cluster;
 use tent::engine::{EngineConfig, TentEngine};
 use tent::policy::PolicyKind;
-use tent::runtime::Runtime;
-use tent::serving::{build_conversations, run_serving, ServeConfig, ServeMode, ServeReport};
+use tent::runtime::{make_executor, ModelExecutor, ModelSelect};
+use tent::serving::{build_for, run_serving, KvCacheConfig, ServeConfig, ServeMode, ServeReport};
+use tent::util::cli::Args;
+use tent::util::TempPool;
 
-fn run_config(rt: &Runtime, policy: PolicyKind, mode: ServeMode, cfg: &ServeConfig) -> ServeReport {
+fn run_config(
+    model: &dyn ModelExecutor,
+    policy: PolicyKind,
+    mode: ServeMode,
+    cfg: &ServeConfig,
+) -> ServeReport {
     let cluster =
         Cluster::from_profile_nodes("h800_hgx", 1, tent::fabric::FabricConfig::default()).unwrap();
     let engine = Arc::new(TentEngine::new(&cluster, EngineConfig::with_policy(policy)).unwrap());
-    let convs = build_conversations(
-        cfg.clients,
-        cfg.turns,
-        rt.meta.t_pre,
-        rt.meta.vocab as i32,
-        cfg.cache.gpus,
-        cfg.seed,
-        cfg.shared_system_prompt,
-    );
-    let cfg = ServeConfig { mode, ..cfg.clone() };
-    run_serving(&engine, rt, &convs, &cfg).unwrap()
+    // Per-run disk pool, removed on drop even when a run panics.
+    let pool = TempPool::new("t2_kv");
+    let mut cfg = ServeConfig { mode, ..cfg.clone() };
+    cfg.cache.disk_path = pool.path();
+    let convs = build_for(model.meta(), &cfg);
+    run_serving(&engine, model, &convs, &cfg).unwrap()
 }
 
 fn main() {
     println!("== Table 2: multi-turn HiCache serving (Baseline / Mooncake TE / TENT) ==");
-    let dir = tent::runtime::default_artifacts_dir();
-    if !Runtime::artifacts_available(&dir) {
-        println!("SKIPPED: model runtime unavailable (AOT artifacts + real PJRT backend required; this offline build stubs PJRT)");
-        return;
-    }
-    let rt = Runtime::load(&dir).unwrap();
-    let cfg = ServeConfig {
-        clients: 6,
-        turns: 4,
-        decode_tokens: 2,
-        seed: 7,
-        ..Default::default()
+    let args = Args::from_env();
+    let sel = ModelSelect::parse(&args.get_str("model", "auto"))
+        .expect("unknown --model (synthetic|pjrt|auto)");
+    let smoke = args.flag("smoke");
+    let cfg = if smoke {
+        ServeConfig {
+            clients: args.get_usize("clients", 2),
+            turns: args.get_usize("turns", 2),
+            decode_tokens: 1,
+            seed: 7,
+            model: sel,
+            cache: KvCacheConfig {
+                gpu_blocks_per_gpu: 2,
+                cpu_blocks: 32,
+                disk_blocks: 64,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    } else {
+        ServeConfig {
+            clients: args.get_usize("clients", 6),
+            turns: args.get_usize("turns", 4),
+            decode_tokens: 2,
+            seed: 7,
+            model: sel,
+            ..Default::default()
+        }
     };
+    // The config is the single source of truth for executor selection.
+    let model = make_executor(cfg.model).unwrap();
+    println!(
+        "model={} clients={} turns={}{}",
+        model.name(),
+        cfg.clients,
+        cfg.turns,
+        if smoke { " (smoke)" } else { "" }
+    );
 
-    let base = run_config(&rt, PolicyKind::Tent, ServeMode::Baseline, &cfg);
-    let te = run_config(&rt, PolicyKind::MooncakeTe, ServeMode::HiCache, &cfg);
-    let tnt = run_config(&rt, PolicyKind::Tent, ServeMode::HiCache, &cfg);
+    let base = run_config(model.as_ref(), PolicyKind::Tent, ServeMode::Baseline, &cfg);
+    let te = run_config(model.as_ref(), PolicyKind::MooncakeTe, ServeMode::HiCache, &cfg);
+    let tnt = run_config(model.as_ref(), PolicyKind::Tent, ServeMode::HiCache, &cfg);
 
     let turns = cfg.turns;
     println!(

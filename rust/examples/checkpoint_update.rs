@@ -1,10 +1,13 @@
-//! RL-pipeline weight update (Table 3 scenario): push the *real* TinyGPT
-//! checkpoint (`artifacts/params.bin`) from trainer host memory to 8
-//! inference ranks through the engine's pipelined ring broadcast, install
-//! the weights into the PJRT runtime on rank 0, and prove inference still
-//! works — comparing Mooncake TE vs TENT end to end.
+//! RL-pipeline weight update (Table 3 scenario): push a full checkpoint
+//! from trainer host memory to 8 inference ranks through the engine's
+//! pipelined ring broadcast, install the weights into a model executor on
+//! rank 0, and prove inference still works — comparing Mooncake TE vs TENT
+//! end to end.
 //!
-//! Requires `make artifacts`. Run:
+//! The payload is the real TinyGPT checkpoint (`artifacts/params.bin`) when
+//! the AOT artifacts exist, otherwise a deterministic synthetic checkpoint
+//! of exactly the executor's `param_count` — either way the bytes really
+//! ride the engine and really land in the model. Run:
 //!   `cargo run --release --example checkpoint_update`
 
 use std::sync::Arc;
@@ -12,7 +15,7 @@ use tent::cluster::Cluster;
 use tent::engine::{EngineConfig, TentEngine};
 use tent::log;
 use tent::policy::PolicyKind;
-use tent::runtime::Runtime;
+use tent::runtime::{make_executor, ModelSelect};
 use tent::serving::{CheckpointConfig, CheckpointEngine};
 
 fn run_update(policy: PolicyKind, payload: &[u8]) -> tent::Result<f64> {
@@ -35,20 +38,23 @@ fn run_update(policy: PolicyKind, payload: &[u8]) -> tent::Result<f64> {
 
 fn main() -> tent::Result<()> {
     tent::util::logging::init(log::Level::Warn);
+    let mut model = make_executor(ModelSelect::Auto)?;
     let dir = tent::runtime::default_artifacts_dir();
-    if !Runtime::artifacts_available(&dir) {
-        eprintln!(
-            "model runtime unavailable: needs AOT artifacts in {} AND a real PJRT \
-             backend (this offline build stubs PJRT — see README \"Model runtime status\")",
-            dir.display()
-        );
-        std::process::exit(2);
-    }
-    let mut rt = Runtime::load(&dir)?;
-    let payload = std::fs::read(dir.join("params.bin"))?;
+    let payload = if model.name() == "pjrt" {
+        std::fs::read(dir.join("params.bin"))?
+    } else {
+        // Deterministic synthetic checkpoint: the executor's full flat
+        // param vector as little-endian f32 bytes.
+        let mut out = Vec::with_capacity(model.meta().param_count * 4);
+        for i in 0..model.meta().param_count {
+            out.extend_from_slice(&(i as f32 * 1e-6).to_le_bytes());
+        }
+        out
+    };
     println!(
-        "checkpoint payload: {} (real TinyGPT weights)",
-        tent::util::fmt_bytes(payload.len() as u64)
+        "checkpoint payload: {} ({} weights)",
+        tent::util::fmt_bytes(payload.len() as u64),
+        model.name()
     );
 
     let te = run_update(PolicyKind::MooncakeTe, &payload)?;
@@ -57,8 +63,8 @@ fn main() -> tent::Result<()> {
     println!("  Mooncake TE : {te:.3}s");
     println!("  TENT        : {tent_s:.3}s   ({:.1}% faster)", (1.0 - tent_s / te) * 100.0);
 
-    // Close the loop: install the broadcast weights into the runtime and
-    // run a real forward pass.
+    // Close the loop: install the broadcast weights into the executor and
+    // run a forward pass.
     let cluster = Cluster::from_profile_nodes("h800_hgx", 1, tent::fabric::FabricConfig::default())?;
     let engine = Arc::new(TentEngine::new(&cluster, EngineConfig::default())?);
     let ce = CheckpointEngine::new(
@@ -72,10 +78,9 @@ fn main() -> tent::Result<()> {
     )?;
     ce.stage_weights(&payload)?;
     ce.update()?;
-    let new_params = ce.rank_params_f32(0)?;
-    rt.install_params(&new_params)?;
-    let tokens: Vec<i32> = (0..rt.meta.t_pre as i32).collect();
-    let (tok, _) = rt.prefill(&tokens, rt.empty_kv()?, 0)?;
+    ce.install_into(0, model.as_mut())?;
+    let tokens: Vec<i32> = (0..model.meta().t_pre as i32).collect();
+    let (tok, _) = model.prefill(&tokens, model.empty_kv()?, 0)?;
     println!("\nrank-0 inference after in-place update: next token = {tok} — OK");
     Ok(())
 }

@@ -1,15 +1,16 @@
 //! **End-to-end driver**: serve multi-turn LLM conversations with the full
 //! three-layer stack —
 //!
-//!   L1 Pallas decode-attention kernel (inside the AOT-compiled HLO)
-//!   L2 TinyGPT prefill/decode executed via PJRT from Rust
-//!   L3 TENT moving KV-cache blocks between GPU / CPU / SSD tiers
+//!   L1/L2 a pluggable model executor: the deterministic synthetic model
+//!         (default, no artifacts needed) or the AOT-compiled TinyGPT via
+//!         PJRT (`--model pjrt`, requires `make artifacts`)
+//!   L3    TENT moving KV-cache blocks between GPU / CPU / SSD tiers
 //!
 //! and report the Table-2 metrics (input throughput, avg/P90 TTFT,
 //! per-round TTFT) for three configurations: no-HiCache baseline,
 //! HiCache + Mooncake TE, and HiCache + TENT.
 //!
-//! Requires `make artifacts`. Run:
+//! Run:
 //!   `cargo run --release --example kvcache_serving [-- --clients 6 --turns 4]`
 
 use std::sync::Arc;
@@ -17,58 +18,46 @@ use tent::cluster::Cluster;
 use tent::engine::{EngineConfig, TentEngine};
 use tent::log;
 use tent::policy::PolicyKind;
-use tent::runtime::Runtime;
-use tent::serving::{build_conversations, run_serving, ServeConfig, ServeMode, ServeReport};
+use tent::runtime::{make_executor, ModelExecutor, ModelSelect};
+use tent::serving::{build_for, run_serving, ServeConfig, ServeMode, ServeReport};
 use tent::util::cli::Args;
+use tent::util::TempPool;
 
 fn run_config(
-    rt: &Runtime,
+    model: &dyn ModelExecutor,
     policy: PolicyKind,
     cfg: &ServeConfig,
 ) -> tent::Result<ServeReport> {
     // Fresh cluster per configuration so cache state never leaks across runs.
     let cluster = Cluster::from_profile_nodes("h800_hgx", 1, tent::fabric::FabricConfig::default())?;
     let engine = Arc::new(TentEngine::new(&cluster, EngineConfig::with_policy(policy))?);
-    let convs = build_conversations(
-        cfg.clients,
-        cfg.turns,
-        rt.meta.t_pre,
-        rt.meta.vocab as i32,
-        cfg.cache.gpus,
-        cfg.seed,
-        cfg.shared_system_prompt,
-    );
-    run_serving(&engine, rt, &convs, cfg)
+    let convs = build_for(model.meta(), cfg);
+    run_serving(&engine, model, &convs, cfg)
 }
 
 fn main() -> tent::Result<()> {
     tent::util::logging::init(log::Level::Warn);
     let args = Args::from_env();
-    let dir = tent::runtime::default_artifacts_dir();
-    if !Runtime::artifacts_available(&dir) {
-        eprintln!(
-            "model runtime unavailable: needs AOT artifacts in {} AND a real PJRT \
-             backend (this offline build stubs PJRT — see README \"Model runtime status\")",
-            dir.display()
-        );
-        std::process::exit(2);
-    }
-    let rt = Runtime::load(&dir)?;
-    println!(
-        "model: TinyGPT {} params, KV {}/request, {} tok/block",
-        rt.meta.param_count,
-        tent::util::fmt_bytes(rt.meta.kv_bytes),
-        rt.meta.t_pre
-    );
-
     let base_cfg = ServeConfig {
         clients: args.get_usize("clients", 6),
         turns: args.get_usize("turns", 4),
         decode_tokens: args.get_usize("decode", 2),
         seed: args.get_u64("seed", 7),
+        model: ModelSelect::parse(&args.get_str("model", "auto"))
+            .ok_or_else(|| tent::Error::Config("unknown --model (synthetic|pjrt|auto)".into()))?,
         ..Default::default()
     };
     let turns = base_cfg.turns;
+    // The config is the single source of truth for executor selection.
+    let model = make_executor(base_cfg.model)?;
+    let meta = model.meta();
+    println!(
+        "model: {} ({} params, KV {}/request, {} tok/block)",
+        model.name(),
+        meta.param_count,
+        tent::util::fmt_bytes(meta.kv_bytes),
+        meta.t_pre
+    );
 
     let configs = [
         ("Baseline (no HiCache)", PolicyKind::Tent, ServeMode::Baseline),
@@ -79,8 +68,11 @@ fn main() -> tent::Result<()> {
     let mut reports = Vec::new();
     for (label, policy, mode) in configs {
         println!("\n=== {label} ===");
-        let cfg = ServeConfig { mode, ..base_cfg.clone() };
-        let rep = run_config(&rt, policy, &cfg)?;
+        // Per-run disk pool, removed on drop even if a run errors.
+        let pool = TempPool::new("ex_kv");
+        let mut cfg = ServeConfig { mode, ..base_cfg.clone() };
+        cfg.cache.disk_path = pool.path();
+        let rep = run_config(model.as_ref(), policy, &cfg)?;
         println!(
             "  input throughput {:>8.0} tok/s | avg TTFT {:.3}s | P90 TTFT {:.3}s",
             rep.input_throughput_tok_s(),

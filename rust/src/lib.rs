@@ -24,8 +24,10 @@
 //! * [`policy`] — scheduling policies, including faithful re-implementations
 //!   of the paper's baselines (Mooncake TE, NIXL, UCCL-P2P, round-robin).
 //! * [`serving`], [`runtime`] — the disaggregated-LLM-serving consumer: a
-//!   HiCache-style multi-tier KV cache, request router, PJRT model runner
-//!   (AOT-compiled JAX/Pallas artifacts), and a checkpoint-engine analog.
+//!   HiCache-style multi-tier KV cache, request router, checkpoint-engine
+//!   analog, all generic over a `ModelExecutor` — the deterministic
+//!   synthetic model (artifact-free, tier-1) or the PJRT runner for the
+//!   AOT-compiled JAX/Pallas artifacts.
 //! * [`bench`] — TEBench, the microbenchmark harness of §5.1.3.
 //! * [`util`] — dependency-free building blocks (PRNG, histograms, EWMA,
 //!   JSON, lock-free MPSC ring, CLI).

@@ -3,8 +3,9 @@
 //! Subcommands:
 //!   topo        dump the discovered topology of a cluster profile
 //!   bench       run a TEBench microbenchmark
-//!   serve       run the multi-turn serving workload (needs artifacts/)
-//!   checkpoint  run a checkpoint-engine weight update
+//!   serve       run the multi-turn serving workload (synthetic model by
+//!               default; --model pjrt for the AOT-artifact path)
+//!   checkpoint  run a checkpoint-engine weight update + model install
 //!   failover    run a live failure-injection demo
 //!
 //! Common flags: --profile <name> --policy <tent|mooncake|nixl|uccl|rr>
@@ -19,10 +20,9 @@ use tent::cluster::Cluster;
 use tent::log;
 use tent::engine::{EngineConfig, TentEngine};
 use tent::policy::PolicyKind;
+use tent::runtime::{make_executor, ModelSelect};
 use tent::segment::Location;
-use tent::serving::{
-    build_conversations, CheckpointConfig, CheckpointEngine, ServeConfig, ServeMode,
-};
+use tent::serving::{CheckpointConfig, CheckpointEngine, ServeConfig, ServeMode};
 use tent::util::cli::Args;
 use tent::util::{fmt_bw, fmt_bytes};
 
@@ -35,9 +35,11 @@ COMMANDS:
   bench       TEBench: tentd bench --profile h800_hgx --policy tent \
                 --block 1M --batch 4 --threads 4 --iters 16 \
                 --src host --dst host
-  serve       Multi-turn serving (requires `make artifacts`):
-                tentd serve --mode hicache --policy tent --clients 4 --turns 3
-  checkpoint  Weight update: tentd checkpoint --payload 16M --ranks 8
+  serve       Multi-turn serving (no artifacts needed — synthetic model):
+                tentd serve --mode hicache --policy tent --clients 4 --turns 3 \
+                  [--model synthetic|pjrt|auto]
+  checkpoint  Weight update + in-place model install:
+                tentd checkpoint --ranks 8 [--payload 16M]
   failover    Failure injection demo: tentd failover --fail-at 500 --recover-at 1500
 
 COMMON FLAGS:
@@ -160,41 +162,30 @@ fn cmd_bench(args: &Args) -> tent::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> tent::Result<()> {
-    let dir = tent::runtime::default_artifacts_dir();
-    if !tent::runtime::Runtime::artifacts_available(&dir) {
-        return Err(tent::Error::Config(format!(
-            "model runtime unavailable: needs AOT artifacts in {} AND a real PJRT \
-             backend (this offline build stubs PJRT — see README)",
-            dir.display()
-        )));
-    }
-    let (_cluster, engine) = make_engine(args)?;
-    let rt = tent::runtime::Runtime::load(&dir)?;
     let mode = match args.get_str("mode", "hicache").as_str() {
         "baseline" => ServeMode::Baseline,
         _ => ServeMode::HiCache,
     };
-    let cfg = ServeConfig {
+    // Keep the disk pool out of /tmp once the run ends.
+    let pool = tent::util::TempPool::new("serve");
+    let mut cfg = ServeConfig {
         mode,
         clients: args.get_usize("clients", 4),
         turns: args.get_usize("turns", 3),
         decode_tokens: args.get_usize("decode", 2),
         seed: args.get_u64("seed", 7),
+        model: ModelSelect::parse(&args.get_str("model", "auto"))
+            .ok_or_else(|| tent::Error::Config("unknown --model (synthetic|pjrt|auto)".into()))?,
         ..Default::default()
     };
-    let convs = build_conversations(
-        cfg.clients,
-        cfg.turns,
-        rt.meta.t_pre,
-        rt.meta.vocab as i32,
-        cfg.cache.gpus,
-        cfg.seed,
-        cfg.shared_system_prompt,
-    );
-    let report = tent::serving::run_serving(&engine, &rt, &convs, &cfg)?;
+    cfg.cache.disk_path = pool.path();
+    let model = make_executor(cfg.model)?;
+    let (_cluster, engine) = make_engine(args)?;
+    let convs = tent::serving::build_for(model.meta(), &cfg);
+    let report = tent::serving::run_serving(&engine, model.as_ref(), &convs, &cfg)?;
     println!(
-        "mode={:?} policy={} clients={} turns={}",
-        report.mode, report.policy, cfg.clients, cfg.turns
+        "mode={:?} policy={} model={} clients={} turns={}",
+        report.mode, report.policy, report.model, cfg.clients, cfg.turns
     );
     println!(
         "input throughput: {:.0} tok/s   avg TTFT {:.3}s   P90 TTFT {:.3}s",
@@ -209,9 +200,15 @@ fn cmd_serve(args: &Args) -> tent::Result<()> {
 }
 
 fn cmd_checkpoint(args: &Args) -> tent::Result<()> {
+    let sel = ModelSelect::parse(&args.get_str("model", "auto"))
+        .ok_or_else(|| tent::Error::Config("unknown --model (synthetic|pjrt|auto)".into()))?;
+    let mut model = make_executor(sel)?;
     let (_cluster, engine) = make_engine(args)?;
+    // Default the payload to the executor's flat param vector so the
+    // broadcast can be installed and exercised end to end.
+    let param_bytes = model.meta().param_count as u64 * 4;
     let cfg = CheckpointConfig {
-        payload_bytes: args.get_u64("payload", 16 << 20),
+        payload_bytes: args.get_u64("payload", param_bytes),
         ranks: args.get_u64("ranks", 8) as u8,
         chunk_bytes: args.get_u64("chunk", 2 << 20),
         node: 0,
@@ -228,6 +225,20 @@ fn cmd_checkpoint(args: &Args) -> tent::Result<()> {
         fmt_bw(rep.bytes_moved as f64 / rep.seconds())
     );
     println!("verify: {}", ce.verify()?);
+    if cfg.payload_bytes == param_bytes {
+        // Close the RL-pipeline loop: install rank-0's weights into the
+        // model and prove inference still works.
+        ce.install_into(0, model.as_mut())?;
+        let t_pre = model.meta().t_pre;
+        let tokens: Vec<i32> = (0..t_pre as i32).collect();
+        let (tok, _) = model.prefill(&tokens, model.empty_kv()?, 0)?;
+        println!(
+            "rank-0 inference after in-place update ({}): next token = {tok} — OK",
+            model.name()
+        );
+    } else {
+        println!("(payload size != model params; skipping the install step)");
+    }
     Ok(())
 }
 

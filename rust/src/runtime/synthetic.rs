@@ -1,0 +1,393 @@
+//! Deterministic, artifact-free model executor.
+//!
+//! [`SyntheticModel`] implements [`ModelExecutor`] without any forward
+//! pass, AOT artifacts, or PJRT backend — which is what lets the entire
+//! HiCache serving stack (router, tiered KV cache, checkpoint install,
+//! Table-2 driver) run inside tier-1. RAPID-LLM-style reasoning applies:
+//! the data-movement behaviour under study (KV-tier movement ratios,
+//! cache-hit semantics, TTFT deltas between transfer policies) depends on
+//! the transfer engine, not on real logits. What the serving layer *does*
+//! need from a model is provided exactly:
+//!
+//! * **Bit-reproducible KV bytes.** A prefill chunk's KV content is a pure
+//!   function of (chunk tokens, chunk position, installed params): a PRNG
+//!   stream seeded from the FNV-1a hash of those inputs fills the chunk's
+//!   rows across all `2·L·H` planes of the working `[L, 2, H, T, D]`
+//!   layout. Recomputing a chunk therefore produces byte-identical cache
+//!   blocks to refetching it from any tier — the invariant every cache
+//!   roundtrip/transparency test asserts.
+//! * **KV-dependent predictions.** The next token hashes a strided sample
+//!   of the valid KV prefix (every plane, every 13th row), so continuing
+//!   from a cache-fetched KV state predicts identically to continuing from
+//!   a recomputed one, and a checkpoint update (new `params` digest)
+//!   changes the prediction function deterministically.
+//! * **Analytical compute delays.** Prefill/decode pace wall-clock by a
+//!   FLOPs model over `ModelMeta` (`2·param_count` MACs per token plus a
+//!   `4·L·H·D·position` attention-context term) against a configurable
+//!   synthetic accelerator rate, so TTFT comparisons (HiCache fetch vs
+//!   baseline recompute) remain meaningful at the fabric's 1:100 sim
+//!   scale.
+
+use super::{KvCache, ModelExecutor, ModelMeta};
+use crate::util::clock;
+use crate::util::prng::Pcg64;
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Synthetic-executor knobs.
+#[derive(Clone, Debug)]
+pub struct SyntheticConfig {
+    /// Synthetic accelerator rate in FLOP/s, in the fabric's 1:100 sim
+    /// units (default 1e11 ≈ 10 TFLOPS paper-scale — deliberately the
+    /// per-request share of an accelerator under continuous batching, not
+    /// peak, so TinyGPT-sized chunks keep the paper's compute:movement
+    /// ratio: one 128-token prefill chunk ≈ 11 ms vs ≈ 1–3 ms to fetch its
+    /// 1 MiB block over the simulated NVLink/PCIe tiers).
+    pub gpu_flops: f64,
+    /// Fixed per-call launch overhead (ns).
+    pub launch_overhead_ns: u64,
+    /// Pace calls by the FLOPs model. Disable for property tests that only
+    /// need cache/prediction semantics, not timing.
+    pub pace: bool,
+}
+
+impl Default for SyntheticConfig {
+    fn default() -> Self {
+        SyntheticConfig {
+            gpu_flops: 1e11,
+            launch_overhead_ns: 20_000,
+            pace: true,
+        }
+    }
+}
+
+/// FNV-1a over a byte slice, chained from `h`.
+fn fnv(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+
+/// The deterministic executor. See the module docs for the contract.
+pub struct SyntheticModel {
+    pub meta: ModelMeta,
+    cfg: SyntheticConfig,
+    /// FNV digest of the installed flat param vector's f32 bit patterns —
+    /// the only state a weight update needs to perturb predictions.
+    params_digest: AtomicU64,
+}
+
+impl Default for SyntheticModel {
+    fn default() -> Self {
+        SyntheticModel::new(ModelMeta::tiny_gpt(), SyntheticConfig::default())
+    }
+}
+
+impl SyntheticModel {
+    pub fn new(meta: ModelMeta, cfg: SyntheticConfig) -> SyntheticModel {
+        SyntheticModel {
+            meta,
+            cfg,
+            params_digest: AtomicU64::new(FNV_OFFSET),
+        }
+    }
+
+    /// TinyGPT-shaped model with pacing disabled — for tests that assert
+    /// semantics (determinism, cache bytes) and shouldn't burn wall-clock.
+    pub fn unpaced() -> SyntheticModel {
+        SyntheticModel::new(
+            ModelMeta::tiny_gpt(),
+            SyntheticConfig {
+                pace: false,
+                ..SyntheticConfig::default()
+            },
+        )
+    }
+
+    fn planes(&self) -> usize {
+        self.meta.layers * 2 * self.meta.heads
+    }
+
+    fn host_kv(&self, kv: KvCache) -> Result<Vec<u8>> {
+        match kv {
+            KvCache::Host(raw) if raw.len() as u64 == self.meta.kv_bytes => Ok(raw),
+            KvCache::Host(raw) => Err(Error::Config(format!(
+                "kv bytes {} != expected {}",
+                raw.len(),
+                self.meta.kv_bytes
+            ))),
+            KvCache::Literal(_) => Err(Error::Runtime(
+                "KV state was produced by a different executor (literal, not host bytes)".into(),
+            )),
+        }
+    }
+
+    /// Fill rows `[row, row + rows)` of every plane with the PRNG stream
+    /// derived from `seed` (plane index selects the stream). Every byte of
+    /// the region is written — including a sub-8-byte tail when `head_dim`
+    /// isn't even — so the recompute == refetch contract holds for any
+    /// `ModelMeta`, not just the built-in one.
+    fn fill_rows(&self, kv: &mut [u8], seed: u64, row: usize, rows: usize) {
+        let d4 = self.meta.head_dim * 4;
+        let plane_len = self.meta.t_max * d4;
+        for plane in 0..self.planes() {
+            let start = plane * plane_len + row * d4;
+            let mut rng = Pcg64::new(seed, plane as u64);
+            let mut words = kv[start..start + rows * d4].chunks_exact_mut(8);
+            for w in words.by_ref() {
+                w.copy_from_slice(&rng.next_u64().to_le_bytes());
+            }
+            let tail = words.into_remainder();
+            if !tail.is_empty() {
+                let last = rng.next_u64().to_le_bytes();
+                tail.copy_from_slice(&last[..tail.len()]);
+            }
+        }
+    }
+
+    /// Next-token prediction: hash the call inputs plus a strided sample of
+    /// the valid KV prefix (every plane, every 13th row), so the prediction
+    /// depends on cache *content* — a byte-exact tier refetch continues
+    /// identically to a recompute, and a corrupted fetch would not.
+    fn predict(&self, kv: &[u8], seq_len: usize, call_digest: u64) -> i32 {
+        let d4 = self.meta.head_dim * 4;
+        let plane_len = self.meta.t_max * d4;
+        let mut h = call_digest ^ self.params_digest.load(Ordering::Relaxed);
+        for plane in 0..self.planes() {
+            let base = plane * plane_len;
+            for t in (0..seq_len).step_by(13) {
+                let off = base + t * d4;
+                let end = (off + 8).min(kv.len());
+                h = fnv(h, &kv[off..end]);
+            }
+        }
+        (h % self.meta.vocab as u64) as i32
+    }
+
+    /// Analytical FLOPs for `count` tokens starting at absolute position
+    /// `offset`: `2·param_count` MACs per token through the weights plus an
+    /// attention-context term linear in the attended prefix length.
+    fn flops(&self, offset: usize, count: usize) -> f64 {
+        let weights = 2.0 * self.meta.param_count as f64 * count as f64;
+        let attn_coef = 4.0 * (self.meta.layers * self.meta.heads * self.meta.head_dim) as f64;
+        // sum of positions offset .. offset+count
+        let sum_pos = count as f64 * (2 * offset + count - 1) as f64 / 2.0;
+        weights + attn_coef * sum_pos
+    }
+
+    fn pace(&self, flops: f64) {
+        if !self.cfg.pace {
+            return;
+        }
+        let ns = self.cfg.launch_overhead_ns as f64 + flops / self.cfg.gpu_flops.max(1.0) * 1e9;
+        clock::sleep_ns(ns as u64);
+    }
+}
+
+impl ModelExecutor for SyntheticModel {
+    fn name(&self) -> &'static str {
+        "synthetic"
+    }
+
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn empty_kv(&self) -> Result<KvCache> {
+        Ok(KvCache::Host(vec![0u8; self.meta.kv_bytes as usize]))
+    }
+
+    fn kv_from_bytes(&self, raw: &[u8]) -> Result<KvCache> {
+        if raw.len() as u64 != self.meta.kv_bytes {
+            return Err(Error::Config(format!(
+                "kv bytes {} != expected {}",
+                raw.len(),
+                self.meta.kv_bytes
+            )));
+        }
+        Ok(KvCache::Host(raw.to_vec()))
+    }
+
+    fn prefill(&self, tokens: &[i32], kv: KvCache, offset: i32) -> Result<(i32, KvCache)> {
+        let t_pre = self.meta.t_pre;
+        if tokens.len() != t_pre {
+            return Err(Error::Config(format!(
+                "prefill needs {} tokens, got {}",
+                t_pre,
+                tokens.len()
+            )));
+        }
+        let offset = offset as usize;
+        if offset % t_pre != 0 || offset + t_pre > self.meta.t_max {
+            return Err(Error::Config(format!(
+                "prefill offset {offset} not a chunk boundary within t_max {}",
+                self.meta.t_max
+            )));
+        }
+        let mut raw = self.host_kv(kv)?;
+        // Chunk KV bytes = f(chunk tokens, chunk position, params) only —
+        // independent of surrounding KV content, so recompute == refetch.
+        let mut seed = self.params_digest.load(Ordering::Relaxed) ^ (offset as u64).rotate_left(32);
+        for t in tokens {
+            seed = fnv(seed, &t.to_le_bytes());
+        }
+        self.fill_rows(&mut raw, seed, offset, t_pre);
+        self.pace(self.flops(offset, t_pre));
+        let next = self.predict(&raw, offset + t_pre, seed.rotate_left(7));
+        Ok((next, KvCache::Host(raw)))
+    }
+
+    fn decode(&self, token: i32, kv: KvCache, pos: i32) -> Result<(i32, KvCache)> {
+        let pos = pos as usize;
+        if pos >= self.meta.t_max {
+            return Err(Error::Config(format!(
+                "decode position {pos} past t_max {}",
+                self.meta.t_max
+            )));
+        }
+        let mut raw = self.host_kv(kv)?;
+        let mut seed = self.params_digest.load(Ordering::Relaxed) ^ (pos as u64).rotate_left(32);
+        seed = fnv(seed, &token.to_le_bytes());
+        self.fill_rows(&mut raw, seed, pos, 1);
+        self.pace(self.flops(pos, 1));
+        let next = self.predict(&raw, pos + 1, seed.rotate_left(7));
+        Ok((next, KvCache::Host(raw)))
+    }
+
+    fn install_params(&mut self, flat: &[f32]) -> Result<()> {
+        if flat.len() != self.meta.param_count {
+            return Err(Error::Config(format!(
+                "param vector has {} elements, expected {}",
+                flat.len(),
+                self.meta.param_count
+            )));
+        }
+        let mut h = FNV_OFFSET;
+        for x in flat {
+            h = fnv(h, &x.to_bits().to_le_bytes());
+        }
+        self.params_digest.store(h, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tokens(meta: &ModelMeta, salt: i32) -> Vec<i32> {
+        (0..meta.t_pre as i32).map(|i| (i * 7 + salt) % meta.vocab as i32).collect()
+    }
+
+    #[test]
+    fn prefill_is_deterministic() {
+        let m = SyntheticModel::unpaced();
+        let t = tokens(&m.meta, 1);
+        let (a, kv_a) = m.prefill(&t, m.empty_kv().unwrap(), 0).unwrap();
+        let (b, kv_b) = m.prefill(&t, m.empty_kv().unwrap(), 0).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(kv_a.to_bytes().unwrap(), kv_b.to_bytes().unwrap());
+        assert!((0..m.meta.vocab as i32).contains(&a));
+    }
+
+    #[test]
+    fn different_tokens_different_kv() {
+        let m = SyntheticModel::unpaced();
+        let (_, kv_a) = m.prefill(&tokens(&m.meta, 1), m.empty_kv().unwrap(), 0).unwrap();
+        let (_, kv_b) = m.prefill(&tokens(&m.meta, 2), m.empty_kv().unwrap(), 0).unwrap();
+        assert_ne!(kv_a.to_bytes().unwrap(), kv_b.to_bytes().unwrap());
+    }
+
+    #[test]
+    fn kv_roundtrip_preserves_prediction() {
+        let m = SyntheticModel::unpaced();
+        let t1 = tokens(&m.meta, 1);
+        let t2 = tokens(&m.meta, 2);
+        let t_pre = m.meta.t_pre as i32;
+        let (_, kv) = m.prefill(&t1, m.empty_kv().unwrap(), 0).unwrap();
+        let bytes = kv.to_bytes().unwrap();
+        assert_eq!(bytes.len() as u64, m.meta.kv_bytes);
+        // Continuing from the roundtripped cache must match continuing from
+        // the original.
+        let kv2 = m.kv_from_bytes(&bytes).unwrap();
+        let (a, _) = m.prefill(&t2, kv2, t_pre).unwrap();
+        let (_, kv_orig) = m.prefill(&t1, m.empty_kv().unwrap(), 0).unwrap();
+        let (b, _) = m.prefill(&t2, kv_orig, t_pre).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn prediction_depends_on_cached_prefix_content() {
+        let m = SyntheticModel::unpaced();
+        let t_pre = m.meta.t_pre as i32;
+        let (_, kv) = m.prefill(&tokens(&m.meta, 1), m.empty_kv().unwrap(), 0).unwrap();
+        let mut bytes = kv.to_bytes().unwrap();
+        // Corrupt one sampled byte of the chunk-0 prefix: continuations must
+        // notice (a real tier would have returned wrong bytes). Predictions
+        // live in `% vocab` space, so check several independent
+        // continuations — a collision across all of them is impossible in
+        // practice (1 in vocab^4) and the run is fully deterministic.
+        let continue_with = |raw: &[u8], salt: i32| {
+            let (tok, _) = m
+                .prefill(&tokens(&m.meta, salt), m.kv_from_bytes(raw).unwrap(), t_pre)
+                .unwrap();
+            tok
+        };
+        let clean: Vec<i32> = (2..6).map(|s| continue_with(&bytes, s)).collect();
+        bytes[0] ^= 0xFF;
+        let corrupt: Vec<i32> = (2..6).map(|s| continue_with(&bytes, s)).collect();
+        assert_ne!(clean, corrupt, "corrupted prefix bytes went unnoticed");
+    }
+
+    #[test]
+    fn decode_chains_deterministically() {
+        let m = SyntheticModel::unpaced();
+        let t_pre = m.meta.t_pre as i32;
+        let run = || {
+            let (tok, kv) = m.prefill(&tokens(&m.meta, 3), m.empty_kv().unwrap(), 0).unwrap();
+            let (t1, kv) = m.decode(tok, kv, t_pre).unwrap();
+            let (t2, _) = m.decode(t1, kv, t_pre + 1).unwrap();
+            (tok, t1, t2)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn install_params_changes_predictions() {
+        let mut m = SyntheticModel::unpaced();
+        let t = tokens(&m.meta, 4);
+        let (_, kv_old) = m.prefill(&t, m.empty_kv().unwrap(), 0).unwrap();
+        assert!(m.install_params(&[0.0; 3]).is_err());
+        let params = vec![0.5f32; m.meta.param_count];
+        m.install_params(&params).unwrap();
+        let (after1, _) = m.prefill(&t, m.empty_kv().unwrap(), 0).unwrap();
+        let (after2, kv_new) = m.prefill(&t, m.empty_kv().unwrap(), 0).unwrap();
+        // Same weights → same prediction; the function itself moved, which
+        // shows up in the KV bytes even if `% vocab` happens to collide.
+        assert_eq!(after1, after2);
+        assert_ne!(kv_new.to_bytes().unwrap(), kv_old.to_bytes().unwrap());
+    }
+
+    #[test]
+    fn shape_and_bounds_are_enforced() {
+        let m = SyntheticModel::unpaced();
+        assert!(m.prefill(&[1, 2, 3], m.empty_kv().unwrap(), 0).is_err());
+        let t = tokens(&m.meta, 5);
+        assert!(m.prefill(&t, m.empty_kv().unwrap(), 1).is_err());
+        assert!(m.prefill(&t, m.empty_kv().unwrap(), m.meta.t_max as i32).is_err());
+        assert!(m.decode(1, m.empty_kv().unwrap(), m.meta.t_max as i32).is_err());
+        assert!(m.kv_from_bytes(&[0u8; 8]).is_err());
+    }
+
+    #[test]
+    fn flops_grow_with_context() {
+        let m = SyntheticModel::unpaced();
+        let early = m.flops(0, m.meta.t_pre);
+        let late = m.flops(m.meta.t_max - m.meta.t_pre, m.meta.t_pre);
+        assert!(late > early, "attention term must grow with position");
+    }
+}

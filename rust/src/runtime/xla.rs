@@ -9,8 +9,9 @@
 //!   byte plumbing and checkpoint payload paths exercise these.
 //! * **Compilation/execution** (`PjRtClient::cpu`, `compile`, `execute`)
 //!   return [`Error::Unavailable`]. [`is_available`] reports `false`, and
-//!   `Runtime::artifacts_available` folds that in, so every serving test,
-//!   bench, and example skips gracefully instead of failing.
+//!   `Runtime::artifacts_available` folds that in, so the PJRT-gated test
+//!   variants skip gracefully while everything else serves through the
+//!   synthetic `ModelExecutor` (see `runtime::synthetic`).
 //!
 //! Swapping in a real PJRT FFI binding means replacing this module and
 //! flipping `is_available()`; no caller changes (see ROADMAP "Open items").

@@ -162,7 +162,18 @@ impl CheckpointEngine {
         Ok(true)
     }
 
-    /// Read back one rank's weights as f32 (for Runtime::install_params).
+    /// Install rank `rank`'s broadcast weights into a model executor — the
+    /// RL-pipeline handoff: weights arrive over TENT, then serve traffic.
+    pub fn install_into(
+        &self,
+        rank: usize,
+        model: &mut dyn crate::runtime::ModelExecutor,
+    ) -> Result<()> {
+        let params = self.rank_params_f32(rank)?;
+        model.install_params(&params)
+    }
+
+    /// Read back one rank's weights as f32 (for `install_params`).
     pub fn rank_params_f32(&self, rank: usize) -> Result<Vec<f32>> {
         let seg = self.engine.segment(self.rank_segs[rank])?;
         let mut raw = vec![0u8; self.cfg.payload_bytes as usize];

@@ -18,6 +18,24 @@ pub struct Conversation {
     pub chunks: Vec<Vec<i32>>,
 }
 
+/// Build the conversation scripts a [`super::ServeConfig`] describes, shaped
+/// to a model's chunk size and vocab — the one-liner every serving driver
+/// (CLI, benches, examples, tests) shares.
+pub fn build_for(
+    meta: &crate::runtime::ModelMeta,
+    cfg: &super::ServeConfig,
+) -> Vec<Conversation> {
+    build_conversations(
+        cfg.clients,
+        cfg.turns,
+        meta.t_pre,
+        meta.vocab as i32,
+        cfg.cache.gpus,
+        cfg.seed,
+        cfg.shared_system_prompt,
+    )
+}
+
 /// Build deterministic conversation scripts.
 pub fn build_conversations(
     clients: usize,

@@ -16,6 +16,10 @@
 //! planes of `128·D` floats. Fetch/store therefore issue one batched
 //! transfer of 2·L·H sub-requests per block — exactly the gather/scatter
 //! shape of production KV movement.
+//!
+//! The store is model-free: it only needs a [`ModelMeta`] for block
+//! geometry (`ModelMeta::tiny_gpt()` works with no artifacts on disk), so
+//! every tier-movement property is testable in tier-1.
 
 use crate::engine::{TentEngine, TransferClass, TransferReq};
 use crate::runtime::ModelMeta;
@@ -199,6 +203,14 @@ impl TieredKvCache {
     }
     pub fn tokens_per_block(&self) -> usize {
         self.tokens_per_block
+    }
+    /// Number of strided planes per block (2·L·H).
+    pub fn plane_count(&self) -> usize {
+        self.stride_bases.len()
+    }
+    /// Bytes of one block within one plane (= T_pre · D · 4).
+    pub fn plane_chunk_bytes(&self) -> u64 {
+        self.plane_chunk_bytes
     }
 
     fn tick(&self) -> u64 {

@@ -6,6 +6,10 @@
 //! * [`client`] — deterministic conversation workload generator.
 //! * [`checkpoint`] — Moonshot-Checkpoint-Engine analogue: pipelined
 //!   weight-update broadcast (Table 3).
+//!
+//! Everything here is generic over [`crate::runtime::ModelExecutor`], so
+//! the whole stack runs in tier-1 on the synthetic executor and switches to
+//! PJRT (`--model pjrt`) with no caller changes.
 
 pub mod checkpoint;
 pub mod client;
@@ -13,6 +17,6 @@ pub mod kvcache;
 pub mod router;
 
 pub use checkpoint::{CheckpointConfig, CheckpointEngine, UpdateReport};
-pub use client::{build_conversations, Conversation};
+pub use client::{build_conversations, build_for, Conversation};
 pub use kvcache::{KvCacheConfig, TieredKvCache};
 pub use router::{run_serving, ServeConfig, ServeMode, ServeReport};

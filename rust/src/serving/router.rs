@@ -1,5 +1,5 @@
 //! The serving router: turn-level request loop combining the tiered KV
-//! cache, the TENT data plane, and the PJRT model runner.
+//! cache, the TENT data plane, and a pluggable model executor.
 //!
 //! This is the Table-2 workload: multi-turn conversations where each turn's
 //! TTFT is cache-lookup + KV fetch (over the transfer engine) + prefill of
@@ -8,12 +8,17 @@
 //! * `Baseline`  — no HiCache: every turn recomputes the full history.
 //! * `HiCache` + Mooncake TE engine — cache hits, state-blind RDMA fetches.
 //! * `HiCache` + TENT engine — cache hits, NVLink/PCIe-aware slice spraying.
+//!
+//! The model side is any [`ModelExecutor`] — the PJRT `Runtime` when AOT
+//! artifacts + a real backend exist, otherwise the deterministic
+//! `SyntheticModel` (`ServeConfig::model`, default `Auto`), so the whole
+//! loop runs in tier-1 with no artifacts on disk.
 
 use super::client::Conversation;
 use super::kvcache::{hash_chunks, KvCacheConfig, TieredKvCache};
 use crate::engine::TentEngine;
 use crate::log;
-use crate::runtime::Runtime;
+use crate::runtime::{ModelExecutor, ModelSelect};
 use crate::segment::Location;
 use crate::util::clock;
 use crate::Result;
@@ -39,6 +44,10 @@ pub struct ServeConfig {
     pub cache: KvCacheConfig,
     pub seed: u64,
     pub shared_system_prompt: bool,
+    /// Which model executor to serve with (`Auto` = PJRT when artifacts are
+    /// available, synthetic otherwise). Consumed by
+    /// `runtime::make_executor`; `run_serving` itself takes the executor.
+    pub model: ModelSelect,
 }
 
 impl Default for ServeConfig {
@@ -51,6 +60,7 @@ impl Default for ServeConfig {
             cache: KvCacheConfig::default(),
             seed: 7,
             shared_system_prompt: true,
+            model: ModelSelect::Auto,
         }
     }
 }
@@ -74,12 +84,25 @@ pub struct TurnMetrics {
 pub struct ServeReport {
     pub mode: ServeMode,
     pub policy: &'static str,
+    /// Executor that served the run ("pjrt" / "synthetic").
+    pub model: &'static str,
     pub turns: Vec<TurnMetrics>,
     pub wall_ns: u64,
     pub input_tokens_total: usize,
 }
 
 impl ServeReport {
+    /// The semantic (timing-free) turn table: `(client, turn, input_tokens,
+    /// cached_blocks, fetched_bytes)` per served turn. Two runs with the
+    /// same `ServeConfig::seed` and executor must produce identical tables
+    /// — the determinism contract the property tests assert.
+    pub fn turn_table(&self) -> Vec<(usize, usize, usize, usize, u64)> {
+        self.turns
+            .iter()
+            .map(|t| (t.client, t.turn, t.input_tokens, t.cached_blocks, t.fetched_bytes))
+            .collect()
+    }
+
     pub fn input_throughput_tok_s(&self) -> f64 {
         self.input_tokens_total as f64 / (self.wall_ns as f64 / 1e9)
     }
@@ -116,11 +139,22 @@ impl ServeReport {
 /// Serve scripted conversations and measure.
 pub fn run_serving(
     engine: &Arc<TentEngine>,
-    rt: &Runtime,
+    model: &dyn ModelExecutor,
     conversations: &[Conversation],
     cfg: &ServeConfig,
 ) -> Result<ServeReport> {
-    let meta = &rt.meta;
+    let meta = model.meta();
+    // The last turn's first decode lands at turns·t_pre, so the history
+    // must leave at least one position of context headroom. Fail up front
+    // with a clear message instead of erroring deep inside the turn loop.
+    let max_turns = (meta.t_max / meta.t_pre).saturating_sub(1);
+    if cfg.turns > max_turns {
+        return Err(crate::Error::Config(format!(
+            "turns {} exceeds the model's context budget (t_max {} / t_pre {} chunks, minus \
+             decode headroom): max {max_turns}",
+            cfg.turns, meta.t_max, meta.t_pre
+        )));
+    }
     let cache = match cfg.mode {
         ServeMode::HiCache => Some(TieredKvCache::new(engine, meta, cfg.cache.clone())?),
         ServeMode::Baseline => None,
@@ -143,7 +177,7 @@ pub fn run_serving(
     for t in 0..cfg.turns {
         let arrivals = clock::now_ns();
         for conv in conversations {
-            let m = serve_turn(engine, rt, cache.as_ref(), &working, conv, t, cfg, arrivals)?;
+            let m = serve_turn(engine, model, cache.as_ref(), &working, conv, t, cfg, arrivals)?;
             input_tokens_total += m.input_tokens;
             metrics.push(m);
         }
@@ -155,6 +189,7 @@ pub fn run_serving(
             crate::policy::PolicyKind::Tent => "TENT",
             k => k.name(),
         },
+        model: model.name(),
         turns: metrics,
         wall_ns: clock::now_ns() - wall_start,
         input_tokens_total,
@@ -164,7 +199,7 @@ pub fn run_serving(
 #[allow(clippy::too_many_arguments)]
 fn serve_turn(
     engine: &Arc<TentEngine>,
-    rt: &Runtime,
+    model: &dyn ModelExecutor,
     cache: Option<&TieredKvCache>,
     working: &[crate::segment::SegmentId],
     conv: &Conversation,
@@ -172,7 +207,7 @@ fn serve_turn(
     cfg: &ServeConfig,
     arrival_ns: u64,
 ) -> Result<TurnMetrics> {
-    let meta = &rt.meta;
+    let meta = model.meta();
     let t_pre = meta.t_pre;
     let history = &conv.chunks[..=turn]; // chunks 0..=turn
     let input_tokens = t_pre; // new tokens this turn
@@ -192,29 +227,29 @@ fn serve_turn(
             // Fetch hit blocks into the working segment via the engine.
             fetched_bytes = cache.fetch_prefix(engine, reusable, hit, wseg)?;
             let kv = if hit > 0 {
-                // Materialize the working segment into the runtime KV.
+                // Materialize the working segment into the executor's KV.
                 let seg = engine.segment(wseg)?;
                 let mut raw = vec![0u8; meta.kv_bytes as usize];
                 seg.read_at(0, &mut raw)?;
-                rt.kv_from_bytes(&raw)?
+                model.kv_from_bytes(&raw)?
             } else {
-                rt.empty_kv()?
+                model.empty_kv()?
             };
             (kv, 0i32, hit)
         }
-        None => (rt.empty_kv()?, 0i32, 0),
+        None => (model.empty_kv()?, 0i32, 0),
     };
 
     // 2. Prefill uncached chunks (all of them for Baseline).
     for (k, chunk) in history.iter().enumerate().skip(start_chunk) {
-        let (tok, kv2) = rt.prefill(chunk, kv, (k * t_pre) as i32)?;
+        let (tok, kv2) = model.prefill(chunk, kv, (k * t_pre) as i32)?;
         kv = kv2;
         next_token = tok;
     }
 
     // 3. First decode step → TTFT.
     let seq_len = (history.len() * t_pre) as i32;
-    let (mut tok, mut kv_cur) = rt.decode(next_token, kv, seq_len)?;
+    let (mut tok, mut kv_cur) = model.decode(next_token, kv, seq_len)?;
     let ttft_ns = clock::now_ns() - arrival_ns;
 
     // 4. Remaining decode steps → TPOT. (Generated tokens are not appended
@@ -226,7 +261,7 @@ fn serve_turn(
         if (pos as usize) >= meta.t_max {
             break;
         }
-        let (t2, kv2) = rt.decode(tok, kv_cur, pos)?;
+        let (t2, kv2) = model.decode(tok, kv_cur, pos)?;
         tok = t2;
         kv_cur = kv2;
         tpot_total += clock::now_ns() - t0;
@@ -242,8 +277,12 @@ fn serve_turn(
     let store_start = clock::now_ns();
     if let Some(cache) = cache {
         let seg = engine.segment(wseg)?;
-        let raw = kv_cur.to_bytes()?;
-        seg.write_at(0, &raw)?;
+        // Borrow host-resident KV bytes directly (synthetic executor);
+        // only the PJRT literal path pays a conversion copy.
+        match kv_cur.as_host_bytes() {
+            Some(raw) => seg.write_at(0, raw)?,
+            None => seg.write_at(0, &kv_cur.to_bytes()?)?,
+        }
         let hashes = hash_chunks(history);
         for (k, h) in hashes.iter().enumerate().skip(start_chunk) {
             // Home blocks by content hash — spreads the pool across GPUs,
@@ -292,6 +331,7 @@ mod tests {
         let r = ServeReport {
             mode: ServeMode::HiCache,
             policy: "TENT",
+            model: "synthetic",
             turns: (1..=10u64).map(|i| mk(i * 1_000_000_000, (i - 1) as usize)).collect(),
             wall_ns: 10_000_000_000,
             input_tokens_total: 1280,
@@ -301,5 +341,7 @@ mod tests {
         assert!((r.round_avg_ttft_s(1) - 1.0).abs() < 1e-9);
         assert!((r.input_throughput_tok_s() - 128.0).abs() < 1e-9);
         assert_eq!(r.round_avg_ttft_s(99), 0.0);
+        assert_eq!(r.turn_table().len(), 10);
+        assert_eq!(r.turn_table()[0], (0, 0, 128, 0, 0));
     }
 }

@@ -15,6 +15,42 @@ pub mod logging;
 pub mod prng;
 pub mod ring;
 
+/// RAII guard for a disk-pool backing file in `$TMPDIR`.
+///
+/// Serving tests and benches used to `remove_file` their KV disk pools at
+/// the end of the test body — which never runs when an assertion fails, so
+/// failed runs leaked multi-hundred-MiB pool files into `/tmp`. `TempPool`
+/// removes the file on `Drop`, which runs during unwind too. Paths are
+/// unique per (pid, tag, sequence), so parallel tests in one binary never
+/// collide.
+pub struct TempPool {
+    path: std::path::PathBuf,
+}
+
+impl TempPool {
+    /// Reserve a fresh pool path (the file itself is created by whoever
+    /// registers the file segment).
+    pub fn new(tag: &str) -> TempPool {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        TempPool {
+            path: std::env::temp_dir()
+                .join(format!("tent_{tag}_{}_{n}.pool", std::process::id())),
+        }
+    }
+
+    pub fn path(&self) -> std::path::PathBuf {
+        self.path.clone()
+    }
+}
+
+impl Drop for TempPool {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
 /// Format a byte count human-readably (e.g. `64.0 KiB`).
 pub fn fmt_bytes(n: u64) -> String {
     const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
@@ -52,6 +88,24 @@ pub fn fmt_ns(ns: u64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn temp_pool_removes_file_on_drop() {
+        let path = {
+            let pool = TempPool::new("utest");
+            std::fs::write(pool.path(), b"x").unwrap();
+            assert!(pool.path().exists());
+            pool.path()
+        };
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn temp_pool_paths_are_unique() {
+        let a = TempPool::new("utest");
+        let b = TempPool::new("utest");
+        assert_ne!(a.path(), b.path());
+    }
 
     #[test]
     fn bytes_formatting() {

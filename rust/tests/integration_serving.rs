@@ -1,15 +1,25 @@
-//! Serving-stack integration over the full three layers. Tests that need
-//! the AOT artifacts skip gracefully when `make artifacts` hasn't run.
+//! Serving-stack integration over the full three layers, generic over the
+//! model executor.
+//!
+//! Every scenario runs twice:
+//!
+//! * `synthetic_*` — against the deterministic artifact-free
+//!   `SyntheticModel`, always on in tier-1 (this is the Table-2 serving
+//!   stack with zero "model runtime unavailable" skips);
+//! * `pjrt_*` — against the PJRT `Runtime`, still skipping until a real
+//!   backend + AOT artifacts exist (the ROADMAP "Real PJRT binding" item
+//!   un-skips them with no changes here).
 
 use std::sync::Arc;
 use tent::cluster::Cluster;
 use tent::engine::{EngineConfig, TentEngine};
 use tent::policy::PolicyKind;
-use tent::runtime::Runtime;
+use tent::runtime::{ModelExecutor, Runtime, SyntheticModel};
 use tent::serving::kvcache::{hash_chunks, KvCacheConfig, TieredKvCache};
 use tent::serving::{
-    build_conversations, run_serving, CheckpointConfig, CheckpointEngine, ServeConfig, ServeMode,
+    build_for, run_serving, CheckpointConfig, CheckpointEngine, ServeConfig, ServeMode,
 };
+use tent::util::TempPool;
 
 fn artifacts() -> Option<Runtime> {
     let dir = tent::runtime::default_artifacts_dir();
@@ -27,7 +37,7 @@ fn engine(policy: PolicyKind) -> Arc<TentEngine> {
     Arc::new(TentEngine::new(&c, EngineConfig::with_policy(policy)).unwrap())
 }
 
-fn small_cfg(mode: ServeMode) -> ServeConfig {
+fn small_cfg(mode: ServeMode, pool: &TempPool) -> ServeConfig {
     ServeConfig {
         mode,
         clients: 3,
@@ -38,21 +48,21 @@ fn small_cfg(mode: ServeMode) -> ServeConfig {
             gpu_blocks_per_gpu: 2,
             cpu_blocks: 64,
             disk_blocks: 128,
-            disk_path: std::env::temp_dir()
-                .join(format!("tent_itest_kv_{}.pool", std::process::id())),
+            disk_path: pool.path(),
             ..Default::default()
         },
-        shared_system_prompt: true,
+        ..Default::default()
     }
 }
 
-#[test]
-fn hicache_serving_end_to_end_with_cache_hits() {
-    let Some(rt) = artifacts() else { return };
+// ---- scenario 1: end-to-end HiCache serving with cache hits ----
+
+fn scenario_cache_hits(model: &dyn ModelExecutor) {
     let e = engine(PolicyKind::Tent);
-    let cfg = small_cfg(ServeMode::HiCache);
-    let convs = build_conversations(cfg.clients, cfg.turns, rt.meta.t_pre, 4096, 8, cfg.seed, true);
-    let rep = run_serving(&e, &rt, &convs, &cfg).unwrap();
+    let pool = TempPool::new("it_kv");
+    let cfg = small_cfg(ServeMode::HiCache, &pool);
+    let convs = build_for(model.meta(), &cfg);
+    let rep = run_serving(&e, model, &convs, &cfg).unwrap();
     assert_eq!(rep.turns.len(), cfg.clients * cfg.turns);
     // Turn 0 has nothing to reuse; later turns must hit the cache.
     let t0_hits: usize = rep.turns.iter().filter(|t| t.turn == 0).map(|t| t.cached_blocks).sum();
@@ -62,25 +72,36 @@ fn hicache_serving_end_to_end_with_cache_hits() {
     // And real bytes flowed through the engine for those hits.
     let fetched: u64 = rep.turns.iter().map(|t| t.fetched_bytes).sum();
     assert!(fetched > 0);
-    std::fs::remove_file(&cfg.cache.disk_path).ok();
 }
 
 #[test]
-fn hicache_ttft_beats_baseline_in_later_rounds() {
+fn synthetic_hicache_serving_end_to_end_with_cache_hits() {
+    scenario_cache_hits(&SyntheticModel::unpaced());
+}
+
+#[test]
+fn pjrt_hicache_serving_end_to_end_with_cache_hits() {
     let Some(rt) = artifacts() else { return };
-    let base_cfg = small_cfg(ServeMode::Baseline);
+    scenario_cache_hits(&rt);
+}
+
+// ---- scenario 2: HiCache TTFT beats the recompute baseline ----
+
+fn scenario_ttft_beats_baseline(model: &dyn ModelExecutor) {
+    let base_pool = TempPool::new("it_kv");
+    let hc_pool = TempPool::new("it_kv");
+    let base_cfg = small_cfg(ServeMode::Baseline, &base_pool);
     let hc_cfg = ServeConfig {
         cache: KvCacheConfig {
-            disk_path: std::env::temp_dir()
-                .join(format!("tent_itest_kv2_{}.pool", std::process::id())),
+            disk_path: hc_pool.path(),
             ..base_cfg.cache.clone()
         },
         mode: ServeMode::HiCache,
         ..base_cfg.clone()
     };
-    let convs = build_conversations(base_cfg.clients, base_cfg.turns, rt.meta.t_pre, 4096, 8, 11, true);
-    let base = run_serving(&engine(PolicyKind::Tent), &rt, &convs, &base_cfg).unwrap();
-    let hc = run_serving(&engine(PolicyKind::Tent), &rt, &convs, &hc_cfg).unwrap();
+    let convs = build_for(model.meta(), &base_cfg);
+    let base = run_serving(&engine(PolicyKind::Tent), model, &convs, &base_cfg).unwrap();
+    let hc = run_serving(&engine(PolicyKind::Tent), model, &convs, &hc_cfg).unwrap();
     let last = base_cfg.turns;
     assert!(
         hc.round_avg_ttft_s(last) < base.round_avg_ttft_s(last),
@@ -88,57 +109,74 @@ fn hicache_ttft_beats_baseline_in_later_rounds() {
         hc.round_avg_ttft_s(last),
         base.round_avg_ttft_s(last)
     );
-    std::fs::remove_file(&hc_cfg.cache.disk_path).ok();
 }
 
 #[test]
-fn serving_results_identical_across_policies() {
+fn synthetic_hicache_ttft_beats_baseline_in_later_rounds() {
+    // Paced: the TTFT comparison is the point, so the analytical compute
+    // delays must be on.
+    scenario_ttft_beats_baseline(&SyntheticModel::default());
+}
+
+#[test]
+fn pjrt_hicache_ttft_beats_baseline_in_later_rounds() {
+    let Some(rt) = artifacts() else { return };
+    scenario_ttft_beats_baseline(&rt);
+}
+
+// ---- scenario 3: the transfer policy is transparent to serving ----
+
+fn scenario_policy_transparency(model: &dyn ModelExecutor) {
     // The transfer engine must be *transparent*: serving output (cache hit
     // pattern, token counts) is identical under TENT and TE; only timing
     // differs.
-    let Some(rt) = artifacts() else { return };
-    let mk_cfg = |tag: &str| ServeConfig {
-        cache: KvCacheConfig {
-            disk_path: std::env::temp_dir()
-                .join(format!("tent_itest_kv3{tag}_{}.pool", std::process::id())),
-            ..small_cfg(ServeMode::HiCache).cache
-        },
-        ..small_cfg(ServeMode::HiCache)
-    };
-    let convs = build_conversations(3, 3, rt.meta.t_pre, 4096, 8, 11, true);
-    let cfg_a = mk_cfg("a");
-    let cfg_b = mk_cfg("b");
-    let a = run_serving(&engine(PolicyKind::Tent), &rt, &convs, &cfg_a).unwrap();
-    let b = run_serving(&engine(PolicyKind::MooncakeTe), &rt, &convs, &cfg_b).unwrap();
-    let hits = |r: &tent::serving::ServeReport| -> Vec<(usize, usize, usize)> {
-        r.turns.iter().map(|t| (t.client, t.turn, t.cached_blocks)).collect()
-    };
-    assert_eq!(hits(&a), hits(&b), "policy must not change cache semantics");
-    std::fs::remove_file(&cfg_a.cache.disk_path).ok();
-    std::fs::remove_file(&cfg_b.cache.disk_path).ok();
+    let pool_a = TempPool::new("it_kv");
+    let pool_b = TempPool::new("it_kv");
+    let cfg_a = small_cfg(ServeMode::HiCache, &pool_a);
+    let cfg_b = small_cfg(ServeMode::HiCache, &pool_b);
+    let convs = build_for(model.meta(), &cfg_a);
+    let a = run_serving(&engine(PolicyKind::Tent), model, &convs, &cfg_a).unwrap();
+    let b = run_serving(&engine(PolicyKind::MooncakeTe), model, &convs, &cfg_b).unwrap();
+    assert_eq!(
+        a.turn_table(),
+        b.turn_table(),
+        "policy must not change cache semantics"
+    );
 }
 
 #[test]
-fn tiered_cache_spill_and_refetch_roundtrip() {
-    // Pure L3 test (no model): store more blocks than GPU capacity, verify
-    // eviction to CPU + refetch returns identical bytes.
+fn synthetic_serving_results_identical_across_policies() {
+    scenario_policy_transparency(&SyntheticModel::unpaced());
+}
+
+#[test]
+fn pjrt_serving_results_identical_across_policies() {
     let Some(rt) = artifacts() else { return };
+    scenario_policy_transparency(&rt);
+}
+
+// ---- scenario 4: tiered spill + refetch roundtrip (no model calls) ----
+
+fn scenario_spill_refetch(meta: &tent::runtime::ModelMeta) {
+    // Pure L3 test: store more blocks than GPU capacity, verify eviction to
+    // CPU + refetch returns identical bytes.
     let e = engine(PolicyKind::Tent);
+    let pool = TempPool::new("it_kv");
     let cfg = KvCacheConfig {
         gpu_blocks_per_gpu: 1,
         cpu_blocks: 32,
         disk_blocks: 64,
-        disk_path: std::env::temp_dir().join(format!("tent_itest_kv4_{}.pool", std::process::id())),
+        disk_path: pool.path(),
         ..Default::default()
     };
-    let cache = TieredKvCache::new(&e, &rt.meta, cfg.clone()).unwrap();
+    let cache = TieredKvCache::new(&e, meta, cfg).unwrap();
     let working = e
-        .register_segment(tent::segment::Location::device(0, 0), rt.meta.kv_bytes)
+        .register_segment(tent::segment::Location::device(0, 0), meta.kv_bytes)
         .unwrap();
     // Fill the working segment with a pattern and store 4 chunks under one home GPU.
-    let pattern: Vec<u8> = (0..rt.meta.kv_bytes as usize).map(|i| (i % 239) as u8).collect();
+    let pattern: Vec<u8> = (0..meta.kv_bytes as usize).map(|i| (i % 239) as u8).collect();
     e.segment(working).unwrap().write_at(0, &pattern).unwrap();
-    let chunks: Vec<Vec<i32>> = (0..4).map(|i| vec![i as i32; rt.meta.t_pre]).collect();
+    let chunks: Vec<Vec<i32>> = (0..4).map(|i| vec![i as i32; meta.t_pre]).collect();
     let hashes = hash_chunks(&chunks);
     for (k, h) in hashes.iter().enumerate() {
         cache.store_block(&e, *h, 0, working, k).unwrap();
@@ -147,30 +185,39 @@ fn tiered_cache_spill_and_refetch_roundtrip() {
     assert!(cache.stats.gpu_evictions.load(std::sync::atomic::Ordering::Relaxed) >= 3);
     assert_eq!(cache.lookup_prefix(&hashes), 4);
     // Wipe the working segment, refetch all 4, compare the strided planes.
-    let zero = vec![0u8; rt.meta.kv_bytes as usize];
+    let zero = vec![0u8; meta.kv_bytes as usize];
     e.segment(working).unwrap().write_at(0, &zero).unwrap();
     cache.fetch_prefix(&e, &hashes, 4, working).unwrap();
-    let mut got = vec![0u8; rt.meta.kv_bytes as usize];
+    let mut got = vec![0u8; meta.kv_bytes as usize];
     e.segment(working).unwrap().read_at(0, &mut got).unwrap();
     // Positions belonging to the first 4 chunks must match the pattern.
-    let d = rt.meta.head_dim;
-    let plane_len = rt.meta.t_max * d * 4;
-    let chunk_len = rt.meta.t_pre * d * 4;
-    for plane in 0..(rt.meta.layers * 2 * rt.meta.heads) {
+    let d = meta.head_dim;
+    let plane_len = meta.t_max * d * 4;
+    let chunk_len = meta.t_pre * d * 4;
+    for plane in 0..(meta.layers * 2 * meta.heads) {
         let base = plane * plane_len;
         for k in 0..4 {
             let s = base + k * chunk_len;
             assert_eq!(&got[s..s + chunk_len], &pattern[s..s + chunk_len], "plane {plane} chunk {k}");
         }
     }
-    std::fs::remove_file(&cfg.disk_path).ok();
 }
 
 #[test]
-fn checkpoint_update_then_inference() {
-    let Some(mut rt) = artifacts() else { return };
+fn synthetic_tiered_cache_spill_and_refetch_roundtrip() {
+    scenario_spill_refetch(&tent::runtime::ModelMeta::tiny_gpt());
+}
+
+#[test]
+fn pjrt_tiered_cache_spill_and_refetch_roundtrip() {
+    let Some(rt) = artifacts() else { return };
+    scenario_spill_refetch(&rt.meta);
+}
+
+// ---- scenario 5: checkpoint update, then inference with new weights ----
+
+fn scenario_checkpoint_then_inference(model: &mut dyn ModelExecutor, payload: Vec<u8>) {
     let e = engine(PolicyKind::Tent);
-    let payload = std::fs::read(rt.artifacts_dir.join("params.bin")).unwrap();
     let ce = CheckpointEngine::new(
         Arc::clone(&e),
         CheckpointConfig {
@@ -186,9 +233,24 @@ fn checkpoint_update_then_inference() {
     assert!(ce.verify().unwrap());
     assert!(rep.seconds() > 0.0);
     // Install rank-2's weights and run a forward pass.
-    let params = ce.rank_params_f32(2).unwrap();
-    rt.install_params(&params).unwrap();
-    let tokens: Vec<i32> = (0..rt.meta.t_pre as i32).collect();
-    let (tok, _) = rt.prefill(&tokens, rt.empty_kv().unwrap(), 0).unwrap();
-    assert!((0..rt.meta.vocab as i32).contains(&tok));
+    ce.install_into(2, model).unwrap();
+    let meta = model.meta().clone();
+    let tokens: Vec<i32> = (0..meta.t_pre as i32).collect();
+    let (tok, _) = model.prefill(&tokens, model.empty_kv().unwrap(), 0).unwrap();
+    assert!((0..meta.vocab as i32).contains(&tok));
+}
+
+#[test]
+fn synthetic_checkpoint_update_then_inference() {
+    let mut model = SyntheticModel::unpaced();
+    let n = model.meta.param_count * 4;
+    let payload: Vec<u8> = (0..n).map(|i| (i % 247) as u8).collect();
+    scenario_checkpoint_then_inference(&mut model, payload);
+}
+
+#[test]
+fn pjrt_checkpoint_update_then_inference() {
+    let Some(mut rt) = artifacts() else { return };
+    let payload = std::fs::read(rt.artifacts_dir.join("params.bin")).unwrap();
+    scenario_checkpoint_then_inference(&mut rt, payload);
 }
