@@ -4,15 +4,22 @@
 //! Paper: with all eight GPUs issuing, TENT sustains 144 GB/s (~77% of
 //! peak, >2× Mooncake TE) and saturates with only 16 threads. Sim peak =
 //! 8 rails × 250 MB/s = 2 GB/s aggregate.
+//!
+//! `--engines N` switches to the *engine*-scaling axis: instead of more
+//! submission threads inside one engine, a `cluster::Fleet` runs 1→N
+//! engine instances (one per node, shared fabric) with a fixed number of
+//! submitters each — so thread scaling and engine scaling are separately
+//! measurable.
 
 use std::sync::Arc;
 use std::time::Duration;
 use tent::bench::{self, TeBenchConfig, ThreadPair};
-use tent::cluster::Cluster;
+use tent::cluster::{Cluster, Fleet, FleetConfig, WorkloadConfig};
 use tent::engine::{EngineConfig, TentEngine, TransferOp};
 use tent::policy::PolicyKind;
 use tent::segment::Location;
-use tent::util::fmt_bw;
+use tent::util::cli::Args;
+use tent::util::{fmt_bw, fmt_ns};
 
 const POLICIES: [PolicyKind; 3] = [PolicyKind::Tent, PolicyKind::MooncakeTe, PolicyKind::Nixl];
 const THREADS: [usize; 6] = [1, 2, 4, 8, 16, 32];
@@ -43,7 +50,50 @@ fn bench_one(policy: PolicyKind, threads: usize) -> tent::Result<f64> {
     Ok(r.throughput())
 }
 
+fn engines_axis(max_engines: u16) {
+    println!("== Figure 7b: goodput vs engine count (fleet, shared fabric, 2 submitters/engine) ==");
+    println!(
+        "{:<9} {:>12} {:>9} {:>12} {:>12} {:>8}",
+        "engines", "goodput", "fair", "fetchP50", "fetchP99", "workers"
+    );
+    let mut points: Vec<u16> = Vec::new();
+    let mut p = 1u16;
+    while p < max_engines {
+        points.push(p);
+        p *= 2;
+    }
+    points.push(max_engines); // always measure the requested count
+    for n in points {
+        let fleet = Fleet::new(FleetConfig::new("h800_hgx", n)).unwrap();
+        let w = WorkloadConfig {
+            duration: Duration::from_millis(1000),
+            ..Default::default()
+        };
+        let r = fleet.run_workload(&w).unwrap();
+        println!(
+            "{:<9} {:>12} {:>9.3} {:>12} {:>12} {:>8}",
+            n,
+            fmt_bw(r.aggregate_goodput()),
+            r.fairness(),
+            fmt_ns(r.latency_hist.p50()),
+            fmt_ns(r.latency_hist.p99()),
+            fleet
+                .cluster
+                .datapath()
+                .map(|d| d.spawned_workers())
+                .unwrap_or(0),
+        );
+    }
+    println!("\nexpected shape: goodput grows with engine count (every node adds rails)");
+    println!("while fairness stays high — engines share rails, not starve each other.");
+}
+
 fn main() {
+    let args = Args::from_env();
+    if let Some(e) = args.get("engines") {
+        engines_axis(e.parse().expect("--engines N"));
+        return;
+    }
     println!("== Figure 7: GPU-to-GPU read bandwidth vs submission threads (4 MiB) ==");
     println!("(sim hardware peak: 8 rails x 250 MB/s = 2000 MB/s aggregate)");
     print!("{:<9}", "threads");

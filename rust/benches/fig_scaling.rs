@@ -1,0 +1,239 @@
+//! Fleet scaling — multi-engine shared fabric at 8–64 nodes (ROADMAP
+//! "Fabric scaling"; the §2.3 cluster-scale claim the paper never bench-
+//! marks below thousands of GPUs).
+//!
+//! One engine per node shares a single fabric through the cluster-owned
+//! datapath; every engine fetches KV blocks (Latency class) from random
+//! peers — so each node's rails carry slices from many engines at once —
+//! and pushes checkpoint blocks (Bulk class) to its ring neighbour.
+//!
+//! Output:
+//! * the node-count × policy sweep: aggregate goodput, per-class transfer
+//!   latency, fleet-wide slice P50/P99, per-engine fairness (min/max
+//!   goodput), spawned rail workers, and the share of enqueues whose
+//!   wakeup was coalesced by the parked-flag protocol;
+//! * TENT additionally runs with the per-engine-sharded queued-bytes
+//!   counters *disabled* (single atomic per rail) — the goodput ablation;
+//! * a counter hot-path microbenchmark (N engine threads hammering one
+//!   rail's `add_queued`/`sub_queued` with periodic telemetry reads):
+//!   wall-clock goodput of a *paced simulation* mostly hides cache-line
+//!   bouncing, so the microbench is the PASS/FAIL evidence that sharding
+//!   fixes the hot spot, alongside the fairness gate.
+//!
+//! `--smoke` runs the 8-node column only (CI); `--nodes 8,16` overrides
+//! the sweep.
+
+use std::time::{Duration, Instant};
+use tent::cluster::{Fleet, FleetConfig, WorkloadConfig};
+use tent::engine::TransferClass;
+use tent::fabric::{Fabric, FabricConfig};
+use tent::policy::PolicyKind;
+use tent::topology::profile::build_profile;
+use tent::topology::{FabricKind, NodeId};
+use tent::util::cli::Args;
+use tent::util::{fmt_bw, fmt_ns};
+
+struct Cell {
+    goodput: f64,
+    fairness: f64,
+    fetch_p50: u64,
+    fetch_p99: u64,
+    bulk_p50: u64,
+    slice_p99: u64,
+    workers: usize,
+    coalesced_pct: f64,
+    cross_stalls: u64,
+}
+
+fn run_cell(nodes: u16, policy: PolicyKind, sharded: bool, duration: Duration) -> Cell {
+    let mut cfg = FleetConfig::new("h800_hgx", nodes);
+    cfg.policy = policy;
+    cfg.sharded_counters = sharded;
+    let fleet = Fleet::new(cfg).expect("fleet build");
+    let w = WorkloadConfig {
+        duration,
+        ..Default::default()
+    };
+    let r = fleet.run_workload(&w).expect("workload");
+    let slice_lat = fleet.class_slice_latency(TransferClass::Latency);
+    let (mut sent, mut coalesced, mut cross) = (0u64, 0u64, 0u64);
+    for e in fleet.engines() {
+        let s = e.stats();
+        sent += s.wakeups_sent;
+        coalesced += s.wakeups_coalesced;
+        cross += s.cross_engine_stalls;
+    }
+    Cell {
+        goodput: r.aggregate_goodput(),
+        fairness: r.fairness(),
+        fetch_p50: r.latency_hist.p50(),
+        fetch_p99: r.latency_hist.p99(),
+        bulk_p50: r.bulk_hist.p50(),
+        slice_p99: slice_lat.p99(),
+        workers: fleet.cluster.datapath().map(|d| d.spawned_workers()).unwrap_or(0),
+        coalesced_pct: 100.0 * coalesced as f64 / (sent + coalesced).max(1) as f64,
+        cross_stalls: cross,
+    }
+}
+
+/// Counter hot path: `threads` engine threads doing add/sub on one shared
+/// rail (+ a telemetry read every 64 ops), single-counter vs sharded.
+/// Returns ns/op.
+fn counter_bench(threads: usize, shards: usize, ops_per_thread: u64) -> f64 {
+    let topo = build_profile("h800_hgx", 1).unwrap();
+    let fabric = Fabric::new(
+        &topo,
+        FabricConfig {
+            counter_shards: shards,
+            ..Default::default()
+        },
+    );
+    let rail = topo.rails_of(NodeId(0), FabricKind::Rdma)[0];
+    let start = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let fabric = &fabric;
+            scope.spawn(move || {
+                let shard = fabric.register_engine();
+                for i in 0..ops_per_thread {
+                    fabric.add_queued_at(shard, rail, 64 << 10);
+                    if i % 64 == 0 {
+                        std::hint::black_box(fabric.queued_bytes_from(shard, rail));
+                    }
+                    fabric.sub_queued_at(shard, rail, 64 << 10);
+                }
+            });
+        }
+    });
+    let total_ops = (threads as u64 * ops_per_thread * 2) as f64;
+    start.elapsed().as_nanos() as f64 / total_ops
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.flag("smoke");
+    let sweep: Vec<u16> = match args.get("nodes") {
+        Some(list) => list.split(',').map(|s| s.trim().parse().expect("--nodes list")).collect(),
+        None if smoke => vec![8],
+        None => vec![8, 16, 32, 64],
+    };
+    let duration = if smoke {
+        Duration::from_millis(600)
+    } else {
+        Duration::from_millis(1500)
+    };
+
+    println!("== fig_scaling: multi-engine shared fabric, one engine per node ==");
+    println!("(h800_hgx, KV fetches from random peers + checkpoint pushes; 20x time compression)");
+    println!();
+    println!(
+        "{:<7} {:<16} {:>10} {:>9} {:>10} {:>10} {:>10} {:>10} {:>8} {:>7} {:>9}",
+        "nodes", "policy", "goodput", "fair", "fetchP50", "fetchP99", "bulkP50", "sliceP99",
+        "workers", "coal%", "xstalls"
+    );
+
+    let mut tent_by_nodes: Vec<(u16, Cell)> = Vec::new();
+    for &n in &sweep {
+        let variants: &[(&str, PolicyKind, bool)] = if smoke {
+            &[("tent", PolicyKind::Tent, true)]
+        } else {
+            &[
+                ("tent", PolicyKind::Tent, true),
+                ("tent/1ctr", PolicyKind::Tent, false),
+                ("mooncake-te", PolicyKind::MooncakeTe, true),
+            ]
+        };
+        for &(label, policy, sharded) in variants {
+            let c = run_cell(n, policy, sharded, duration);
+            println!(
+                "{:<7} {:<16} {:>10} {:>9.3} {:>10} {:>10} {:>10} {:>10} {:>8} {:>6.1}% {:>9}",
+                n,
+                label,
+                fmt_bw(c.goodput),
+                c.fairness,
+                fmt_ns(c.fetch_p50),
+                fmt_ns(c.fetch_p99),
+                fmt_ns(c.bulk_p50),
+                fmt_ns(c.slice_p99),
+                c.workers,
+                c.coalesced_pct,
+                c.cross_stalls,
+            );
+            if label == "tent" {
+                tent_by_nodes.push((n, c));
+            }
+        }
+    }
+
+    println!();
+    println!("== counter hot path: add/sub on one shared rail (ns/op) ==");
+    println!(
+        "{:<9} {:>12} {:>12} {:>9}",
+        "engines", "single", "sharded", "speedup"
+    );
+    let ops: u64 = if smoke { 200_000 } else { 500_000 };
+    let mut micro: Vec<(u16, f64, f64)> = Vec::new();
+    for &n in &sweep {
+        let t = n as usize;
+        let single = counter_bench(t, 1, ops);
+        let sharded = counter_bench(t, t, ops);
+        println!(
+            "{:<9} {:>12.1} {:>12.1} {:>8.2}x",
+            t,
+            single,
+            sharded,
+            single / sharded.max(1e-9)
+        );
+        micro.push((n, single, sharded));
+    }
+
+    // ---- verdicts ----
+    println!();
+    let mut pass = true;
+
+    let (max_n, last) = tent_by_nodes
+        .last()
+        .map(|(n, c)| (*n, c))
+        .expect("at least one TENT cell");
+    let fair_ok = last.fairness >= 0.5;
+    println!(
+        "fairness at {max_n} nodes (TENT): {:.3} (>= 0.5): {}",
+        last.fairness,
+        if fair_ok { "PASS" } else { "FAIL" }
+    );
+    pass &= fair_ok;
+
+    if tent_by_nodes.len() > 1 {
+        let (n0, first) = &tent_by_nodes[0];
+        let scale_ok = last.goodput > 1.5 * first.goodput;
+        println!(
+            "aggregate goodput scales {n0}->{max_n} nodes: {} -> {} (> 1.5x): {}",
+            fmt_bw(first.goodput),
+            fmt_bw(last.goodput),
+            if scale_ok { "PASS" } else { "FAIL" }
+        );
+        pass &= scale_ok;
+    }
+
+    // Smoke runs on tiny CI machines where 8 threads get ~2-way true
+    // parallelism and the two variants can land within noise of each
+    // other; gate with a margin there, strictly in the full sweep.
+    let (mn, single, sharded) = *micro.last().expect("microbench ran");
+    let ctr_ok = if smoke { sharded < single * 1.15 } else { sharded < single };
+    println!(
+        "sharded counters beat single counter at {mn} engines{}: {sharded:.1} vs {single:.1} ns/op: {}",
+        if smoke { " (15% smoke margin)" } else { "" },
+        if ctr_ok { "PASS" } else { "FAIL" }
+    );
+    pass &= ctr_ok;
+
+    println!();
+    println!("overall: {}", if pass { "PASS" } else { "FAIL" });
+    // The verdicts are wall-clock performance assertions; on a shared CI
+    // runner they are informative, not a gate — `--smoke` reports but
+    // never fails the build (a crash or hang still does). Full runs on
+    // real hardware hard-fail.
+    if !pass && !smoke {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,434 @@
+//! Fleet-scale deployment shape: one engine per node over one shared
+//! fabric (ROADMAP "Fabric scaling"; §2.3's cluster-scale claim).
+//!
+//! A [`Fleet`] stands up N engine instances — one per topology node, the
+//! way real disaggregated deployments run one transfer engine per host —
+//! all sharing a single [`Cluster`]: same fabric, same per-rail workers
+//! (`engine::datapath::SharedDatapath`), same segment manager. The fleet
+//! sizes the shared substrate for its engine count: queued-bytes counter
+//! shards ≥ engines (each engine writes a private cache-padded stripe, see
+//! `Fabric::register_engine`) and ring capacity scaled to the number of
+//! producers pushing into each rail's rings.
+//!
+//! [`Fleet::run_workload`] drives the production traffic mix the paper
+//! motivates: **Latency**-class KV-fetches (each engine pulls KV blocks
+//! from random peers — the pull dispatches onto the *owner's* rails, so
+//! every node's NICs carry slices from many engines at once) multiplexed
+//! with **Bulk**-class checkpoint pushes to the ring neighbour. The report
+//! carries per-engine goodput (fairness), per-class transfer latency, and
+//! the contention counters the datapath work is judged by.
+
+use super::Cluster;
+use crate::engine::{EngineConfig, TentEngine, TransferClass, TransferReq};
+use crate::fabric::FabricConfig;
+use crate::policy::PolicyKind;
+use crate::segment::{Location, SegmentId};
+use crate::util::clock;
+use crate::util::hist::Histogram;
+use crate::util::prng::Pcg64;
+use crate::Result;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Fleet deployment knobs.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Topology profile name (node-count-parametric).
+    pub profile: String,
+    /// Node count == engine count.
+    pub nodes: u16,
+    /// Scheduling policy for every engine.
+    pub policy: PolicyKind,
+    /// Fabric knobs. `counter_shards` is overridden from
+    /// `sharded_counters`; set `time_compression` to taste.
+    pub fabric: FabricConfig,
+    /// Engine template. Per-engine copies get distinct seeds;
+    /// `ring_capacity` is re-scaled for the engine count.
+    pub engine: EngineConfig,
+    /// `true` (default): stripe the per-rail queued-bytes counters across
+    /// engines. `false`: the single-counter baseline (`fig_scaling`'s
+    /// ablation axis).
+    pub sharded_counters: bool,
+}
+
+impl FleetConfig {
+    /// A fleet of `nodes` engines on `profile`, with bench-friendly time
+    /// compression.
+    pub fn new(profile: &str, nodes: u16) -> FleetConfig {
+        FleetConfig {
+            profile: profile.to_string(),
+            nodes,
+            policy: PolicyKind::Tent,
+            fabric: FabricConfig {
+                time_compression: 20.0,
+                ..Default::default()
+            },
+            engine: EngineConfig::default(),
+            sharded_counters: true,
+        }
+    }
+}
+
+/// One engine per node over a single shared fabric.
+///
+/// Field order matters: engines drop (and drain their in-flight slices)
+/// against still-running rail workers; the cluster's datapath handle goes
+/// last, tearing the workers down.
+pub struct Fleet {
+    engines: Vec<Arc<TentEngine>>,
+    pub cluster: Cluster,
+    pub config: FleetConfig,
+}
+
+impl Fleet {
+    pub fn new(mut config: FleetConfig) -> Result<Fleet> {
+        let nodes = config.nodes.max(1);
+        config.nodes = nodes;
+        // Size the shared substrate for the engine count.
+        config.fabric.counter_shards = if config.sharded_counters {
+            (nodes as usize).next_power_of_two()
+        } else {
+            1
+        };
+        // Shared per-rail rings: capacity scales with the number of engines
+        // pushing into them (floor absorbs single-engine bursts, ceiling
+        // bounds memory — a ring slot is ~128 B, two lanes per rail, and
+        // hundreds of rails go live on big fleets; rails spawn lazily).
+        config.engine.ring_capacity = (32 * nodes as usize).clamp(1024, 4096);
+        config.engine.policy = config.policy;
+        let cluster = Cluster::from_profile_nodes(&config.profile, nodes, config.fabric.clone())?;
+        let engines = (0..nodes)
+            .map(|n| {
+                let mut ecfg = config.engine.clone();
+                ecfg.seed = config
+                    .engine
+                    .seed
+                    .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(n as u64 + 1));
+                Ok(Arc::new(TentEngine::new(&cluster, ecfg)?))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Fleet {
+            engines,
+            cluster,
+            config,
+        })
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// The engine homed on `node`.
+    pub fn engine(&self, node: u16) -> &Arc<TentEngine> {
+        &self.engines[node as usize]
+    }
+
+    pub fn engines(&self) -> &[Arc<TentEngine>] {
+        &self.engines
+    }
+
+    /// Total payload bytes carried by every rail (per-NIC byte counters,
+    /// §5.1.3) — the conservation side of the slice ledger.
+    pub fn carried_bytes(&self) -> u64 {
+        self.cluster.fabric.byte_counters().iter().map(|&(_, b)| b).sum()
+    }
+
+    /// Merged slice-latency histogram for one QoS class across all rails.
+    pub fn class_slice_latency(&self, class: TransferClass) -> Histogram {
+        let h = Histogram::new();
+        for r in &self.cluster.fabric.rails {
+            h.merge(&r.class_latency[class.index()]);
+        }
+        h
+    }
+
+    /// Drive the mixed KV-fetch / checkpoint workload across the fleet.
+    pub fn run_workload(&self, cfg: &WorkloadConfig) -> Result<FleetReport> {
+        let n = self.nodes();
+        let window = cfg.window.max(1);
+        // Per-node KV store: fetch source for every peer plus checkpoint
+        // source; sized so random slice-aligned reads fit.
+        let store_len = (cfg.bulk_block.max(cfg.latency_block)) * 2;
+        let stores: Vec<SegmentId> = (0..n)
+            .map(|i| self.engines[i].register_segment(Location::host(i as u16, 0), store_len))
+            .collect::<Result<_>>()?;
+        // Checkpoint destination: each engine pushes to its ring neighbour.
+        // One window of slots per submitter thread, so concurrent bulk
+        // writes (across submitters and within a window) stay disjoint.
+        let submitters = cfg.submitters_per_engine.max(1);
+        let ckpt_dsts: Vec<SegmentId> = (0..n)
+            .map(|j| {
+                let peer = ((j + 1) % n) as u16;
+                self.engines[j].register_segment(
+                    Location::host(peer, 0),
+                    cfg.bulk_block * (window * submitters) as u64,
+                )
+            })
+            .collect::<Result<_>>()?;
+
+        let per_engine_bytes: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let lat_hist = Histogram::new();
+        let bulk_hist = Histogram::new();
+        let total_batches = AtomicU64::new(0);
+        let failed_batches = AtomicU64::new(0);
+        let deadline = clock::now_ns() + cfg.duration.as_nanos() as u64;
+
+        let start = clock::now_ns();
+        std::thread::scope(|scope| {
+            for (j, engine) in self.engines.iter().enumerate() {
+                for t in 0..cfg.submitters_per_engine.max(1) {
+                    let engine = Arc::clone(engine);
+                    let stores = &stores;
+                    let ckpt_dsts = &ckpt_dsts;
+                    let per_engine_bytes = &per_engine_bytes;
+                    let lat_hist = &lat_hist;
+                    let bulk_hist = &bulk_hist;
+                    let total_batches = &total_batches;
+                    let failed_batches = &failed_batches;
+                    scope.spawn(move || {
+                        let mut rng = Pcg64::new(cfg.seed ^ (((j as u64) << 8) | t as u64), 0xF1EE7);
+                        // Private fetch scratch, one slot per window entry:
+                        // in-flight fetches never overlap.
+                        let scratch = match engine.register_segment(
+                            Location::host(j as u16, 0),
+                            cfg.latency_block * window as u64,
+                        ) {
+                            Ok(s) => s,
+                            Err(_) => return, // cluster shutting down
+                        };
+                        let mut inflight: VecDeque<Pending> = VecDeque::with_capacity(window);
+                        let mut ops: u64 = 0;
+                        let mut reap = |engine: &TentEngine, q: &mut VecDeque<Pending>| {
+                            if let Some(p) = q.pop_front() {
+                                let ok = engine
+                                    .wait_any(p.batch, Duration::from_secs(120))
+                                    .map(|st| st.ok())
+                                    .unwrap_or(false);
+                                let _ = engine.release_batch(p.batch);
+                                total_batches.fetch_add(1, Ordering::Relaxed);
+                                if ok {
+                                    let dt = clock::now_ns().saturating_sub(p.t0);
+                                    match p.class {
+                                        TransferClass::Latency => lat_hist.record(dt),
+                                        TransferClass::Bulk => bulk_hist.record(dt),
+                                    }
+                                    per_engine_bytes[j].fetch_add(p.bytes, Ordering::Relaxed);
+                                } else {
+                                    failed_batches.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        };
+                        while clock::now_ns() < deadline {
+                            let slot = ops % window as u64;
+                            let bulk = cfg.bulk_every > 0
+                                && ops % cfg.bulk_every as u64 == cfg.bulk_every as u64 - 1;
+                            let (req, class, bytes) = if bulk {
+                                // Checkpoint push to the ring neighbour,
+                                // into this submitter's own slot window.
+                                let bulk_slot = (t * window) as u64 + slot;
+                                let req = TransferReq::write(
+                                    stores[j],
+                                    0,
+                                    ckpt_dsts[j],
+                                    bulk_slot * cfg.bulk_block,
+                                    cfg.bulk_block,
+                                );
+                                (req, TransferClass::Bulk, cfg.bulk_block)
+                            } else {
+                                // KV fetch: pull a block from a random
+                                // peer's store. The pull rides the *peer's*
+                                // rails — the cross-engine sharing under
+                                // test.
+                                let peer = if n == 1 {
+                                    0
+                                } else {
+                                    let r = rng.gen_range((n - 1) as u64) as usize;
+                                    if r >= j {
+                                        r + 1
+                                    } else {
+                                        r
+                                    }
+                                };
+                                let src_slots = store_len / cfg.latency_block;
+                                let off = rng.gen_range(src_slots) * cfg.latency_block;
+                                let req = TransferReq::read(
+                                    stores[peer],
+                                    off,
+                                    scratch,
+                                    slot * cfg.latency_block,
+                                    cfg.latency_block,
+                                )
+                                .class(TransferClass::Latency);
+                                (req, TransferClass::Latency, cfg.latency_block)
+                            };
+                            let batch = engine.allocate_batch();
+                            let t0 = clock::now_ns();
+                            if engine.submit(batch, &[req]).is_err() {
+                                let _ = engine.release_batch(batch);
+                                break; // engine/cluster shutting down
+                            }
+                            inflight.push_back(Pending {
+                                batch,
+                                t0,
+                                class,
+                                bytes,
+                            });
+                            if inflight.len() >= window {
+                                reap(&engine, &mut inflight);
+                            }
+                            ops += 1;
+                        }
+                        while !inflight.is_empty() {
+                            reap(&engine, &mut inflight);
+                        }
+                    });
+                }
+            }
+        });
+        let wall_ns = clock::now_ns().saturating_sub(start);
+
+        Ok(FleetReport {
+            nodes: n,
+            wall_ns,
+            per_engine_bytes: per_engine_bytes.iter().map(|a| a.load(Ordering::Relaxed)).collect(),
+            latency_hist: lat_hist,
+            bulk_hist,
+            total_batches: total_batches.load(Ordering::Relaxed),
+            failed_batches: failed_batches.load(Ordering::Relaxed),
+        })
+    }
+}
+
+/// One outstanding batch in a submitter's pipeline window.
+struct Pending {
+    batch: crate::engine::BatchId,
+    t0: u64,
+    class: TransferClass,
+    bytes: u64,
+}
+
+/// Workload generator knobs (see [`Fleet::run_workload`]).
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    /// Measured wall-clock duration (submission stops, then drains).
+    pub duration: Duration,
+    /// KV-fetch block size (Latency class).
+    pub latency_block: u64,
+    /// Checkpoint block size (Bulk class).
+    pub bulk_block: u64,
+    /// Every `bulk_every`-th op is a checkpoint push (0 disables bulk).
+    pub bulk_every: usize,
+    /// Submission threads per engine.
+    pub submitters_per_engine: usize,
+    /// Outstanding batches per submitter (pipelining depth).
+    pub window: usize,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            duration: Duration::from_millis(1500),
+            latency_block: 256 << 10,
+            bulk_block: 2 << 20,
+            bulk_every: 4,
+            submitters_per_engine: 2,
+            window: 4,
+            seed: 0xF1EE7,
+        }
+    }
+}
+
+/// Aggregated result of one fleet workload run.
+pub struct FleetReport {
+    pub nodes: usize,
+    pub wall_ns: u64,
+    /// Completed payload bytes credited to each engine.
+    pub per_engine_bytes: Vec<u64>,
+    /// Transfer-completion latency, Latency class (KV fetches).
+    pub latency_hist: Histogram,
+    /// Transfer-completion latency, Bulk class (checkpoint pushes).
+    pub bulk_hist: Histogram,
+    pub total_batches: u64,
+    pub failed_batches: u64,
+}
+
+impl FleetReport {
+    /// Aggregate goodput over the whole fleet (bytes/sec, sim units).
+    pub fn aggregate_goodput(&self) -> f64 {
+        let total: u64 = self.per_engine_bytes.iter().sum();
+        total as f64 / (self.wall_ns.max(1) as f64 / 1e9)
+    }
+
+    /// Per-engine fairness: min/max completed-bytes ratio in [0, 1];
+    /// 1 = perfectly even, 0 = someone starved.
+    pub fn fairness(&self) -> f64 {
+        let min = self.per_engine_bytes.iter().copied().min().unwrap_or(0);
+        let max = self.per_engine_bytes.iter().copied().max().unwrap_or(0);
+        if max == 0 {
+            return 0.0;
+        }
+        min as f64 / max as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_builds_one_engine_per_node() {
+        let f = Fleet::new(FleetConfig::new("h800_hgx", 4)).unwrap();
+        assert_eq!(f.nodes(), 4);
+        assert_eq!(f.cluster.topo.nodes.len(), 4);
+        // Engines registered consecutive fabric shards.
+        let shards = f.cluster.fabric.config.counter_shards;
+        assert_eq!(shards, 4);
+    }
+
+    #[test]
+    fn small_fleet_workload_moves_bytes_fairly() {
+        let f = Fleet::new(FleetConfig::new("h800_hgx", 4)).unwrap();
+        let w = WorkloadConfig {
+            duration: Duration::from_millis(300),
+            submitters_per_engine: 1,
+            ..Default::default()
+        };
+        let r = f.run_workload(&w).unwrap();
+        assert_eq!(r.failed_batches, 0, "no failures without injection");
+        assert!(r.total_batches >= 4, "every engine submitted");
+        assert!(r.per_engine_bytes.iter().all(|&b| b > 0), "{:?}", r.per_engine_bytes);
+        assert!(r.aggregate_goodput() > 0.0);
+        assert!(r.fairness() > 0.0);
+        // Conservation: without injection nothing fails, so every engine's
+        // dispatch/complete ledgers agree exactly.
+        for e in f.engines() {
+            let s = e.stats();
+            assert_eq!(s.slices_completed, s.slices_dispatched, "{s:?}");
+            assert_eq!(s.permanent_failures, 0, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn single_counter_baseline_still_correct() {
+        let mut cfg = FleetConfig::new("legacy_tcp", 3);
+        cfg.sharded_counters = false;
+        let f = Fleet::new(cfg).unwrap();
+        assert_eq!(f.cluster.fabric.config.counter_shards, 1);
+        let w = WorkloadConfig {
+            duration: Duration::from_millis(200),
+            latency_block: 64 << 10,
+            bulk_block: 256 << 10,
+            submitters_per_engine: 1,
+            ..Default::default()
+        };
+        let r = f.run_workload(&w).unwrap();
+        assert_eq!(r.failed_batches, 0);
+        // Queues fully drained after the run.
+        for rail in &f.cluster.fabric.rails {
+            assert_eq!(rail.queued_bytes(), 0, "{} leaked queue", rail.id);
+        }
+    }
+}

@@ -1,20 +1,35 @@
 //! The simulated cluster: topology + fabric + segment manager + transports,
 //! wired together. One `Cluster` hosts all the "nodes" of a deployment; the
 //! engine and benches borrow it.
+//!
+//! The cluster also anchors the **shared datapath** — the per-rail worker
+//! threads and rings every engine instance enqueues into (see
+//! [`crate::engine::datapath`]). It is created when the first engine comes
+//! up and torn down (workers drained and joined) when its last owner —
+//! the cluster or the last engine core — drops.
+//! [`fleet`] builds the multi-engine deployment shape on top: one engine
+//! per node over this shared substrate.
 
+pub mod fleet;
+
+use crate::engine::datapath::{DatapathConfig, SharedDatapath};
 use crate::fabric::{Fabric, FabricConfig};
 use crate::segment::SegmentManager;
 use crate::topology::profile::build_profile;
 use crate::topology::Topology;
 use crate::transport::TransportRegistry;
 use crate::Result;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
+
+pub use fleet::{Fleet, FleetConfig, FleetReport, WorkloadConfig};
 
 pub struct Cluster {
     pub topo: Arc<Topology>,
     pub fabric: Arc<Fabric>,
     pub segments: Arc<SegmentManager>,
     pub transports: Arc<TransportRegistry>,
+    /// Cluster-shared datapath, created by the first engine.
+    datapath: OnceLock<Arc<SharedDatapath>>,
 }
 
 impl Cluster {
@@ -47,9 +62,30 @@ impl Cluster {
             fabric,
             segments,
             transports,
+            datapath: OnceLock::new(),
         })
     }
+
+    /// The cluster-shared datapath, created on first call. The first
+    /// caller's `DatapathConfig` fixes ring capacity and wakeup knobs for
+    /// every engine sharing this cluster.
+    pub fn shared_datapath(&self, cfg: DatapathConfig) -> Arc<SharedDatapath> {
+        Arc::clone(
+            self.datapath
+                .get_or_init(|| SharedDatapath::new(&self.topo, cfg)),
+        )
+    }
+
+    /// The shared datapath, if an engine has brought it up yet.
+    pub fn datapath(&self) -> Option<&Arc<SharedDatapath>> {
+        self.datapath.get()
+    }
 }
+
+// No `Drop for Cluster`: the shared datapath tears itself down (workers
+// drained and joined) when its *last* owning `Arc` goes — the cluster's
+// `OnceLock` plus every engine core hold one, so an engine that outlives
+// its `Cluster` struct (a common test-helper shape) keeps working.
 
 #[cfg(test)]
 mod tests {

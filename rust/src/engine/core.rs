@@ -1,7 +1,7 @@
 //! Shared engine state referenced by submission threads, rail workers, and
 //! the maintenance thread.
 
-use super::datapath::Datapath;
+use super::datapath::SharedDatapath;
 use super::sched::{SchedCtx, SchedulerState};
 use super::telemetry::EngineStats;
 use super::TransferClass;
@@ -11,7 +11,7 @@ use crate::segment::SegmentManager;
 use crate::topology::Topology;
 use crate::transport::TransportRegistry;
 use std::sync::atomic::AtomicBool;
-use std::sync::{Arc, OnceLock};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Engine tunables. Defaults follow the paper (§4.2): 64 KB minimum slice,
@@ -33,7 +33,10 @@ pub struct EngineConfig {
     /// Per-slice retry budget before the transfer is failed.
     pub max_retries: u32,
     /// Capacity of each rail's MPSC ring (each QoS lane gets its own ring
-    /// of this capacity).
+    /// of this capacity). The datapath is shared per cluster: the first
+    /// engine brought up on a cluster fixes this (and `bulk_quantum` /
+    /// `idle_backoff_max`) for everyone; `cluster::Fleet` scales it with
+    /// the engine count.
     pub ring_capacity: usize,
     /// Dual-lane QoS datapath: per rail, a latency lane drained ahead of
     /// the bulk lane. `false` falls back to the single shared ring (the
@@ -43,9 +46,11 @@ pub struct EngineConfig {
     /// Max bulk-lane slices a worker executes per wakeup while
     /// latency-class work is pending (anti-starvation weight; clamped ≥ 1).
     pub bulk_quantum: usize,
-    /// Cap on the worker idle-backoff sleep. Workers are unparked on every
-    /// enqueue, so this is only a safety net — but a large value directly
-    /// inflates latency-class tails on sparse traffic if a wakeup is lost.
+    /// Cap on the worker's *bounded* idle-backoff sleeps — the escalation
+    /// stage before a worker deep-parks indefinitely behind its published
+    /// parked flag (wakeups are flag-gated and reliable, so deep park
+    /// costs nothing and loses nothing). Shared-datapath knob: fixed by
+    /// the first engine on the cluster.
     pub idle_backoff_max: Duration,
     /// Telemetry exclusion threshold: exclude a rail whose β1 exceeds this
     /// multiple of the fleet median (∞ disables).
@@ -99,7 +104,8 @@ pub struct EngineCore {
     pub batches: super::batch::BatchTable,
     pub stats: EngineStats,
     pub shutdown: AtomicBool,
-    datapath: OnceLock<Datapath>,
+    /// The cluster-shared datapath this engine enqueues into.
+    pub(crate) datapath: Arc<SharedDatapath>,
 }
 
 impl EngineCore {
@@ -108,14 +114,17 @@ impl EngineCore {
         fabric: Arc<Fabric>,
         segments: Arc<SegmentManager>,
         transports: Arc<TransportRegistry>,
+        datapath: Arc<SharedDatapath>,
         config: EngineConfig,
     ) -> Self {
         let policy = crate::policy::make_policy(config.policy);
-        // The scheduler's per-class queue isolation only holds when the
-        // datapath actually runs dual lanes; keep the two in lockstep.
+        // The scheduler's per-class queue isolation only holds when this
+        // engine routes onto dual lanes; keep the two in lockstep.
         let mut sched_params = config.sched.clone();
         sched_params.class_isolation = config.qos_lanes;
-        let sched = SchedulerState::new(topo.rails.len(), sched_params);
+        // Register with the shared fabric: this engine's queue accounting
+        // writes its own counter shard (see `Fabric::register_engine`).
+        let sched = SchedulerState::new_registered(topo.rails.len(), sched_params, &fabric);
         EngineCore {
             topo,
             fabric,
@@ -127,19 +136,8 @@ impl EngineCore {
             batches: super::batch::BatchTable::new(),
             stats: EngineStats::default(),
             shutdown: AtomicBool::new(false),
-            datapath: OnceLock::new(),
+            datapath,
         }
-    }
-
-    pub(crate) fn install_datapath(&self, dp: Datapath) {
-        if self.datapath.set(dp).is_err() {
-            panic!("datapath installed twice");
-        }
-    }
-
-    #[inline]
-    pub(crate) fn datapath(&self) -> &Datapath {
-        self.datapath.get().expect("datapath not installed")
     }
 
     /// Policy context view for a slice of the given QoS class.

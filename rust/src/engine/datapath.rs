@@ -1,90 +1,298 @@
 //! The low-overhead datapath (§4.4): per-rail lock-free MPSC rings drained
-//! by dedicated worker threads, split into **two QoS lanes per rail**.
+//! by dedicated worker threads, split into **two QoS lanes per rail** — and,
+//! since the fleet-scaling work, owned by the *cluster*, not the engine.
 //!
-//! Submission threads push slice descriptors and return immediately; each
-//! worker owns one rail (its "queue pair"), dequeues in batches, executes
-//! slices through the transport backend, and drives the completion /
-//! feedback / failure paths. All completion accounting is hierarchical
-//! atomic counters — the hot path takes no locks.
+//! A rail is a physical resource: exactly one pinned worker services it no
+//! matter how many engine instances share the fabric, so queueing
+//! discipline stays physical at fleet scale (engine-private workers would
+//! both multiply threads by the engine count and let two engines' workers
+//! race each other's pacing on the same wire). Engines are control planes:
+//! they plan, schedule, and account; their slices all funnel into the
+//! shared per-rail rings, and completions are routed back through the
+//! `Arc<EngineCore>` each slice carries.
 //!
-//! The lanes implement the production multiplexing scenario: the latency
-//! lane (KV-cache fetches) drains ahead of the bulk lane (checkpoint /
-//! parameter traffic), so a queued bulk burst can no longer head-of-line
-//! block a latency fetch. Bulk is never starved: while latency work is
-//! pending the worker still executes up to `EngineConfig::bulk_quantum`
-//! bulk slices per wakeup, and latency arrivals preempt a bulk batch only
-//! at slice granularity. `EngineConfig::qos_lanes = false` collapses
-//! everything onto the bulk lane (the single-ring baseline).
+//! Fleet-scale mechanics:
 //!
-//! Idle workers park with a bounded escalating timeout
-//! (`EngineConfig::idle_backoff_max` cap) and are **unparked on every
-//! enqueue**, so a sparse latency slice never waits out the backoff.
+//! * **Lazy workers** — rings and the worker thread for a rail materialize
+//!   on first enqueue. A 64-node fleet has thousands of rails; only the
+//!   ones actually carrying traffic cost memory and a thread.
+//! * **Flag-gated wakeups** — producers unpark the worker only when its
+//!   published `parked` flag is set, instead of unconditionally on every
+//!   enqueue. Under load the flag is false and the enqueue hot path does a
+//!   single relaxed-ish load (counted in `EngineStats::wakeups_coalesced`);
+//!   sparse traffic still gets immediate wakeup (`wakeups_sent`).
+//! * **Deep park** — an idle worker escalates yield → bounded
+//!   `park_timeout` → indefinite `park`. The flag/recheck handshake (store
+//!   parked, re-check both rings, then sleep; producers push, then load the
+//!   flag — both `SeqCst`) makes the indefinite park lose no wakeups, so an
+//!   idle fleet burns no CPU, where the old per-engine workers re-woke
+//!   every `idle_backoff_max` forever.
+//!
+//! QoS lane semantics are unchanged: the latency lane drains ahead of the
+//! bulk lane, bulk still advances by `DatapathConfig::bulk_quantum` slices
+//! per wakeup, and latency arrivals preempt a bulk batch at slice
+//! granularity. `EngineConfig::qos_lanes = false` is now purely a routing
+//! choice of that engine: its latency slices ride the bulk lane (the
+//! single-FIFO baseline), without affecting other engines on the rail.
 
-use super::core::EngineCore;
+use super::core::EngineConfig;
 use super::slice::SliceDesc;
 use super::telemetry::EngineStats;
 use super::TransferClass;
 use crate::fabric::RailHealth;
 use crate::log;
-use crate::topology::RailId;
+use crate::topology::{RailId, Topology};
 use crate::transport::SliceIo;
 use crate::util::clock;
 use crate::util::prng::Pcg64;
-use crate::util::ring::{ring, Consumer, Producer};
-use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use crate::util::ring::{ring, CachePadded, Consumer, Producer};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-/// Per-rail, per-lane producer handles plus worker wakeup handles.
-pub struct Datapath {
-    /// `lanes[rail][TransferClass::index()]` — one ring per QoS lane.
-    lanes: Vec<[Producer<SliceDesc>; TransferClass::COUNT]>,
-    /// Rail-worker thread handles, for prompt wakeup from idle backoff.
-    wakers: Vec<std::thread::Thread>,
-    /// Cached `EngineConfig::qos_lanes`; `false` routes every class onto
-    /// the bulk lane (single-ring fallback).
-    qos: bool,
+/// Datapath tunables. The datapath is shared by every engine on a cluster,
+/// so these are fixed when the first engine brings it up (that engine's
+/// `EngineConfig` supplies them; later engines' copies are ignored).
+#[derive(Clone, Debug)]
+pub struct DatapathConfig {
+    /// Capacity of each rail's MPSC ring (each QoS lane gets its own ring
+    /// of this capacity). Shared rings: size for the number of engines
+    /// expected to push concurrently (`cluster::Fleet` scales this).
+    pub ring_capacity: usize,
+    /// Max bulk-lane slices a worker executes per wakeup while
+    /// latency-class work is pending (anti-starvation weight; clamped ≥ 1).
+    pub bulk_quantum: usize,
+    /// Cap on the worker's *bounded* idle-backoff sleeps (the escalation
+    /// stage before deep park). Wakeups are flag-gated and reliable, so
+    /// this only shapes how quickly an idle worker descends to the
+    /// zero-cost indefinite park.
+    pub idle_backoff_max: Duration,
+    /// PRNG seed for worker jitter streams.
+    pub seed: u64,
 }
 
-/// Spawn one worker per rail; returns the producer set and join handles.
-pub fn spawn_workers(
-    core: &Arc<EngineCore>,
-    ring_capacity: usize,
-    seed: u64,
-) -> (Datapath, Vec<JoinHandle<()>>) {
-    let n = core.topo.rails.len();
-    let qos = core.config.qos_lanes;
-    let mut lanes = Vec::with_capacity(n);
-    let mut wakers = Vec::with_capacity(n);
-    let mut handles = Vec::with_capacity(n);
-    for (i, def) in core.topo.rails.iter().enumerate() {
-        let (lat_tx, lat_rx) = ring::<SliceDesc>(ring_capacity);
-        let (bulk_tx, bulk_rx) = ring::<SliceDesc>(ring_capacity);
-        lanes.push([lat_tx, bulk_tx]);
-        let core = Arc::clone(core);
-        let name = format!("tent-{}", def.name);
-        let handle = std::thread::Builder::new()
-            .name(name)
-            .spawn(move || worker_loop(core, RailId(i as u32), lat_rx, bulk_rx, seed))
-            .expect("spawn rail worker");
-        wakers.push(handle.thread().clone());
-        handles.push(handle);
+impl Default for DatapathConfig {
+    fn default() -> Self {
+        DatapathConfig {
+            ring_capacity: 4096,
+            bulk_quantum: 4,
+            idle_backoff_max: Duration::from_micros(50),
+            seed: 0x7E27,
+        }
     }
-    (Datapath { lanes, wakers, qos }, handles)
+}
+
+impl DatapathConfig {
+    /// Derive from an engine's config (the engine bringing the datapath up).
+    pub fn from_engine(cfg: &EngineConfig) -> DatapathConfig {
+        DatapathConfig {
+            ring_capacity: cfg.ring_capacity,
+            bulk_quantum: cfg.bulk_quantum,
+            idle_backoff_max: cfg.idle_backoff_max,
+            seed: cfg.seed,
+        }
+    }
+}
+
+/// State shared between the datapath handle and every rail worker.
+struct DpShared {
+    config: DatapathConfig,
+    shutdown: AtomicBool,
+}
+
+/// Per-rail lane state, materialized on first use.
+struct RailLanes {
+    /// `lanes[TransferClass::index()]` — one ring per QoS lane.
+    lanes: [Producer<SliceDesc>; TransferClass::COUNT],
+    /// The worker's thread handle for unparking.
+    waker: std::thread::Thread,
+    /// Published by the worker right before it parks indefinitely;
+    /// producers only unpark when this is set (flag-gated wakeup).
+    parked: Arc<CachePadded<AtomicBool>>,
+}
+
+/// The cluster-shared datapath: one (lazily spawned) worker + dual-lane
+/// ring pair per rail, shared by every engine on the cluster.
+pub struct SharedDatapath {
+    topo: Arc<Topology>,
+    shared: Arc<DpShared>,
+    rails: Box<[OnceLock<RailLanes>]>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl SharedDatapath {
+    pub fn new(topo: &Arc<Topology>, config: DatapathConfig) -> Arc<SharedDatapath> {
+        let n = topo.rails.len();
+        Arc::new(SharedDatapath {
+            topo: Arc::clone(topo),
+            shared: Arc::new(DpShared {
+                config,
+                shutdown: AtomicBool::new(false),
+            }),
+            rails: (0..n).map(|_| OnceLock::new()).collect(),
+            handles: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Lane state for `rail`, spawning its worker on first use.
+    fn lanes(&self, rail: RailId) -> &RailLanes {
+        self.rails[rail.0 as usize].get_or_init(|| {
+            let def = self.topo.rail(rail);
+            let cap = self.shared.config.ring_capacity;
+            let (lat_tx, lat_rx) = ring::<SliceDesc>(cap);
+            let (bulk_tx, bulk_rx) = ring::<SliceDesc>(cap);
+            let parked = Arc::new(CachePadded::new(AtomicBool::new(false)));
+            let shared = Arc::clone(&self.shared);
+            let flag = Arc::clone(&parked);
+            let handle = std::thread::Builder::new()
+                .name(format!("tent-{}", def.name))
+                .spawn(move || worker_loop(shared, rail, lat_rx, bulk_rx, flag))
+                .expect("spawn rail worker");
+            let waker = handle.thread().clone();
+            self.handles.lock().unwrap().push(handle);
+            RailLanes {
+                lanes: [lat_tx, bulk_tx],
+                waker,
+                parked,
+            }
+        })
+    }
+
+    /// Push a dispatched slice onto its rail's lane, yielding while full
+    /// (each stall episode is counted in `EngineStats::ring_full_stalls`;
+    /// stalls with other engines' bytes on the rail also count as
+    /// `cross_engine_stalls`). On shutdown — of the slice's engine or of
+    /// the cluster — the slice is handed back so the caller can unwind its
+    /// accounting.
+    pub(crate) fn enqueue(&self, slice: SliceDesc) -> Result<(), SliceDesc> {
+        // No teardown race by construction: every caller reaches this
+        // method through an owning `Arc<SharedDatapath>` (its engine
+        // core), and workers are only stopped by the last owner's Drop —
+        // so the datapath cannot be mid-teardown here. The check below
+        // only trips for the slice's own engine shutting down (see the
+        // ring-full branch) or defensive reuse after teardown.
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            return Err(slice);
+        }
+        let core = Arc::clone(&slice.core);
+        let rail = slice.plan.candidates[slice.cand_idx].rail;
+        let lane = if core.config.qos_lanes {
+            slice.class.index()
+        } else {
+            TransferClass::Bulk.index()
+        };
+        let rl = self.lanes(rail);
+        let producer = &rl.lanes[lane];
+        let mut item = slice;
+        let mut stalled = false;
+        loop {
+            match producer.push(item) {
+                Ok(()) => {
+                    // Flag-gated wakeup: only unpark a worker that said it
+                    // went to sleep. The SC fence pairs with the worker's
+                    // publish-fence-recheck (the ring's backlog counters
+                    // are relaxed), so the indefinite park cannot miss
+                    // this enqueue: either we see the flag, or the worker's
+                    // recheck sees our push.
+                    std::sync::atomic::fence(Ordering::SeqCst);
+                    if rl.parked.load(Ordering::SeqCst) {
+                        rl.waker.unpark();
+                        EngineStats::bump(&core.stats.wakeups_sent);
+                    } else {
+                        EngineStats::bump(&core.stats.wakeups_coalesced);
+                    }
+                    return Ok(());
+                }
+                Err(back) => {
+                    if core.shutdown.load(Ordering::Acquire)
+                        || self.shared.shutdown.load(Ordering::Acquire)
+                    {
+                        return Err(back);
+                    }
+                    if !stalled {
+                        stalled = true;
+                        EngineStats::bump(&core.stats.ring_full_stalls);
+                        // Attribute the stall: fabric-global queued beyond
+                        // this engine's own in-flight bytes means other
+                        // engines are loading the rail too.
+                        let lq = &core.sched.local_queued[rail.0 as usize];
+                        let local: u64 = lq.iter().map(|a| a.load(Ordering::Relaxed)).sum();
+                        if core.fabric.rail(rail).queued_bytes() > local {
+                            EngineStats::bump(&core.stats.cross_engine_stalls);
+                        }
+                    }
+                    // The worker is behind; kick it in case it parked
+                    // behind the other lane.
+                    rl.waker.unpark();
+                    item = back;
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+
+    /// Ring backlog for a rail, summed over both lanes (tests / telemetry).
+    pub fn backlog(&self, rail: RailId) -> u64 {
+        self.rails[rail.0 as usize]
+            .get()
+            .map(|rl| rl.lanes.iter().map(|p| p.backlog()).sum())
+            .unwrap_or(0)
+    }
+
+    /// Number of rail workers actually spawned (lazy-spawn telemetry).
+    pub fn spawned_workers(&self) -> usize {
+        self.rails.iter().filter(|slot| slot.get().is_some()).count()
+    }
+
+    /// Unpark every spawned rail worker (engine shutdown drains faster;
+    /// also the cluster-teardown kick).
+    pub(crate) fn wake_all(&self) {
+        for slot in self.rails.iter() {
+            if let Some(rl) = slot.get() {
+                rl.waker.unpark();
+            }
+        }
+    }
+
+    /// Stop and join every rail worker. Workers drain their rings before
+    /// exiting, so every slice ever enqueued resolves.
+    fn shutdown_and_join(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.wake_all();
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.handles.lock().unwrap());
+        let me = std::thread::current().id();
+        for h in handles {
+            // The final owner drop can land on a worker thread (the last
+            // engine core riding a completing slice); never join self —
+            // that thread exits naturally right after this Drop.
+            if h.thread().id() != me {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Teardown runs when the *last* owner lets go — the `Cluster` and every
+/// `EngineCore` (and thus every in-flight slice) hold an owning `Arc`, so
+/// workers can never be stopped while anyone could still enqueue, and an
+/// engine outliving its `Cluster` struct keeps a fully live datapath.
+impl Drop for SharedDatapath {
+    fn drop(&mut self) {
+        self.shutdown_and_join();
+    }
 }
 
 fn worker_loop(
-    core: Arc<EngineCore>,
+    shared: Arc<DpShared>,
     rail: RailId,
     mut lat_rx: Consumer<SliceDesc>,
     mut bulk_rx: Consumer<SliceDesc>,
-    seed: u64,
+    parked: Arc<CachePadded<AtomicBool>>,
 ) {
-    let mut rng = Pcg64::new(seed ^ 0xDA7A_0000, rail.0 as u64);
-    let qos = core.config.qos_lanes;
-    let bulk_quantum = core.config.bulk_quantum.max(1);
-    let max_sleep = core.config.idle_backoff_max.max(Duration::from_micros(1));
+    let mut rng = Pcg64::new(shared.config.seed ^ 0xDA7A_0000, rail.0 as u64);
+    let bulk_quantum = shared.config.bulk_quantum.max(1);
+    let max_sleep = shared.config.idle_backoff_max.max(Duration::from_micros(1));
     let mut lat_batch: Vec<SliceDesc> = Vec::with_capacity(64);
     let mut bulk_batch: Vec<SliceDesc> = Vec::with_capacity(64);
     let mut idle_spins: u32 = 0;
@@ -92,59 +300,85 @@ fn worker_loop(
         // Batched dequeue (§4.4), latency lane first. While latency work is
         // pending, bulk advances by at most `bulk_quantum` slices per
         // wakeup — strict priority with an anti-starvation floor.
-        let n_lat = if qos {
-            lat_rx.pop_batch(&mut lat_batch, 64)
-        } else {
-            0
-        };
-        let bulk_budget = if qos && (n_lat > 0 || lat_rx.backlog() > 0) {
+        let n_lat = lat_rx.pop_batch(&mut lat_batch, 64);
+        let bulk_budget = if n_lat > 0 || lat_rx.backlog() > 0 {
             bulk_quantum
         } else {
             64
         };
         let n_bulk = bulk_rx.pop_batch(&mut bulk_batch, bulk_budget);
         if n_lat + n_bulk == 0 {
-            if core.shutdown.load(Ordering::Acquire) {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                // Shutdown is only set by the last owner's Drop, when no
+                // producer can exist anymore — both rings just read
+                // empty, so this drain is complete.
                 return;
             }
-            // Adaptive backoff: yield first (single-core friendly), then
-            // park with escalating-but-capped timeouts while idle.
-            // `Datapath::enqueue` unparks this worker, so the cap only
-            // bounds the damage of a lost wakeup.
-            idle_spins = (idle_spins + 1).min(20);
+            // Idle escalation: yield (single-core friendly), then bounded
+            // parks, then the zero-cost indefinite park. The parked flag
+            // is published for both park stages so a sparse enqueue wakes
+            // the worker immediately instead of waiting out the backoff.
+            idle_spins = (idle_spins + 1).min(24);
             if idle_spins < 4 {
                 std::thread::yield_now();
-            } else {
+            } else if idle_spins < 16 {
+                // Same publish-fence-recheck handshake as the deep park:
+                // an enqueue racing the flag publish must not sleep out
+                // the bounded timeout with its slice already queued.
                 let backoff = Duration::from_micros(20 * (idle_spins as u64 - 3));
-                std::thread::park_timeout(backoff.min(max_sleep));
+                parked.store(true, Ordering::SeqCst);
+                std::sync::atomic::fence(Ordering::SeqCst);
+                if lat_rx.backlog() == 0 && bulk_rx.backlog() == 0 {
+                    std::thread::park_timeout(backoff.min(max_sleep));
+                }
+                parked.store(false, Ordering::SeqCst);
+            } else {
+                // Deep park. Publish the flag, fence, then re-check both
+                // rings and the shutdown flag: an enqueue that raced the
+                // publish either sees the flag (and unparks us — the token
+                // makes the park return immediately) or pushed before our
+                // re-check (and we see its backlog). The paired SC fences
+                // make the Dekker handshake sound even though the backlog
+                // counters themselves are relaxed.
+                parked.store(true, Ordering::SeqCst);
+                std::sync::atomic::fence(Ordering::SeqCst);
+                if lat_rx.backlog() == 0
+                    && bulk_rx.backlog() == 0
+                    && !shared.shutdown.load(Ordering::SeqCst)
+                {
+                    std::thread::park();
+                }
+                parked.store(false, Ordering::SeqCst);
             }
             continue;
         }
         idle_spins = 0;
         for slice in lat_batch.drain(..) {
-            execute_slice(&core, slice, &mut rng);
+            execute_slice(slice, &mut rng);
         }
         for slice in bulk_batch.drain(..) {
-            if qos {
-                // Latency arrivals during bulk service preempt the rest of
-                // the bulk batch at slice granularity — bounded to one
-                // batch per bulk slice, so even a sustained stream of
-                // latency submissions cannot indefinitely defer the bulk
-                // work already popped (the quantum guarantee holds).
-                for _ in 0..64 {
-                    match lat_rx.pop() {
-                        Some(l) => execute_slice(&core, l, &mut rng),
-                        None => break,
-                    }
+            // Latency arrivals during bulk service preempt the rest of the
+            // bulk batch at slice granularity — bounded to one batch per
+            // bulk slice, so even a sustained stream of latency submissions
+            // cannot indefinitely defer the bulk work already popped (the
+            // quantum guarantee holds).
+            for _ in 0..64 {
+                match lat_rx.pop() {
+                    Some(l) => execute_slice(l, &mut rng),
+                    None => break,
                 }
             }
-            execute_slice(&core, slice, &mut rng);
+            execute_slice(slice, &mut rng);
         }
     }
 }
 
-/// Run one slice to completion (or hand it to the resilience layer).
-pub(crate) fn execute_slice(core: &Arc<EngineCore>, slice: SliceDesc, rng: &mut Pcg64) {
+/// Run one slice to completion (or hand it to the resilience layer). The
+/// slice carries its engine (`SliceDesc::core`): all accounting, feedback,
+/// and retry routing happen against the engine that dispatched it, even
+/// though the executing worker is shared by the whole cluster.
+pub(crate) fn execute_slice(slice: SliceDesc, rng: &mut Pcg64) {
+    let core = Arc::clone(&slice.core);
     let cand = &slice.plan.candidates[slice.cand_idx];
     let rail = cand.rail;
     let rail_state = core.fabric.rail(rail);
@@ -186,72 +420,13 @@ pub(crate) fn execute_slice(core: &Arc<EngineCore>, slice: SliceDesc, rng: &mut 
                 &core.ctx(slice.class),
             );
             slice.transfer.complete_slice();
+            core.stats.inflight.fetch_sub(1, Ordering::AcqRel);
         }
         Err(err) => {
             rail_state.slices_failed.fetch_add(1, Ordering::Relaxed);
             EngineStats::bump(&core.stats.slice_failures);
             log::debug!("slice failed on {rail}: {err}");
-            super::resilience::on_slice_failure(core, slice);
-        }
-    }
-}
-
-impl Datapath {
-    /// Lane a slice of `class` rides; everything shares the bulk lane when
-    /// QoS lanes are disabled.
-    #[inline]
-    fn lane_idx(&self, class: TransferClass) -> usize {
-        if self.qos {
-            class.index()
-        } else {
-            TransferClass::Bulk.index()
-        }
-    }
-
-    /// Push a dispatched slice onto its rail's lane, yielding while full
-    /// (each stall episode is counted in `EngineStats::ring_full_stalls`).
-    /// Errors only on engine shutdown.
-    pub fn enqueue(&self, core: &EngineCore, slice: SliceDesc) -> crate::Result<()> {
-        let rail = slice.plan.candidates[slice.cand_idx].rail.0 as usize;
-        let lane = self.lane_idx(slice.class);
-        let producer = &self.lanes[rail][lane];
-        let mut item = slice;
-        let mut stalled = false;
-        loop {
-            match producer.push(item) {
-                Ok(()) => {
-                    // Prompt wakeup: the worker may be in idle backoff.
-                    self.wakers[rail].unpark();
-                    return Ok(());
-                }
-                Err(back) => {
-                    if core.shutdown.load(Ordering::Acquire) {
-                        return Err(crate::Error::Shutdown);
-                    }
-                    if !stalled {
-                        stalled = true;
-                        EngineStats::bump(&core.stats.ring_full_stalls);
-                    }
-                    // A full lane means the worker is busy, but kick it
-                    // anyway in case it parked behind the other lane.
-                    self.wakers[rail].unpark();
-                    item = back;
-                    std::thread::yield_now();
-                }
-            }
-        }
-    }
-
-    /// Ring backlog for a rail, summed over both lanes (tests / telemetry).
-    pub fn backlog(&self, rail: RailId) -> u64 {
-        self.lanes[rail.0 as usize].iter().map(|p| p.backlog()).sum()
-    }
-
-    /// Unpark every rail worker (shutdown: don't wait out a parked
-    /// worker's idle-backoff timeout).
-    pub(crate) fn wake_all(&self) {
-        for w in &self.wakers {
-            w.unpark();
+            super::resilience::on_slice_failure(&core, slice);
         }
     }
 }

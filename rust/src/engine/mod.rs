@@ -151,35 +151,32 @@ impl TransferReq {
     }
 }
 
-/// The engine: owns the worker threads; cheap to share behind `Arc`.
+/// The engine: a control plane over the cluster-shared datapath; cheap to
+/// share behind `Arc`. Any number of engines (one per node, in fleet
+/// deployments) coexist on one `Cluster`, sharing its per-rail workers.
 pub struct TentEngine {
     core: Arc<EngineCore>,
-    workers: Vec<JoinHandle<()>>,
     maint: Option<JoinHandle<()>>,
 }
 
 impl TentEngine {
     /// Bring up an engine over a cluster: load backends, build the
-    /// scheduler, spawn one worker per rail (+ maintenance).
+    /// scheduler, attach to the cluster's shared datapath (creating it —
+    /// and fixing its ring/wakeup knobs — if this is the first engine),
+    /// and spawn the maintenance thread.
     pub fn new(cluster: &Cluster, config: EngineConfig) -> Result<TentEngine> {
         let maintenance = config.maintenance;
-        let ring_capacity = config.ring_capacity;
-        let seed = config.seed;
+        let dp = cluster.shared_datapath(datapath::DatapathConfig::from_engine(&config));
         let core = Arc::new(EngineCore::new(
             Arc::clone(&cluster.topo),
             Arc::clone(&cluster.fabric),
             Arc::clone(&cluster.segments),
             Arc::clone(&cluster.transports),
+            dp,
             config,
         ));
-        let (dp, workers) = datapath::spawn_workers(&core, ring_capacity, seed);
-        core.install_datapath(dp);
         let maint = maintenance.then(|| resilience::spawn_maintenance(&core));
-        Ok(TentEngine {
-            core,
-            workers,
-            maint,
-        })
+        Ok(TentEngine { core, maint })
     }
 
     // ---- segment management (§3.1) ----
@@ -272,6 +269,7 @@ impl TentEngine {
 
         for (off, len) in spans {
             let s = SliceDesc {
+                core: Arc::clone(&self.core),
                 src: Arc::clone(&src),
                 src_off: req.src_off + off,
                 dst: Arc::clone(&dst),
@@ -343,7 +341,18 @@ impl TentEngine {
         s.enqueue_ns = clock::now_ns();
         core.sched.add_queued(&core.fabric, cand.rail, s.len, s.class); // Alg. 1 line 11
         EngineStats::bump(&core.stats.slices_dispatched);
-        core.datapath().enqueue(core, s)
+        core.stats.inflight.fetch_add(1, Ordering::AcqRel);
+        match core.datapath.enqueue(s) {
+            Ok(()) => Ok(()),
+            Err(back) => {
+                // Shutdown while enqueueing: unwind the accounting (caller
+                // completes the transfer ledger as failed).
+                core.stats.inflight.fetch_sub(1, Ordering::AcqRel);
+                let rail = back.plan.candidates[back.cand_idx].rail;
+                core.sched.sub_queued(&core.fabric, rail, back.len, back.class);
+                Err(Error::Shutdown)
+            }
+        }
     }
 
     /// Non-blocking batch status query.
@@ -405,17 +414,37 @@ impl TentEngine {
         self.core.policy.kind()
     }
 
-    /// Stop workers and maintenance; idempotent.
+    /// Stop this engine: refuse new work, join maintenance, and drain
+    /// every in-flight slice. The rail workers belong to the cluster and
+    /// keep running for other engines; draining (rather than joining)
+    /// preserves the old guarantee that no slice of this engine is still
+    /// executing after shutdown returns. Idempotent.
     pub fn shutdown(&mut self) {
         self.core.shutdown.store(true, Ordering::Release);
-        // Kick parked workers so join latency never depends on the
-        // idle-backoff timeout expiring.
-        self.core.datapath().wake_all();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
         if let Some(m) = self.maint.take() {
             let _ = m.join();
+        }
+        // Bounded drain: in-flight work at shutdown is normally tiny
+        // (callers wait their batches first), but a crashed rail worker
+        // must degrade to a loud leak, not a permanent hang in Drop.
+        let deadline = clock::now_ns() + Duration::from_secs(30).as_nanos() as u64;
+        let mut spins = 0u32;
+        while self.core.stats.inflight.load(Ordering::Acquire) > 0 {
+            if clock::now_ns() > deadline {
+                log::error!(
+                    "engine shutdown: {} slices still in flight after 30s; leaking them",
+                    self.core.stats.inflight.load(Ordering::Acquire)
+                );
+                return;
+            }
+            spins = spins.wrapping_add(1);
+            if spins % 64 == 0 {
+                // Defensive kick: wake any deep-parked worker (the wakeup
+                // protocol shouldn't lose tokens, but shutdown must not
+                // hinge on that).
+                self.core.datapath.wake_all();
+            }
+            std::thread::sleep(Duration::from_micros(50));
         }
     }
 }

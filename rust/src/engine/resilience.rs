@@ -54,9 +54,18 @@ pub(crate) fn on_slice_failure(core: &Arc<EngineCore>, mut slice: SliceDesc) {
                 slice.serial_ns = serial;
                 slice.enqueue_ns = clock::now_ns();
                 core.sched.add_queued(&core.fabric, cand.rail, slice.len, slice.class);
-                // enqueue fails only on shutdown, where counters are moot.
-                let _ = core.datapath().enqueue(core, slice);
-                return;
+                match core.datapath.enqueue(slice) {
+                    Ok(()) => return,
+                    Err(back) => {
+                        // Shutdown mid-retry: unwind the queue accounting
+                        // and fall through to the give-up path so the
+                        // slice ledger (and the engine's in-flight drain)
+                        // still balance.
+                        let rail = back.plan.candidates[back.cand_idx].rail;
+                        core.sched.sub_queued(&core.fabric, rail, back.len, back.class);
+                        slice = back;
+                    }
+                }
             }
         }
     }
@@ -64,6 +73,7 @@ pub(crate) fn on_slice_failure(core: &Arc<EngineCore>, mut slice: SliceDesc) {
     EngineStats::bump(&core.stats.permanent_failures);
     slice.transfer.mark_failed();
     slice.transfer.complete_slice();
+    core.stats.inflight.fetch_sub(1, Ordering::AcqRel);
 }
 
 /// Choose the retry path: healthy & non-excluded candidates ordered by tier

@@ -61,6 +61,10 @@ pub struct SchedulerState {
     /// Round-robin tie-break cursor (Algorithm 1, line 10).
     pub rr: AtomicUsize,
     pub params: SchedParams,
+    /// Counter shard this engine writes in the shared fabric's per-rail
+    /// queued-bytes stripes (`Fabric::register_engine`). 0 for standalone
+    /// scheduler states and single-counter fabrics.
+    pub fabric_shard: usize,
 }
 
 impl SchedulerState {
@@ -73,7 +77,16 @@ impl SchedulerState {
             excluded: (0..n_rails).map(|_| AtomicBool::new(false)).collect(),
             rr: AtomicUsize::new(0),
             params,
+            fabric_shard: 0,
         }
+    }
+
+    /// Same, but registered against a shared fabric: the state's queue
+    /// accounting writes the engine's private counter shard.
+    pub fn new_registered(n_rails: usize, params: SchedParams, fabric: &Fabric) -> Self {
+        let mut s = SchedulerState::new(n_rails, params);
+        s.fabric_shard = fabric.register_engine();
+        s
     }
 
     #[inline]
@@ -117,7 +130,7 @@ impl SchedulerState {
         if w <= 0.0 {
             return local;
         }
-        let global = fabric.rail(rail).queued_bytes.load(Ordering::Relaxed);
+        let global = fabric.queued_bytes_from(self.fabric_shard, rail);
         ((1.0 - w) * local as f64 + w * global as f64) as u64
     }
 
@@ -146,17 +159,22 @@ impl SchedulerState {
     /// Account a dispatched slice (Algorithm 1, line 11).
     pub fn add_queued(&self, fabric: &Fabric, rail: RailId, len: u64, class: TransferClass) {
         self.local_queued[rail.0 as usize][class.index()].fetch_add(len, Ordering::Relaxed);
-        fabric.add_queued(rail, len);
+        fabric.add_queued_at(self.fabric_shard, rail, len);
     }
 
-    /// Account a completed / failed slice (saturating: retried slices may
-    /// be double-counted briefly).
+    /// Account a completed / failed slice. Saturating on both ledgers: the
+    /// engine-local one asserts in debug builds (dispatch/completion are
+    /// strictly paired within one engine, so a clamp is a local bug), the
+    /// fabric one clamps + counts (see `Fabric::sub_queued_at`).
     pub fn sub_queued(&self, fabric: &Fabric, rail: RailId, len: u64, class: TransferClass) {
         let lq = &self.local_queued[rail.0 as usize][class.index()];
+        let mut clamped = false;
         let _ = lq.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            clamped = v < len;
             Some(v.saturating_sub(len))
         });
-        fabric.sub_queued(rail, len);
+        debug_assert!(!clamped, "local queued-bytes underflow on {rail}");
+        fabric.sub_queued_at(self.fabric_shard, rail, len);
     }
 
     /// Feedback (§4.2): fold the observed completion time into the rail's
@@ -205,10 +223,28 @@ mod tests {
         let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
         s.add_queued(&f, rail, 1000, TransferClass::Bulk);
         assert_eq!(s.queued(&f, rail, TransferClass::Bulk), 1000);
-        assert_eq!(f.rail(rail).queued_bytes.load(Ordering::Relaxed), 1000);
+        assert_eq!(f.rail(rail).queued_bytes(), 1000);
         s.sub_queued(&f, rail, 400, TransferClass::Bulk);
         assert_eq!(s.queued(&f, rail, TransferClass::Bulk), 600);
-        s.sub_queued(&f, rail, 10_000, TransferClass::Bulk); // saturates
+        s.sub_queued(&f, rail, 600, TransferClass::Bulk);
+        assert_eq!(s.queued(&f, rail, TransferClass::Bulk), 0);
+        assert_eq!(f.rail(rail).queued_bytes(), 0);
+    }
+
+    #[test]
+    fn oversubtraction_saturates_and_asserts_in_debug() {
+        let (t, f, s) = setup();
+        let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
+        s.add_queued(&f, rail, 600, TransferClass::Bulk);
+        if cfg!(debug_assertions) {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                s.sub_queued(&f, rail, 10_000, TransferClass::Bulk)
+            }));
+            assert!(r.is_err(), "debug builds must flag the accounting bug");
+        } else {
+            s.sub_queued(&f, rail, 10_000, TransferClass::Bulk);
+        }
+        // Saturating semantics in every build: no wrap to ~2^64.
         assert_eq!(s.queued(&f, rail, TransferClass::Bulk), 0);
     }
 
@@ -222,7 +258,7 @@ mod tests {
         // waits behind both lanes. The fabric-global count stays total.
         assert_eq!(s.queued(&f, rail, TransferClass::Latency), 1_000);
         assert_eq!(s.queued(&f, rail, TransferClass::Bulk), 11_000);
-        assert_eq!(f.rail(rail).queued_bytes.load(Ordering::Relaxed), 11_000);
+        assert_eq!(f.rail(rail).queued_bytes(), 11_000);
         s.sub_queued(&f, rail, 1_000, TransferClass::Latency);
         assert_eq!(s.queued(&f, rail, TransferClass::Latency), 0);
         assert_eq!(s.queued(&f, rail, TransferClass::Bulk), 10_000);

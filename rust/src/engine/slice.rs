@@ -9,6 +9,7 @@
 //! offset, so slices complete in any order and retries are idempotent.
 
 use super::batch::TransferState;
+use super::core::EngineCore;
 use super::plan::TransferPlan;
 use super::TransferClass;
 use crate::segment::Segment;
@@ -17,6 +18,11 @@ use std::sync::Arc;
 
 /// One schedulable slice.
 pub struct SliceDesc {
+    /// The engine that dispatched this slice. Rail workers are shared by
+    /// every engine on the cluster (`datapath::SharedDatapath`), so the
+    /// completion path — queue accounting, cost-model feedback, stats,
+    /// retries — routes through this backref.
+    pub core: Arc<EngineCore>,
     pub src: Arc<Segment>,
     pub src_off: u64,
     pub dst: Arc<Segment>,

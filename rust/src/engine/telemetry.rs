@@ -32,6 +32,21 @@ pub struct EngineStats {
     /// (one bump per stall episode, not per retry) — the backpressure
     /// signal for undersized rings.
     pub ring_full_stalls: AtomicU64,
+    /// Ring-full stall episodes where other engines also had bytes queued
+    /// on the rail (fabric-global queued > this engine's local queued):
+    /// backpressure caused by sharing the rail, not by this engine's own
+    /// burst. The fleet-contention signal.
+    pub cross_engine_stalls: AtomicU64,
+    /// Enqueues that actually unparked the rail worker (it was parked).
+    pub wakeups_sent: AtomicU64,
+    /// Enqueues that skipped the unpark because the worker was already
+    /// running — the win from flag-gated (batched) wakeup versus the old
+    /// unconditional unpark-per-enqueue.
+    pub wakeups_coalesced: AtomicU64,
+    /// Slices handed to the datapath and not yet fully resolved
+    /// (completed, or failed past the retry budget). Engine shutdown
+    /// drains this to zero so no slice outlives its engine handle.
+    pub inflight: AtomicU64,
 }
 
 impl EngineStats {
@@ -59,6 +74,9 @@ impl EngineStats {
             staged_plans: self.staged_plans.load(Ordering::Relaxed),
             bytes_submitted: self.bytes_submitted.load(Ordering::Relaxed),
             ring_full_stalls: self.ring_full_stalls.load(Ordering::Relaxed),
+            cross_engine_stalls: self.cross_engine_stalls.load(Ordering::Relaxed),
+            wakeups_sent: self.wakeups_sent.load(Ordering::Relaxed),
+            wakeups_coalesced: self.wakeups_coalesced.load(Ordering::Relaxed),
         }
     }
 }
@@ -82,6 +100,9 @@ pub struct StatCounters {
     pub staged_plans: u64,
     pub bytes_submitted: u64,
     pub ring_full_stalls: u64,
+    pub cross_engine_stalls: u64,
+    pub wakeups_sent: u64,
+    pub wakeups_coalesced: u64,
 }
 
 /// Per-rail view combining topology, fabric counters, and scheduler state.
@@ -126,7 +147,7 @@ pub fn rail_snapshots(
                 fabric: def.fabric.name(),
                 health: st.health(),
                 excluded: sched.is_excluded(def.id),
-                queued_bytes: st.queued_bytes.load(Ordering::Relaxed),
+                queued_bytes: st.queued_bytes(),
                 bytes_carried: st.bytes_carried.load(Ordering::Relaxed),
                 slices_ok: st.slices_ok.load(Ordering::Relaxed),
                 slices_failed: st.slices_failed.load(Ordering::Relaxed),

@@ -186,19 +186,13 @@ mod tests {
     #[test]
     fn custom_profile_drives_a_real_engine() {
         use crate::engine::{EngineConfig, TentEngine, TransferReq};
-        use crate::fabric::{Fabric, FabricConfig};
-        use crate::segment::{Location, SegmentManager};
-        use crate::transport::TransportRegistry;
+        use crate::fabric::FabricConfig;
+        use crate::segment::Location;
         use std::sync::Arc;
 
         let topo = Arc::new(parse_profile(SAMPLE).unwrap());
-        let segments = Arc::new(SegmentManager::new());
-        let cluster = crate::cluster::Cluster {
-            fabric: Arc::new(Fabric::new(&topo, FabricConfig::default())),
-            transports: Arc::new(TransportRegistry::load_all(&topo, Arc::clone(&segments))),
-            topo,
-            segments,
-        };
+        let cluster =
+            crate::cluster::Cluster::from_topology(topo, FabricConfig::default()).unwrap();
         let e = TentEngine::new(&cluster, EngineConfig::default()).unwrap();
         let a = e.register_segment(Location::host(0, 0), 1 << 20).unwrap();
         let b = e.register_segment(Location::host(1, 0), 1 << 20).unwrap();

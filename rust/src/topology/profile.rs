@@ -352,8 +352,9 @@ impl Builder {
 /// * `mnnvl_rack` — GB200-NVL72-like rack: adds MNNVL GPU fabric.
 /// * `ascend_ub` — Huawei Ascend node with UB/HIXL + RoCE.
 /// * `legacy_tcp` — hosts with TCP only.
-/// * `mixed_fleet` — one H800 node, one Ascend node, one legacy node
-///   (the paper's communication-silo scenario).
+/// * `mixed_fleet` — H800 / Ascend / legacy nodes in a repeating 1:1:1 mix
+///   (the paper's communication-silo scenario); `nodes` below 3 yields the
+///   canonical 3-node shape.
 pub fn build_profile(name: &str, nodes: u16) -> Result<Topology> {
     let mut b = Builder::new(name);
     match name {
@@ -388,9 +389,17 @@ pub fn build_profile(name: &str, nodes: u16) -> Result<Topology> {
             }
         }
         "mixed_fleet" => {
-            b.h800_node(0, true, true);
-            b.ascend_node(1);
-            b.tcp_only_node(2);
+            // Node-count-parametric silo mix: the canonical 3-node shape
+            // (H800, Ascend, legacy) repeats round-robin, so an N-node
+            // fleet keeps the same heterogeneity ratio. `nodes ≤ 3` is the
+            // original 3-node paper scenario.
+            for i in 0..nodes.max(3) {
+                match i % 3 {
+                    0 => b.h800_node(i, true, true),
+                    1 => b.ascend_node(i),
+                    _ => b.tcp_only_node(i),
+                };
+            }
         }
         other => {
             return Err(Error::Config(format!(
@@ -453,6 +462,23 @@ mod tests {
         // TCP is the only fabric shared by all three.
         for n in [NodeId(0), NodeId(1), NodeId(2)] {
             assert!(t.node_in_fabric(n, FabricKind::Tcp));
+        }
+    }
+
+    #[test]
+    fn mixed_fleet_is_node_count_parametric() {
+        let t = build_profile("mixed_fleet", 8).unwrap();
+        assert_eq!(t.nodes.len(), 8);
+        // Repeating 1:1:1 silo mix.
+        for n in [NodeId(0), NodeId(3), NodeId(6)] {
+            assert!(t.node_in_fabric(n, FabricKind::NvLink), "{n:?}");
+        }
+        for n in [NodeId(1), NodeId(4), NodeId(7)] {
+            assert!(t.node_in_fabric(n, FabricKind::AscendUb), "{n:?}");
+        }
+        for n in [NodeId(2), NodeId(5)] {
+            assert!(!t.node_in_fabric(n, FabricKind::Rdma), "{n:?}");
+            assert!(t.node_in_fabric(n, FabricKind::Tcp), "{n:?}");
         }
     }
 

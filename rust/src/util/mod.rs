@@ -14,6 +14,7 @@ pub mod json;
 pub mod logging;
 pub mod prng;
 pub mod ring;
+pub mod sharded;
 
 /// RAII guard for a disk-pool backing file in `$TMPDIR`.
 ///

@@ -1,0 +1,164 @@
+//! Striped atomic counters for write-hot shared statistics.
+//!
+//! At fleet scale (§2.3 "thousands of GPUs"), every engine maintaining the
+//! per-rail queued-bytes statistic `A_d` through one `AtomicU64` turns that
+//! counter's cache line into a coherence hot spot: 64 engines bounce the
+//! line on every `add_queued`/`sub_queued`, twice per slice. A
+//! [`ShardedU64`] stripes the value over cache-padded shards — each engine
+//! writes only its own shard (uncontended RMW) and readers sum all shards.
+//! Reads are O(shards) and slightly stale, which is exactly the tolerance
+//! the cost model already has for queue statistics.
+
+use crate::util::ring::CachePadded;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A `u64` counter striped over cache-padded shards.
+///
+/// Writers pick a shard (engines use their fabric-assigned shard id, see
+/// `Fabric::register_engine`); `sum()` folds all shards. With one shard this
+/// degenerates to a plain atomic — the single-counter baseline the
+/// `fig_scaling` bench ablates against.
+pub struct ShardedU64 {
+    shards: Box<[CachePadded<AtomicU64>]>,
+    mask: usize,
+}
+
+impl ShardedU64 {
+    /// Create with `shards` stripes (rounded up to a power of two, min 1).
+    pub fn new(shards: usize) -> ShardedU64 {
+        let n = shards.next_power_of_two().max(1);
+        ShardedU64 {
+            shards: (0..n).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
+            mask: n - 1,
+        }
+    }
+
+    #[inline]
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Map an arbitrary writer id onto a shard index.
+    #[inline]
+    pub fn shard_of(&self, writer: usize) -> usize {
+        writer & self.mask
+    }
+
+    #[inline]
+    pub fn add(&self, shard: usize, v: u64) {
+        self.shards[shard & self.mask].fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Saturating subtract on one shard. Returns `true` if the shard held
+    /// fewer than `v` and the subtraction clamped to zero — for a
+    /// well-behaved writer (never subtracting more than it added to its own
+    /// shard) that is an accounting bug, so callers surface it.
+    #[inline]
+    #[must_use]
+    pub fn sub_saturating(&self, shard: usize, v: u64) -> bool {
+        let mut clamped = false;
+        let _ = self.shards[shard & self.mask].fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |cur| {
+                clamped = cur < v;
+                Some(cur.saturating_sub(v))
+            },
+        );
+        clamped
+    }
+
+    /// Fold all shards. O(shard_count); tolerably stale under concurrency
+    /// (each shard load is atomic, the sum is not a snapshot).
+    #[inline]
+    pub fn sum(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Reset every shard to zero (bench phase boundaries only — racing
+    /// writers may survive the reset).
+    pub fn reset(&self) {
+        for s in self.shards.iter() {
+            s.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_shard_degenerates_to_plain_counter() {
+        let c = ShardedU64::new(1);
+        assert_eq!(c.shard_count(), 1);
+        c.add(0, 100);
+        c.add(7, 20); // any writer id maps onto shard 0
+        assert_eq!(c.sum(), 120);
+        assert!(!c.sub_saturating(3, 120));
+        assert_eq!(c.sum(), 0);
+    }
+
+    #[test]
+    fn shards_round_up_to_power_of_two() {
+        assert_eq!(ShardedU64::new(0).shard_count(), 1);
+        assert_eq!(ShardedU64::new(3).shard_count(), 4);
+        assert_eq!(ShardedU64::new(8).shard_count(), 8);
+    }
+
+    #[test]
+    fn sum_folds_all_shards() {
+        let c = ShardedU64::new(4);
+        for w in 0..8 {
+            c.add(w, 10);
+        }
+        assert_eq!(c.sum(), 80);
+        assert!(!c.sub_saturating(0, 20)); // shard 0 got writers 0 and 4
+        assert_eq!(c.sum(), 60);
+    }
+
+    #[test]
+    fn sub_clamps_and_reports_per_shard() {
+        let c = ShardedU64::new(2);
+        c.add(0, 50);
+        c.add(1, 50);
+        // Shard 1 only holds 50 even though the total is 100.
+        assert!(c.sub_saturating(1, 80));
+        assert_eq!(c.sum(), 50);
+        assert!(!c.sub_saturating(0, 50));
+        assert!(c.sub_saturating(0, 1));
+        assert_eq!(c.sum(), 0);
+    }
+
+    #[test]
+    fn concurrent_balanced_writers_return_to_zero() {
+        let c = std::sync::Arc::new(ShardedU64::new(8));
+        let handles: Vec<_> = (0..8usize)
+            .map(|w| {
+                let c = std::sync::Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        c.add(w, 3);
+                        assert!(!c.sub_saturating(w, 3));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.sum(), 0);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let c = ShardedU64::new(4);
+        c.add(1, 5);
+        c.add(2, 6);
+        c.reset();
+        assert_eq!(c.sum(), 0);
+    }
+}

@@ -151,7 +151,7 @@ fn class_survives_resilience_rerouting() {
 fn ring_full_backpressure_is_counted() {
     let c = tcp_cluster();
     // Tiny lane capacity: a 4 MiB transfer (64 slices) onto the single
-    // rail must hit ring-full backpressure in `Datapath::enqueue`.
+    // rail must hit ring-full backpressure in `SharedDatapath::enqueue`.
     let cfg = EngineConfig {
         ring_capacity: 8,
         ..Default::default()

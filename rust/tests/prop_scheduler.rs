@@ -8,9 +8,10 @@ use tent::engine::plan::build_plan;
 use tent::engine::sched::{SchedCtx, SchedParams, SchedulerState};
 use tent::engine::slice::decompose;
 use tent::engine::{EngineConfig, TentEngine, TransferClass};
+use tent::fabric::FabricConfig;
 use tent::policy::{make_policy, PolicyKind};
 use tent::segment::Location;
-use tent::topology::Tier;
+use tent::topology::{RailId, Tier};
 use tent::util::prng::Pcg64;
 
 const CASES: usize = 200;
@@ -260,6 +261,171 @@ fn prop_loaded_rail_eventually_avoided() {
             assert_ne!(picked, hot, "saturated rail must lose the pick");
         }
     }
+}
+
+// ---------- multi-engine sharded queue accounting ----------
+
+/// N schedulers sharing one fabric, random interleavings of
+/// `add_queued`/`sub_queued`/`predict_ns`: the sharded per-rail counters
+/// must stay non-negative (no clamp ever fires for balanced engines) and
+/// their sum must track a single-counter oracle exactly.
+#[test]
+fn prop_multi_engine_sharded_counters_match_oracle() {
+    let mut rng = Pcg64::new(0xA165, 0);
+    for _case in 0..10 {
+        let n_engines = rng.gen_between(2, 9) as usize;
+        let cluster = Cluster::from_profile_nodes(
+            "h800_hgx",
+            1,
+            FabricConfig {
+                counter_shards: n_engines,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let fabric = &cluster.fabric;
+        let n_rails = cluster.topo.rails.len();
+        let scheds: Vec<SchedulerState> = (0..n_engines)
+            .map(|_| SchedulerState::new_registered(n_rails, SchedParams::default(), fabric))
+            .collect();
+        // Oracle: one plain counter per rail; per-(engine, rail) ledger of
+        // outstanding adds so engines only ever subtract what they added.
+        let mut oracle = vec![0u64; n_rails];
+        let mut outstanding: Vec<Vec<Vec<u64>>> = vec![vec![Vec::new(); n_rails]; n_engines];
+        for step in 0..3_000u32 {
+            let e = rng.gen_range(n_engines as u64) as usize;
+            let r = rng.gen_range(n_rails as u64) as usize;
+            let rail = RailId(r as u32);
+            match rng.gen_range(3) {
+                0 => {
+                    let len = rng.gen_between(1, 4 << 20);
+                    scheds[e].add_queued(fabric, rail, len, TransferClass::Bulk);
+                    outstanding[e][r].push(len);
+                    oracle[r] += len;
+                }
+                1 => {
+                    if let Some(len) = outstanding[e][r].pop() {
+                        scheds[e].sub_queued(fabric, rail, len, TransferClass::Bulk);
+                        oracle[r] -= len;
+                    }
+                }
+                _ => {
+                    let bw = cluster.topo.rail(rail).bw_bytes_per_sec;
+                    let (pred, _) =
+                        scheds[e].predict_ns(fabric, rail, 64 << 10, bw, TransferClass::Bulk);
+                    assert!(pred.is_finite() && pred >= 0.0);
+                }
+            }
+            if step % 64 == 0 {
+                assert_eq!(fabric.queued_bytes(rail), oracle[r], "step {step}");
+            }
+        }
+        // Drain everything; the sharded sum must return to zero with zero
+        // underflow clamps — sum-consistent with the oracle throughout.
+        for (e, per_rail) in outstanding.iter_mut().enumerate() {
+            for (r, stack) in per_rail.iter_mut().enumerate() {
+                let rail = RailId(r as u32);
+                for len in stack.drain(..) {
+                    scheds[e].sub_queued(fabric, rail, len, TransferClass::Bulk);
+                    oracle[r] -= len;
+                }
+            }
+        }
+        for r in 0..n_rails {
+            assert_eq!(oracle[r], 0);
+            assert_eq!(fabric.rail(RailId(r as u32)).queued_bytes(), 0);
+        }
+        let clamps = fabric
+            .contention
+            .underflow_clamps
+            .load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(clamps, 0);
+    }
+}
+
+/// Same property under true concurrency: engine threads race balanced
+/// add/sub interleavings on shared rails; the striped counters end at
+/// exactly zero with no clamps.
+#[test]
+fn prop_multi_engine_concurrent_accounting_drains_to_zero() {
+    let n_engines = 8usize;
+    let cluster = Cluster::from_profile_nodes(
+        "h800_hgx",
+        1,
+        FabricConfig {
+            counter_shards: n_engines,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let fabric = &cluster.fabric;
+    let n_rails = cluster.topo.rails.len();
+    std::thread::scope(|scope| {
+        for e in 0..n_engines {
+            let sched = SchedulerState::new_registered(n_rails, SchedParams::default(), fabric);
+            scope.spawn(move || {
+                let mut rng = Pcg64::new(0xC0C0 + e as u64, 1);
+                let mut held: Vec<(RailId, u64)> = Vec::new();
+                for _ in 0..5_000 {
+                    if held.len() < 32 && rng.gen_bool(0.55) {
+                        let rail = RailId(rng.gen_range(n_rails as u64) as u32);
+                        let len = rng.gen_between(1, 1 << 20);
+                        sched.add_queued(fabric, rail, len, TransferClass::Bulk);
+                        held.push((rail, len));
+                    } else if let Some((rail, len)) = held.pop() {
+                        sched.sub_queued(fabric, rail, len, TransferClass::Bulk);
+                    }
+                }
+                for (rail, len) in held.drain(..) {
+                    sched.sub_queued(fabric, rail, len, TransferClass::Bulk);
+                }
+            });
+        }
+    });
+    for r in 0..n_rails {
+        assert_eq!(fabric.rail(RailId(r as u32)).queued_bytes(), 0, "rail {r}");
+    }
+    let clamps = fabric.contention.underflow_clamps.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(clamps, 0);
+}
+
+/// The underflow hazard itself: an engine subtracting more than it added
+/// clamps (never wraps), is counted, and trips the debug assertion.
+#[test]
+fn prop_sharded_sub_clamps_on_underflow() {
+    let cluster = Cluster::from_profile_nodes(
+        "h800_hgx",
+        1,
+        FabricConfig {
+            counter_shards: 4,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let fabric = &cluster.fabric;
+    let rail = RailId(0);
+    let a = fabric.register_engine();
+    let b = fabric.register_engine();
+    fabric.add_queued_at(a, rail, 100);
+    fabric.add_queued_at(b, rail, 100);
+    // Engine b tries to remove more than it ever added: its *shard* is
+    // short even though the rail total (200) would cover it — exactly the
+    // multi-engine interleaving that silently corrupted a single shared
+    // counter.
+    if cfg!(debug_assertions) {
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            fabric.sub_queued_at(b, rail, 150)
+        }));
+        assert!(r.is_err(), "debug builds must flag the underflow");
+    } else {
+        fabric.sub_queued_at(b, rail, 150);
+    }
+    let clamps = fabric.contention.underflow_clamps.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(clamps, 1);
+    // Saturating semantics: b's shard pinned at zero, a's shard intact.
+    assert_eq!(fabric.rail(rail).queued_bytes(), 100);
+    fabric.sub_queued_at(a, rail, 100);
+    assert_eq!(fabric.rail(rail).queued_bytes(), 0);
 }
 
 #[test]

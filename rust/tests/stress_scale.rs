@@ -1,0 +1,232 @@
+//! Fleet-scale stress: many engines over one shared fabric (tier-1).
+//!
+//! Every test stands up a `cluster::Fleet` — one engine per node, all
+//! funneling into the cluster-shared per-rail workers — drives the mixed
+//! KV-fetch (Latency) / checkpoint (Bulk) workload from *every* engine
+//! concurrently, and checks the invariants that must survive scale:
+//!
+//! * **slice conservation** — the fabric's per-NIC byte counters sum to
+//!   exactly the payload bytes the engines submitted: nothing lost,
+//!   nothing duplicated, even across retries;
+//! * **ledger balance** — per engine, completed == dispatched, queued
+//!   bytes drain to zero on every rail, and the sharded queued-bytes
+//!   counters never underflow;
+//! * **per-class accounting** — latency + bulk completions add up, and
+//!   both classes make progress on every engine;
+//! * **bounded fairness** — no engine starves on a homogeneous fleet;
+//! * **failure re-convergence** — a mid-run rail kill + recovery is masked
+//!   (zero failed batches) and the recovered rails carry traffic again.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+use tent::cluster::{Fleet, FleetConfig, WorkloadConfig};
+use tent::topology::{FabricKind, NodeId};
+
+fn workload(ms: u64) -> WorkloadConfig {
+    WorkloadConfig {
+        duration: Duration::from_millis(ms),
+        submitters_per_engine: 2,
+        ..Default::default()
+    }
+}
+
+/// Core invariant pack shared by every scale point.
+fn check_invariants(fleet: &Fleet, submitted_floor: u64) {
+    let mut bytes_submitted = 0u64;
+    for (i, e) in fleet.engines().iter().enumerate() {
+        let s = e.stats();
+        assert_eq!(
+            s.slices_completed, s.slices_dispatched,
+            "engine {i} ledger: {s:?}"
+        );
+        assert_eq!(s.permanent_failures, 0, "engine {i}: {s:?}");
+        assert_eq!(
+            s.slices_completed_latency + s.slices_completed_bulk,
+            s.slices_completed,
+            "engine {i} class split: {s:?}"
+        );
+        assert!(
+            s.slices_completed_latency > 0 && s.slices_completed_bulk > 0,
+            "engine {i} must complete both classes: {s:?}"
+        );
+        bytes_submitted += s.bytes_submitted;
+    }
+    assert!(
+        bytes_submitted >= submitted_floor,
+        "workload too small: {bytes_submitted}"
+    );
+    // Conservation vs the per-NIC byte counters: every slice carried
+    // exactly once (retried slices are carried only by their successful
+    // attempt).
+    assert_eq!(
+        fleet.carried_bytes(),
+        bytes_submitted,
+        "fabric byte counters must equal submitted payload"
+    );
+    // All queues drained; sharded counters never went negative.
+    for rail in &fleet.cluster.fabric.rails {
+        assert_eq!(rail.queued_bytes(), 0, "{} leaked queue", rail.id);
+    }
+    let clamps = fleet.cluster.fabric.contention.underflow_clamps.load(Ordering::Relaxed);
+    assert_eq!(clamps, 0, "queued-bytes accounting underflowed");
+}
+
+#[test]
+fn h800_8_nodes_concurrent_all_engines() {
+    let fleet = Fleet::new(FleetConfig::new("h800_hgx", 8)).unwrap();
+    let r = fleet.run_workload(&workload(400)).unwrap();
+    assert_eq!(r.failed_batches, 0, "no injection -> no failures");
+    assert!(r.total_batches >= 8 * 4, "batches: {}", r.total_batches);
+    check_invariants(&fleet, 8 << 20);
+    // Homogeneous fleet: nobody starves.
+    assert!(r.per_engine_bytes.iter().all(|&b| b > 0), "{:?}", r.per_engine_bytes);
+    assert!(
+        r.fairness() >= 0.25,
+        "fairness {:.3} ({:?})",
+        r.fairness(),
+        r.per_engine_bytes
+    );
+    // Lazy worker spawn: the workload is host-to-host, so GPU-only rails
+    // (NVLink/PCIe) never cost a thread.
+    let dp = fleet.cluster.datapath().expect("datapath up");
+    assert!(dp.spawned_workers() > 0);
+    assert!(
+        dp.spawned_workers() < fleet.cluster.topo.rails.len(),
+        "lazy spawn: {} of {} rails live",
+        dp.spawned_workers(),
+        fleet.cluster.topo.rails.len()
+    );
+    // Flag-gated wakeups coalesce under load.
+    let coalesced: u64 = fleet
+        .engines()
+        .iter()
+        .map(|e| e.stats().wakeups_coalesced)
+        .sum();
+    assert!(coalesced > 0, "busy rails must skip redundant unparks");
+}
+
+#[test]
+fn h800_32_nodes_concurrent_all_engines() {
+    let fleet = Fleet::new(FleetConfig::new("h800_hgx", 32)).unwrap();
+    let r = fleet.run_workload(&workload(500)).unwrap();
+    assert_eq!(r.failed_batches, 0);
+    check_invariants(&fleet, 32 << 20);
+    assert!(r.per_engine_bytes.iter().all(|&b| b > 0), "{:?}", r.per_engine_bytes);
+    assert!(
+        r.fairness() >= 0.15,
+        "32-node fairness {:.3} ({:?})",
+        r.fairness(),
+        r.per_engine_bytes
+    );
+    // 32 engines share one fabric through one datapath: worker count is a
+    // property of live rails, not engines x rails.
+    let dp = fleet.cluster.datapath().expect("datapath up");
+    assert!(
+        dp.spawned_workers() < fleet.cluster.topo.rails.len(),
+        "{} workers for {} rails",
+        dp.spawned_workers(),
+        fleet.cluster.topo.rails.len()
+    );
+}
+
+#[test]
+fn mixed_fleet_8_nodes_crosses_silos() {
+    let fleet = Fleet::new(FleetConfig::new("mixed_fleet", 8)).unwrap();
+    // Legacy nodes ride a single 10 Gbps TCP rail; shrink blocks so the
+    // slow silo finishes inside the test budget.
+    let w = WorkloadConfig {
+        duration: Duration::from_millis(400),
+        latency_block: 128 << 10,
+        bulk_block: 512 << 10,
+        ..Default::default()
+    };
+    let r = fleet.run_workload(&w).unwrap();
+    assert_eq!(r.failed_batches, 0);
+    check_invariants(&fleet, 4 << 20);
+    // Heterogeneous silos: fairness is not ~1, but nobody is starved —
+    // even the TCP-only nodes complete fetches from every silo.
+    assert!(r.per_engine_bytes.iter().all(|&b| b > 0), "{:?}", r.per_engine_bytes);
+}
+
+#[test]
+fn mixed_fleet_32_nodes_builds_and_moves() {
+    let fleet = Fleet::new(FleetConfig::new("mixed_fleet", 32)).unwrap();
+    assert_eq!(fleet.cluster.topo.nodes.len(), 32);
+    let w = WorkloadConfig {
+        duration: Duration::from_millis(400),
+        latency_block: 128 << 10,
+        bulk_block: 512 << 10,
+        submitters_per_engine: 1,
+        ..Default::default()
+    };
+    let r = fleet.run_workload(&w).unwrap();
+    assert_eq!(r.failed_batches, 0);
+    check_invariants(&fleet, 8 << 20);
+    assert!(r.per_engine_bytes.iter().all(|&b| b > 0), "{:?}", r.per_engine_bytes);
+}
+
+#[test]
+fn failure_and_recovery_mid_run_reconverges_all_engines() {
+    let fleet = Fleet::new(FleetConfig::new("h800_hgx", 8)).unwrap();
+
+    // Phase 1: clean traffic.
+    let r1 = fleet.run_workload(&workload(250)).unwrap();
+    assert_eq!(r1.failed_batches, 0);
+
+    // Phase 2: kill two of node 1's NICs mid-run, recover before the end.
+    let victims: Vec<_> = fleet
+        .cluster
+        .topo
+        .rails_of(NodeId(1), FabricKind::Rdma)
+        .into_iter()
+        .take(2)
+        .collect();
+    let fabric = Arc::clone(&fleet.cluster.fabric);
+    let v = victims.clone();
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(80));
+        for &r in &v {
+            fabric.inject_failure(r);
+        }
+        std::thread::sleep(Duration::from_millis(150));
+        for &r in &v {
+            fabric.recover(r);
+        }
+    });
+    let r2 = fleet.run_workload(&workload(400)).unwrap();
+    killer.join().unwrap();
+    // Dual-layer resilience masks the kill: batches all succeed even
+    // though slices died on the failed rails and rerouted.
+    assert_eq!(r2.failed_batches, 0, "failover must mask the rail kill");
+
+    // Let probers re-admit the recovered rails everywhere.
+    std::thread::sleep(Duration::from_millis(100));
+    let before: Vec<u64> = victims
+        .iter()
+        .map(|&r| fleet.cluster.fabric.rail(r).bytes_carried.load(Ordering::Relaxed))
+        .collect();
+
+    // Phase 3: every engine re-converges — the recovered rails carry
+    // fetch traffic again (node 1 is a random-peer source for all).
+    let r3 = fleet.run_workload(&workload(400)).unwrap();
+    assert_eq!(r3.failed_batches, 0);
+    let regained: u64 = victims
+        .iter()
+        .zip(&before)
+        .map(|(&r, &b)| {
+            fleet
+                .cluster
+                .fabric
+                .rail(r)
+                .bytes_carried
+                .load(Ordering::Relaxed)
+                .saturating_sub(b)
+        })
+        .sum();
+    assert!(regained > 0, "recovered rails must be re-integrated");
+
+    // Conservation holds across the whole kill/recover history.
+    check_invariants(&fleet, 16 << 20);
+    assert!(r3.per_engine_bytes.iter().all(|&b| b > 0));
+}
