@@ -1,0 +1,218 @@
+//! Resilience envelope — goodput under trace-driven chaos, and the
+//! sub-50 ms self-healing acceptance gate (§6.3; ROADMAP "Failure-trace
+//! replay at fleet scale").
+//!
+//! Each cell replays a deterministic fault schedule (Table 1 trace at
+//! `eps` events/sec plus correlated storms, a flapping link expansion, a
+//! slow drain, and a congestion ramp) against a live fleet while the mixed
+//! KV-fetch / checkpoint workload runs. The healing probe times every
+//! injected hard failure from the injection instant to the first rerouted-
+//! slice completion on a surviving rail — the paper's headline resilience
+//! quantity — plus goodput recovery to 90% of the pre-fault rate.
+//!
+//! Output: goodput vs events/sec × fleet size × policy, retained-goodput
+//! fraction vs the no-fault baseline, healing P50/P99, and per-event
+//! outcome counts. The verdict gates on the TENT policy: every fault that
+//! touched traffic must heal, nothing may fail permanently, and P99
+//! healing latency must beat 50 ms.
+//!
+//! `--smoke` runs the 8-node column at one intensity (CI). Other knobs:
+//! `--nodes 8,16`, `--eps 0,3,8`, `--seed N`, `--policies tent,rr`,
+//! `--dump-schedule path` (write the first generated schedule),
+//! `--schedule path` (replay a saved schedule file in every chaos cell —
+//! pair it with a single `--nodes` value so rail ids line up).
+
+use std::time::Duration;
+use tent::chaos::{self, ChaosSchedule, ProbeConfig, ScenarioMix};
+use tent::cluster::{Fleet, FleetConfig, WorkloadConfig};
+use tent::policy::PolicyKind;
+use tent::util::cli::Args;
+use tent::util::{fmt_bw, fmt_ns};
+
+const HEAL_GATE_NS: u64 = 50_000_000; // the sub-50 ms claim
+
+struct Cell {
+    goodput: f64,
+    fails: u64,
+    healed: u64,
+    untouched: u64,
+    unhealed: u64,
+    heal_p50: u64,
+    heal_p99: u64,
+    recovery_p99: u64,
+    failed_batches: u64,
+}
+
+/// One sweep point: fleet shape + chaos intensity + schedule source.
+struct CellSpec<'a> {
+    nodes: u16,
+    policy: PolicyKind,
+    eps: f64,
+    seed: u64,
+    duration: Duration,
+    horizon_ns: u64,
+    loaded: Option<&'a ChaosSchedule>,
+}
+
+fn run_cell(spec: &CellSpec, dump: &mut Option<String>) -> Cell {
+    let &CellSpec { nodes, policy, eps, seed, duration, horizon_ns, loaded } = spec;
+    let mut cfg = FleetConfig::new("h800_hgx", nodes);
+    cfg.policy = policy;
+    let fleet = Fleet::new(cfg).expect("fleet build");
+    let schedule = if eps == 0.0 {
+        // No-fault baseline: empty schedule, same harness path.
+        ChaosSchedule { seed, horizon_ns, events: Vec::new() }
+    } else if let Some(s) = loaded {
+        s.clone()
+    } else {
+        let mix = ScenarioMix {
+            trace_events_per_sec: eps,
+            ..Default::default()
+        };
+        ChaosSchedule::generate(&fleet.cluster.topo, seed, horizon_ns, &mix)
+    };
+    if eps > 0.0 {
+        if let Some(path) = dump.take() {
+            schedule.save(&path).expect("--dump-schedule write");
+            eprintln!("(schedule dumped to {path}: {} events)", schedule.events.len());
+        }
+    }
+    let w = WorkloadConfig {
+        duration,
+        ..Default::default()
+    };
+    let r = chaos::run(&fleet, &schedule, &w, ProbeConfig::default()).expect("chaos run");
+    Cell {
+        goodput: r.fleet.aggregate_goodput(),
+        fails: r.outcome.fails_injected,
+        healed: r.outcome.healed,
+        untouched: r.outcome.untouched,
+        unhealed: r.outcome.unhealed,
+        heal_p50: r.fleet.healing_hist.p50(),
+        heal_p99: r.fleet.healing_hist.p99(),
+        recovery_p99: r.fleet.recovery_hist.p99(),
+        failed_batches: r.fleet.failed_batches,
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.flag("smoke");
+    let seed: u64 = args
+        .get("seed")
+        .map(|s| s.parse().expect("--seed"))
+        .unwrap_or(0xC4A0_5EED);
+    let nodes_sweep: Vec<u16> = match args.get("nodes") {
+        Some(list) => list.split(',').map(|s| s.trim().parse().expect("--nodes list")).collect(),
+        None if smoke => vec![8],
+        None => vec![8, 16],
+    };
+    let eps_sweep: Vec<f64> = match args.get("eps") {
+        Some(list) => list.split(',').map(|s| s.trim().parse().expect("--eps list")).collect(),
+        None if smoke => vec![0.0, 5.0],
+        None => vec![0.0, 3.0, 8.0],
+    };
+    let policies: Vec<PolicyKind> = match args.get("policies") {
+        Some(list) => list
+            .split(',')
+            .map(|s| PolicyKind::parse(s.trim()).expect("--policies list"))
+            .collect(),
+        None if smoke => vec![PolicyKind::Tent],
+        None => vec![PolicyKind::Tent, PolicyKind::MooncakeTe],
+    };
+    let loaded = args.get("schedule").map(|p| {
+        ChaosSchedule::load(p).expect("--schedule load")
+    });
+    let mut dump = args.get("dump-schedule").map(|s| s.to_string());
+
+    let duration = if smoke {
+        Duration::from_millis(700)
+    } else {
+        Duration::from_millis(1500)
+    };
+    // Schedule horizon ends before submission stops, so late faults still
+    // see traffic to disturb (and their heals are observable).
+    let horizon_ns = duration.as_nanos() as u64 - 250_000_000;
+
+    println!("== fig_resilience: goodput under trace-driven chaos + healing gate ==");
+    println!("(h800_hgx, Table 1 trace + storms/flaps/drains/ramps; 20x time compression)");
+    println!();
+    println!(
+        "{:<7} {:<13} {:>5} {:>10} {:>7} {:>6} {:>6} {:>6} {:>6} {:>10} {:>10} {:>10}",
+        "nodes", "policy", "eps", "goodput", "retain", "fails", "healed", "quiet", "unheal",
+        "healP50", "healP99", "recovP99"
+    );
+
+    let mut gate_pass = true;
+    let mut gated_cells = 0u32;
+    for &n in &nodes_sweep {
+        for policy in &policies {
+            let mut baseline: Option<f64> = None;
+            for &eps in &eps_sweep {
+                let spec = CellSpec {
+                    nodes: n,
+                    policy: *policy,
+                    eps,
+                    seed,
+                    duration,
+                    horizon_ns,
+                    loaded: loaded.as_ref(),
+                };
+                let c = run_cell(&spec, &mut dump);
+                let retain = match baseline {
+                    Some(b) if b > 0.0 => c.goodput / b,
+                    _ => 1.0,
+                };
+                if eps == 0.0 {
+                    baseline = Some(c.goodput);
+                }
+                println!(
+                    "{:<7} {:<13} {:>5} {:>10} {:>6.1}% {:>6} {:>6} {:>6} {:>6} {:>10} {:>10} {:>10}",
+                    n,
+                    policy.name(),
+                    eps,
+                    fmt_bw(c.goodput),
+                    100.0 * retain,
+                    c.fails,
+                    c.healed,
+                    c.untouched,
+                    c.unhealed,
+                    if c.healed > 0 { fmt_ns(c.heal_p50) } else { "-".into() },
+                    if c.healed > 0 { fmt_ns(c.heal_p99) } else { "-".into() },
+                    if c.recovery_p99 > 0 { fmt_ns(c.recovery_p99) } else { "-".into() },
+                );
+                // The healing gate scores the TENT policy's chaos cells.
+                if *policy == PolicyKind::Tent && eps > 0.0 {
+                    gated_cells += 1;
+                    let cell_ok = c.unhealed == 0
+                        && c.failed_batches == 0
+                        && (c.healed == 0 || c.heal_p99 < HEAL_GATE_NS);
+                    if !cell_ok {
+                        eprintln!(
+                            "  gate violation at nodes={n} eps={eps}: unhealed={} failed_batches={} healP99={}",
+                            c.unhealed,
+                            c.failed_batches,
+                            fmt_ns(c.heal_p99)
+                        );
+                    }
+                    gate_pass &= cell_ok;
+                }
+            }
+        }
+    }
+
+    println!();
+    println!(
+        "self-healing gate (tent, {} chaos cell{}): every touched fault healed, zero lost \
+         batches, P99 heal < {}: {}",
+        gated_cells,
+        if gated_cells == 1 { "" } else { "s" },
+        fmt_ns(HEAL_GATE_NS),
+        if gate_pass { "PASS" } else { "FAIL" }
+    );
+    // Smoke reports on shared CI runners without failing the build (a
+    // crash or hang still does); full runs hard-fail, fig_scaling-style.
+    if !gate_pass && !smoke {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,188 @@
+//! Schedule replay: turn a [`ChaosSchedule`] into live fabric actions.
+//!
+//! The injector walks the time-sorted event list, sleeps to each event's
+//! offset from a caller-supplied start instant, and applies it to the
+//! shared [`Fabric`] — exactly the `inject_failure` / `inject_degradation` /
+//! `recover` calls a human would script, but driven from the declarative
+//! schedule so every run applies the identical sequence. The returned
+//! applied-action log carries the *scheduled* offsets (not wall-clock
+//! apply times), which is what makes two replays of the same schedule
+//! byte-comparable: the log is a pure projection of the schedule.
+
+use super::probe::ProbeHandle;
+use super::schedule::{ActionKind, ChaosSchedule};
+use crate::fabric::Fabric;
+use crate::topology::RailId;
+use crate::util::clock;
+use crate::{Error, Result};
+use std::collections::BTreeSet;
+
+/// One action as applied (schedule-relative timestamps; deterministic).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AppliedAction {
+    pub at_ns: u64,
+    pub rail: RailId,
+    pub kind: ActionKind,
+    pub factor: f64,
+}
+
+/// Project the schedule into the applied-action log without touching any
+/// fabric — the pure "what would replay do" view the replay-contract tests
+/// compare against live runs.
+pub fn dry_run(schedule: &ChaosSchedule) -> Vec<AppliedAction> {
+    schedule
+        .events
+        .iter()
+        .map(|e| AppliedAction {
+            at_ns: e.at_ns,
+            rail: e.rail,
+            kind: e.kind,
+            factor: e.factor,
+        })
+        .collect()
+}
+
+/// Check every event targets a rail the fabric actually has.
+pub fn validate(fabric: &Fabric, schedule: &ChaosSchedule) -> Result<()> {
+    let n = fabric.rails.len() as u64;
+    for e in &schedule.events {
+        if e.rail.0 as u64 >= n {
+            return Err(Error::Config(format!(
+                "chaos schedule targets {} but the fabric has {} rails",
+                e.rail, n
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Replay `schedule` against `fabric`, anchored at `start_ns` (an epoch-
+/// relative instant from [`clock::now_ns`]). Blocks until the last event
+/// has been applied; callers run it on its own thread next to the
+/// workload. Fail injections are announced to `probe` so healing latency
+/// is timed from the true injection instant.
+pub fn replay(
+    fabric: &Fabric,
+    schedule: &ChaosSchedule,
+    probe: Option<&ProbeHandle>,
+    start_ns: u64,
+) -> Result<Vec<AppliedAction>> {
+    validate(fabric, schedule)?;
+    let mut applied = Vec::with_capacity(schedule.events.len());
+    for e in &schedule.events {
+        clock::sleep_until_ns(start_ns + e.at_ns);
+        match e.kind {
+            ActionKind::Fail => {
+                fabric.inject_failure(e.rail);
+                if let Some(p) = probe {
+                    p.on_fail(e.rail, clock::now_ns(), start_ns + e.until_ns);
+                }
+            }
+            ActionKind::Degrade => {
+                fabric.inject_degradation(e.rail, e.factor);
+            }
+            ActionKind::Recover => {
+                fabric.recover(e.rail);
+            }
+        }
+        applied.push(AppliedAction {
+            at_ns: e.at_ns,
+            rail: e.rail,
+            kind: e.kind,
+            factor: e.factor,
+        });
+    }
+    Ok(applied)
+}
+
+/// Recover every rail the schedule ever touched (post-run cleanup, so the
+/// fleet is reusable and the engines' probers re-admit everything).
+/// `Fabric::recover` is a no-op on rails that are already healthy.
+pub fn recover_touched(fabric: &Fabric, schedule: &ChaosSchedule) {
+    let rails: BTreeSet<u32> = schedule.events.iter().map(|e| e.rail.0).collect();
+    for r in rails {
+        if (r as usize) < fabric.rails.len() {
+            fabric.recover(RailId(r));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaos::schedule::{ChaosSchedule, ScenarioMix};
+    use crate::fabric::{FabricConfig, RailHealth};
+    use crate::topology::profile::build_profile;
+
+    #[test]
+    fn dry_run_projects_the_whole_schedule_in_order() {
+        let t = build_profile("h800_hgx", 2).unwrap();
+        let s = ChaosSchedule::generate(&t, 5, 1_000_000_000, &ScenarioMix::default());
+        let log = dry_run(&s);
+        assert_eq!(log.len(), s.events.len());
+        for (a, e) in log.iter().zip(&s.events) {
+            assert_eq!(a.at_ns, e.at_ns);
+            assert_eq!(a.rail, e.rail);
+            assert_eq!(a.kind, e.kind);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_rails() {
+        let t = build_profile("h800_hgx", 1).unwrap();
+        let f = crate::fabric::Fabric::new(&t, FabricConfig::default());
+        let mut s = ChaosSchedule {
+            seed: 1,
+            horizon_ns: 10,
+            events: vec![],
+        };
+        s.events.push(crate::chaos::schedule::ChaosEvent {
+            at_ns: 0,
+            rail: RailId(10_000),
+            kind: ActionKind::Fail,
+            factor: 0.0,
+            until_ns: 5,
+            source: "test".into(),
+        });
+        assert!(validate(&f, &s).is_err());
+        assert!(replay(&f, &s, None, clock::now_ns()).is_err());
+    }
+
+    #[test]
+    fn replay_applies_and_cleanup_restores() {
+        let t = build_profile("h800_hgx", 2).unwrap();
+        let f = crate::fabric::Fabric::new(&t, FabricConfig::default());
+        // A tiny hand-built schedule: fail one rail, degrade another, and
+        // deliberately never recover them in-schedule.
+        let s = ChaosSchedule {
+            seed: 9,
+            horizon_ns: 2_000_000,
+            events: vec![
+                crate::chaos::schedule::ChaosEvent {
+                    at_ns: 0,
+                    rail: RailId(0),
+                    kind: ActionKind::Fail,
+                    factor: 0.0,
+                    until_ns: 2_000_000,
+                    source: "test".into(),
+                },
+                crate::chaos::schedule::ChaosEvent {
+                    at_ns: 1_000_000,
+                    rail: RailId(1),
+                    kind: ActionKind::Degrade,
+                    factor: 0.5,
+                    until_ns: 2_000_000,
+                    source: "test".into(),
+                },
+            ],
+        };
+        let log = replay(&f, &s, None, clock::now_ns()).unwrap();
+        assert_eq!(log, dry_run(&s));
+        assert_eq!(f.rail(RailId(0)).health(), RailHealth::Failed);
+        assert_eq!(f.rail(RailId(1)).health(), RailHealth::Degraded);
+        recover_touched(&f, &s);
+        assert_eq!(f.rail(RailId(0)).health(), RailHealth::Healthy);
+        assert_eq!(f.rail(RailId(1)).health(), RailHealth::Healthy);
+        assert_eq!(f.rail(RailId(1)).bw_factor(), 1.0);
+    }
+}

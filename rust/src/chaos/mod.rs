@@ -1,0 +1,154 @@
+//! Trace-driven chaos harness (§6.3's resilience evaluation, made a
+//! first-class subsystem).
+//!
+//! The harness replays a deterministic fault schedule against a live
+//! [`Fleet`] while the production workload runs, and instruments the heal
+//! path end to end:
+//!
+//! * [`schedule`] — declarative fault schedules: Table 1 trace events plus
+//!   correlated scenarios (multi-rail storms, flapping links, slow drains,
+//!   congestion ramps), pure in `(topology, seed, horizon, mix)` and
+//!   serializable to a seed+schedule file so any run replays exactly.
+//! * [`injector`] — walks the schedule against the shared fabric on its own
+//!   thread, sleeping to each event's offset.
+//! * [`probe`] — measures per-event healing latency (injection → first
+//!   rerouted-slice completion on a surviving rail, stamped by the datapath
+//!   itself) and goodput recovery (back to 90% of the pre-fault rate).
+//!
+//! [`run`] ties the three together around [`Fleet::run_workload`] and
+//! returns a [`ChaosReport`]: the fleet report with healing/recovery
+//! histograms merged in, the per-event outcome counts, and the applied
+//! action log whose [`ChaosReport::replay_signature`] is byte-identical
+//! across replays of the same seed+schedule — the replay contract
+//! `tests/chaos_replay.rs` enforces and `benches/fig_resilience.rs` sweeps.
+
+pub mod injector;
+pub mod probe;
+pub mod schedule;
+
+pub use injector::AppliedAction;
+pub use probe::{HealingOutcome, HealingProbe, ProbeConfig, ProbeHandle};
+pub use schedule::{ActionKind, ChaosEvent, ChaosSchedule, ScenarioMix};
+
+use crate::cluster::{Fleet, FleetReport, WorkloadConfig};
+use crate::util::clock;
+use crate::util::json::Json;
+use crate::Result;
+use std::sync::Arc;
+
+/// Everything one chaos run produced.
+pub struct ChaosReport {
+    pub schedule_seed: u64,
+    /// [`ChaosSchedule::digest`] of the schedule that was replayed.
+    pub schedule_digest: u64,
+    /// The injector's applied-action log (schedule-relative timestamps).
+    pub applied: Vec<AppliedAction>,
+    /// Per-event healing telemetry from the probe.
+    pub outcome: HealingOutcome,
+    /// The workload report, with `healing_hist` / `recovery_hist` populated.
+    pub fleet: FleetReport,
+}
+
+impl ChaosReport {
+    /// The deterministic identity of a replay: canonical JSON over the
+    /// schedule seed, the schedule digest, and the applied-action log.
+    /// Two runs of the same seed+schedule produce byte-identical
+    /// signatures — wall-clock quantities (goodput, latency histograms)
+    /// are deliberately excluded, since real threads never repeat them.
+    pub fn replay_signature(&self) -> String {
+        let actions = self
+            .applied
+            .iter()
+            .map(|a| {
+                Json::obj(vec![
+                    ("at_ns", Json::num(a.at_ns as f64)),
+                    ("rail", Json::num(a.rail.0 as f64)),
+                    ("kind", Json::str(a.kind.name())),
+                    ("factor", Json::num(a.factor)),
+                ])
+            })
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("seed", Json::str(&self.schedule_seed.to_string())),
+            ("digest", Json::str(&format!("{:016x}", self.schedule_digest))),
+            ("applied", Json::arr(actions)),
+        ])
+        .to_string()
+    }
+
+    /// P99 healing latency (ns) — the quantity the sub-50 ms gate scores.
+    pub fn heal_p99_ns(&self) -> u64 {
+        self.fleet.healing_hist.p99()
+    }
+}
+
+/// Replay `schedule` against `fleet` while driving `workload`, with the
+/// healing probe watching. The workload duration should exceed the
+/// schedule horizon so late events still see traffic (the tests and bench
+/// pad by a few hundred ms). On return every touched rail has been
+/// recovered, so the fleet is immediately reusable.
+pub fn run(
+    fleet: &Fleet,
+    schedule: &ChaosSchedule,
+    workload: &WorkloadConfig,
+    probe_cfg: ProbeConfig,
+) -> Result<ChaosReport> {
+    let fabric = Arc::clone(&fleet.cluster.fabric);
+    injector::validate(&fabric, schedule)?;
+    let probe = HealingProbe::spawn(fleet.engines().to_vec(), Arc::clone(&fabric), probe_cfg);
+    let handle = probe.handle();
+    // One anchor instant shared by the injector's event offsets and the
+    // probe's outage bookkeeping.
+    let start = clock::now_ns();
+    let (applied, fleet_report) = std::thread::scope(|scope| {
+        let inj = scope.spawn(|| injector::replay(&fabric, schedule, Some(&handle), start));
+        let report = fleet.run_workload(workload);
+        (inj.join().expect("chaos injector panicked"), report)
+    });
+    // Stop the probe and restore the fabric before error handling, so an
+    // early return never leaks a polling thread or a failed rail.
+    let outcome = probe.finish();
+    injector::recover_touched(&fabric, schedule);
+    let applied = applied?;
+    let fleet_report = fleet_report?;
+    fleet_report.healing_hist.merge(&outcome.healing);
+    fleet_report.recovery_hist.merge(&outcome.recovery);
+    Ok(ChaosReport {
+        schedule_seed: schedule.seed,
+        schedule_digest: schedule.digest(),
+        applied,
+        outcome,
+        fleet: fleet_report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::FleetConfig;
+    use std::time::Duration;
+
+    #[test]
+    fn empty_schedule_run_is_a_plain_workload() {
+        let fleet = Fleet::new(FleetConfig::new("h800_hgx", 2)).unwrap();
+        let schedule = ChaosSchedule {
+            seed: 42,
+            horizon_ns: 50_000_000,
+            events: Vec::new(),
+        };
+        let w = WorkloadConfig {
+            duration: Duration::from_millis(120),
+            submitters_per_engine: 1,
+            ..Default::default()
+        };
+        let r = run(&fleet, &schedule, &w, ProbeConfig::default()).unwrap();
+        assert!(r.applied.is_empty());
+        assert_eq!(r.outcome.fails_injected, 0);
+        assert_eq!(r.fleet.failed_batches, 0);
+        assert_eq!(r.fleet.healing_hist.count(), 0);
+        assert!(r.fleet.aggregate_goodput() > 0.0);
+        // Identity is stable even for the empty schedule.
+        assert_eq!(r.replay_signature(), r.replay_signature());
+        assert_eq!(r.schedule_digest, schedule.digest());
+    }
+}

@@ -1,0 +1,345 @@
+//! The healing probe: end-to-end heal-path instrumentation.
+//!
+//! For every injected hard failure the probe measures the paper's headline
+//! resilience quantity — **healing latency**: the time from the injection
+//! instant to the first *rerouted-slice completion* on a surviving rail
+//! anywhere in the fleet. The completion side is not polled: the datapath
+//! stamps `EngineStats::last_reroute_complete_ns` at the completion of
+//! every retried slice, so the measured latency is poll-rate-independent
+//! (a poll only discovers the stamp; the stamp carries the true time).
+//!
+//! A second, coarser signal tracks **throughput recovery**: fleet goodput
+//! (per-NIC carried-byte counters) sampled in fixed windows, with the time
+//! until the rate is back to `recovery_fraction` × the pre-fault trailing
+//! rate recorded per event.
+//!
+//! Per-event outcomes:
+//! * **healed** — a slice died on the failed rail and a rerouted slice
+//!   completed afterwards; the latency lands in `HealingOutcome::healing`.
+//! * **untouched** — the outage came and went without any slice failing on
+//!   the rail (nothing needed healing; not a gate failure).
+//! * **unhealed** — a slice died but no rerouted completion appeared within
+//!   the grace window: the resilience layer failed. The acceptance gate
+//!   requires zero of these.
+//! * **unresolved** — still in flight when the probe was stopped.
+//!
+//! Overlapping events (storms inject several fails at the same instant)
+//! share reroute completions: each open event closes on the first stamp
+//! after *its own* injection time, which is exactly the "fleet keeps
+//! moving traffic around every fault" property the gate is about.
+
+use crate::engine::TentEngine;
+use crate::fabric::Fabric;
+use crate::topology::RailId;
+use crate::util::clock;
+use crate::util::hist::Histogram;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Probe tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ProbeConfig {
+    /// Poll interval for stamp/arm discovery.
+    pub poll: Duration,
+    /// How long after injection an armed event may wait for a rerouted
+    /// completion before it is declared unhealed.
+    pub heal_grace: Duration,
+    /// Goodput sampling window.
+    pub goodput_window: Duration,
+    /// Recovery target as a fraction of the pre-fault trailing rate.
+    pub recovery_fraction: f64,
+}
+
+impl Default for ProbeConfig {
+    fn default() -> Self {
+        ProbeConfig {
+            poll: Duration::from_micros(200),
+            heal_grace: Duration::from_secs(2),
+            goodput_window: Duration::from_millis(5),
+            recovery_fraction: 0.9,
+        }
+    }
+}
+
+/// Aggregated healing telemetry for one chaos run.
+pub struct HealingOutcome {
+    /// Injection → first rerouted-slice completion (ns), one per healed
+    /// event.
+    pub healing: Histogram,
+    /// Injection → goodput back to `recovery_fraction` × pre-fault (ns).
+    pub recovery: Histogram,
+    pub fails_injected: u64,
+    pub healed: u64,
+    pub untouched: u64,
+    pub unhealed: u64,
+    pub unresolved: u64,
+}
+
+/// One open fail event being tracked.
+struct OpenFail {
+    rail: RailId,
+    t_inj: u64,
+    until_wall: u64,
+    failed_snap: u64,
+    pre_rate: f64,
+    armed: bool,
+    heal_closed: bool,
+    recovered: bool,
+}
+
+struct ProbeShared {
+    stop: AtomicBool,
+    incoming: Mutex<Vec<(RailId, u64, u64)>>, // (rail, t_inj, until_wall)
+    healing: Histogram,
+    recovery: Histogram,
+    fails_injected: AtomicU64,
+    healed: AtomicU64,
+    untouched: AtomicU64,
+    unhealed: AtomicU64,
+    unresolved: AtomicU64,
+}
+
+/// Injector-facing side of the probe (cheap to clone across threads).
+#[derive(Clone)]
+pub struct ProbeHandle {
+    shared: Arc<ProbeShared>,
+}
+
+impl ProbeHandle {
+    /// Announce a hard-failure injection at wall instant `t_inj`;
+    /// `until_wall` is the scheduled recovery instant (wall clock).
+    pub fn on_fail(&self, rail: RailId, t_inj: u64, until_wall: u64) {
+        self.shared.fails_injected.fetch_add(1, Ordering::Relaxed);
+        self.shared
+            .incoming
+            .lock()
+            .unwrap()
+            .push((rail, t_inj, until_wall));
+    }
+}
+
+/// The probe: a sampling thread over the fleet's engines + fabric.
+pub struct HealingProbe {
+    shared: Arc<ProbeShared>,
+    handle: JoinHandle<()>,
+}
+
+impl HealingProbe {
+    pub fn spawn(engines: Vec<Arc<TentEngine>>, fabric: Arc<Fabric>, cfg: ProbeConfig) -> HealingProbe {
+        let shared = Arc::new(ProbeShared {
+            stop: AtomicBool::new(false),
+            incoming: Mutex::new(Vec::new()),
+            healing: Histogram::new(),
+            recovery: Histogram::new(),
+            fails_injected: AtomicU64::new(0),
+            healed: AtomicU64::new(0),
+            untouched: AtomicU64::new(0),
+            unhealed: AtomicU64::new(0),
+            unresolved: AtomicU64::new(0),
+        });
+        let sh = Arc::clone(&shared);
+        let handle = std::thread::Builder::new()
+            .name("tent-chaos-probe".into())
+            .spawn(move || probe_loop(sh, engines, fabric, cfg))
+            .expect("spawn chaos probe");
+        HealingProbe { shared, handle }
+    }
+
+    pub fn handle(&self) -> ProbeHandle {
+        ProbeHandle {
+            shared: Arc::clone(&self.shared),
+        }
+    }
+
+    /// Stop the probe (remaining open events are swept: armed ones past
+    /// grace become unhealed, finished-outage quiet ones untouched, the
+    /// rest unresolved) and return the aggregated outcome.
+    pub fn finish(self) -> HealingOutcome {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        let _ = self.handle.join();
+        let out = HealingOutcome {
+            healing: Histogram::new(),
+            recovery: Histogram::new(),
+            fails_injected: self.shared.fails_injected.load(Ordering::Relaxed),
+            healed: self.shared.healed.load(Ordering::Relaxed),
+            untouched: self.shared.untouched.load(Ordering::Relaxed),
+            unhealed: self.shared.unhealed.load(Ordering::Relaxed),
+            unresolved: self.shared.unresolved.load(Ordering::Relaxed),
+        };
+        out.healing.merge(&self.shared.healing);
+        out.recovery.merge(&self.shared.recovery);
+        out
+    }
+}
+
+fn probe_loop(sh: Arc<ProbeShared>, engines: Vec<Arc<TentEngine>>, fabric: Arc<Fabric>, cfg: ProbeConfig) {
+    // Margin after the scheduled recovery in which a straggler slice may
+    // still fail on the rail (it raced the recover); quiet events are only
+    // closed as untouched after it.
+    const UNTOUCHED_MARGIN_NS: u64 = 5_000_000;
+    let poll = cfg.poll.max(Duration::from_micros(50));
+    let window_ns = (cfg.goodput_window.as_nanos() as u64).max(1_000_000);
+    let grace_ns = cfg.heal_grace.as_nanos() as u64;
+
+    let carried = |fabric: &Fabric| -> u64 {
+        fabric.byte_counters().iter().map(|&(_, b)| b).sum()
+    };
+    let stamp = |engines: &[Arc<TentEngine>]| -> u64 {
+        engines
+            .iter()
+            .map(|e| e.stats().last_reroute_complete_ns)
+            .max()
+            .unwrap_or(0)
+    };
+    let trailing_rate = |rates: &VecDeque<f64>| -> f64 {
+        if rates.is_empty() {
+            0.0
+        } else {
+            rates.iter().sum::<f64>() / rates.len() as f64
+        }
+    };
+
+    let mut open: Vec<OpenFail> = Vec::new();
+    let mut rates: VecDeque<f64> = VecDeque::with_capacity(8);
+    let mut last_bytes = carried(&fabric);
+    let mut window_start = clock::now_ns();
+
+    loop {
+        let stopping = sh.stop.load(Ordering::SeqCst);
+        if !stopping {
+            std::thread::sleep(poll);
+        }
+        let now = clock::now_ns();
+
+        // Intake: injections announced since the last tick. The pre-fault
+        // rate is pinned at intake, before the fault can dent the windows.
+        for (rail, t_inj, until_wall) in sh.incoming.lock().unwrap().drain(..) {
+            open.push(OpenFail {
+                rail,
+                t_inj,
+                until_wall,
+                failed_snap: fabric.rail(rail).slices_failed.load(Ordering::Relaxed),
+                pre_rate: trailing_rate(&rates),
+                armed: false,
+                heal_closed: false,
+                recovered: false,
+            });
+        }
+
+        // Goodput windows.
+        if now >= window_start + window_ns {
+            let b = carried(&fabric);
+            let dt_s = (now - window_start) as f64 / 1e9;
+            let rate = (b.saturating_sub(last_bytes)) as f64 / dt_s.max(1e-9);
+            for ev in open.iter_mut() {
+                if !ev.recovered && ev.pre_rate > 0.0 && rate >= cfg.recovery_fraction * ev.pre_rate {
+                    sh.recovery.record(now.saturating_sub(ev.t_inj));
+                    ev.recovered = true;
+                }
+            }
+            if rates.len() == 8 {
+                rates.pop_front();
+            }
+            rates.push_back(rate);
+            last_bytes = b;
+            window_start = now;
+        }
+
+        // Heal detection: arm on the first slice death on the rail, close
+        // on the first rerouted completion stamped after the injection.
+        let ts = stamp(&engines);
+        for ev in open.iter_mut() {
+            if !ev.armed
+                && fabric.rail(ev.rail).slices_failed.load(Ordering::Relaxed) > ev.failed_snap
+            {
+                ev.armed = true;
+            }
+            if ev.armed && !ev.heal_closed && ts > ev.t_inj {
+                sh.healing.record(ts - ev.t_inj);
+                sh.healed.fetch_add(1, Ordering::Relaxed);
+                ev.heal_closed = true;
+            }
+        }
+
+        // Expiry / final sweep.
+        open.retain(|ev| {
+            if ev.heal_closed {
+                // Keep only while the recovery signal may still land.
+                let keep = !ev.recovered
+                    && ev.pre_rate > 0.0
+                    && now < ev.until_wall.max(ev.t_inj) + grace_ns
+                    && !stopping;
+                return keep;
+            }
+            if ev.armed {
+                if now >= ev.t_inj + grace_ns {
+                    sh.unhealed.fetch_add(1, Ordering::Relaxed);
+                    return false;
+                }
+                if stopping {
+                    sh.unresolved.fetch_add(1, Ordering::Relaxed);
+                    return false;
+                }
+                return true;
+            }
+            if now >= ev.until_wall + UNTOUCHED_MARGIN_NS {
+                sh.untouched.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+            if stopping {
+                sh.unresolved.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+            true
+        });
+
+        if stopping {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::FabricConfig;
+    use crate::topology::profile::build_profile;
+
+    #[test]
+    fn quiet_outage_counts_as_untouched() {
+        let t = build_profile("h800_hgx", 1).unwrap();
+        let f = Arc::new(Fabric::new(&t, FabricConfig::default()));
+        let probe = HealingProbe::spawn(Vec::new(), Arc::clone(&f), ProbeConfig::default());
+        let h = probe.handle();
+        let now = clock::now_ns();
+        // Outage window entirely in the past + margin elapses quickly; no
+        // slice ever fails, so nothing needed healing.
+        h.on_fail(RailId(0), now, now + 10_000_000);
+        std::thread::sleep(Duration::from_millis(40));
+        let out = probe.finish();
+        assert_eq!(out.fails_injected, 1);
+        assert_eq!(out.untouched, 1);
+        assert_eq!(out.healed, 0);
+        assert_eq!(out.unhealed, 0);
+        assert_eq!(out.healing.count(), 0);
+    }
+
+    #[test]
+    fn stop_sweeps_open_events_as_unresolved() {
+        let t = build_profile("h800_hgx", 1).unwrap();
+        let f = Arc::new(Fabric::new(&t, FabricConfig::default()));
+        let probe = HealingProbe::spawn(Vec::new(), Arc::clone(&f), ProbeConfig::default());
+        let h = probe.handle();
+        let now = clock::now_ns();
+        // Outage scheduled far in the future: still open at stop.
+        h.on_fail(RailId(0), now, now + 60_000_000_000);
+        std::thread::sleep(Duration::from_millis(5));
+        let out = probe.finish();
+        assert_eq!(out.fails_injected, 1);
+        assert_eq!(out.unresolved, 1);
+        assert_eq!(out.unhealed, 0);
+    }
+}

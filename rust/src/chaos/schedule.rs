@@ -1,0 +1,612 @@
+//! Deterministic fault schedules: the declarative half of the chaos harness.
+//!
+//! A [`ChaosSchedule`] is a flat, time-sorted list of rail-visible actions
+//! (hard-fail / degrade / recover) generated from a seed — Table 1 trace
+//! events via [`TraceGenerator`] plus the correlated scenarios the single
+//! event mix cannot express (simultaneous multi-rail storms, flapping links,
+//! slow-drain degradation, background-congestion ramps). Generation is a
+//! pure function of `(topology, seed, horizon, mix)`, and the schedule
+//! serializes to/from a canonical JSON file, so any run replays exactly:
+//! same seed + same schedule file → byte-identical action sequence.
+//!
+//! Generation keeps the fleet *survivable* by construction: per rail, fault
+//! intervals never overlap, and per node, at most `max_down_fraction` of the
+//! sprayable (RDMA) rails are hard-down at any instant — so the resilience
+//! layer always has a live reroute target and a chaos run measures healing,
+//! not partition behavior.
+
+use crate::fabric::trace::{FailureEvent, RecoveryClass, TraceGenerator};
+use crate::topology::{FabricKind, RailId, Topology};
+use crate::util::json::Json;
+use crate::util::prng::Pcg64;
+use crate::{Error, Result};
+
+/// One rail-visible action in a schedule.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ActionKind {
+    /// Hard-fail the rail (slices on it error out).
+    Fail,
+    /// Degrade the rail to `factor` × nominal bandwidth.
+    Degrade,
+    /// Restore the rail to full health.
+    Recover,
+}
+
+impl ActionKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ActionKind::Fail => "fail",
+            ActionKind::Degrade => "degrade",
+            ActionKind::Recover => "recover",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ActionKind> {
+        Some(match s {
+            "fail" => ActionKind::Fail,
+            "degrade" => ActionKind::Degrade,
+            "recover" => ActionKind::Recover,
+            _ => return None,
+        })
+    }
+}
+
+/// One scheduled event. `until_ns` on a `Fail`/`Degrade` records when the
+/// matching `Recover` is scheduled (clamped to the horizon when the fault
+/// outlives the schedule — hard Table 1 events have a 160-minute MTTR);
+/// zero on `Recover` events.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosEvent {
+    /// Offset from replay start (ns, wall clock of the compressed sim).
+    pub at_ns: u64,
+    pub rail: RailId,
+    pub kind: ActionKind,
+    /// Bandwidth factor for `Degrade`; 0 otherwise.
+    pub factor: f64,
+    pub until_ns: u64,
+    /// Originating scenario or Table 1 event name (labels, not semantics).
+    pub source: String,
+}
+
+/// Scenario composition knobs for [`ChaosSchedule::generate`].
+#[derive(Clone, Debug)]
+pub struct ScenarioMix {
+    /// Table 1 trace intensity (Poisson arrivals; production is 382/month,
+    /// benches compress to several per second).
+    pub trace_events_per_sec: f64,
+    /// Correlated storms: simultaneous multi-rail kills on one node.
+    pub storms: u32,
+    /// Rails killed per storm.
+    pub storm_rails: usize,
+    /// Storm outage duration (ns).
+    pub storm_outage_ns: u64,
+    /// Down/up cycles a `NetworkLinkFlap` trace event expands into.
+    pub flap_cycles: u32,
+    /// Full flap period (down for half, up for half).
+    pub flap_period_ns: u64,
+    /// Slow-drain degradations: one rail stepped down in stages.
+    pub slow_drains: u32,
+    /// Background-congestion ramps: a spread of rails mildly degraded in
+    /// escalating stages, then released.
+    pub congestion_ramps: u32,
+    /// Guardrail: at most this fraction of a node's sprayable rails may be
+    /// hard-down at once (and never all of them).
+    pub max_down_fraction: f64,
+}
+
+impl Default for ScenarioMix {
+    fn default() -> Self {
+        ScenarioMix {
+            trace_events_per_sec: 4.0,
+            storms: 1,
+            storm_rails: 2,
+            storm_outage_ns: 40_000_000, // 40 ms
+            flap_cycles: 4,
+            flap_period_ns: 20_000_000, // 20 ms
+            slow_drains: 1,
+            congestion_ramps: 1,
+            max_down_fraction: 0.5,
+        }
+    }
+}
+
+/// A deterministic fault schedule (seed + time-sorted events).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosSchedule {
+    pub seed: u64,
+    pub horizon_ns: u64,
+    pub events: Vec<ChaosEvent>,
+}
+
+/// Per-rail interval bookkeeping used by the generation guardrails.
+struct DownBook {
+    /// Any scheduled action interval per rail (faults never overlap on one
+    /// rail, so every `Recover` is unambiguous).
+    busy: Vec<Vec<(u64, u64)>>,
+    /// Hard-down intervals per rail (the node budget counts these).
+    down: Vec<Vec<(u64, u64)>>,
+}
+
+fn overlaps(ivs: &[(u64, u64)], t0: u64, t1: u64) -> bool {
+    ivs.iter().any(|&(a, b)| t0 < b && a < t1)
+}
+
+impl DownBook {
+    fn new(rails: usize) -> DownBook {
+        DownBook {
+            busy: vec![Vec::new(); rails],
+            down: vec![Vec::new(); rails],
+        }
+    }
+
+    fn node_down_count(&self, node_rails: &[RailId], t0: u64, t1: u64) -> usize {
+        node_rails
+            .iter()
+            .filter(|r| overlaps(&self.down[r.0 as usize], t0, t1))
+            .count()
+    }
+
+    /// Reserve a hard-down interval if the rail is free and the node stays
+    /// within its concurrent-down budget.
+    fn try_fail(&mut self, rail: RailId, node_rails: &[RailId], cap: usize, t0: u64, t1: u64) -> bool {
+        let i = rail.0 as usize;
+        if overlaps(&self.busy[i], t0, t1) || self.node_down_count(node_rails, t0, t1) + 1 > cap {
+            return false;
+        }
+        self.busy[i].push((t0, t1));
+        self.down[i].push((t0, t1));
+        true
+    }
+
+    /// Reserve a degradation interval (degraded rails still carry traffic,
+    /// so they do not count against the down budget).
+    fn try_degrade(&mut self, rail: RailId, t0: u64, t1: u64) -> bool {
+        let i = rail.0 as usize;
+        if overlaps(&self.busy[i], t0, t1) {
+            return false;
+        }
+        self.busy[i].push((t0, t1));
+        true
+    }
+}
+
+/// Sprayable fault targets: the inter-node RDMA rails, grouped by node.
+/// Single-rail fabrics (a legacy node's lone TCP link) are never targeted —
+/// failing the only path would test partitions, not healing.
+fn eligible_rails(topo: &Topology) -> Vec<Vec<RailId>> {
+    topo.nodes
+        .iter()
+        .map(|&n| topo.rails_of(n, FabricKind::Rdma))
+        .filter(|rails| rails.len() >= 2)
+        .collect()
+}
+
+impl ChaosSchedule {
+    /// Generate a schedule: Table 1 trace + correlated scenarios, all
+    /// placed under the survivability guardrails. Pure in
+    /// `(topo, seed, horizon_ns, mix)`.
+    pub fn generate(topo: &Topology, seed: u64, horizon_ns: u64, mix: &ScenarioMix) -> ChaosSchedule {
+        let mut rng = Pcg64::new(seed, 0xC4A0);
+        let mut book = DownBook::new(topo.rails.len());
+        let by_node = eligible_rails(topo);
+        let flat: Vec<(usize, RailId)> = by_node
+            .iter()
+            .enumerate()
+            .flat_map(|(n, rails)| rails.iter().map(move |&r| (n, r)))
+            .collect();
+        let cap = |node: usize| -> usize {
+            let n = by_node[node].len();
+            (((n as f64) * mix.max_down_fraction) as usize).clamp(1, n - 1)
+        };
+        let mut events: Vec<ChaosEvent> = Vec::new();
+        if flat.is_empty() || horizon_ns == 0 {
+            return ChaosSchedule { seed, horizon_ns, events };
+        }
+
+        // --- 1. Table 1 empirical trace ----------------------------------
+        let mut trace = TraceGenerator::new(seed);
+        for a in trace.generate(horizon_ns, mix.trace_events_per_sec) {
+            if a.event == FailureEvent::NetworkLinkFlap {
+                // Flapping link: expand the single trace event into a
+                // down/up cadence (the class the prober's re-admission
+                // hysteresis exists for).
+                let cycles = mix.flap_cycles.max(1) as u64;
+                let period = mix.flap_period_ns.max(2);
+                let span = cycles * period;
+                let end = a.at_ns.saturating_add(span).min(horizon_ns);
+                for _ in 0..8 {
+                    let (node, rail) = *rng.choose(&flat);
+                    if book.try_fail(rail, &by_node[node], cap(node), a.at_ns, end) {
+                        for k in 0..cycles {
+                            let t = a.at_ns + k * period;
+                            if t >= horizon_ns {
+                                break;
+                            }
+                            let up = (t + period / 2).min(end);
+                            events.push(ChaosEvent {
+                                at_ns: t,
+                                rail,
+                                kind: ActionKind::Fail,
+                                factor: 0.0,
+                                until_ns: up,
+                                source: "flap".into(),
+                            });
+                            events.push(ChaosEvent {
+                                at_ns: up,
+                                rail,
+                                kind: ActionKind::Recover,
+                                factor: 0.0,
+                                until_ns: 0,
+                                source: "flap".into(),
+                            });
+                        }
+                        break;
+                    }
+                }
+                continue;
+            }
+            let end = a.at_ns.saturating_add(a.duration_ns).min(horizon_ns);
+            let hard = a.hard || a.event.recovery_class() == RecoveryClass::Hard;
+            for _ in 0..8 {
+                let (node, rail) = *rng.choose(&flat);
+                let placed = if hard {
+                    book.try_fail(rail, &by_node[node], cap(node), a.at_ns, end)
+                } else {
+                    book.try_degrade(rail, a.at_ns, end)
+                };
+                if !placed {
+                    continue;
+                }
+                let kind = if hard { ActionKind::Fail } else { ActionKind::Degrade };
+                events.push(ChaosEvent {
+                    at_ns: a.at_ns,
+                    rail,
+                    kind,
+                    factor: if hard { 0.0 } else { a.degrade_factor },
+                    until_ns: end,
+                    source: a.event.name().to_string(),
+                });
+                if end < horizon_ns {
+                    events.push(ChaosEvent {
+                        at_ns: end,
+                        rail,
+                        kind: ActionKind::Recover,
+                        factor: 0.0,
+                        until_ns: 0,
+                        source: a.event.name().to_string(),
+                    });
+                }
+                break;
+            }
+        }
+
+        // --- 2. Correlated storms: simultaneous multi-rail kills ----------
+        for _ in 0..mix.storms {
+            let outage = mix.storm_outage_ns.max(1).min(horizon_ns);
+            let t0 = rng.gen_between(horizon_ns / 4, (3 * horizon_ns / 4).max(horizon_ns / 4 + 1));
+            let end = t0.saturating_add(outage).min(horizon_ns);
+            'storm: for _ in 0..8 {
+                let node = rng.gen_range(by_node.len() as u64) as usize;
+                let want = mix.storm_rails.clamp(1, cap(node));
+                let mut rails = by_node[node].clone();
+                rng.shuffle(&mut rails);
+                let mut picked = Vec::new();
+                for r in rails {
+                    if picked.len() == want {
+                        break;
+                    }
+                    if book.try_fail(r, &by_node[node], cap(node), t0, end) {
+                        picked.push(r);
+                    }
+                }
+                if picked.len() < want.clamp(1, 2) {
+                    continue 'storm;
+                }
+                for r in picked {
+                    events.push(ChaosEvent {
+                        at_ns: t0,
+                        rail: r,
+                        kind: ActionKind::Fail,
+                        factor: 0.0,
+                        until_ns: end,
+                        source: "storm".into(),
+                    });
+                    if end < horizon_ns {
+                        events.push(ChaosEvent {
+                            at_ns: end,
+                            rail: r,
+                            kind: ActionKind::Recover,
+                            factor: 0.0,
+                            until_ns: 0,
+                            source: "storm".into(),
+                        });
+                    }
+                }
+                break 'storm;
+            }
+        }
+
+        // --- 3. Slow drain: one rail stepped down in stages ---------------
+        const DRAIN_FACTORS: [f64; 4] = [0.6, 0.4, 0.25, 0.15];
+        for _ in 0..mix.slow_drains {
+            let step = (horizon_ns / 12).max(1);
+            let span = step * DRAIN_FACTORS.len() as u64;
+            if span >= horizon_ns {
+                break;
+            }
+            let t0 = rng.gen_between(horizon_ns / 8, horizon_ns - span);
+            let end = t0 + span;
+            for _ in 0..8 {
+                let (_, rail) = *rng.choose(&flat);
+                if !book.try_degrade(rail, t0, end) {
+                    continue;
+                }
+                for (k, f) in DRAIN_FACTORS.iter().enumerate() {
+                    events.push(ChaosEvent {
+                        at_ns: t0 + k as u64 * step,
+                        rail,
+                        kind: ActionKind::Degrade,
+                        factor: *f,
+                        until_ns: end,
+                        source: "slow-drain".into(),
+                    });
+                }
+                events.push(ChaosEvent {
+                    at_ns: end,
+                    rail,
+                    kind: ActionKind::Recover,
+                    factor: 0.0,
+                    until_ns: 0,
+                    source: "slow-drain".into(),
+                });
+                break;
+            }
+        }
+
+        // --- 4. Background congestion ramp: broad mild degradation --------
+        const RAMP_FACTORS: [f64; 3] = [0.8, 0.65, 0.5];
+        for _ in 0..mix.congestion_ramps {
+            let step = (horizon_ns / 10).max(1);
+            let span = step * RAMP_FACTORS.len() as u64;
+            if span >= horizon_ns {
+                break;
+            }
+            let t0 = rng.gen_between(horizon_ns / 8, horizon_ns - span);
+            let end = t0 + span;
+            let m = (flat.len() / 8).max(2);
+            let mut order = flat.clone();
+            rng.shuffle(&mut order);
+            let mut taken = 0usize;
+            for (_, rail) in order {
+                if taken == m {
+                    break;
+                }
+                if !book.try_degrade(rail, t0, end) {
+                    continue;
+                }
+                taken += 1;
+                for (k, f) in RAMP_FACTORS.iter().enumerate() {
+                    events.push(ChaosEvent {
+                        at_ns: t0 + k as u64 * step,
+                        rail,
+                        kind: ActionKind::Degrade,
+                        factor: *f,
+                        until_ns: end,
+                        source: "congestion".into(),
+                    });
+                }
+                events.push(ChaosEvent {
+                    at_ns: end,
+                    rail,
+                    kind: ActionKind::Recover,
+                    factor: 0.0,
+                    until_ns: 0,
+                    source: "congestion".into(),
+                });
+            }
+        }
+
+        // Stable sort: ties keep generation order, so the serialized
+        // schedule is a pure function of the inputs.
+        events.sort_by_key(|e| e.at_ns);
+        ChaosSchedule { seed, horizon_ns, events }
+    }
+
+    /// Canonical JSON form. Object keys are BTreeMap-ordered and numbers
+    /// print deterministically, so equal schedules serialize byte-equal.
+    pub fn to_json(&self) -> String {
+        let events = self
+            .events
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("at_ns", Json::num(e.at_ns as f64)),
+                    ("rail", Json::num(e.rail.0 as f64)),
+                    ("kind", Json::str(e.kind.name())),
+                    ("factor", Json::num(e.factor)),
+                    ("until_ns", Json::num(e.until_ns as f64)),
+                    ("source", Json::str(&e.source)),
+                ])
+            })
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            // Full-width u64 seeds survive the f64 JSON number type as text.
+            ("seed", Json::str(&self.seed.to_string())),
+            ("horizon_ns", Json::num(self.horizon_ns as f64)),
+            ("events", Json::arr(events)),
+        ])
+        .to_string()
+    }
+
+    pub fn from_json(s: &str) -> Result<ChaosSchedule> {
+        let j = Json::parse(s).map_err(Error::Config)?;
+        let seed = j
+            .get("seed")
+            .as_str()
+            .and_then(|s| s.parse::<u64>().ok())
+            .or_else(|| j.get("seed").as_u64())
+            .ok_or_else(|| Error::Config("schedule: missing seed".into()))?;
+        let horizon_ns = j
+            .get("horizon_ns")
+            .as_u64()
+            .ok_or_else(|| Error::Config("schedule: missing horizon_ns".into()))?;
+        let mut events = Vec::new();
+        for (i, ev) in j
+            .get("events")
+            .as_arr()
+            .ok_or_else(|| Error::Config("schedule: missing events".into()))?
+            .iter()
+            .enumerate()
+        {
+            let kind = ev
+                .get("kind")
+                .as_str()
+                .and_then(ActionKind::parse)
+                .ok_or_else(|| Error::Config(format!("schedule: bad kind in event {i}")))?;
+            let rail = ev
+                .get("rail")
+                .as_u64()
+                .ok_or_else(|| Error::Config(format!("schedule: bad rail in event {i}")))?;
+            events.push(ChaosEvent {
+                at_ns: ev.get("at_ns").as_u64().unwrap_or(0),
+                rail: RailId(rail as u32),
+                kind,
+                factor: ev.get("factor").as_f64().unwrap_or(0.0),
+                until_ns: ev.get("until_ns").as_u64().unwrap_or(0),
+                source: ev.get("source").as_str().unwrap_or("").to_string(),
+            });
+        }
+        Ok(ChaosSchedule { seed, horizon_ns, events })
+    }
+
+    /// Write the canonical form to a seed+schedule file.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        std::fs::write(path, self.to_json()).map_err(Error::Io)
+    }
+
+    /// Load a schedule from a seed+schedule file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<ChaosSchedule> {
+        ChaosSchedule::from_json(&std::fs::read_to_string(path).map_err(Error::Io)?)
+    }
+
+    /// FNV-1a digest of the canonical form — the replay-contract identity.
+    pub fn digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in self.to_json().bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
+    /// Number of `Fail` actions (the events the healing gate scores).
+    pub fn fail_count(&self) -> usize {
+        self.events.iter().filter(|e| e.kind == ActionKind::Fail).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::profile::build_profile;
+
+    fn topo() -> Topology {
+        build_profile("h800_hgx", 4).unwrap()
+    }
+
+    const HORIZON: u64 = 2_000_000_000; // 2 s
+
+    #[test]
+    fn generation_is_pure_in_seed() {
+        let t = topo();
+        let a = ChaosSchedule::generate(&t, 7, HORIZON, &ScenarioMix::default());
+        let b = ChaosSchedule::generate(&t, 7, HORIZON, &ScenarioMix::default());
+        assert_eq!(a, b);
+        assert_eq!(a.to_json(), b.to_json());
+        let c = ChaosSchedule::generate(&t, 8, HORIZON, &ScenarioMix::default());
+        assert_ne!(a.to_json(), c.to_json());
+    }
+
+    #[test]
+    fn events_sorted_and_faults_never_overlap_per_rail() {
+        let t = topo();
+        let mix = ScenarioMix {
+            trace_events_per_sec: 10.0,
+            ..Default::default()
+        };
+        let s = ChaosSchedule::generate(&t, 3, HORIZON, &mix);
+        assert!(!s.events.is_empty());
+        let mut last = 0;
+        for e in &s.events {
+            assert!(e.at_ns >= last, "unsorted at {}", e.at_ns);
+            assert!(e.at_ns <= s.horizon_ns);
+            last = e.at_ns;
+        }
+        // Fault intervals per rail never overlap (recover unambiguity).
+        let mut per_rail: std::collections::HashMap<u32, Vec<(u64, u64)>> = Default::default();
+        for e in &s.events {
+            if e.kind != ActionKind::Recover && e.source != "flap" && e.source != "slow-drain" && e.source != "congestion" {
+                per_rail.entry(e.rail.0).or_default().push((e.at_ns, e.until_ns));
+            }
+        }
+        for (rail, mut ivs) in per_rail {
+            ivs.sort();
+            for w in ivs.windows(2) {
+                assert!(w[0].1 <= w[1].0, "rail {rail}: {:?} overlaps {:?}", w[0], w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn node_down_budget_holds_at_every_fail_instant() {
+        let t = topo();
+        let mix = ScenarioMix {
+            trace_events_per_sec: 20.0,
+            storms: 2,
+            ..Default::default()
+        };
+        let s = ChaosSchedule::generate(&t, 11, HORIZON, &mix);
+        // Sweep the timeline: at each fail instant, count rails of the same
+        // node simultaneously down; at least one sprayable rail per node
+        // must remain up.
+        let fails: Vec<&ChaosEvent> = s.events.iter().filter(|e| e.kind == ActionKind::Fail).collect();
+        assert!(!fails.is_empty());
+        for f in &fails {
+            let node = t.rail(f.rail).node;
+            let node_rails = t.rails_of(node, FabricKind::Rdma);
+            let down = node_rails
+                .iter()
+                .filter(|&&r| {
+                    fails.iter().any(|g| g.rail == r && g.at_ns < f.until_ns && f.at_ns < g.until_ns)
+                })
+                .count();
+            assert!(
+                down < node_rails.len(),
+                "node {node:?} fully down at {}",
+                f.at_ns
+            );
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_byte_identical() {
+        let t = topo();
+        let s = ChaosSchedule::generate(&t, 0xDEAD_BEEF_DEAD_BEEF, HORIZON, &ScenarioMix::default());
+        let j = s.to_json();
+        let r = ChaosSchedule::from_json(&j).unwrap();
+        assert_eq!(s, r);
+        assert_eq!(j, r.to_json());
+        assert_eq!(s.digest(), r.digest());
+    }
+
+    #[test]
+    fn rejects_malformed_schedule() {
+        assert!(ChaosSchedule::from_json("{").is_err());
+        assert!(ChaosSchedule::from_json("{\"seed\":\"1\"}").is_err());
+        assert!(
+            ChaosSchedule::from_json("{\"seed\":\"1\",\"horizon_ns\":5,\"events\":[{\"kind\":\"explode\"}]}")
+                .is_err()
+        );
+    }
+}

@@ -297,6 +297,8 @@ impl Fleet {
             bulk_hist,
             total_batches: total_batches.load(Ordering::Relaxed),
             failed_batches: failed_batches.load(Ordering::Relaxed),
+            healing_hist: Histogram::new(),
+            recovery_hist: Histogram::new(),
         })
     }
 }
@@ -353,6 +355,15 @@ pub struct FleetReport {
     pub bulk_hist: Histogram,
     pub total_batches: u64,
     pub failed_batches: u64,
+    /// Per-fault-event healing latency (injection → first rerouted-slice
+    /// completion on a surviving rail). Empty for plain workload runs;
+    /// populated by `chaos::run`, which merges the healing probe's
+    /// measurements into the report it returns.
+    pub healing_hist: Histogram,
+    /// Per-fault-event goodput-recovery latency (injection → aggregate
+    /// carried-bytes rate back above 90% of the pre-fault rate). Empty for
+    /// plain workload runs; populated by `chaos::run`.
+    pub recovery_hist: Histogram,
 }
 
 impl FleetReport {

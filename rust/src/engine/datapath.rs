@@ -404,13 +404,22 @@ pub(crate) fn execute_slice(slice: SliceDesc, rng: &mut Pcg64) {
 
     match result {
         Ok(_out) => {
-            let observed = clock::now_ns().saturating_sub(slice.enqueue_ns);
+            let done_ns = clock::now_ns();
+            let observed = done_ns.saturating_sub(slice.enqueue_ns);
             rail_state.bytes_carried.fetch_add(slice.len, Ordering::Relaxed);
             rail_state.slices_ok.fetch_add(1, Ordering::Relaxed);
             rail_state.latency.record(observed);
             rail_state.class_latency[slice.class.index()].record(observed);
             EngineStats::bump(&core.stats.slices_completed);
             EngineStats::bump(&core.stats.slices_completed_class[slice.class.index()]);
+            if slice.attempt > 0 {
+                // A resilience reroute landed: stamp the completion instant
+                // for the chaos healing probe (§4.3's sub-50 ms claim).
+                EngineStats::bump(&core.stats.reroutes_completed);
+                core.stats
+                    .last_reroute_complete_ns
+                    .fetch_max(done_ns, Ordering::Relaxed);
+            }
             // Feedback (§4.2): observed completion vs prediction.
             core.policy.on_complete(
                 rail,

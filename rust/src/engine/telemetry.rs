@@ -43,6 +43,15 @@ pub struct EngineStats {
     /// running — the win from flag-gated (batched) wakeup versus the old
     /// unconditional unpark-per-enqueue.
     pub wakeups_coalesced: AtomicU64,
+    /// Completions of rerouted slices (`attempt > 0`) — the moment a
+    /// resilience retry actually landed on a surviving rail.
+    pub reroutes_completed: AtomicU64,
+    /// Timestamp (ns since process epoch, monotone max) of the most recent
+    /// rerouted-slice completion. The chaos healing probe measures
+    /// injection → first-reroute latency from this stamp, so the metric is
+    /// poll-rate-independent: the datapath records the true completion
+    /// instant, the probe merely discovers it.
+    pub last_reroute_complete_ns: AtomicU64,
     /// Slices handed to the datapath and not yet fully resolved
     /// (completed, or failed past the retry budget). Engine shutdown
     /// drains this to zero so no slice outlives its engine handle.
@@ -77,6 +86,8 @@ impl EngineStats {
             cross_engine_stalls: self.cross_engine_stalls.load(Ordering::Relaxed),
             wakeups_sent: self.wakeups_sent.load(Ordering::Relaxed),
             wakeups_coalesced: self.wakeups_coalesced.load(Ordering::Relaxed),
+            reroutes_completed: self.reroutes_completed.load(Ordering::Relaxed),
+            last_reroute_complete_ns: self.last_reroute_complete_ns.load(Ordering::Relaxed),
         }
     }
 }
@@ -103,6 +114,8 @@ pub struct StatCounters {
     pub cross_engine_stalls: u64,
     pub wakeups_sent: u64,
     pub wakeups_coalesced: u64,
+    pub reroutes_completed: u64,
+    pub last_reroute_complete_ns: u64,
 }
 
 /// Per-rail view combining topology, fabric counters, and scheduler state.

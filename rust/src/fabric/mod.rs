@@ -288,31 +288,59 @@ impl Fabric {
 
     // ---- failure injection API (drives Fig 10 / §5.3) ----
 
-    fn set_health(&self, rail: RailId, h: RailHealth) {
+    /// Transition a rail's health; returns whether a transition actually
+    /// happened. A no-op transition (already in `h`) leaves `health_gen`
+    /// untouched **and performs no RMW on the health word** — chaos
+    /// schedules recover rails liberally, and both a spurious generation
+    /// bump (reads as a flap to the resilience layer) and a redundant
+    /// atomic store (cache-line traffic on the service-time hot path's
+    /// read) would distort what the harness measures.
+    fn set_health(&self, rail: RailId, h: RailHealth) -> bool {
         let st = self.rail(rail);
-        let prev = st.health.swap(h as u8, Ordering::AcqRel);
-        if prev != h as u8 {
-            st.health_gen.fetch_add(1, Ordering::AcqRel);
+        let mut cur = st.health.load(Ordering::Acquire);
+        loop {
+            if cur == h as u8 {
+                return false;
+            }
+            match st
+                .health
+                .compare_exchange_weak(cur, h as u8, Ordering::AcqRel, Ordering::Acquire)
+            {
+                Ok(_) => {
+                    st.health_gen.fetch_add(1, Ordering::AcqRel);
+                    return true;
+                }
+                Err(now) => cur = now,
+            }
         }
     }
 
     /// Hard-fail a rail: in-flight and future slices on it error out.
     pub fn inject_failure(&self, rail: RailId) {
-        log::warn!("fabric: injecting hard failure on {rail}");
-        self.set_health(rail, RailHealth::Failed);
+        if self.set_health(rail, RailHealth::Failed) {
+            log::warn!("fabric: injecting hard failure on {rail}");
+        }
     }
 
     /// Degrade a rail to `factor` × nominal bandwidth (0 < factor ≤ 1).
+    /// Repeat calls on an already-degraded rail update the factor (a
+    /// slow-drain ramp) without bumping the health generation.
     pub fn inject_degradation(&self, rail: RailId, factor: f64) {
         log::warn!("fabric: degrading {rail} to {factor}x");
         self.rail(rail).bw_factor.store(factor.clamp(0.01, 1.0));
         self.set_health(rail, RailHealth::Degraded);
     }
 
-    /// Restore a rail to full health.
+    /// Restore a rail to full health. Calling this on a rail that never
+    /// failed (or was already recovered) is a complete no-op: no
+    /// `health_gen` bump, no stores, no log line.
     pub fn recover(&self, rail: RailId) {
+        let st = self.rail(rail);
+        if st.health() == RailHealth::Healthy && st.bw_factor() == 1.0 {
+            return;
+        }
         log::info!("fabric: recovering {rail}");
-        self.rail(rail).bw_factor.store(1.0);
+        st.bw_factor.store(1.0);
         self.set_health(rail, RailHealth::Healthy);
     }
 
@@ -476,6 +504,42 @@ mod tests {
         f.recover(rail);
         let g1 = f.rail(rail).health_gen.load(Ordering::Relaxed);
         assert_eq!(g1 - g0, 2);
+    }
+
+    #[test]
+    fn recover_on_never_failed_rail_is_a_noop() {
+        let (t, f) = fabric();
+        let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
+        let g0 = f.rail(rail).health_gen.load(Ordering::Relaxed);
+        // Spurious recovers (a chaos schedule's cleanup sweep, a prober
+        // being conservative) must not read as health transitions.
+        f.recover(rail);
+        f.recover(rail);
+        assert_eq!(f.rail(rail).health(), RailHealth::Healthy);
+        assert_eq!(f.rail(rail).health_gen.load(Ordering::Relaxed), g0);
+        // A real failure still counts exactly one transition per edge,
+        // no matter how many times recovery is re-asserted.
+        f.inject_failure(rail);
+        f.recover(rail);
+        f.recover(rail);
+        f.recover(rail);
+        assert_eq!(f.rail(rail).health_gen.load(Ordering::Relaxed), g0 + 2);
+    }
+
+    #[test]
+    fn recover_after_degradation_restores_factor_once() {
+        let (t, f) = fabric();
+        let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
+        let g0 = f.rail(rail).health_gen.load(Ordering::Relaxed);
+        f.inject_degradation(rail, 0.3);
+        // Slow-drain ramp: factor updates, still one Degraded transition.
+        f.inject_degradation(rail, 0.2);
+        assert_eq!(f.rail(rail).health_gen.load(Ordering::Relaxed), g0 + 1);
+        f.recover(rail);
+        assert_eq!(f.rail(rail).bw_factor(), 1.0);
+        assert_eq!(f.rail(rail).health_gen.load(Ordering::Relaxed), g0 + 2);
+        f.recover(rail); // no-op
+        assert_eq!(f.rail(rail).health_gen.load(Ordering::Relaxed), g0 + 2);
     }
 
     #[test]

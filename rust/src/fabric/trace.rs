@@ -237,4 +237,81 @@ mod tests {
         let dense = g2.generate(5_000_000_000, 40.0).len();
         assert!(dense > 5 * sparse, "sparse={sparse} dense={dense}");
     }
+
+    #[test]
+    fn chi_squared_pins_table1_over_10k_samples() {
+        // Pearson χ² against the Table 1 expected counts. 11 classes →
+        // 10 degrees of freedom; the p = 0.001 critical value is 29.59,
+        // so a pass means the sampler is statistically indistinguishable
+        // from the published mix — a far tighter pin than per-class
+        // percentage tolerances.
+        let mut g = TraceGenerator::new(0x7AB1E);
+        const N: u32 = 10_000;
+        let mut counts: HashMap<&'static str, u32> = HashMap::new();
+        for _ in 0..N {
+            *counts.entry(g.sample_event().name()).or_default() += 1;
+        }
+        let total: f64 = FailureEvent::TABLE1.iter().map(|(_, w)| w).sum();
+        let mut chi2 = 0.0;
+        for (e, pct) in FailureEvent::TABLE1 {
+            let expected = N as f64 * pct / total;
+            let observed = *counts.get(e.name()).unwrap_or(&0) as f64;
+            chi2 += (observed - expected).powi(2) / expected;
+        }
+        assert!(chi2 < 29.59, "chi² = {chi2:.2} exceeds the 10-df p=0.001 bound");
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let horizon = 8_000_000_000;
+        let a = TraceGenerator::new(99).generate(horizon, 6.0);
+        let b = TraceGenerator::new(99).generate(horizon, 6.0);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.event, y.event);
+            assert_eq!(x.at_ns, y.at_ns);
+            assert_eq!(x.duration_ns, y.duration_ns);
+            assert_eq!(x.hard, y.hard);
+            assert_eq!(x.degrade_factor, y.degrade_factor);
+        }
+        let c = TraceGenerator::new(100).generate(horizon, 6.0);
+        assert!(
+            a.len() != c.len() || a.iter().zip(&c).any(|(x, y)| x.at_ns != y.at_ns),
+            "distinct seeds produced identical timelines"
+        );
+    }
+
+    #[test]
+    fn fault_parameters_stay_in_class_envelopes() {
+        let mut g = TraceGenerator::new(0xFA11);
+        let actions = g.generate(30_000_000_000, 15.0);
+        assert!(actions.len() > 100, "need a broad sample, got {}", actions.len());
+        for a in &actions {
+            // `Other` is pure-compute noise: it never reaches the fabric
+            // timeline (affects_fabric() filters it at generation).
+            assert_ne!(a.event, FailureEvent::Other);
+            assert!(a.duration_ns > 0);
+            match a.event.recovery_class() {
+                RecoveryClass::Transient => {
+                    assert!((20_000_000..=400_000_000).contains(&a.duration_ns), "{a:?}");
+                    if !a.hard {
+                        assert!(a.degrade_factor >= 0.05 && a.degrade_factor < 0.35, "{a:?}");
+                    }
+                }
+                RecoveryClass::FastRecoverable => {
+                    assert!(
+                        (500_000_000..=3_000_000_000).contains(&a.duration_ns),
+                        "{a:?}"
+                    );
+                    if !a.hard {
+                        assert!(a.degrade_factor >= 0.1 && a.degrade_factor < 0.5, "{a:?}");
+                    }
+                }
+                RecoveryClass::Hard => {
+                    assert!(a.hard, "{a:?}");
+                    assert_eq!(a.duration_ns, u64::MAX / 4);
+                }
+            }
+        }
+    }
 }

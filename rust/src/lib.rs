@@ -23,6 +23,10 @@
 //!   pluggable transport backends.
 //! * [`policy`] — scheduling policies, including faithful re-implementations
 //!   of the paper's baselines (Mooncake TE, NIXL, UCCL-P2P, round-robin).
+//! * [`chaos`] — the trace-driven chaos harness: deterministic fault
+//!   schedules (Table 1 trace + correlated scenarios) replayed against a
+//!   live fleet, with end-to-end healing-latency instrumentation and the
+//!   sub-50 ms self-healing acceptance gate (§6.3).
 //! * [`serving`], [`runtime`] — the disaggregated-LLM-serving consumer: a
 //!   HiCache-style multi-tier KV cache, request router, checkpoint-engine
 //!   analog, all generic over a `ModelExecutor` — the deterministic
@@ -62,6 +66,7 @@ pub mod transport;
 pub mod engine;
 pub mod policy;
 pub mod cluster;
+pub mod chaos;
 pub mod runtime;
 pub mod serving;
 pub mod bench;

@@ -1,0 +1,115 @@
+//! Tier-1: self-healing under the Table 1 failure mix (ISSUE
+//! "chaos_healing").
+//!
+//! An 8-node h800 fleet runs the mixed KV-fetch / checkpoint workload while
+//! a moderate-rate Table 1 trace (plus a correlated storm, a flapping link
+//! expansion, a slow drain, and a congestion ramp) replays against the
+//! shared fabric. The acceptance bar:
+//!
+//! * every fault that actually touched traffic heals (no unhealed events,
+//!   no permanently lost slices, zero failed batches);
+//! * the slice ledger and per-NIC byte counters balance exactly across the
+//!   whole fault history (retried slices are carried once, by the attempt
+//!   that succeeded);
+//! * P99 healing latency — injection to first rerouted-slice completion on
+//!   a surviving rail — beats the paper's 50 ms bound for the TENT policy;
+//! * the fleet is immediately reusable afterwards (chaos::run restores
+//!   every touched rail).
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+use tent::chaos::{self, ChaosSchedule, ProbeConfig, ScenarioMix};
+use tent::cluster::{Fleet, FleetConfig, WorkloadConfig};
+use tent::fabric::RailHealth;
+
+const HEAL_GATE_NS: u64 = 50_000_000;
+
+#[test]
+fn fleet_heals_every_fault_under_table1_chaos() {
+    let fleet = Fleet::new(FleetConfig::new("h800_hgx", 8)).unwrap();
+    let horizon_ns: u64 = 900_000_000;
+    let mix = ScenarioMix {
+        trace_events_per_sec: 8.0,
+        ..Default::default()
+    };
+    let schedule = ChaosSchedule::generate(&fleet.cluster.topo, 0xD15A57E5, horizon_ns, &mix);
+    assert!(
+        schedule.fail_count() >= 2,
+        "need real fault pressure, got {} fails",
+        schedule.fail_count()
+    );
+    let w = WorkloadConfig {
+        // Submission outlives the schedule horizon so late faults still
+        // see traffic and their heals are observable.
+        duration: Duration::from_millis(1200),
+        ..Default::default()
+    };
+    let report = chaos::run(&fleet, &schedule, &w, ProbeConfig::default()).unwrap();
+    let out = &report.outcome;
+
+    // --- every fault resolved, nothing lost --------------------------------
+    assert_eq!(report.fleet.failed_batches, 0, "dual-layer resilience must mask chaos");
+    assert_eq!(out.unhealed, 0, "a touched fault never healed");
+    assert_eq!(out.unresolved, 0, "probe stopped with open events");
+    assert_eq!(
+        out.fails_injected,
+        out.healed + out.untouched,
+        "outcome counts must partition the injected fails"
+    );
+    assert!(out.healed >= 1, "chaos this dense must touch live traffic");
+    assert_eq!(report.fleet.healing_hist.count(), out.healed);
+
+    // --- ledger + byte conservation across the whole fault history --------
+    let mut bytes_submitted = 0u64;
+    for (i, e) in fleet.engines().iter().enumerate() {
+        let s = e.stats();
+        assert_eq!(s.slices_completed, s.slices_dispatched, "engine {i} ledger: {s:?}");
+        assert_eq!(s.permanent_failures, 0, "engine {i}: {s:?}");
+        assert_eq!(
+            s.slices_completed_latency + s.slices_completed_bulk,
+            s.slices_completed,
+            "engine {i} class split: {s:?}"
+        );
+        bytes_submitted += s.bytes_submitted;
+    }
+    assert_eq!(
+        fleet.carried_bytes(),
+        bytes_submitted,
+        "every slice carried exactly once, despite reroutes"
+    );
+    for rail in &fleet.cluster.fabric.rails {
+        assert_eq!(rail.queued_bytes(), 0, "{} leaked queue", rail.id);
+    }
+    let clamps = fleet.cluster.fabric.contention.underflow_clamps.load(Ordering::Relaxed);
+    assert_eq!(clamps, 0, "queued-bytes accounting underflowed");
+
+    // --- the heal stamp actually came from rerouted completions -----------
+    let reroutes: u64 = fleet.engines().iter().map(|e| e.stats().reroutes_completed).sum();
+    assert!(reroutes >= out.healed, "healed events need rerouted completions");
+
+    // --- the sub-50 ms gate ------------------------------------------------
+    let p99 = report.fleet.healing_hist.p99();
+    assert!(
+        p99 < HEAL_GATE_NS,
+        "P99 healing latency {p99} ns breaks the 50 ms gate (p50 {} ns, {} events)",
+        report.fleet.healing_hist.p50(),
+        out.healed
+    );
+
+    // --- chaos::run restored the fabric; the fleet is reusable -------------
+    for rail in &fleet.cluster.fabric.rails {
+        assert_eq!(rail.health(), RailHealth::Healthy, "{} left unhealthy", rail.id);
+        assert_eq!(rail.bw_factor(), 1.0, "{} left degraded", rail.id);
+    }
+    // Let the engines' probers re-admit recovered rails, then run clean.
+    std::thread::sleep(Duration::from_millis(100));
+    let clean = fleet
+        .run_workload(&WorkloadConfig {
+            duration: Duration::from_millis(250),
+            submitters_per_engine: 1,
+            ..Default::default()
+        })
+        .unwrap();
+    assert_eq!(clean.failed_batches, 0, "fleet must be clean after chaos");
+    assert!(clean.per_engine_bytes.iter().all(|&b| b > 0));
+}
