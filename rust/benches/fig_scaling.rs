@@ -31,6 +31,7 @@ use tent::policy::PolicyKind;
 use tent::topology::profile::build_profile;
 use tent::topology::{FabricKind, NodeId};
 use tent::util::cli::Args;
+use tent::util::json::Json;
 use tent::util::{fmt_bw, fmt_ns};
 
 struct Cell {
@@ -96,11 +97,11 @@ fn counter_bench(threads: usize, shards: usize, ops_per_thread: u64) -> f64 {
             scope.spawn(move || {
                 let shard = fabric.register_engine();
                 for i in 0..ops_per_thread {
-                    fabric.add_queued_at(shard, rail, 64 << 10);
+                    fabric.add_queued_at(shard, rail, 64 << 10, 1);
                     if i % 64 == 0 {
                         std::hint::black_box(fabric.queued_bytes_from(shard, rail));
                     }
-                    fabric.sub_queued_at(shard, rail, 64 << 10);
+                    fabric.sub_queued_at(shard, rail, 64 << 10, 1);
                 }
             });
         }
@@ -226,6 +227,44 @@ fn main() {
         if ctr_ok { "PASS" } else { "FAIL" }
     );
     pass &= ctr_ok;
+
+    if let Some(path) = args.get("json") {
+        let j = Json::obj(vec![
+            ("bench", Json::str("fig_scaling")),
+            ("smoke", Json::Bool(smoke)),
+            (
+                "tent_cells",
+                Json::arr(tent_by_nodes.iter().map(|(n, c)| {
+                    Json::obj(vec![
+                        ("nodes", Json::num(*n as f64)),
+                        ("goodput_bytes_per_sec", Json::num(c.goodput)),
+                        ("fairness", Json::num(c.fairness)),
+                        ("fetch_p50_ns", Json::num(c.fetch_p50 as f64)),
+                        ("fetch_p99_ns", Json::num(c.fetch_p99 as f64)),
+                        ("bulk_p50_ns", Json::num(c.bulk_p50 as f64)),
+                        ("slice_p99_ns", Json::num(c.slice_p99 as f64)),
+                        ("workers", Json::num(c.workers as f64)),
+                        ("coalesced_pct", Json::num(c.coalesced_pct)),
+                        ("cross_stalls", Json::num(c.cross_stalls as f64)),
+                    ])
+                })),
+            ),
+            (
+                "counter_bench",
+                Json::arr(micro.iter().map(|&(n, single, sharded)| {
+                    Json::obj(vec![
+                        ("engines", Json::num(n as f64)),
+                        ("single_ns_per_op", Json::num(single)),
+                        ("sharded_ns_per_op", Json::num(sharded)),
+                    ])
+                })),
+            ),
+            ("pass", Json::Bool(pass)),
+        ]);
+        std::fs::write(path, format!("{j}\n")).expect("write --json");
+        println!();
+        println!("results written to {path}");
+    }
 
     println!();
     println!("overall: {}", if pass { "PASS" } else { "FAIL" });

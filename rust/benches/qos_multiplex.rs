@@ -24,8 +24,10 @@ use tent::cluster::Cluster;
 use tent::engine::{EngineConfig, TentEngine, TransferClass, TransferReq};
 use tent::fabric::FabricConfig;
 use tent::segment::Location;
+use tent::util::cli::Args;
 use tent::util::clock;
 use tent::util::hist::Histogram;
+use tent::util::json::Json;
 use tent::util::{fmt_bw, fmt_ns};
 
 const LAT_ITERS: usize = 150;
@@ -123,6 +125,7 @@ fn run_mode(qos: bool) -> tent::Result<ModeResult> {
 }
 
 fn main() {
+    let args = Args::from_env();
     println!("== QoS multiplex: latency-class fetches vs bulk checkpoint traffic ==");
     println!(
         "({BULK_THREADS} bulk threads x {} MiB sync loops, {} x {} KiB latency fetches)",
@@ -156,6 +159,27 @@ fn main() {
         "acceptance (dual-lane P99 strictly lower, bulk within 10%): {}",
         if pass { "PASS" } else { "FAIL" }
     );
+    if let Some(path) = args.get("json") {
+        let mode = |r: &ModeResult| {
+            Json::obj(vec![
+                ("lat_p50_ns", Json::num(r.p50 as f64)),
+                ("lat_p90_ns", Json::num(r.p90 as f64)),
+                ("lat_p99_ns", Json::num(r.p99 as f64)),
+                ("bulk_goodput_bytes_per_sec", Json::num(r.bulk_rate)),
+                ("ring_full_stalls", Json::num(r.ring_full_stalls as f64)),
+            ])
+        };
+        let j = Json::obj(vec![
+            ("bench", Json::str("qos_multiplex")),
+            ("dual_lane", mode(&on)),
+            ("single_lane", mode(&off)),
+            ("p99_improvement", Json::num(impr)),
+            ("bulk_goodput_ratio", Json::num(bulk_ratio)),
+            ("pass", Json::Bool(pass)),
+        ]);
+        std::fs::write(path, format!("{j}\n")).expect("write --json");
+        println!("results written to {path}");
+    }
     if !pass {
         std::process::exit(1);
     }

@@ -51,6 +51,11 @@ pub struct FleetConfig {
     /// engines. `false`: the single-counter baseline (`fig_scaling`'s
     /// ablation axis).
     pub sharded_counters: bool,
+    /// NUMA domains for shard placement (`Fabric::register_engine` maps
+    /// each engine's counter stripe into its domain's shard block, see
+    /// `ShardedU64::shard_of_domain`). 1 (default) keeps the historical
+    /// round-robin placement.
+    pub numa_domains: usize,
 }
 
 impl FleetConfig {
@@ -67,6 +72,7 @@ impl FleetConfig {
             },
             engine: EngineConfig::default(),
             sharded_counters: true,
+            numa_domains: 1,
         }
     }
 }
@@ -92,6 +98,7 @@ impl Fleet {
         } else {
             1
         };
+        config.fabric.numa_domains = config.numa_domains.max(1);
         // Shared per-rail rings: capacity scales with the number of engines
         // pushing into them (floor absorbs single-engine bursts, ceiling
         // bounds memory — a ring slot is ~128 B, two lanes per rail, and
@@ -419,6 +426,25 @@ mod tests {
             let s = e.stats();
             assert_eq!(s.slices_completed, s.slices_dispatched, "{s:?}");
             assert_eq!(s.permanent_failures, 0, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn numa_domain_fleet_runs_clean() {
+        let mut cfg = FleetConfig::new("h800_hgx", 4);
+        cfg.numa_domains = 2;
+        let f = Fleet::new(cfg).unwrap();
+        assert_eq!(f.cluster.fabric.config.numa_domains, 2);
+        let w = WorkloadConfig {
+            duration: Duration::from_millis(200),
+            submitters_per_engine: 1,
+            ..Default::default()
+        };
+        let r = f.run_workload(&w).unwrap();
+        assert_eq!(r.failed_batches, 0);
+        // Domain-blocked shard placement must not break queue conservation.
+        for rail in &f.cluster.fabric.rails {
+            assert_eq!(rail.queued_bytes(), 0, "{} leaked queue", rail.id);
         }
     }
 

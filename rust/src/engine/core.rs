@@ -46,6 +46,19 @@ pub struct EngineConfig {
     /// Max bulk-lane slices a worker executes per wakeup while
     /// latency-class work is pending (anti-starvation weight; clamped ≥ 1).
     pub bulk_quantum: usize,
+    /// Max latency-lane slices a worker serves per scheduling round,
+    /// counting mid-bulk preemption pops. Together with `bulk_quantum`
+    /// this turns strict lane priority into a weighted-fair split
+    /// (default 64:4): latency keeps its head start, but a latency
+    /// firehose can no longer starve bulk indefinitely. Clamped ≥ 1;
+    /// shared-datapath knob, fixed by the first engine on the cluster.
+    pub lat_quantum: usize,
+    /// Coalesce completion feedback per (engine, class) within one drain
+    /// pass: one queue subtraction, one histogram merge, one EWMA step
+    /// per batch instead of each per slice. `false` restores the
+    /// per-slice completion path (the ablation baseline measured by
+    /// `benches/ablation_slice_gamma.rs --feedback`).
+    pub batched_feedback: bool,
     /// Cap on the worker's *bounded* idle-backoff sleeps — the escalation
     /// stage before a worker deep-parks indefinitely behind its published
     /// parked flag (wakeups are flag-gated and reliable, so deep park
@@ -74,6 +87,8 @@ impl Default for EngineConfig {
             ring_capacity: 4096,
             qos_lanes: true,
             bulk_quantum: 4,
+            lat_quantum: 64,
+            batched_feedback: true,
             idle_backoff_max: Duration::from_micros(50),
             degrade_exclude_factor: f64::INFINITY,
             maintenance: true,

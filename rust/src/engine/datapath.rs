@@ -28,14 +28,29 @@
 //!   idle fleet burns no CPU, where the old per-engine workers re-woke
 //!   every `idle_backoff_max` forever.
 //!
-//! QoS lane semantics are unchanged: the latency lane drains ahead of the
-//! bulk lane, bulk still advances by `DatapathConfig::bulk_quantum` slices
-//! per wakeup, and latency arrivals preempt a bulk batch at slice
-//! granularity. `EngineConfig::qos_lanes = false` is now purely a routing
-//! choice of that engine: its latency slices ride the bulk lane (the
-//! single-FIFO baseline), without affecting other engines on the rail.
+//! QoS lane scheduling is a **weighted-fair split**: the latency lane
+//! drains ahead of the bulk lane, but a worker serves at most
+//! `DatapathConfig::lat_quantum` latency slices per scheduling round
+//! (counting mid-bulk preemption pops), while bulk advances by at least
+//! `DatapathConfig::bulk_quantum` slices per wakeup whenever latency work
+//! is pending. Latency keeps its head start; a latency firehose can no
+//! longer starve bulk indefinitely. `EngineConfig::qos_lanes = false` is
+//! purely a routing choice of that engine: its latency slices ride the
+//! bulk lane (the single-FIFO baseline), without affecting other engines
+//! on the rail.
+//!
+//! Completion delivery is **batched** (the hot-path half of the adaptive
+//! slicing work): within one drain pass the worker coalesces finished
+//! slices per (engine, class) and applies queue subtraction, histogram
+//! merge, byte/stat counters, and the policy's EWMA feedback once per
+//! batch instead of once per slice. `EngineConfig::batched_feedback =
+//! false` restores the per-slice path (the ablation baseline in
+//! `benches/ablation_slice_gamma.rs`). Semantics that are latency-critical
+//! or slice-identity-bound stay per-slice in either mode: transfer
+//! completion wake-ups, reroute healing stamps, receiver-ingress release,
+//! and the whole failure path.
 
-use super::core::EngineConfig;
+use super::core::{EngineConfig, EngineCore};
 use super::slice::SliceDesc;
 use super::telemetry::EngineStats;
 use super::TransferClass;
@@ -63,6 +78,10 @@ pub struct DatapathConfig {
     /// Max bulk-lane slices a worker executes per wakeup while
     /// latency-class work is pending (anti-starvation weight; clamped ≥ 1).
     pub bulk_quantum: usize,
+    /// Max latency-lane slices a worker serves per scheduling round,
+    /// counting mid-bulk preemption pops (weighted-fair split with
+    /// `bulk_quantum`; clamped ≥ 1).
+    pub lat_quantum: usize,
     /// Cap on the worker's *bounded* idle-backoff sleeps (the escalation
     /// stage before deep park). Wakeups are flag-gated and reliable, so
     /// this only shapes how quickly an idle worker descends to the
@@ -77,6 +96,7 @@ impl Default for DatapathConfig {
         DatapathConfig {
             ring_capacity: 4096,
             bulk_quantum: 4,
+            lat_quantum: 64,
             idle_backoff_max: Duration::from_micros(50),
             seed: 0x7E27,
         }
@@ -89,6 +109,7 @@ impl DatapathConfig {
         DatapathConfig {
             ring_capacity: cfg.ring_capacity,
             bulk_quantum: cfg.bulk_quantum,
+            lat_quantum: cfg.lat_quantum,
             idle_backoff_max: cfg.idle_backoff_max,
             seed: cfg.seed,
         }
@@ -292,15 +313,21 @@ fn worker_loop(
 ) {
     let mut rng = Pcg64::new(shared.config.seed ^ 0xDA7A_0000, rail.0 as u64);
     let bulk_quantum = shared.config.bulk_quantum.max(1);
+    let lat_quantum = shared.config.lat_quantum.max(1);
     let max_sleep = shared.config.idle_backoff_max.max(Duration::from_micros(1));
-    let mut lat_batch: Vec<SliceDesc> = Vec::with_capacity(64);
+    let mut lat_batch: Vec<SliceDesc> = Vec::with_capacity(lat_quantum.min(1024));
     let mut bulk_batch: Vec<SliceDesc> = Vec::with_capacity(64);
+    let mut batcher = CompletionBatcher::new(rail);
     let mut idle_spins: u32 = 0;
     loop {
-        // Batched dequeue (§4.4), latency lane first. While latency work is
-        // pending, bulk advances by at most `bulk_quantum` slices per
-        // wakeup — strict priority with an anti-starvation floor.
-        let n_lat = lat_rx.pop_batch(&mut lat_batch, 64);
+        // Batched dequeue (§4.4), latency lane first. Weighted-fair split:
+        // latency is served first but capped at `lat_quantum` slices per
+        // round (initial batch plus mid-bulk preemption pops); while
+        // latency work is pending, bulk advances by at most `bulk_quantum`
+        // slices per wakeup — priority with an anti-starvation floor on
+        // both sides.
+        let n_lat = lat_rx.pop_batch(&mut lat_batch, lat_quantum);
+        let mut lat_budget = lat_quantum - n_lat;
         let bulk_budget = if n_lat > 0 || lat_rx.backlog() > 0 {
             bulk_quantum
         } else {
@@ -354,21 +381,137 @@ fn worker_loop(
         }
         idle_spins = 0;
         for slice in lat_batch.drain(..) {
-            execute_slice(slice, &mut rng);
+            execute_slice(slice, &mut rng, Some(&mut batcher));
         }
         for slice in bulk_batch.drain(..) {
             // Latency arrivals during bulk service preempt the rest of the
-            // bulk batch at slice granularity — bounded to one batch per
-            // bulk slice, so even a sustained stream of latency submissions
-            // cannot indefinitely defer the bulk work already popped (the
-            // quantum guarantee holds).
-            for _ in 0..64 {
+            // bulk batch at slice granularity — but only within this
+            // round's remaining `lat_quantum` budget, so even a sustained
+            // stream of latency submissions cannot indefinitely defer the
+            // bulk work already popped (the quantum guarantee holds both
+            // ways).
+            while lat_budget > 0 {
                 match lat_rx.pop() {
-                    Some(l) => execute_slice(l, &mut rng),
+                    Some(l) => {
+                        lat_budget -= 1;
+                        execute_slice(l, &mut rng, Some(&mut batcher));
+                    }
                     None => break,
                 }
             }
-            execute_slice(slice, &mut rng);
+            execute_slice(slice, &mut rng, Some(&mut batcher));
+        }
+        // One coalesced feedback/accounting application per drain pass.
+        batcher.flush();
+    }
+}
+
+/// Completion state accumulated for one (engine, class) pair within a
+/// single drain pass of one rail worker.
+struct CompletionBatch {
+    core: Arc<EngineCore>,
+    class: TransferClass,
+    bytes: u64,
+    sum_predicted_ns: f64,
+    sum_serial_ns: f64,
+    sum_observed_ns: f64,
+    /// Observed latencies, kept individually so histogram quantiles stay
+    /// identical to the per-slice path (`Histogram::record_batch` merges
+    /// them under one atomic round per touched bucket).
+    latencies: Vec<u64>,
+}
+
+/// Coalesces completion feedback within one worker drain pass (§4.4).
+///
+/// A rail worker executing a burst of slices used to pay the full
+/// feedback fan-out — queue subtraction, two histogram records, six stat
+/// counters, an EWMA update — once per slice. The batcher accumulates
+/// completions per (engine, class) and applies each of those once per
+/// batch at [`CompletionBatcher::flush`], with the EWMA folded through
+/// the weight-equivalent [`SlicePolicy::on_complete_batch`] hook. Batches
+/// never outlive a drain pass (flush drops the engine `Arc`s), so an
+/// idle worker pins no engine and the deferred accounting — queued-bytes
+/// release and the inflight decrement — is stale for at most one pass.
+///
+/// [`SlicePolicy::on_complete_batch`]: crate::policy::SlicePolicy::on_complete_batch
+pub(crate) struct CompletionBatcher {
+    rail: RailId,
+    batches: Vec<CompletionBatch>,
+}
+
+impl CompletionBatcher {
+    fn new(rail: RailId) -> CompletionBatcher {
+        CompletionBatcher {
+            rail,
+            batches: Vec::new(),
+        }
+    }
+
+    /// Record one successful slice completion for later coalesced delivery.
+    fn push(
+        &mut self,
+        core: &Arc<EngineCore>,
+        class: TransferClass,
+        len: u64,
+        predicted_ns: f64,
+        serial_ns: f64,
+        observed_ns: u64,
+    ) {
+        let batch = match self
+            .batches
+            .iter_mut()
+            .position(|b| b.class == class && Arc::ptr_eq(&b.core, core))
+        {
+            Some(i) => &mut self.batches[i],
+            None => {
+                self.batches.push(CompletionBatch {
+                    core: Arc::clone(core),
+                    class,
+                    bytes: 0,
+                    sum_predicted_ns: 0.0,
+                    sum_serial_ns: 0.0,
+                    sum_observed_ns: 0.0,
+                    latencies: Vec::with_capacity(16),
+                });
+                self.batches.last_mut().expect("just pushed")
+            }
+        };
+        batch.bytes += len;
+        batch.sum_predicted_ns += predicted_ns;
+        batch.sum_serial_ns += serial_ns;
+        batch.sum_observed_ns += observed_ns as f64;
+        batch.latencies.push(observed_ns);
+    }
+
+    /// Apply every accumulated batch: one queue subtraction, one histogram
+    /// merge, one stats round, and one policy feedback call per
+    /// (engine, class).
+    fn flush(&mut self) {
+        for b in self.batches.drain(..) {
+            let n = b.latencies.len() as u64;
+            if n == 0 {
+                continue;
+            }
+            let core = &b.core;
+            let rail_state = core.fabric.rail(self.rail);
+            core.sched.sub_queued(&core.fabric, self.rail, b.bytes, b.class);
+            rail_state.bytes_carried.fetch_add(b.bytes, Ordering::Relaxed);
+            rail_state.slices_ok.fetch_add(n, Ordering::Relaxed);
+            rail_state.latency.record_batch(&b.latencies);
+            rail_state.class_latency[b.class.index()].record_batch(&b.latencies);
+            core.stats.slices_completed.fetch_add(n, Ordering::Relaxed);
+            core.stats.slices_completed_class[b.class.index()]
+                .fetch_add(n, Ordering::Relaxed);
+            let inv = 1.0 / n as f64;
+            core.policy.on_complete_batch(
+                self.rail,
+                n,
+                b.sum_predicted_ns * inv,
+                b.sum_serial_ns * inv,
+                b.sum_observed_ns * inv,
+                &core.ctx(b.class),
+            );
+            core.stats.inflight.fetch_sub(n, Ordering::AcqRel);
         }
     }
 }
@@ -377,7 +520,18 @@ fn worker_loop(
 /// slice carries its engine (`SliceDesc::core`): all accounting, feedback,
 /// and retry routing happen against the engine that dispatched it, even
 /// though the executing worker is shared by the whole cluster.
-pub(crate) fn execute_slice(slice: SliceDesc, rng: &mut Pcg64) {
+///
+/// With a `batcher` (the worker hot path) and `batched_feedback` enabled
+/// on the slice's engine, a successful completion only records into the
+/// batch and wakes the transfer; the feedback fan-out lands at the next
+/// [`CompletionBatcher::flush`]. Without one (or with the ablation knob
+/// off) the full per-slice path runs inline. Failures always resolve
+/// per-slice — the resilience layer needs them immediately.
+pub(crate) fn execute_slice(
+    slice: SliceDesc,
+    rng: &mut Pcg64,
+    batcher: Option<&mut CompletionBatcher>,
+) {
     let core = Arc::clone(&slice.core);
     let cand = &slice.plan.candidates[slice.cand_idx];
     let rail = cand.rail;
@@ -400,38 +554,64 @@ pub(crate) fn execute_slice(slice: SliceDesc, rng: &mut Pcg64) {
         cand.backend.execute(&io, &core.topo, &core.fabric, rng)
     };
 
-    core.sched.sub_queued(&core.fabric, rail, slice.len, slice.class);
-
     match result {
         Ok(_out) => {
             let done_ns = clock::now_ns();
             let observed = done_ns.saturating_sub(slice.enqueue_ns);
-            rail_state.bytes_carried.fetch_add(slice.len, Ordering::Relaxed);
-            rail_state.slices_ok.fetch_add(1, Ordering::Relaxed);
-            rail_state.latency.record(observed);
-            rail_state.class_latency[slice.class.index()].record(observed);
-            EngineStats::bump(&core.stats.slices_completed);
-            EngineStats::bump(&core.stats.slices_completed_class[slice.class.index()]);
+            // Receiver-side pricing: release this slice's ingestion claim
+            // on the destination node. Terminal-event symmetric with the
+            // dispatch-side `add_ingress` (retries keep the claim).
+            if core.sched.params.rx_omega > 0.0 {
+                core.sched
+                    .sub_ingress(&core.fabric, slice.plan.dst_node, slice.len, slice.class);
+            }
             if slice.attempt > 0 {
                 // A resilience reroute landed: stamp the completion instant
                 // for the chaos healing probe (§4.3's sub-50 ms claim).
+                // Stays per-slice even under batching — the healing gate
+                // measures this instant.
                 EngineStats::bump(&core.stats.reroutes_completed);
                 core.stats
                     .last_reroute_complete_ns
                     .fetch_max(done_ns, Ordering::Relaxed);
             }
-            // Feedback (§4.2): observed completion vs prediction.
-            core.policy.on_complete(
-                rail,
-                slice.predicted_ns,
-                slice.serial_ns,
-                observed as f64,
-                &core.ctx(slice.class),
-            );
-            slice.transfer.complete_slice();
-            core.stats.inflight.fetch_sub(1, Ordering::AcqRel);
+            match batcher {
+                Some(b) if core.config.batched_feedback => {
+                    b.push(
+                        &core,
+                        slice.class,
+                        slice.len,
+                        slice.predicted_ns,
+                        slice.serial_ns,
+                        observed,
+                    );
+                    // Wake the transfer immediately; only the feedback
+                    // fan-out is deferred to the flush.
+                    slice.transfer.complete_slice();
+                }
+                _ => {
+                    core.sched.sub_queued(&core.fabric, rail, slice.len, slice.class);
+                    rail_state.bytes_carried.fetch_add(slice.len, Ordering::Relaxed);
+                    rail_state.slices_ok.fetch_add(1, Ordering::Relaxed);
+                    rail_state.latency.record(observed);
+                    rail_state.class_latency[slice.class.index()].record(observed);
+                    EngineStats::bump(&core.stats.slices_completed);
+                    EngineStats::bump(&core.stats.slices_completed_class[slice.class.index()]);
+                    // Feedback (§4.2): observed completion vs prediction.
+                    core.policy.on_complete(
+                        rail,
+                        slice.predicted_ns,
+                        slice.serial_ns,
+                        observed as f64,
+                        &core.ctx(slice.class),
+                    );
+                    slice.transfer.complete_slice();
+                    core.stats.inflight.fetch_sub(1, Ordering::AcqRel);
+                }
+            }
         }
         Err(err) => {
+            core.sched.sub_queued(&core.fabric, rail, slice.len, slice.class);
             rail_state.slices_failed.fetch_add(1, Ordering::Relaxed);
             EngineStats::bump(&core.stats.slice_failures);
             log::debug!("slice failed on {rail}: {err}");

@@ -263,8 +263,21 @@ impl TentEngine {
         }
         let plan = Arc::new(plan);
 
-        // Slice decomposition (§4.2).
-        let spans = slice::decompose(req.len, core.config.min_slice, core.config.max_slices);
+        // Slice decomposition (§4.2). Fixed γ carves at the static minimum
+        // slice; adaptive γ derives the slice size from the learned cost
+        // model of the plan's strongest live rail (amortization floor vs
+        // HoL cap, see `SchedulerState::adaptive_slice_bytes`), so slices
+        // grow on clean fast rails and shrink under congestion/jitter.
+        let spans = if core.sched.params.adaptive_gamma {
+            let target = adaptive_target(core, &plan);
+            slice::decompose(
+                req.len,
+                target.max(core.config.min_slice),
+                core.config.max_slices,
+            )
+        } else {
+            slice::decompose(req.len, core.config.min_slice, core.config.max_slices)
+        };
         let transfer = TransferState::new(Arc::clone(b), spans.len() as u64);
 
         for (off, len) in spans {
@@ -333,13 +346,24 @@ impl TentEngine {
 
         s.cand_idx = picked;
         let cand = &s.plan.candidates[picked];
-        let (pred, serial) =
-            core.sched
-                .predict_ns(&core.fabric, cand.rail, s.len, cand.bw, s.class);
+        let (pred, serial) = core.sched.predict_ns_to(
+            &core.fabric,
+            cand.rail,
+            s.len,
+            cand.bw,
+            s.class,
+            Some(s.plan.dst_node),
+        );
         s.predicted_ns = pred;
         s.serial_ns = serial;
         s.enqueue_ns = clock::now_ns();
         core.sched.add_queued(&core.fabric, cand.rail, s.len, s.class); // Alg. 1 line 11
+        if core.sched.params.rx_omega > 0.0 {
+            // Receiver-side pricing: claim ingestion capacity on the
+            // destination node until the slice terminally resolves.
+            core.sched
+                .add_ingress(&core.fabric, s.plan.dst_node, s.len, s.class);
+        }
         EngineStats::bump(&core.stats.slices_dispatched);
         core.stats.inflight.fetch_add(1, Ordering::AcqRel);
         match core.datapath.enqueue(s) {
@@ -350,6 +374,10 @@ impl TentEngine {
                 core.stats.inflight.fetch_sub(1, Ordering::AcqRel);
                 let rail = back.plan.candidates[back.cand_idx].rail;
                 core.sched.sub_queued(&core.fabric, rail, back.len, back.class);
+                if core.sched.params.rx_omega > 0.0 {
+                    core.sched
+                        .sub_ingress(&core.fabric, back.plan.dst_node, back.len, back.class);
+                }
                 Err(Error::Shutdown)
             }
         }
@@ -398,8 +426,17 @@ impl TentEngine {
         self.core.stats.snapshot()
     }
 
+    pub fn config(&self) -> &EngineConfig {
+        &self.core.config
+    }
+
     pub fn rail_snapshots(&self) -> Vec<telemetry::RailSnapshot> {
-        telemetry::rail_snapshots(&self.core.topo, &self.core.fabric, &self.core.sched)
+        telemetry::rail_snapshots(
+            &self.core.topo,
+            &self.core.fabric,
+            &self.core.sched,
+            self.core.config.min_slice,
+        )
     }
 
     pub fn topo(&self) -> &Topology {
@@ -452,6 +489,30 @@ impl TentEngine {
 impl Drop for TentEngine {
     fn drop(&mut self) {
         self.shutdown();
+    }
+}
+
+/// Adaptive-γ slice-size target for one transfer: the telemetry-derived
+/// size of the plan's highest-bandwidth live candidate (the rail
+/// Algorithm 1 sprays hardest when healthy). One query per transfer — the
+/// per-rail models move on EWMA timescales, so per-slice re-querying would
+/// cost hot-path reads without changing the answer within a transfer.
+fn adaptive_target(core: &EngineCore, plan: &plan::TransferPlan) -> u64 {
+    let live = |c: &&plan::Candidate| {
+        core.fabric.rail(c.rail).health() != crate::fabric::RailHealth::Failed
+            && !core.sched.is_excluded(c.rail)
+    };
+    let best = plan
+        .candidates
+        .iter()
+        .filter(live)
+        .max_by(|a, b| a.bw.partial_cmp(&b.bw).unwrap_or(std::cmp::Ordering::Equal))
+        .or_else(|| plan.candidates.first());
+    match best {
+        Some(c) => core
+            .sched
+            .adaptive_slice_bytes(&core.fabric, c.rail, c.bw, core.config.min_slice),
+        None => core.config.min_slice,
     }
 }
 
@@ -580,6 +641,67 @@ mod tests {
         assert!(s.slices_completed > 0);
         assert_eq!(s.slices_completed_latency, s.slices_completed);
         assert_eq!(s.slices_completed_bulk, 0);
+    }
+
+    #[test]
+    fn adaptive_gamma_carves_fewer_bigger_slices() {
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let mut cfg = EngineConfig::default();
+        cfg.sched.adaptive_gamma = true;
+        let e = TentEngine::new(&c, cfg).unwrap();
+        let len = 16u64 << 20; // fixed γ would carve 256 × 64 KiB
+        let a = e.register_segment(Location::host(0, 0), len).unwrap();
+        let b = e.register_segment(Location::host(1, 0), len).unwrap();
+        fill_pattern(&e, a, len as usize, 17);
+        e.transfer_sync(TransferReq::write(a, 0, b, 0, len), Duration::from_secs(30))
+            .unwrap();
+        verify_pattern(&e, b, len as usize, 17);
+        // Fresh models on a clean RDMA rail (2.5e8 B/s in sim units) put
+        // the amortization floor at ~320 KB — 64·β0·bw/β1 with β0 = 20 µs
+        // — so the 16 MiB transfer carves ~53 slices instead of 256.
+        let s = e.stats();
+        assert!(
+            s.slices_dispatched < 64,
+            "adaptive mode dispatched {} slices for a 16 MiB transfer",
+            s.slices_dispatched
+        );
+        assert_eq!(s.slices_completed, s.slices_dispatched);
+    }
+
+    #[test]
+    fn per_slice_feedback_ablation_still_delivers() {
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let mut cfg = EngineConfig::default();
+        cfg.batched_feedback = false;
+        let e = TentEngine::new(&c, cfg).unwrap();
+        let len = 2u64 << 20;
+        let a = e.register_segment(Location::host(0, 0), len).unwrap();
+        let b = e.register_segment(Location::host(1, 0), len).unwrap();
+        fill_pattern(&e, a, len as usize, 19);
+        e.transfer_sync(TransferReq::write(a, 0, b, 0, len), Duration::from_secs(30))
+            .unwrap();
+        verify_pattern(&e, b, len as usize, 19);
+        let s = e.stats();
+        assert_eq!(s.slices_completed, s.slices_dispatched);
+        assert!(s.slices_completed >= 32);
+    }
+
+    #[test]
+    fn rx_pricing_round_trips_ingress_accounting() {
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let mut cfg = EngineConfig::default();
+        cfg.sched.rx_omega = 0.5;
+        let e = TentEngine::new(&c, cfg).unwrap();
+        let len = 4u64 << 20;
+        let a = e.register_segment(Location::host(0, 0), len).unwrap();
+        let b = e.register_segment(Location::host(1, 0), len).unwrap();
+        fill_pattern(&e, a, len as usize, 23);
+        e.transfer_sync(TransferReq::write(a, 0, b, 0, len), Duration::from_secs(30))
+            .unwrap();
+        verify_pattern(&e, b, len as usize, 23);
+        // Every dispatch-side ingress claim must have been released on
+        // completion: the destination node's counters drain back to zero.
+        assert_eq!(c.fabric.ingress_bytes(crate::topology::NodeId(1)), 0);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 
 use super::TransferClass;
 use crate::segment::Segment;
-use crate::topology::{RailId, Tier, Topology};
+use crate::topology::{NodeId, RailId, Tier, Topology};
 use crate::transport::{TransportBackend, TransportRegistry};
 use crate::{Error, Result};
 use std::sync::Arc;
@@ -56,6 +56,10 @@ pub struct TransferPlan {
     /// QoS class declared on the transfer. Set by the engine after
     /// planning (before `shape_plan`); slices inherit it from here.
     pub class: TransferClass,
+    /// Destination node — receiver-side pricing keys the fabric's
+    /// per-node ingestion counters on it (`SchedParams::rx_omega`). Every
+    /// candidate of one plan shares the same destination.
+    pub dst_node: NodeId,
 }
 
 /// Build the plan for `src → dst`.
@@ -107,6 +111,7 @@ pub fn build_plan(
         staged,
         transfer_len,
         class: TransferClass::default(),
+        dst_node: dst.loc.node(),
     })
 }
 

@@ -43,12 +43,15 @@ pub(crate) fn on_slice_failure(core: &Arc<EngineCore>, mut slice: SliceDesc) {
             if let Some(idx) = pick_reliable(core, &slice, failed_rail) {
                 slice.cand_idx = idx;
                 let cand = &slice.plan.candidates[idx];
-                let (pred, serial) = core.sched.predict_ns(
+                // The retry keeps its receiver-ingress claim (same
+                // destination), so only the queue side re-prices here.
+                let (pred, serial) = core.sched.predict_ns_to(
                     &core.fabric,
                     cand.rail,
                     slice.len,
                     cand.bw,
                     slice.class,
+                    Some(slice.plan.dst_node),
                 );
                 slice.predicted_ns = pred;
                 slice.serial_ns = serial;
@@ -69,7 +72,12 @@ pub(crate) fn on_slice_failure(core: &Arc<EngineCore>, mut slice: SliceDesc) {
             }
         }
     }
-    // Give up: surface the failure through the batch status.
+    // Give up: release the receiver-ingress claim (terminal event, like a
+    // completion) and surface the failure through the batch status.
+    if core.sched.params.rx_omega > 0.0 {
+        core.sched
+            .sub_ingress(&core.fabric, slice.plan.dst_node, slice.len, slice.class);
+    }
     EngineStats::bump(&core.stats.permanent_failures);
     slice.transfer.mark_failed();
     slice.transfer.complete_slice();

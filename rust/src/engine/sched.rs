@@ -7,7 +7,7 @@
 
 use super::TransferClass;
 use crate::fabric::Fabric;
-use crate::topology::{RailId, Tier, Topology};
+use crate::topology::{NodeId, RailId, Tier, Topology};
 use crate::util::ewma::LinearCostModel;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
@@ -32,6 +32,24 @@ pub struct SchedParams {
     /// `EngineConfig::qos_lanes`; standalone `SchedulerState` users may
     /// toggle it directly.
     pub class_isolation: bool,
+    /// Adaptive per-rail slice sizing: derive each rail's slice size from
+    /// its learned cost model (β0/β1) and recent latency jitter instead of
+    /// the static `min_slice` decomposition — fast, uncongested rails get
+    /// larger slices (lower per-slice overhead), slow or jittery rails get
+    /// finer slices (better rebalancing granularity). `false` (default)
+    /// keeps the bit-identical static decomposition for ablation.
+    pub adaptive_gamma: bool,
+    /// Lower clamp for the adaptive slice size, as a multiple of the
+    /// engine's `min_slice` (1.0 = never slice finer than the static mode).
+    pub gamma_min: f64,
+    /// Upper clamp for the adaptive slice size, as a multiple of
+    /// `min_slice` (e.g. 64.0 with 64 KiB min ⇒ at most 4 MiB slices).
+    pub gamma_max: f64,
+    /// Receiver-side load-diffusion weight ∈ [0,1]: how strongly the
+    /// destination node's ingestion backlog (see `Fabric::add_ingress_at`)
+    /// inflates the effective queue term of a prediction. 0 (default) =
+    /// sender-side pricing only, the historical behavior.
+    pub rx_omega: f64,
 }
 
 impl Default for SchedParams {
@@ -43,6 +61,10 @@ impl Default for SchedParams {
             omega: 0.0,
             init_beta0_ns: 20_000.0,
             class_isolation: true,
+            adaptive_gamma: false,
+            gamma_min: 1.0,
+            gamma_max: 64.0,
+            rx_omega: 0.0,
         }
     }
 }
@@ -130,8 +152,31 @@ impl SchedulerState {
         if w <= 0.0 {
             return local;
         }
-        let global = fabric.queued_bytes_from(self.fabric_shard, rail);
+        // Class-scoped diffusion: under isolation a latency slice's global
+        // term reads only the fabric's latency lane — the rail-level pool
+        // used to be class-blind, so one engine's bulk flood inflated every
+        // other engine's latency predictions.
+        let global = if self.params.class_isolation && class == TransferClass::Latency {
+            fabric.queued_bytes_class_from(self.fabric_shard, rail, class.index())
+        } else {
+            fabric.queued_bytes_from(self.fabric_shard, rail)
+        };
         ((1.0 - w) * local as f64 + w * global as f64) as u64
+    }
+
+    /// Receiver-side pressure term: the destination node's ingestion
+    /// backlog, class-scoped like [`SchedulerState::queued`] (a latency
+    /// slice is not delayed by bulk ingest thanks to the dual lanes).
+    #[inline]
+    pub fn rx_queued(&self, fabric: &Fabric, node: NodeId, class: TransferClass) -> u64 {
+        if self.params.class_isolation && class == TransferClass::Latency {
+            fabric.ingress_bytes_class_from(self.fabric_shard, node, class.index())
+        } else {
+            fabric
+                .ingress_bytes_class_from(self.fabric_shard, node, TransferClass::Latency.index())
+                + fabric
+                    .ingress_bytes_class_from(self.fabric_shard, node, TransferClass::Bulk.index())
+        }
     }
 
     #[inline]
@@ -156,10 +201,104 @@ impl SchedulerState {
         (pred, serial)
     }
 
+    /// Like [`SchedulerState::predict_ns`] but pricing **both ends** of the
+    /// path: when `rx_omega > 0` and the destination node is known, the
+    /// receiver's ingestion backlog inflates the effective queue term, so
+    /// sprays back off a node many peers are incasting into even when the
+    /// local rail looks idle. With `rx_omega == 0` (default) this is
+    /// exactly `predict_ns`.
+    #[inline]
+    pub fn predict_ns_to(
+        &self,
+        fabric: &Fabric,
+        rail: RailId,
+        len: u64,
+        bw: f64,
+        class: TransferClass,
+        dst: Option<NodeId>,
+    ) -> (f64, f64) {
+        let mut a = self.queued(fabric, rail, class);
+        let w = self.params.rx_omega;
+        if w > 0.0 {
+            if let Some(node) = dst {
+                a += (w * self.rx_queued(fabric, node, class) as f64) as u64;
+            }
+        }
+        let serial = (a + len) as f64 / bw.max(1.0) * 1e9;
+        let pred = self.models[rail.0 as usize].predict_ns(len, a, bw);
+        (pred, serial)
+    }
+
+    /// Adaptive per-rail slice size (bytes): how much of a transfer the
+    /// dispatcher should carve for `rail` right now. Derived from the
+    /// rail's learned cost model —
+    ///
+    /// * amortization floor: the wire (serial) term should dwarf the fixed
+    ///   per-slice cost β0, so size grows with the congestion-corrected
+    ///   bandwidth `bw/β1`;
+    /// * head-of-line cap: one slice should not occupy the rail longer
+    ///   than a target wire time, so size shrinks as β1 (learned
+    ///   congestion) grows;
+    /// * jitter guard: a noisy rail (P99 ≫ P50 service latency) halves the
+    ///   size — finer slices re-balance faster when quality is unstable.
+    ///
+    /// The result is clamped to `[gamma_min, gamma_max] × min_slice`.
+    pub fn adaptive_slice_bytes(
+        &self,
+        fabric: &Fabric,
+        rail: RailId,
+        bw: f64,
+        min_slice: u64,
+    ) -> u64 {
+        /// The serial term should be ≥ this multiple of β0. Calibrated for
+        /// the simulation's scaled bandwidths (see `topology::profile`'s
+        /// `SCALE`): the sim RDMA rail moves 2.5e8 B/s, so 64×β0 with a
+        /// fresh model (β0 = 20 µs) lands at ~320 KB — ~5 slices/MiB
+        /// instead of the 16 that a 64 KiB min_slice would carve.
+        const AMORT_FACTOR: f64 = 64.0;
+        /// Max wire time one slice may occupy a healthy rail (ns).
+        const TARGET_SLICE_NS: f64 = 2_000_000.0;
+        /// P99/P50 service-latency ratio above which a rail counts jittery.
+        const JITTER_RATIO: f64 = 4.0;
+        /// Histogram samples needed before the jitter guard engages.
+        const JITTER_MIN_SAMPLES: u64 = 64;
+
+        let m = &self.models[rail.0 as usize];
+        let beta1 = m.beta1().max(0.05);
+        let eff_bw = bw.max(1.0) / beta1;
+        let amort = AMORT_FACTOR * m.beta0_ns() * eff_bw / 1e9;
+        let cap = TARGET_SLICE_NS * eff_bw / 1e9;
+        let mut size = amort.min(cap);
+        let hist = &fabric.rail(rail).latency;
+        if hist.count() >= JITTER_MIN_SAMPLES {
+            let p50 = hist.p50().max(1);
+            if hist.p99() as f64 > JITTER_RATIO * p50 as f64 {
+                size *= 0.5;
+            }
+        }
+        let lo = (self.params.gamma_min * min_slice as f64).max(1.0);
+        let hi = (self.params.gamma_max * min_slice as f64).max(lo);
+        size.clamp(lo, hi) as u64
+    }
+
     /// Account a dispatched slice (Algorithm 1, line 11).
     pub fn add_queued(&self, fabric: &Fabric, rail: RailId, len: u64, class: TransferClass) {
         self.local_queued[rail.0 as usize][class.index()].fetch_add(len, Ordering::Relaxed);
-        fabric.add_queued_at(self.fabric_shard, rail, len);
+        fabric.add_queued_at(self.fabric_shard, rail, len, class.index());
+    }
+
+    /// Account receiver-side bytes for a slice headed to `node` (paired
+    /// with [`SchedulerState::sub_ingress`] on completion/give-up). Only
+    /// called when `rx_omega > 0` — the counters are pure prediction
+    /// input, so the default sender-side mode skips the extra RMWs.
+    #[inline]
+    pub fn add_ingress(&self, fabric: &Fabric, node: NodeId, len: u64, class: TransferClass) {
+        fabric.add_ingress_at(self.fabric_shard, node, len, class.index());
+    }
+
+    #[inline]
+    pub fn sub_ingress(&self, fabric: &Fabric, node: NodeId, len: u64, class: TransferClass) {
+        fabric.sub_ingress_at(self.fabric_shard, node, len, class.index());
     }
 
     /// Account a completed / failed slice. Saturating on both ledgers: the
@@ -174,13 +313,20 @@ impl SchedulerState {
             Some(v.saturating_sub(len))
         });
         debug_assert!(!clamped, "local queued-bytes underflow on {rail}");
-        fabric.sub_queued_at(self.fabric_shard, rail, len);
+        fabric.sub_queued_at(self.fabric_shard, rail, len, class.index());
     }
 
     /// Feedback (§4.2): fold the observed completion time into the rail's
     /// model.
     pub fn observe(&self, rail: RailId, predicted_ns: f64, serial_ns: f64, observed_ns: f64) {
         self.models[rail.0 as usize].observe_ns(predicted_ns, observed_ns, serial_ns);
+    }
+
+    /// Batched feedback: fold `n` completions (their mean serial/observed
+    /// times) into the rail's model in one EWMA step with the equivalent
+    /// total weight (see `LinearCostModel::observe_batch_ns`).
+    pub fn observe_batch(&self, rail: RailId, n: u64, mean_observed_ns: f64, mean_serial_ns: f64) {
+        self.models[rail.0 as usize].observe_batch_ns(n, mean_observed_ns, mean_serial_ns);
     }
 
     /// Periodic state reset (§4.2): forget learned penalties everywhere so
@@ -292,6 +438,114 @@ mod tests {
         // Engine 2 loads the rail; engine 1 must see half of it via ω.
         s2.add_queued(&f, rail, 10_000, TransferClass::Bulk);
         assert_eq!(s1.queued(&f, rail, TransferClass::Bulk), 5_000);
+    }
+
+    #[test]
+    fn diffusion_is_class_scoped() {
+        let t = build_profile("h800_hgx", 1).unwrap();
+        let f = Fabric::new(&t, FabricConfig::default());
+        let p = SchedParams {
+            omega: 0.5,
+            ..Default::default()
+        };
+        let s1 = SchedulerState::new(t.rails.len(), p.clone());
+        let s2 = SchedulerState::new(t.rails.len(), p);
+        let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
+        // Engine 2 floods the rail with Bulk. Engine 1's latency-class view
+        // must stay clean — the fabric lane it diffuses from is per-class.
+        s2.add_queued(&f, rail, 100 << 20, TransferClass::Bulk);
+        assert_eq!(s1.queued(&f, rail, TransferClass::Latency), 0);
+        // Bulk (and non-isolated) views still see the shared backlog.
+        assert!(s1.queued(&f, rail, TransferClass::Bulk) > 0);
+    }
+
+    #[test]
+    fn rx_pricing_inflates_prediction_toward_busy_node() {
+        let t = build_profile("h800_hgx", 2).unwrap();
+        let f = Fabric::new(&t, FabricConfig::default());
+        let p = SchedParams {
+            rx_omega: 1.0,
+            ..Default::default()
+        };
+        let s = SchedulerState::new(t.rails.len(), p);
+        let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
+        let bw = t.rail(rail).bw_bytes_per_sec;
+        let quiet = t.nodes[0];
+        let busy = t.nodes[1];
+        s.add_ingress(&f, busy, 64 << 20, TransferClass::Bulk);
+        let (p_quiet, _) =
+            s.predict_ns_to(&f, rail, 1 << 20, bw, TransferClass::Bulk, Some(quiet));
+        let (p_busy, _) = s.predict_ns_to(&f, rail, 1 << 20, bw, TransferClass::Bulk, Some(busy));
+        assert!(p_busy > 2.0 * p_quiet, "quiet={p_quiet} busy={p_busy}");
+        // Latency-class slices are not priced against bulk ingest.
+        let (l_busy, _) =
+            s.predict_ns_to(&f, rail, 1 << 20, bw, TransferClass::Latency, Some(busy));
+        assert!((l_busy - p_quiet).abs() / p_quiet < 0.01);
+        // rx_omega = 0 restores plain predict_ns exactly.
+        let s0 = SchedulerState::new(t.rails.len(), SchedParams::default());
+        let (a, sa) = s0.predict_ns(&f, rail, 1 << 20, bw, TransferClass::Bulk);
+        let (b, sb) = s0.predict_ns_to(&f, rail, 1 << 20, bw, TransferClass::Bulk, Some(busy));
+        assert_eq!(a, b);
+        assert_eq!(sa, sb);
+        s.sub_ingress(&f, busy, 64 << 20, TransferClass::Bulk);
+        assert_eq!(f.ingress_bytes(busy), 0);
+    }
+
+    #[test]
+    fn adaptive_slice_shrinks_under_congestion_and_respects_clamps() {
+        let (t, f, s) = setup();
+        let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
+        // Synthetic fast rail (sim units) so the healthy size sits well
+        // inside the clamp window and congestion has room to shrink it.
+        let bw = 1e9;
+        let min_slice = 64 << 10;
+        let healthy = s.adaptive_slice_bytes(&f, rail, bw, min_slice);
+        assert!(healthy >= min_slice);
+        assert!(healthy <= 64 * min_slice, "hi clamp: {healthy}");
+        assert!(
+            healthy >= 8 * min_slice,
+            "a healthy fast rail should take coarse slices, got {healthy}"
+        );
+        // Teach the model this rail runs ~8x slower than nominal.
+        for _ in 0..60 {
+            let (pred, serial) = s.predict_ns(&f, rail, 1 << 20, bw, TransferClass::Bulk);
+            s.observe(rail, pred, serial, 8.0 * serial);
+        }
+        let congested = s.adaptive_slice_bytes(&f, rail, bw, min_slice);
+        assert!(
+            congested * 4 <= healthy,
+            "healthy={healthy} congested={congested}"
+        );
+        assert!(congested >= min_slice, "lo clamp: {congested}");
+    }
+
+    #[test]
+    fn adaptive_slice_halves_on_jittery_rail() {
+        let (t, f, s) = setup();
+        let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
+        // Synthetic fast rail (sim units), as in the congestion test.
+        let bw = 1e9;
+        let min_slice = 64 << 10;
+        // Put the model mid-range first so neither clamp masks the halving.
+        for _ in 0..60 {
+            let (pred, serial) = s.predict_ns(&f, rail, 1 << 20, bw, TransferClass::Bulk);
+            s.observe(rail, pred, serial, 8.0 * serial);
+        }
+        let calm = s.adaptive_slice_bytes(&f, rail, bw, min_slice);
+        // Now make the observed service latency bimodal: P99 ≫ P50.
+        let hist = &f.rail(rail).latency;
+        for _ in 0..97 {
+            hist.record(50_000);
+        }
+        for _ in 0..3 {
+            hist.record(5_000_000);
+        }
+        let jittery = s.adaptive_slice_bytes(&f, rail, bw, min_slice);
+        assert!(
+            jittery <= calm / 2 + 1,
+            "calm={calm} jittery={jittery}"
+        );
+        assert!(jittery >= min_slice);
     }
 
     #[test]

@@ -141,13 +141,19 @@ pub struct RailSnapshot {
     pub bulk_class_p99_ns: u64,
     pub beta0_ns: f64,
     pub beta1: f64,
+    /// Slice size (bytes) adaptive-γ mode would carve for this rail right
+    /// now, from the learned (β0, β1) and the latency histogram (jitter
+    /// backoff). Meaningful telemetry even when the engine runs fixed γ.
+    pub adaptive_slice_bytes: u64,
 }
 
-/// Build per-rail snapshots.
+/// Build per-rail snapshots. `min_slice` anchors the adaptive-γ clamp
+/// window (the engine passes its `EngineConfig::min_slice`).
 pub fn rail_snapshots(
     topo: &Topology,
     fabric: &Fabric,
     sched: &crate::engine::sched::SchedulerState,
+    min_slice: u64,
 ) -> Vec<RailSnapshot> {
     topo.rails
         .iter()
@@ -173,6 +179,12 @@ pub fn rail_snapshots(
                 bulk_class_p99_ns: st.class_latency[TransferClass::Bulk.index()].p99(),
                 beta0_ns: m.beta0_ns(),
                 beta1: m.beta1(),
+                adaptive_slice_bytes: sched.adaptive_slice_bytes(
+                    fabric,
+                    def.id,
+                    def.bw_bytes_per_sec,
+                    min_slice,
+                ),
             }
         })
         .collect()
@@ -231,10 +243,15 @@ mod tests {
         let t = build_profile("h800_hgx", 1).unwrap();
         let f = Fabric::new(&t, FabricConfig::default());
         let sched = SchedulerState::new(t.rails.len(), SchedParams::default());
-        let snaps = rail_snapshots(&t, &f, &sched);
+        let snaps = rail_snapshots(&t, &f, &sched, 64 << 10);
         assert_eq!(snaps.len(), t.rails.len());
         let table = format_rail_table(&snaps);
         assert!(table.contains("n0-mlx0"));
         assert!(table.contains("nvlink"));
+        // Fresh models must size every rail inside the clamp window.
+        for s in &snaps {
+            assert!(s.adaptive_slice_bytes >= 64 << 10);
+            assert!(s.adaptive_slice_bytes <= 64 * (64 << 10));
+        }
     }
 }

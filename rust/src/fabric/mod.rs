@@ -15,7 +15,7 @@
 pub mod trace;
 
 use crate::log;
-use crate::topology::{RailId, Topology};
+use crate::topology::{NodeId, RailId, Topology};
 use crate::util::ewma::AtomicF64;
 use crate::util::hist::Histogram;
 use crate::util::prng::Pcg64;
@@ -55,11 +55,16 @@ pub struct RailState {
     /// Bandwidth multiplier ∈ (0, 1]; 1 = nominal. Degradation lowers it.
     bw_factor: AtomicF64,
     /// Bytes scheduled onto this rail and not yet completed (the A_d of
-    /// Algorithm 1). Maintained by the scheduler + datapath. Striped over
-    /// per-engine cache-padded shards (`FabricConfig::counter_shards`) so a
-    /// fleet of engines updating the same rail does not serialize on one
-    /// cache line; read via [`RailState::queued_bytes`].
-    queued: ShardedU64,
+    /// Algorithm 1), **per QoS class** — `[latency, bulk]`, indexed by
+    /// `engine::TransferClass::index`. Maintained by the scheduler +
+    /// datapath. Each lane is striped over per-engine cache-padded shards
+    /// (`FabricConfig::counter_shards`) so a fleet of engines updating the
+    /// same rail does not serialize on one cache line. Read the total via
+    /// [`RailState::queued_bytes`], one lane via
+    /// [`RailState::queued_bytes_class`] — per-class lanes are what lets
+    /// the ω global-diffusion path stop feeding Bulk backlog into Latency
+    /// predictions.
+    queued: [ShardedU64; QOS_CLASSES],
     /// Total payload bytes carried (per-NIC byte counters, §5.1.3).
     pub bytes_carried: AtomicU64,
     pub slices_ok: AtomicU64,
@@ -88,7 +93,10 @@ impl RailState {
             id,
             health: AtomicU8::new(RailHealth::Healthy as u8),
             bw_factor: AtomicF64::new(1.0),
-            queued: ShardedU64::new(counter_shards),
+            queued: [
+                ShardedU64::new(counter_shards),
+                ShardedU64::new(counter_shards),
+            ],
             bytes_carried: AtomicU64::new(0),
             slices_ok: AtomicU64::new(0),
             slices_failed: AtomicU64::new(0),
@@ -108,10 +116,17 @@ impl RailState {
         self.bw_factor.load()
     }
 
-    /// Current queued bytes (A_d): sum over all counter shards.
+    /// Current queued bytes (A_d), all classes: sum over lanes and shards.
     #[inline]
     pub fn queued_bytes(&self) -> u64 {
-        self.queued.sum()
+        self.queued.iter().map(|l| l.sum()).sum()
+    }
+
+    /// Current queued bytes of one QoS class lane (`class` is
+    /// `engine::TransferClass::index`).
+    #[inline]
+    pub fn queued_bytes_class(&self, class: usize) -> u64 {
+        self.queued[class].sum()
     }
 }
 
@@ -142,6 +157,12 @@ pub struct FabricConfig {
     /// this to their engine count so each engine writes a private
     /// cache-padded shard (see `Fabric::register_engine`).
     pub counter_shards: usize,
+    /// NUMA-style domain count for the shard→engine mapping (see
+    /// `ShardedU64::shard_of_domain`): engines registered into domain `d`
+    /// get shards from domain `d`'s contiguous block of the stripe array,
+    /// so one socket's engines stay on cache lines that socket owns.
+    /// `1` (default) reproduces the plain interleaved mapping exactly.
+    pub numa_domains: usize,
 }
 
 impl Default for FabricConfig {
@@ -156,6 +177,7 @@ impl Default for FabricConfig {
             seed: 0xFAB,
             time_compression: 1.0,
             counter_shards: 1,
+            numa_domains: 1,
         }
     }
 }
@@ -194,6 +216,14 @@ pub struct Fabric {
     pub contention: FabricContention,
     /// Monotonic engine registration sequence (shard assignment).
     engine_seq: AtomicUsize,
+    /// Per-destination-node ingestion backlog, per QoS class — bytes
+    /// dispatched *towards* a node and not yet completed. `predict_ns`
+    /// historically priced only the sender's rail queue; these counters
+    /// let the scheduler also price the receiver's ingest pressure
+    /// (`SchedParams::rx_omega`), so sprays back off a node that many
+    /// peers are incasting into even when the local rail looks idle.
+    /// Same shard geometry as the rail queues.
+    node_ingress: Vec<[ShardedU64; QOS_CLASSES]>,
 }
 
 impl Fabric {
@@ -212,11 +242,17 @@ impl Fabric {
                 RailState::new(r.id, f, shards)
             })
             .collect();
+        let node_ingress = topo
+            .nodes
+            .iter()
+            .map(|_| [ShardedU64::new(shards), ShardedU64::new(shards)])
+            .collect();
         Fabric {
             rails,
             config,
             contention: FabricContention::new(shards),
             engine_seq: AtomicUsize::new(0),
+            node_ingress,
         }
     }
 
@@ -224,10 +260,37 @@ impl Fabric {
     /// counter-shard id. With `counter_shards = 1` every engine maps to
     /// shard 0 (the single-counter baseline); with shards ≥ engines each
     /// engine's `add_queued`/`sub_queued` touches a private cache line.
+    /// With `numa_domains > 1` engines are spread round-robin over the
+    /// domains in registration order; callers that know their domain use
+    /// [`Fabric::register_engine_in_domain`] instead.
     pub fn register_engine(&self) -> usize {
         let id = self.engine_seq.fetch_add(1, Ordering::AcqRel);
+        let domains = self.config.numa_domains.max(1);
         // All rails share one shard geometry; rail 0 is representative.
-        self.rails.first().map(|r| r.queued.shard_of(id)).unwrap_or(0)
+        self.rails
+            .first()
+            .map(|r| {
+                let q = &r.queued[0];
+                if domains <= 1 {
+                    q.shard_of(id)
+                } else {
+                    q.shard_of_domain(id / domains, id % domains, domains)
+                }
+            })
+            .unwrap_or(0)
+    }
+
+    /// Register an engine that knows which NUMA domain it runs in (fleets
+    /// group engines by node/socket): its shard is carved from that
+    /// domain's contiguous stripe block. With `numa_domains <= 1` this is
+    /// identical to [`Fabric::register_engine`].
+    pub fn register_engine_in_domain(&self, domain: usize) -> usize {
+        let id = self.engine_seq.fetch_add(1, Ordering::AcqRel);
+        let domains = self.config.numa_domains.max(1);
+        self.rails
+            .first()
+            .map(|r| r.queued[0].shard_of_domain(id, domain, domains))
+            .unwrap_or(0)
     }
 
     #[inline]
@@ -345,21 +408,23 @@ impl Fabric {
     }
 
     /// Account bytes entering / leaving a rail's queue (A_d maintenance).
-    /// Single-shard convenience forms; engines sharing the fabric use the
-    /// `_at` variants with their `register_engine` shard so the hot-path
-    /// RMWs stay on private cache lines.
+    /// `class` is the QoS lane (`engine::TransferClass::index`) — the
+    /// fabric keeps the lanes separate so the global diffusion read can be
+    /// class-scoped. Single-shard convenience forms; engines sharing the
+    /// fabric use the `_at` variants with their `register_engine` shard so
+    /// the hot-path RMWs stay on private cache lines.
     #[inline]
-    pub fn add_queued(&self, rail: RailId, len: u64) {
-        self.add_queued_at(0, rail, len);
+    pub fn add_queued(&self, rail: RailId, len: u64, class: usize) {
+        self.add_queued_at(0, rail, len, class);
     }
     #[inline]
-    pub fn sub_queued(&self, rail: RailId, len: u64) {
-        self.sub_queued_at(0, rail, len);
+    pub fn sub_queued(&self, rail: RailId, len: u64, class: usize) {
+        self.sub_queued_at(0, rail, len, class);
     }
 
     #[inline]
-    pub fn add_queued_at(&self, shard: usize, rail: RailId, len: u64) {
-        self.rail(rail).queued.add(shard, len);
+    pub fn add_queued_at(&self, shard: usize, rail: RailId, len: u64, class: usize) {
+        self.rail(rail).queued[class].add(shard, len);
     }
 
     /// Saturating per-shard subtract. A clamp means some engine removed
@@ -368,8 +433,8 @@ impl Fabric {
     /// would poison every cost prediction on the rail), counts the event
     /// in `contention.underflow_clamps`, and trips a debug assertion.
     #[inline]
-    pub fn sub_queued_at(&self, shard: usize, rail: RailId, len: u64) {
-        if self.rail(rail).queued.sub_saturating(shard, len) {
+    pub fn sub_queued_at(&self, shard: usize, rail: RailId, len: u64, class: usize) {
+        if self.rail(rail).queued[class].sub_saturating(shard, len) {
             self.contention.underflow_clamps.fetch_add(1, Ordering::Relaxed);
             log::warn!("fabric: queued-bytes underflow clamped on {rail} (shard {shard}, -{len})");
             debug_assert!(
@@ -379,20 +444,79 @@ impl Fabric {
         }
     }
 
-    /// Read a rail's queued bytes (A_d), summing all counter shards. This
-    /// is the ω load-diffusion read path; each call is counted (on the
-    /// caller's telemetry stripe) so benches can weigh read amplification
-    /// against write isolation.
+    /// Read a rail's queued bytes (A_d) across **all** classes, summing
+    /// all counter shards. This is the ω load-diffusion read path; each
+    /// call is counted (on the caller's telemetry stripe) so benches can
+    /// weigh read amplification against write isolation.
     #[inline]
     pub fn queued_bytes_from(&self, shard: usize, rail: RailId) -> u64 {
         self.contention.shard_sum_reads.add(shard, 1);
         self.rail(rail).queued_bytes()
     }
 
+    /// Class-scoped diffusion read: only `class`'s lane of the rail queue.
+    /// Latency-class predictions use this so a Bulk flood on the shared
+    /// fabric no longer pollutes their global queue term.
+    #[inline]
+    pub fn queued_bytes_class_from(&self, shard: usize, rail: RailId, class: usize) -> u64 {
+        self.contention.shard_sum_reads.add(shard, 1);
+        self.rail(rail).queued_bytes_class(class)
+    }
+
     /// Single-stripe convenience form of [`Fabric::queued_bytes_from`].
     #[inline]
     pub fn queued_bytes(&self, rail: RailId) -> u64 {
         self.queued_bytes_from(0, rail)
+    }
+
+    // ---- receiver-side (dst-node) ingestion accounting ----
+
+    /// Account bytes dispatched towards `node` (receiver-side pressure).
+    #[inline]
+    pub fn add_ingress_at(&self, shard: usize, node: NodeId, len: u64, class: usize) {
+        if let Some(lanes) = self.node_ingress.get(node.0 as usize) {
+            lanes[class].add(shard, len);
+        }
+    }
+
+    /// Retire receiver-side bytes once the slice completes (or gives up).
+    /// Saturating like [`Fabric::sub_queued_at`]; shares the underflow
+    /// telemetry since both clamp for the same class of upstream bug.
+    #[inline]
+    pub fn sub_ingress_at(&self, shard: usize, node: NodeId, len: u64, class: usize) {
+        if let Some(lanes) = self.node_ingress.get(node.0 as usize) {
+            if lanes[class].sub_saturating(shard, len) {
+                self.contention.underflow_clamps.fetch_add(1, Ordering::Relaxed);
+                log::warn!(
+                    "fabric: ingress underflow clamped on node {} (shard {shard}, -{len})",
+                    node.0
+                );
+                debug_assert!(
+                    false,
+                    "node-ingress underflow on node {}: shard {shard} asked to drop {len}",
+                    node.0
+                );
+            }
+        }
+    }
+
+    /// Read a node's ingestion backlog for one class (all shards).
+    #[inline]
+    pub fn ingress_bytes_class_from(&self, shard: usize, node: NodeId, class: usize) -> u64 {
+        self.contention.shard_sum_reads.add(shard, 1);
+        self.node_ingress
+            .get(node.0 as usize)
+            .map(|lanes| lanes[class].sum())
+            .unwrap_or(0)
+    }
+
+    /// Total ingestion backlog of a node across classes (telemetry).
+    #[inline]
+    pub fn ingress_bytes(&self, node: NodeId) -> u64 {
+        self.node_ingress
+            .get(node.0 as usize)
+            .map(|lanes| lanes.iter().map(|l| l.sum()).sum())
+            .unwrap_or(0)
     }
 
     /// Snapshot per-rail byte counters (Fig 6 "per-NIC byte counters").
@@ -546,10 +670,10 @@ mod tests {
     fn queued_bytes_accounting_balances() {
         let (t, f) = fabric();
         let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
-        f.add_queued(rail, 100);
-        f.sub_queued(rail, 60);
+        f.add_queued(rail, 100, 1);
+        f.sub_queued(rail, 60, 1);
         assert_eq!(f.rail(rail).queued_bytes(), 40);
-        f.sub_queued(rail, 40);
+        f.sub_queued(rail, 40, 1);
         assert_eq!(f.rail(rail).queued_bytes(), 0);
         assert_eq!(f.contention.underflow_clamps.load(Ordering::Relaxed), 0);
     }
@@ -558,21 +682,39 @@ mod tests {
     fn queued_bytes_underflow_clamps_and_is_loud() {
         let (t, f) = fabric();
         let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
-        f.add_queued(rail, 40);
+        f.add_queued(rail, 40, 0);
         if cfg!(debug_assertions) {
             // Over-subtracting is an upstream accounting bug: debug builds
             // trip the assertion…
             let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                f.sub_queued(rail, 100)
+                f.sub_queued(rail, 100, 0)
             }));
             assert!(r.is_err(), "debug builds must assert on underflow");
         } else {
-            f.sub_queued(rail, 100);
+            f.sub_queued(rail, 100, 0);
         }
         // …but the counter itself saturates (never wraps) and the clamp is
         // counted, in every build.
         assert_eq!(f.rail(rail).queued_bytes(), 0);
         assert_eq!(f.contention.underflow_clamps.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn queued_class_lanes_are_isolated() {
+        let (t, f) = fabric();
+        let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
+        f.add_queued(rail, 1_000, 0); // latency lane
+        f.add_queued(rail, 50_000, 1); // bulk lane
+        assert_eq!(f.rail(rail).queued_bytes(), 51_000);
+        assert_eq!(f.rail(rail).queued_bytes_class(0), 1_000);
+        assert_eq!(f.rail(rail).queued_bytes_class(1), 50_000);
+        assert_eq!(f.queued_bytes_class_from(0, rail, 0), 1_000);
+        // A bulk drain must not disturb the latency lane.
+        f.sub_queued(rail, 50_000, 1);
+        assert_eq!(f.rail(rail).queued_bytes_class(0), 1_000);
+        assert_eq!(f.rail(rail).queued_bytes_class(1), 0);
+        f.sub_queued(rail, 1_000, 0);
+        assert_eq!(f.contention.underflow_clamps.load(Ordering::Relaxed), 0);
     }
 
     #[test]
@@ -587,13 +729,50 @@ mod tests {
         let shards: Vec<usize> = (0..4).map(|_| f.register_engine()).collect();
         assert_eq!(shards, vec![0, 1, 2, 3]);
         for &s in &shards {
-            f.add_queued_at(s, rail, 100);
+            f.add_queued_at(s, rail, 100, 1);
         }
         assert_eq!(f.queued_bytes(rail), 400);
-        f.sub_queued_at(shards[2], rail, 100);
+        f.sub_queued_at(shards[2], rail, 100, 1);
         assert_eq!(f.queued_bytes_from(shards[1], rail), 300);
         assert!(f.contention.shard_sum_reads.sum() >= 2);
         assert_eq!(f.contention.underflow_clamps.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn numa_domain_registration_blocks_shards() {
+        let t = build_profile("h800_hgx", 1).unwrap();
+        let cfg = FabricConfig {
+            counter_shards: 8,
+            numa_domains: 2,
+            ..Default::default()
+        };
+        let f = Fabric::new(&t, cfg);
+        // Engines that declare their domain get shards from that domain's
+        // contiguous block: domain 0 → shards 0..4, domain 1 → shards 4..8.
+        let d0: Vec<usize> = (0..2).map(|_| f.register_engine_in_domain(0)).collect();
+        let d1: Vec<usize> = (0..2).map(|_| f.register_engine_in_domain(1)).collect();
+        assert!(d0.iter().all(|&s| s < 4), "{d0:?}");
+        assert!(d1.iter().all(|&s| (4..8).contains(&s)), "{d1:?}");
+    }
+
+    #[test]
+    fn node_ingress_accounting_per_class() {
+        let (t, f) = fabric();
+        let node = t.nodes[0];
+        assert_eq!(f.ingress_bytes(node), 0);
+        f.add_ingress_at(0, node, 4_000, 0);
+        f.add_ingress_at(0, node, 60_000, 1);
+        assert_eq!(f.ingress_bytes(node), 64_000);
+        assert_eq!(f.ingress_bytes_class_from(0, node, 0), 4_000);
+        assert_eq!(f.ingress_bytes_class_from(0, node, 1), 60_000);
+        f.sub_ingress_at(0, node, 4_000, 0);
+        f.sub_ingress_at(0, node, 60_000, 1);
+        assert_eq!(f.ingress_bytes(node), 0);
+        assert_eq!(f.contention.underflow_clamps.load(Ordering::Relaxed), 0);
+        // Out-of-range nodes are ignored, not a panic (staged plans can
+        // price only the nodes the fabric was built with).
+        f.add_ingress_at(0, NodeId(9_999), 1, 0);
+        assert_eq!(f.ingress_bytes(NodeId(9_999)), 0);
     }
 
     #[test]

@@ -102,6 +102,26 @@ pub trait SlicePolicy: Send + Sync {
     ) {
     }
 
+    /// Coalesced completion feedback: `n` slices finished on `rail` within
+    /// one datapath drain pass, with the given *mean* predicted / serial /
+    /// observed times. The default forwards one averaged
+    /// [`SlicePolicy::on_complete`] call, so every policy stays correct;
+    /// TENT overrides it to apply the weight-equivalent batched EWMA
+    /// update (`SchedulerState::observe_batch`) directly.
+    fn on_complete_batch(
+        &self,
+        rail: RailId,
+        n: u64,
+        mean_predicted_ns: f64,
+        mean_serial_ns: f64,
+        mean_observed_ns: f64,
+        ctx: &SchedCtx,
+    ) {
+        if n > 0 {
+            self.on_complete(rail, mean_predicted_ns, mean_serial_ns, mean_observed_ns, ctx);
+        }
+    }
+
     /// Whether the engine performs in-band per-slice failover for this
     /// policy (§4.3). Baselines surface transport faults to the caller.
     fn failover(&self) -> bool;

@@ -67,7 +67,14 @@ impl SlicePolicy for TentPolicy {
         let mut t_min = f64::INFINITY;
         for &i in viable {
             let c = &plan.candidates[i];
-            let (t_hat, _serial) = sched.predict_ns(ctx.fabric, c.rail, len, c.bw, ctx.class);
+            let (t_hat, _serial) = sched.predict_ns_to(
+                ctx.fabric,
+                c.rail,
+                len,
+                c.bw,
+                ctx.class,
+                Some(plan.dst_node),
+            );
             let s = sched.penalty(c.tier) * t_hat;
             s_min = s_min.min(s);
             t_min = t_min.min(t_hat);
@@ -105,6 +112,21 @@ impl SlicePolicy for TentPolicy {
         ctx: &SchedCtx,
     ) {
         ctx.sched.observe(rail, predicted_ns, serial_ns, observed_ns);
+    }
+
+    fn on_complete_batch(
+        &self,
+        rail: RailId,
+        n: u64,
+        _mean_predicted_ns: f64,
+        mean_serial_ns: f64,
+        mean_observed_ns: f64,
+        ctx: &SchedCtx,
+    ) {
+        // Weight-equivalent coalesced EWMA update: one atomic round-trip
+        // for the whole drain pass instead of one per slice.
+        ctx.sched
+            .observe_batch(rail, n, mean_observed_ns, mean_serial_ns);
     }
 
     fn failover(&self) -> bool {
@@ -239,6 +261,63 @@ mod tests {
             }
         }
         assert_eq!(picks_bad, 0, "degraded rail must be avoided");
+    }
+
+    #[test]
+    fn bulk_flood_does_not_move_latency_rail_choice() {
+        // Regression for class-blind global diffusion: with ω > 0 the
+        // latency-class spray used to read the rail-level queued-bytes
+        // pool, which a peer engine's Bulk flood inflates — shifting
+        // latency picks off an otherwise perfectly healthy rail. With
+        // per-class fabric lanes the flood must be invisible to Latency.
+        let c = Cluster::from_profile("h800_hgx").unwrap();
+        let params = SchedParams {
+            omega: 0.5,
+            ..Default::default()
+        };
+        let sched = SchedulerState::new(c.topo.rails.len(), params.clone());
+        let flooder = SchedulerState::new(c.topo.rails.len(), params);
+        let plan = h2h_plan(&c);
+        let viable: Vec<usize> = (0..plan.candidates.len())
+            .filter(|&i| {
+                plan.candidates[i].backend.name() == "rdma_sim"
+                    && plan.candidates[i].tier == Tier::T1
+            })
+            .collect();
+        let lat_ctx = SchedCtx {
+            sched: &sched,
+            fabric: &c.fabric,
+            topo: &c.topo,
+            class: TransferClass::Latency,
+        };
+        let baseline: Vec<usize> = (0..32)
+            .map(|_| TentPolicy.pick(&plan, &viable, 64 << 10, &lat_ctx).unwrap())
+            .collect();
+        // A peer engine floods ONE tier-1 rail with Bulk backlog.
+        let victim = plan.candidates[viable[0]].rail;
+        flooder.add_queued(&c.fabric, victim, 256 << 20, TransferClass::Bulk);
+        sched.rr.store(0, std::sync::atomic::Ordering::Relaxed);
+        let flooded: Vec<usize> = (0..32)
+            .map(|_| TentPolicy.pick(&plan, &viable, 64 << 10, &lat_ctx).unwrap())
+            .collect();
+        assert_eq!(
+            baseline, flooded,
+            "Bulk flood moved the Latency rail choice through global diffusion"
+        );
+        // Sanity: a Bulk spray *does* see the flood and avoids the victim.
+        let bulk_ctx = SchedCtx {
+            sched: &sched,
+            fabric: &c.fabric,
+            topo: &c.topo,
+            class: TransferClass::Bulk,
+        };
+        for _ in 0..32 {
+            let i = TentPolicy.pick(&plan, &viable, 64 << 10, &bulk_ctx).unwrap();
+            assert_ne!(
+                plan.candidates[i].rail, victim,
+                "Bulk must steer around the flooded rail"
+            );
+        }
     }
 
     #[test]

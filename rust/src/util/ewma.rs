@@ -141,6 +141,31 @@ impl LinearCostModel {
             .update(|b0| (b0 + alpha * (resid - b0)).clamp(0.0, Self::BETA0_CAP_NS));
     }
 
+    /// Batched feedback: fold `n` completions with mean observed/serial
+    /// times into the model in one pass. Uses the effective smoothing
+    /// factor `α_eff = 1 − (1−α)^n`, which is exactly the total weight `n`
+    /// successive per-slice EWMA steps would have given to new data — so a
+    /// batch of n identical observations lands the model in the same place
+    /// as n scalar [`LinearCostModel::observe_ns`] calls, at 1/n the atomic
+    /// traffic (see the batched completion path in `engine/datapath.rs`).
+    pub fn observe_batch_ns(&self, n: u64, mean_observed_ns: f64, mean_serial_ns: f64) {
+        if n == 0 {
+            return;
+        }
+        let alpha = 1.0 - (1.0 - self.alpha).powi(n.min(i32::MAX as u64) as i32);
+        let mut b1_now = self.beta1.load();
+        if mean_serial_ns > 1.0 {
+            let target_b1 =
+                ((mean_observed_ns - self.beta0_ns.load()) / mean_serial_ns).clamp(0.05, 100.0);
+            b1_now = self
+                .beta1
+                .update(|b1| (b1 + alpha * (target_b1 - b1)).clamp(0.05, 100.0));
+        }
+        let resid = (mean_observed_ns - b1_now * mean_serial_ns).clamp(0.0, Self::BETA0_CAP_NS);
+        self.beta0_ns
+            .update(|b0| (b0 + alpha * (resid - b0)).clamp(0.0, Self::BETA0_CAP_NS));
+    }
+
     /// Periodic state reset (§4.2): forget learned penalties so degraded
     /// paths are re-probed once they recover.
     pub fn reset(&self) {
@@ -225,6 +250,50 @@ mod tests {
         // After learning, predictions on this link are ~4x those of a healthy one.
         let healthy = LinearCostModel::new(0.0, 1.0, 0.3);
         assert!(m.predict_ns(len, 0, bw) > 3.0 * healthy.predict_ns(len, 0, bw));
+    }
+
+    #[test]
+    fn batch_of_one_matches_scalar_observe() {
+        let a = LinearCostModel::new(10_000.0, 1.0, 0.1);
+        let b = LinearCostModel::new(10_000.0, 1.0, 0.1);
+        a.observe_ns(0.0, 500_000.0, 100_000.0);
+        b.observe_batch_ns(1, 500_000.0, 100_000.0);
+        assert!((a.beta1() - b.beta1()).abs() < 1e-12);
+        assert!((a.beta0_ns() - b.beta0_ns()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_of_identical_observations_matches_scalar_sequence() {
+        let scalar = LinearCostModel::new(20_000.0, 1.0, 0.1);
+        let batched = LinearCostModel::new(20_000.0, 1.0, 0.1);
+        let (observed, serial) = (800_000.0, 200_000.0);
+        for _ in 0..16 {
+            scalar.observe_ns(0.0, observed, serial);
+        }
+        batched.observe_batch_ns(16, observed, serial);
+        // α_eff gives the batch the same total new-data weight; the scalar
+        // path re-reads β0 each step so the two differ only by the (small)
+        // β0/β1 cross-coupling within the sequence.
+        assert!(
+            (scalar.beta1() - batched.beta1()).abs() / scalar.beta1() < 0.05,
+            "scalar={} batched={}",
+            scalar.beta1(),
+            batched.beta1()
+        );
+        assert!(
+            (scalar.beta0_ns() - batched.beta0_ns()).abs() < 0.1 * LinearCostModel::BETA0_CAP_NS,
+            "scalar={} batched={}",
+            scalar.beta0_ns(),
+            batched.beta0_ns()
+        );
+    }
+
+    #[test]
+    fn batch_zero_is_noop() {
+        let m = LinearCostModel::new(5_000.0, 1.0, 0.2);
+        m.observe_batch_ns(0, 1e9, 1e6);
+        assert_eq!(m.beta0_ns(), 5_000.0);
+        assert_eq!(m.beta1(), 1.0);
     }
 
     #[test]

@@ -44,6 +44,26 @@ impl ShardedU64 {
         writer & self.mask
     }
 
+    /// NUMA-style shard mapping: partition the stripe space into `domains`
+    /// contiguous blocks and keep a writer's shard inside its domain's
+    /// block. On multi-socket hosts this keeps an engine's counter stripe
+    /// on the cache lines its own socket already owns, instead of letting
+    /// `writer & mask` interleave sockets across the whole array. With
+    /// `domains <= 1` this is exactly [`ShardedU64::shard_of`].
+    #[inline]
+    pub fn shard_of_domain(&self, writer: usize, domain: usize, domains: usize) -> usize {
+        let n = self.shards.len();
+        if domains <= 1 || domains > n {
+            return self.shard_of(writer);
+        }
+        // `n` is a power of two; use the largest power-of-two domain count
+        // that fits so block boundaries stay aligned and the math stays
+        // mask-based (no division on the hot path).
+        let doms = prev_power_of_two(domains.min(n));
+        let block = n / doms;
+        (domain % doms) * block + (writer % block)
+    }
+
     #[inline]
     pub fn add(&self, shard: usize, v: u64) {
         self.shards[shard & self.mask].fetch_add(v, Ordering::Relaxed);
@@ -85,6 +105,13 @@ impl ShardedU64 {
             s.store(0, Ordering::Relaxed);
         }
     }
+}
+
+/// Largest power of two `<= v` (`v >= 1`).
+#[inline]
+fn prev_power_of_two(v: usize) -> usize {
+    debug_assert!(v >= 1);
+    1 << (usize::BITS - 1 - v.leading_zeros())
 }
 
 #[cfg(test)]
@@ -151,6 +178,50 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(c.sum(), 0);
+    }
+
+    #[test]
+    fn domain_mapping_stays_inside_domain_block() {
+        let c = ShardedU64::new(8);
+        // 2 domains over 8 shards: domain 0 owns shards 0..4, domain 1 owns
+        // shards 4..8, regardless of writer id.
+        for w in 0..32 {
+            let s0 = c.shard_of_domain(w, 0, 2);
+            let s1 = c.shard_of_domain(w, 1, 2);
+            assert!(s0 < 4, "writer {w} escaped domain 0: shard {s0}");
+            assert!((4..8).contains(&s1), "writer {w} escaped domain 1: shard {s1}");
+        }
+        // Writers still spread across the block, not onto one shard.
+        let spread: std::collections::BTreeSet<usize> =
+            (0..4).map(|w| c.shard_of_domain(w, 0, 2)).collect();
+        assert_eq!(spread.len(), 4);
+    }
+
+    #[test]
+    fn domain_mapping_degenerates_without_domains() {
+        let c = ShardedU64::new(4);
+        for w in 0..16 {
+            assert_eq!(c.shard_of_domain(w, 0, 1), c.shard_of(w));
+            assert_eq!(c.shard_of_domain(w, 3, 0), c.shard_of(w));
+            // More domains than shards: fall back to plain interleave.
+            assert_eq!(c.shard_of_domain(w, 2, 8), c.shard_of(w));
+        }
+    }
+
+    #[test]
+    fn domain_count_rounds_down_to_power_of_two() {
+        let c = ShardedU64::new(8);
+        // 3 domains rounds down to 2 blocks of 4.
+        for w in 0..8 {
+            assert!(c.shard_of_domain(w, 0, 3) < 4);
+            assert!((4..8).contains(&c.shard_of_domain(w, 1, 3)));
+            // Domain index wraps modulo the effective domain count.
+            assert_eq!(c.shard_of_domain(w, 2, 3), c.shard_of_domain(w, 0, 3));
+        }
+        assert_eq!(prev_power_of_two(1), 1);
+        assert_eq!(prev_power_of_two(2), 2);
+        assert_eq!(prev_power_of_two(3), 2);
+        assert_eq!(prev_power_of_two(8), 8);
     }
 
     #[test]

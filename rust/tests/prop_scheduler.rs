@@ -406,25 +406,25 @@ fn prop_sharded_sub_clamps_on_underflow() {
     let rail = RailId(0);
     let a = fabric.register_engine();
     let b = fabric.register_engine();
-    fabric.add_queued_at(a, rail, 100);
-    fabric.add_queued_at(b, rail, 100);
+    fabric.add_queued_at(a, rail, 100, 1);
+    fabric.add_queued_at(b, rail, 100, 1);
     // Engine b tries to remove more than it ever added: its *shard* is
     // short even though the rail total (200) would cover it — exactly the
     // multi-engine interleaving that silently corrupted a single shared
     // counter.
     if cfg!(debug_assertions) {
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            fabric.sub_queued_at(b, rail, 150)
+            fabric.sub_queued_at(b, rail, 150, 1)
         }));
         assert!(r.is_err(), "debug builds must flag the underflow");
     } else {
-        fabric.sub_queued_at(b, rail, 150);
+        fabric.sub_queued_at(b, rail, 150, 1);
     }
     let clamps = fabric.contention.underflow_clamps.load(std::sync::atomic::Ordering::Relaxed);
     assert_eq!(clamps, 1);
     // Saturating semantics: b's shard pinned at zero, a's shard intact.
     assert_eq!(fabric.rail(rail).queued_bytes(), 100);
-    fabric.sub_queued_at(a, rail, 100);
+    fabric.sub_queued_at(a, rail, 100, 1);
     assert_eq!(fabric.rail(rail).queued_bytes(), 0);
 }
 
