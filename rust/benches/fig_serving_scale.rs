@@ -1,0 +1,210 @@
+//! Serving at scale — continuous batching vs turn-major FIFO on a fleet
+//! (ROADMAP "millions of concurrent users"; the serving-layer claim on top
+//! of Table 2's per-request KV movement).
+//!
+//! Drives `serving::batching::serve_fleet` with an arrival-driven
+//! multi-turn session workload (Poisson arrivals, 50/50 interactive/batch
+//! SLO classes, shared system prompt) over one engine per node, twice:
+//! once with the iteration-level continuous-batching scheduler, once with
+//! the same machinery degraded to strict-FIFO turn-major service. All
+//! latencies are **virtual-clock** (modeled batch + fetch cost), so the
+//! comparison is deterministic and machine-independent; the KV bytes still
+//! move through the real engine data plane (tiered cache fetch/store).
+//!
+//! Gates (full run):
+//! * continuous beats FIFO on P90 TTFT,
+//! * at equal-or-better input throughput,
+//! * and interactive P99 TTFT meets its SLO under continuous batching.
+//!
+//! `--smoke` runs a small fleet and reports without failing the build;
+//! `--sessions N` / `--nodes N` override the workload size.
+
+use std::sync::Arc;
+use tent::cluster::{Fleet, FleetConfig};
+use tent::runtime::{ModelExecutor, ModelMeta, SyntheticConfig, SyntheticModel};
+use tent::serving::{
+    build_sessions, BatchConfig, BatchReport, KvCacheConfig, RequestClass, SchedulePolicy,
+    SessionWorkload,
+};
+use tent::util::cli::Args;
+use tent::util::fmt_ns;
+use tent::util::json::Json;
+
+/// Serving shape: 128-token context in 32-token chunks, 64 KiB KV per
+/// session (16 KiB cache blocks) — small enough that tens of thousands of
+/// sessions fit one process, large enough that cache movement is real.
+fn bench_meta() -> ModelMeta {
+    ModelMeta::custom(2, 2, 16, 128, 32, 1024, 100_000)
+}
+
+fn run_policy(
+    schedule: SchedulePolicy,
+    nodes: u16,
+    sessions: usize,
+    seed: u64,
+) -> (BatchReport, BatchConfig) {
+    let meta = bench_meta();
+    let w = SessionWorkload {
+        sessions,
+        turns: 2,
+        interactive_share: 0.5,
+        mean_interarrival_ns: 50_000,
+        think_ns: 1_000_000,
+        shared_system_prompt: true,
+        seed,
+    };
+    let scripts = build_sessions(&[&meta], &w);
+    let cfg = BatchConfig {
+        schedule,
+        max_running: 32,
+        prefill_chunks_per_iter: 8,
+        interactive_reserve: 8,
+        decode_tokens: 4,
+        cache: KvCacheConfig {
+            gpus: 8,
+            gpu_blocks_per_gpu: 3,
+            cpu_blocks: 512,
+            disk_blocks: 4096,
+            ..KvCacheConfig::default()
+        },
+        ..BatchConfig::default()
+    };
+    let fleet = Fleet::new(FleetConfig::new("h800_hgx", nodes)).expect("fleet build");
+    let model: Arc<dyn ModelExecutor> = Arc::new(SyntheticModel::new(
+        meta,
+        SyntheticConfig {
+            pace: false,
+            ..SyntheticConfig::default()
+        },
+    ));
+    let report = fleet.serve_sessions(&[model], &scripts, &cfg).expect("serve");
+    (report, cfg)
+}
+
+fn row(label: &str, r: &BatchReport, cfg: &BatchConfig) {
+    let h = r.ttft_hist(None);
+    println!(
+        "{:<12} {:>8} {:>10} {:>10} {:>10} {:>10} {:>10} {:>12.0} {:>9.3}",
+        label,
+        r.rows.len(),
+        fmt_ns(h.p50()),
+        fmt_ns(h.p90()),
+        fmt_ns(h.p99()),
+        fmt_ns((r.p99_ttft_s(RequestClass::Interactive) * 1e9) as u64),
+        fmt_ns(r.makespan_ns),
+        r.input_throughput_tok_s(),
+        r.slo_attainment(RequestClass::Interactive, &cfg.slo),
+    );
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.flag("smoke");
+    let nodes: u16 = match args.get("nodes") {
+        Some(n) => n.parse().expect("--nodes"),
+        None if smoke => 2,
+        None => 4,
+    };
+    let sessions: usize = match args.get("sessions") {
+        Some(n) => n.parse().expect("--sessions"),
+        None if smoke => 300,
+        None => 10_000,
+    };
+
+    println!("== fig_serving_scale: continuous batching vs FIFO turn-major ==");
+    println!(
+        "({sessions} sessions x 2 turns on {nodes} engines; Poisson arrivals, 50/50 \
+         interactive/batch, virtual-clock latencies)"
+    );
+    println!();
+    println!(
+        "{:<12} {:>8} {:>10} {:>10} {:>10} {:>10} {:>10} {:>12} {:>9}",
+        "policy", "turns", "ttftP50", "ttftP90", "ttftP99", "intP99", "makespan", "tok/s", "sloAtt"
+    );
+
+    let (fifo, cfg) = run_policy(SchedulePolicy::Fifo, nodes, sessions, 7);
+    row("fifo", &fifo, &cfg);
+    let (cont, cfg) = run_policy(SchedulePolicy::Continuous, nodes, sessions, 7);
+    row("continuous", &cont, &cfg);
+
+    // ---- verdicts ----
+    println!();
+    let mut pass = true;
+
+    let fifo_p90 = fifo.p90_ttft_s();
+    let cont_p90 = cont.p90_ttft_s();
+    let p90_ok = cont_p90 < fifo_p90;
+    println!(
+        "continuous beats FIFO on P90 TTFT: {} vs {} : {}",
+        fmt_ns((cont_p90 * 1e9) as u64),
+        fmt_ns((fifo_p90 * 1e9) as u64),
+        if p90_ok { "PASS" } else { "FAIL" }
+    );
+    pass &= p90_ok;
+
+    let fifo_tput = fifo.input_throughput_tok_s();
+    let cont_tput = cont.input_throughput_tok_s();
+    let tput_ok = cont_tput >= 0.98 * fifo_tput;
+    println!(
+        "at equal-or-better input throughput: {cont_tput:.0} vs {fifo_tput:.0} tok/s \
+         (>= 0.98x): {}",
+        if tput_ok { "PASS" } else { "FAIL" }
+    );
+    pass &= tput_ok;
+
+    let int_p99_s = cont.p99_ttft_s(RequestClass::Interactive);
+    let slo_s = cfg.slo.interactive_ttft_ns as f64 / 1e9;
+    let slo_ok = int_p99_s <= slo_s;
+    println!(
+        "interactive P99 TTFT meets SLO under continuous: {} <= {} : {}",
+        fmt_ns((int_p99_s * 1e9) as u64),
+        fmt_ns(cfg.slo.interactive_ttft_ns),
+        if slo_ok { "PASS" } else { "FAIL" }
+    );
+    pass &= slo_ok;
+
+    if let Some(path) = args.get("json") {
+        let cell = |label: &str, r: &BatchReport| {
+            let h = r.ttft_hist(None);
+            Json::obj(vec![
+                ("policy", Json::str(label)),
+                ("turns", Json::num(r.rows.len() as f64)),
+                ("ttft_p50_ns", Json::num(h.p50() as f64)),
+                ("ttft_p90_ns", Json::num(h.p90() as f64)),
+                ("ttft_p99_ns", Json::num(h.p99() as f64)),
+                (
+                    "interactive_p99_ttft_ns",
+                    Json::num(r.p99_ttft_s(RequestClass::Interactive) * 1e9),
+                ),
+                ("makespan_ns", Json::num(r.makespan_ns as f64)),
+                ("input_tok_per_s", Json::num(r.input_throughput_tok_s())),
+                (
+                    "interactive_slo_attainment",
+                    Json::num(r.slo_attainment(RequestClass::Interactive, &cfg.slo)),
+                ),
+            ])
+        };
+        let j = Json::obj(vec![
+            ("bench", Json::str("fig_serving_scale")),
+            ("smoke", Json::Bool(smoke)),
+            ("sessions", Json::num(sessions as f64)),
+            ("nodes", Json::num(nodes as f64)),
+            (
+                "cells",
+                Json::arr([cell("fifo", &fifo), cell("continuous", &cont)]),
+            ),
+            ("pass", Json::Bool(pass)),
+        ]);
+        std::fs::write(path, format!("{j}\n")).expect("write --json");
+        println!();
+        println!("results written to {path}");
+    }
+
+    println!();
+    println!("overall: {}", if pass { "PASS" } else { "FAIL" });
+    // Smoke reports without failing the build (tiny fleets under-load the
+    // scheduler); full runs hard-fail on a lost gate.
+    if !pass && !smoke {
+        std::process::exit(1);
+    }
+}

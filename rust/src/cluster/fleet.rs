@@ -142,6 +142,18 @@ impl Fleet {
         self.cluster.fabric.byte_counters().iter().map(|&(_, b)| b).sum()
     }
 
+    /// Serve an arrival-driven session workload with the continuous-batching
+    /// scheduler (`serving::batching`): one scheduling lane per engine,
+    /// engine `j` running `models[j % models.len()]`.
+    pub fn serve_sessions(
+        &self,
+        models: &[Arc<dyn crate::runtime::ModelExecutor>],
+        sessions: &[crate::serving::SessionScript],
+        cfg: &crate::serving::BatchConfig,
+    ) -> Result<crate::serving::BatchReport> {
+        crate::serving::serve_fleet(self, models, sessions, cfg)
+    }
+
     /// Merged slice-latency histogram for one QoS class across all rails.
     pub fn class_slice_latency(&self, class: TransferClass) -> Histogram {
         let h = Histogram::new();

@@ -77,6 +77,37 @@ impl ModelMeta {
         }
     }
 
+    /// Arbitrary synthetic model dimensions with the derived KV geometry
+    /// filled in. This is what lets several `ModelMeta` shapes share one
+    /// fabric (multi-model serving) and lets scale benches pick a KV
+    /// footprint small enough for 10k+ concurrent sessions. `t_max` must be
+    /// a whole number of `t_pre` chunks.
+    pub fn custom(
+        layers: usize,
+        heads: usize,
+        head_dim: usize,
+        t_max: usize,
+        t_pre: usize,
+        vocab: usize,
+        param_count: usize,
+    ) -> ModelMeta {
+        assert!(t_pre > 0 && t_max % t_pre == 0, "t_max must be a multiple of t_pre");
+        let kv_bytes = (layers * 2 * heads * t_max * head_dim * 4) as u64;
+        ModelMeta {
+            vocab,
+            d_model: heads * head_dim,
+            layers,
+            heads,
+            head_dim,
+            t_max,
+            t_pre,
+            param_count,
+            kv_shape: vec![layers as i64, 2, heads as i64, t_max as i64, head_dim as i64],
+            kv_bytes,
+            kv_bytes_per_token: kv_bytes / t_max as u64,
+        }
+    }
+
     pub fn load(dir: &Path) -> Result<ModelMeta> {
         let text = std::fs::read_to_string(dir.join("model_meta.json"))?;
         let j = Json::parse(&text).map_err(Error::Config)?;
@@ -158,6 +189,22 @@ impl KvCache {
     }
 }
 
+/// One prefill-chunk step inside an iteration-level batch: exactly
+/// `meta().t_pre` tokens at chunk-aligned `offset`, carrying the request's
+/// KV state through the call.
+pub struct PrefillStep<'a> {
+    pub tokens: &'a [i32],
+    pub kv: KvCache,
+    pub offset: i32,
+}
+
+/// One decode step inside an iteration-level batch.
+pub struct DecodeStep {
+    pub token: i32,
+    pub kv: KvCache,
+    pub pos: i32,
+}
+
 /// The executor boundary the serving layer programs against: everything a
 /// router / checkpoint consumer needs from a model, and nothing about how
 /// (or whether) a forward pass actually runs. [`Runtime`] (PJRT) and
@@ -179,6 +226,35 @@ pub trait ModelExecutor: Send + Sync {
     fn decode(&self, token: i32, kv: KvCache, pos: i32) -> Result<(i32, KvCache)>;
     /// Replace the weights in place (checkpoint-engine integration).
     fn install_params(&mut self, flat: &[f32]) -> Result<()>;
+
+    /// Execute a batch of prefill chunks as one iteration-level step
+    /// (continuous batching). Returns per-step results in input order plus
+    /// the **modeled** batch latency in ns — the continuous-batching router
+    /// advances its deterministic virtual clock by that value. The default
+    /// implementation runs the steps sequentially and reports measured
+    /// wall time; [`SyntheticModel`] overrides it with the analytical
+    /// FLOPs model (one launch overhead for the whole batch).
+    fn prefill_batch(&self, steps: Vec<PrefillStep<'_>>) -> Result<(Vec<(i32, KvCache)>, u64)> {
+        let t0 = crate::util::clock::now_ns();
+        let mut out = Vec::with_capacity(steps.len());
+        for s in steps {
+            out.push(self.prefill(s.tokens, s.kv, s.offset)?);
+        }
+        Ok((out, crate::util::clock::now_ns() - t0))
+    }
+
+    /// Execute a batch of decode steps as one iteration-level step. Same
+    /// contract as [`ModelExecutor::prefill_batch`]; the synthetic override
+    /// additionally shares the weight pass across the batch (decode is
+    /// memory-bound — the continuous-batching throughput win).
+    fn decode_batch(&self, steps: Vec<DecodeStep>) -> Result<(Vec<(i32, KvCache)>, u64)> {
+        let t0 = crate::util::clock::now_ns();
+        let mut out = Vec::with_capacity(steps.len());
+        for s in steps {
+            out.push(self.decode(s.token, s.kv, s.pos)?);
+        }
+        Ok((out, crate::util::clock::now_ns() - t0))
+    }
 }
 
 /// Which model executor a run should use.

@@ -28,7 +28,7 @@
 //!   baseline recompute) remain meaningful at the fabric's 1:100 sim
 //!   scale.
 
-use super::{KvCache, ModelExecutor, ModelMeta};
+use super::{DecodeStep, KvCache, ModelExecutor, ModelMeta, PrefillStep};
 use crate::util::clock;
 use crate::util::prng::Pcg64;
 use crate::{Error, Result};
@@ -179,12 +179,64 @@ impl SyntheticModel {
         weights + attn_coef * sum_pos
     }
 
+    /// Modeled wall-clock for one kernel launch covering `flops` work:
+    /// fixed launch overhead plus compute time at the synthetic rate.
+    fn modeled_ns(&self, flops: f64) -> u64 {
+        (self.cfg.launch_overhead_ns as f64 + flops / self.cfg.gpu_flops.max(1.0) * 1e9) as u64
+    }
+
     fn pace(&self, flops: f64) {
         if !self.cfg.pace {
             return;
         }
-        let ns = self.cfg.launch_overhead_ns as f64 + flops / self.cfg.gpu_flops.max(1.0) * 1e9;
-        clock::sleep_ns(ns as u64);
+        clock::sleep_ns(self.modeled_ns(flops));
+    }
+
+    /// Prefill semantics without pacing; returns the FLOPs of the chunk so
+    /// batch callers can amortize one launch over many chunks.
+    fn prefill_unpaced(&self, tokens: &[i32], kv: KvCache, offset: i32) -> Result<(i32, KvCache, f64)> {
+        let t_pre = self.meta.t_pre;
+        if tokens.len() != t_pre {
+            return Err(Error::Config(format!(
+                "prefill needs {} tokens, got {}",
+                t_pre,
+                tokens.len()
+            )));
+        }
+        let offset = offset as usize;
+        if offset % t_pre != 0 || offset + t_pre > self.meta.t_max {
+            return Err(Error::Config(format!(
+                "prefill offset {offset} not a chunk boundary within t_max {}",
+                self.meta.t_max
+            )));
+        }
+        let mut raw = self.host_kv(kv)?;
+        // Chunk KV bytes = f(chunk tokens, chunk position, params) only —
+        // independent of surrounding KV content, so recompute == refetch.
+        let mut seed = self.params_digest.load(Ordering::Relaxed) ^ (offset as u64).rotate_left(32);
+        for t in tokens {
+            seed = fnv(seed, &t.to_le_bytes());
+        }
+        self.fill_rows(&mut raw, seed, offset, t_pre);
+        let next = self.predict(&raw, offset + t_pre, seed.rotate_left(7));
+        Ok((next, KvCache::Host(raw), self.flops(offset, t_pre)))
+    }
+
+    /// Decode semantics without pacing; returns the step's FLOPs.
+    fn decode_unpaced(&self, token: i32, kv: KvCache, pos: i32) -> Result<(i32, KvCache, f64)> {
+        let pos = pos as usize;
+        if pos >= self.meta.t_max {
+            return Err(Error::Config(format!(
+                "decode position {pos} past t_max {}",
+                self.meta.t_max
+            )));
+        }
+        let mut raw = self.host_kv(kv)?;
+        let mut seed = self.params_digest.load(Ordering::Relaxed) ^ (pos as u64).rotate_left(32);
+        seed = fnv(seed, &token.to_le_bytes());
+        self.fill_rows(&mut raw, seed, pos, 1);
+        let next = self.predict(&raw, pos + 1, seed.rotate_left(7));
+        Ok((next, KvCache::Host(raw), self.flops(pos, 1)))
     }
 }
 
@@ -213,49 +265,59 @@ impl ModelExecutor for SyntheticModel {
     }
 
     fn prefill(&self, tokens: &[i32], kv: KvCache, offset: i32) -> Result<(i32, KvCache)> {
-        let t_pre = self.meta.t_pre;
-        if tokens.len() != t_pre {
-            return Err(Error::Config(format!(
-                "prefill needs {} tokens, got {}",
-                t_pre,
-                tokens.len()
-            )));
-        }
-        let offset = offset as usize;
-        if offset % t_pre != 0 || offset + t_pre > self.meta.t_max {
-            return Err(Error::Config(format!(
-                "prefill offset {offset} not a chunk boundary within t_max {}",
-                self.meta.t_max
-            )));
-        }
-        let mut raw = self.host_kv(kv)?;
-        // Chunk KV bytes = f(chunk tokens, chunk position, params) only —
-        // independent of surrounding KV content, so recompute == refetch.
-        let mut seed = self.params_digest.load(Ordering::Relaxed) ^ (offset as u64).rotate_left(32);
-        for t in tokens {
-            seed = fnv(seed, &t.to_le_bytes());
-        }
-        self.fill_rows(&mut raw, seed, offset, t_pre);
-        self.pace(self.flops(offset, t_pre));
-        let next = self.predict(&raw, offset + t_pre, seed.rotate_left(7));
-        Ok((next, KvCache::Host(raw)))
+        let (next, kv, flops) = self.prefill_unpaced(tokens, kv, offset)?;
+        self.pace(flops);
+        Ok((next, kv))
     }
 
     fn decode(&self, token: i32, kv: KvCache, pos: i32) -> Result<(i32, KvCache)> {
-        let pos = pos as usize;
-        if pos >= self.meta.t_max {
-            return Err(Error::Config(format!(
-                "decode position {pos} past t_max {}",
-                self.meta.t_max
-            )));
+        let (next, kv, flops) = self.decode_unpaced(token, kv, pos)?;
+        self.pace(flops);
+        Ok((next, kv))
+    }
+
+    /// Batched prefill: one kernel launch amortized over every chunk in the
+    /// iteration (compute-bound, so FLOPs still sum across chunks).
+    fn prefill_batch(&self, steps: Vec<PrefillStep<'_>>) -> Result<(Vec<(i32, KvCache)>, u64)> {
+        if steps.is_empty() {
+            return Ok((Vec::new(), 0));
         }
-        let mut raw = self.host_kv(kv)?;
-        let mut seed = self.params_digest.load(Ordering::Relaxed) ^ (pos as u64).rotate_left(32);
-        seed = fnv(seed, &token.to_le_bytes());
-        self.fill_rows(&mut raw, seed, pos, 1);
-        self.pace(self.flops(pos, 1));
-        let next = self.predict(&raw, pos + 1, seed.rotate_left(7));
-        Ok((next, KvCache::Host(raw)))
+        let mut out = Vec::with_capacity(steps.len());
+        let mut flops = 0.0;
+        for s in steps {
+            let (next, kv, f) = self.prefill_unpaced(s.tokens, s.kv, s.offset)?;
+            flops += f;
+            out.push((next, kv));
+        }
+        let ns = self.modeled_ns(flops);
+        if self.cfg.pace {
+            clock::sleep_ns(ns);
+        }
+        Ok((out, ns))
+    }
+
+    /// Batched decode: one launch, one shared weight pass (`2·param_count`
+    /// MACs — decode is memory-bound on the weight stream, so batching
+    /// reads the weights once for the whole batch), plus each request's own
+    /// attention-context term. This is the continuous-batching throughput
+    /// win the router's virtual clock measures.
+    fn decode_batch(&self, steps: Vec<DecodeStep>) -> Result<(Vec<(i32, KvCache)>, u64)> {
+        if steps.is_empty() {
+            return Ok((Vec::new(), 0));
+        }
+        let weight_pass = 2.0 * self.meta.param_count as f64;
+        let mut out = Vec::with_capacity(steps.len());
+        let mut attn = 0.0;
+        for s in steps {
+            let (next, kv, f) = self.decode_unpaced(s.token, s.kv, s.pos)?;
+            attn += f - weight_pass;
+            out.push((next, kv));
+        }
+        let ns = self.modeled_ns(weight_pass + attn);
+        if self.cfg.pace {
+            clock::sleep_ns(ns);
+        }
+        Ok((out, ns))
     }
 
     fn install_params(&mut self, flat: &[f32]) -> Result<()> {
@@ -381,6 +443,57 @@ mod tests {
         assert!(m.prefill(&t, m.empty_kv().unwrap(), m.meta.t_max as i32).is_err());
         assert!(m.decode(1, m.empty_kv().unwrap(), m.meta.t_max as i32).is_err());
         assert!(m.kv_from_bytes(&[0u8; 8]).is_err());
+    }
+
+    #[test]
+    fn batch_matches_sequential_and_amortizes_weights() {
+        let m = SyntheticModel::unpaced();
+        let t_pre = m.meta.t_pre as i32;
+        // Two independent requests, one prefill chunk each: batch results
+        // must be byte-identical to the scalar path, in input order.
+        let seqs = [tokens(&m.meta, 6), tokens(&m.meta, 7)];
+        let seq: Vec<(i32, KvCache)> = seqs
+            .iter()
+            .map(|t| m.prefill(t, m.empty_kv().unwrap(), 0).unwrap())
+            .collect();
+        let steps = seqs
+            .iter()
+            .map(|t| PrefillStep {
+                tokens: t,
+                kv: m.empty_kv().unwrap(),
+                offset: 0,
+            })
+            .collect();
+        let (batch, pre_ns) = m.prefill_batch(steps).unwrap();
+        assert!(pre_ns > 0, "modeled ns must be returned even unpaced");
+        let mut decode_steps = Vec::new();
+        for ((ta, kva), (tb, kvb)) in seq.into_iter().zip(batch) {
+            assert_eq!(ta, tb);
+            assert_eq!(kva.to_bytes().unwrap(), kvb.to_bytes().unwrap());
+            // Scalar decode result to compare the batch path against.
+            let (da, _) = m.decode(ta, kva, t_pre).unwrap();
+            decode_steps.push((da, DecodeStep { token: tb, kv: kvb, pos: t_pre }));
+        }
+        // One single-step launch vs a 2-wide batch at the same positions:
+        // the weight pass is shared, so 2-wide costs less than 2 launches.
+        let (expected, steps): (Vec<i32>, Vec<DecodeStep>) = decode_steps.into_iter().unzip();
+        let one = DecodeStep {
+            token: expected[0],
+            kv: m.empty_kv().unwrap(),
+            pos: t_pre,
+        };
+        let (_, one_ns) = m.decode_batch(vec![one]).unwrap();
+        let (dec, wide_ns) = m.decode_batch(steps).unwrap();
+        for (d, e) in dec.iter().zip(&expected) {
+            assert_eq!(d.0, *e, "batched decode must match the scalar path");
+        }
+        assert!(
+            wide_ns < 2 * one_ns,
+            "2-wide decode {wide_ns} ns must beat 2 serial launches {} ns",
+            2 * one_ns
+        );
+        let (empty, zero_ns) = m.decode_batch(Vec::new()).unwrap();
+        assert!(empty.is_empty() && zero_ns == 0, "empty batch is free (no launch)");
     }
 
     #[test]

@@ -1,0 +1,809 @@
+//! Continuous-batching serving scheduler over a [`Fleet`] of engines.
+//!
+//! This is the millions-of-users path the ROADMAP names: instead of the
+//! turn-major FIFO loop in [`super::router`] (kept as the Table-2
+//! baseline), each engine runs an **iteration-level** scheduling lane:
+//!
+//! * **Arrival-driven queue with SLO admission.** Sessions arrive on a
+//!   virtual clock (Poisson workload from `client::build_sessions`); each
+//!   turn is a request in one of two classes — `Interactive` rides ahead
+//!   of `Batch` at admission (the request-level analogue of the engine's
+//!   Latency/Bulk `TransferClass` split), with a batch-slot reserve and
+//!   age-based promotion so bulk work cannot starve.
+//! * **Iteration-level batch formation.** Every iteration forms one
+//!   chunked-prefill batch (up to `prefill_chunks_per_iter` chunks, one
+//!   per running request) and one decode batch (every decoding request)
+//!   through the [`ModelExecutor::prefill_batch`]/[`decode_batch`] API.
+//!   The decode batch shares the weight pass — the continuous-batching
+//!   throughput win the synthetic FLOPs model prices in.
+//! * **Deterministic virtual time.** The lane's clock advances only by
+//!   the executor's *modeled* batch latency, a modeled fetch cost
+//!   (`fetch_ns_per_byte`), and jumps to the next arrival — so without
+//!   failure injection the admitted schedule ([`BatchReport::schedule_table`])
+//!   is a pure function of (sessions, models, config), while the KV bytes
+//!   still move through the real engine data plane.
+//! * **Prefix-cache-aware placement + session affinity.** Sessions are
+//!   placed by rendezvous (highest-random-weight) hashing of their prefix
+//!   chain hash over the engines serving their model, so sessions that
+//!   share a true prefix colocate on the same engine's `TieredKvCache`
+//!   and every later turn returns to it. On an engine failure only that
+//!   engine's sessions re-hash to survivors; everyone else keeps their
+//!   cache affinity.
+//! * **Multi-model fleets.** Engine `j` serves `models[j % models.len()]`;
+//!   several `ModelMeta` shapes share one fabric and one datapath.
+//!
+//! [`ModelExecutor::prefill_batch`]: crate::runtime::ModelExecutor::prefill_batch
+//! [`decode_batch`]: crate::runtime::ModelExecutor::decode_batch
+
+use super::client::{RequestClass, SessionScript};
+use super::kvcache::{hash_chunks, KvCacheConfig, TieredKvCache};
+use crate::cluster::Fleet;
+use crate::engine::TentEngine;
+use crate::runtime::{DecodeStep, KvCache, ModelExecutor, PrefillStep};
+use crate::segment::{Location, SegmentId};
+use crate::util::clock;
+use crate::util::hist::Histogram;
+use crate::util::TempPool;
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Which scheduler shape a run uses.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SchedulePolicy {
+    /// Turn-major baseline: strict arrival order, one request in flight
+    /// per engine, no class priority — the old router's serving shape
+    /// expressed in the same machinery (apples-to-apples comparison).
+    Fifo,
+    /// Iteration-level continuous batching with SLO admission.
+    Continuous,
+}
+
+/// Per-class TTFT service-level objectives (virtual ns).
+#[derive(Clone, Copy, Debug)]
+pub struct SloConfig {
+    pub interactive_ttft_ns: u64,
+    pub batch_ttft_ns: u64,
+}
+
+/// Kill one engine mid-run (resilience axis): engine `node` stops after
+/// completing `after_turns` requests and hands its queue, in-flight
+/// requests, and future turns to the surviving engines by re-running the
+/// rendezvous placement over the live set.
+#[derive(Clone, Copy, Debug)]
+pub struct FailurePlan {
+    pub node: u16,
+    pub after_turns: usize,
+}
+
+/// Continuous-batching scheduler knobs.
+#[derive(Clone, Debug)]
+pub struct BatchConfig {
+    pub schedule: SchedulePolicy,
+    /// Concurrent requests per engine (working KV slots). `Fifo` ignores
+    /// this and runs one.
+    pub max_running: usize,
+    /// Prefill chunks formed per iteration (chunked-prefill budget; one
+    /// chunk per running request per iteration).
+    pub prefill_chunks_per_iter: usize,
+    /// Slots an un-aged `Batch` request may never take (kept free for
+    /// interactive arrivals).
+    pub interactive_reserve: usize,
+    /// Queue age (virtual ns) after which a `Batch` request is promoted
+    /// past the reserve — the anti-starvation valve.
+    pub batch_admit_age_ns: u64,
+    /// Decode steps per turn (>= 1; the first defines TTFT). Clipped at
+    /// the model's context bound.
+    pub decode_tokens: usize,
+    /// Modeled virtual cost of moving one fetched KV byte into the
+    /// working segment (default 0.04 ns/B ≈ 25 GB/s effective).
+    pub fetch_ns_per_byte: f64,
+    /// Per-engine tiered-cache template; `node`/`disk_path` are
+    /// overridden per engine.
+    pub cache: KvCacheConfig,
+    pub slo: SloConfig,
+    pub fail: Option<FailurePlan>,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            schedule: SchedulePolicy::Continuous,
+            max_running: 16,
+            prefill_chunks_per_iter: 4,
+            interactive_reserve: 4,
+            batch_admit_age_ns: 50_000_000,
+            decode_tokens: 4,
+            fetch_ns_per_byte: 0.04,
+            cache: KvCacheConfig::default(),
+            slo: SloConfig {
+                interactive_ttft_ns: 50_000_000,
+                batch_ttft_ns: 500_000_000,
+            },
+            fail: None,
+        }
+    }
+}
+
+/// One completed turn's measurements (virtual-clock latencies).
+#[derive(Clone, Copy, Debug)]
+pub struct ReqMetrics {
+    pub session: usize,
+    pub turn: usize,
+    pub class: RequestClass,
+    pub model: usize,
+    pub engine: u16,
+    /// Admission order on the serving engine (per-engine counter) — the
+    /// SLO-overtaking evidence.
+    pub admit_seq: u64,
+    pub arrival_ns: u64,
+    pub admit_ns: u64,
+    pub input_tokens: usize,
+    pub cached_blocks: usize,
+    pub fetched_bytes: u64,
+    pub ttft_ns: u64,
+    pub tpot_ns: u64,
+    pub decode_steps: usize,
+}
+
+/// Fleet-wide serving report.
+pub struct BatchReport {
+    pub rows: Vec<ReqMetrics>,
+    /// Sessions that could not be placed (no live engine serves their
+    /// model).
+    pub dropped_sessions: usize,
+    /// Largest per-engine virtual clock at drain (virtual makespan).
+    pub makespan_ns: u64,
+    /// Real wall time of the run.
+    pub wall_ns: u64,
+}
+
+impl BatchReport {
+    /// The semantic admitted schedule: `(session, turn, engine,
+    /// admit_seq, cached_blocks, fetched_bytes)`, sorted. Two runs with
+    /// the same sessions/models/config and no failure injection must
+    /// produce identical tables — the determinism contract.
+    pub fn schedule_table(&self) -> Vec<(usize, usize, u16, u64, usize, u64)> {
+        let mut v: Vec<_> = self
+            .rows
+            .iter()
+            .map(|r| (r.session, r.turn, r.engine, r.admit_seq, r.cached_blocks, r.fetched_bytes))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn input_tokens_total(&self) -> usize {
+        self.rows.iter().map(|r| r.input_tokens).sum()
+    }
+
+    /// Input tokens per *virtual* second of makespan — the throughput the
+    /// FIFO-vs-continuous gate compares.
+    pub fn input_throughput_tok_s(&self) -> f64 {
+        self.input_tokens_total() as f64 / (self.makespan_ns.max(1) as f64 / 1e9)
+    }
+
+    /// TTFT distribution, optionally restricted to one class, in the
+    /// shared log-bucketed histogram (same quantile definition as every
+    /// other bench gate).
+    pub fn ttft_hist(&self, class: Option<RequestClass>) -> Histogram {
+        let h = Histogram::new();
+        for r in &self.rows {
+            let keep = match class {
+                None => true,
+                Some(c) => c == r.class,
+            };
+            if keep {
+                h.record(r.ttft_ns);
+            }
+        }
+        h
+    }
+
+    pub fn p90_ttft_s(&self) -> f64 {
+        self.ttft_hist(None).p90() as f64 / 1e9
+    }
+
+    pub fn p99_ttft_s(&self, class: RequestClass) -> f64 {
+        self.ttft_hist(Some(class)).p99() as f64 / 1e9
+    }
+
+    /// Fraction of completed `class` turns whose TTFT met its SLO bound
+    /// (1.0 when the class is absent).
+    pub fn slo_attainment(&self, class: RequestClass, slo: &SloConfig) -> f64 {
+        let bound = match class {
+            RequestClass::Interactive => slo.interactive_ttft_ns,
+            RequestClass::Batch => slo.batch_ttft_ns,
+        };
+        let (mut total, mut ok) = (0u64, 0u64);
+        for r in self.rows.iter().filter(|r| r.class == class) {
+            total += 1;
+            if r.ttft_ns <= bound {
+                ok += 1;
+            }
+        }
+        if total == 0 {
+            1.0
+        } else {
+            ok as f64 / total as f64
+        }
+    }
+
+    /// Sorted, deduplicated engines that served `session`'s turns — the
+    /// affinity evidence (one engine absent failures; at most two when a
+    /// single engine dies mid-run).
+    pub fn engines_of(&self, session: usize) -> Vec<u16> {
+        let mut v: Vec<u16> = self
+            .rows
+            .iter()
+            .filter(|r| r.session == session)
+            .map(|r| r.engine)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+/// A turn waiting to be admitted on some engine.
+#[derive(Clone, Copy, Debug)]
+struct Req {
+    session: usize,
+    turn: usize,
+    arrival_vns: u64,
+}
+
+/// A turn admitted into an engine's running set.
+struct Running {
+    session: usize,
+    turn: usize,
+    arrival_vns: u64,
+    admit_seq: u64,
+    admit_vns: u64,
+    slot: usize,
+    kv: Option<KvCache>,
+    hashes: Vec<u64>,
+    next_chunk: usize,
+    chunks_total: usize,
+    next_token: i32,
+    decode_done: usize,
+    decode_target: usize,
+    cached_blocks: usize,
+    fetched_bytes: u64,
+    ttft_vns: u64,
+    tpot_total: u64,
+}
+
+/// splitmix64 finalizer — the rendezvous score mixer.
+fn mix(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Highest-random-weight placement of a session (by its prefix key) over
+/// the live engines serving its model. `None` when no such engine is
+/// alive.
+fn place(key: u64, live: &[AtomicBool], models_len: usize, model: usize) -> Option<u16> {
+    let mut best: Option<(u64, u16)> = None;
+    for (j, alive) in live.iter().enumerate() {
+        if j % models_len != model || !alive.load(Ordering::Acquire) {
+            continue;
+        }
+        let score = mix(key ^ (j as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let better = match best {
+            None => true,
+            Some((b, _)) => score > b,
+        };
+        if better {
+            best = Some((score, j as u16));
+        }
+    }
+    best.map(|(_, j)| j)
+}
+
+/// Cross-lane coordination state.
+struct Shared {
+    live: Vec<AtomicBool>,
+    injected: Vec<Mutex<Vec<Req>>>,
+    remaining: AtomicUsize,
+}
+
+/// Serve `sessions` across the fleet with one scheduling lane per engine.
+/// Engine `j` serves `models[j % models.len()]`; each lane owns a
+/// [`TieredKvCache`] on its node plus `max_running` working KV segments.
+pub fn serve_fleet(
+    fleet: &Fleet,
+    models: &[Arc<dyn ModelExecutor>],
+    sessions: &[SessionScript],
+    cfg: &BatchConfig,
+) -> Result<BatchReport> {
+    if models.is_empty() {
+        return Err(Error::Config("serve_fleet needs at least one model".into()));
+    }
+    if cfg.decode_tokens == 0 || cfg.max_running == 0 {
+        return Err(Error::Config("decode_tokens and max_running must be >= 1".into()));
+    }
+    if cfg.interactive_reserve >= cfg.max_running && cfg.schedule == SchedulePolicy::Continuous {
+        return Err(Error::Config(format!(
+            "interactive_reserve {} leaves no slot for batch admission (max_running {})",
+            cfg.interactive_reserve, cfg.max_running
+        )));
+    }
+    let n = fleet.nodes();
+    // Placement keys: the chain hash of the first non-system chunk (when
+    // one exists), so sessions sharing only the system prompt spread while
+    // true prefix-sharers colocate. Validate shapes up front.
+    let mut keys = Vec::with_capacity(sessions.len());
+    for (i, s) in sessions.iter().enumerate() {
+        if s.session != i {
+            return Err(Error::Config(format!(
+                "session ids must be dense: index {i} holds session {}",
+                s.session
+            )));
+        }
+        if s.model >= models.len() {
+            return Err(Error::Config(format!(
+                "session {i} targets model {} of {}",
+                s.model,
+                models.len()
+            )));
+        }
+        let meta = models[s.model].meta();
+        let max_turns = (meta.t_max / meta.t_pre).saturating_sub(1);
+        if s.chunks.is_empty() || s.chunks.len() > max_turns {
+            return Err(Error::Config(format!(
+                "session {i} has {} turns; model {} allows 1..={max_turns}",
+                s.chunks.len(),
+                s.model
+            )));
+        }
+        if s.chunks.iter().any(|c| c.len() != meta.t_pre) {
+            return Err(Error::Config(format!(
+                "session {i} chunk size mismatch (model {} t_pre {})",
+                s.model, meta.t_pre
+            )));
+        }
+        let hashes = hash_chunks(&s.chunks);
+        keys.push(hashes[hashes.len().min(2) - 1]);
+    }
+
+    let shared = Shared {
+        live: (0..n).map(|_| AtomicBool::new(true)).collect(),
+        injected: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
+        remaining: AtomicUsize::new(0),
+    };
+    let mut initial: Vec<Vec<Req>> = (0..n).map(|_| Vec::new()).collect();
+    let mut dropped = 0usize;
+    let mut total_turns = 0usize;
+    for s in sessions {
+        match place(keys[s.session], &shared.live, models.len(), s.model) {
+            Some(j) => {
+                initial[j as usize].push(Req {
+                    session: s.session,
+                    turn: 0,
+                    arrival_vns: s.arrival_ns,
+                });
+                total_turns += s.chunks.len();
+            }
+            None => dropped += 1,
+        }
+    }
+    shared.remaining.store(total_turns, Ordering::Release);
+
+    // Per-engine cache + working slots, built up front so config errors
+    // surface before any lane spawns.
+    let pools: Vec<TempPool> = (0..n).map(|_| TempPool::new("cb_kv")).collect();
+    let mut caches: Vec<TieredKvCache> = Vec::with_capacity(n);
+    let mut working_all: Vec<Vec<SegmentId>> = Vec::with_capacity(n);
+    let slots_per_engine = match cfg.schedule {
+        SchedulePolicy::Fifo => 1,
+        SchedulePolicy::Continuous => cfg.max_running,
+    };
+    for (j, pool) in pools.iter().enumerate() {
+        let model = &models[j % models.len()];
+        let meta = model.meta();
+        let mut ccfg = cfg.cache.clone();
+        ccfg.node = j as u16;
+        ccfg.disk_path = pool.path();
+        let engine = fleet.engine(j as u16);
+        caches.push(TieredKvCache::new(engine, meta, ccfg.clone())?);
+        working_all.push(
+            (0..slots_per_engine)
+                .map(|s| {
+                    engine.register_segment(
+                        Location::device(j as u16, (s % ccfg.gpus as usize) as u8),
+                        meta.kv_bytes,
+                    )
+                })
+                .collect::<Result<Vec<_>>>()?,
+        );
+    }
+
+    let first_err: Mutex<Option<Error>> = Mutex::new(None);
+    let start = clock::now_ns();
+    let mut lane_out: Vec<(Vec<ReqMetrics>, u64)> = Vec::with_capacity(n);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|j| {
+                let queue = std::mem::take(&mut initial[j]);
+                let model = &models[j % models.len()];
+                let cache = &caches[j];
+                let working = &working_all[j];
+                let keys = &keys;
+                let shared = &shared;
+                let first_err = &first_err;
+                let engine = fleet.engine(j as u16);
+                scope.spawn(move || {
+                    match run_lane(
+                        j as u16,
+                        engine,
+                        model.as_ref(),
+                        cache,
+                        working,
+                        sessions,
+                        keys,
+                        queue,
+                        cfg,
+                        models.len(),
+                        shared,
+                    ) {
+                        Ok(out) => out,
+                        Err(e) => {
+                            first_err.lock().unwrap().get_or_insert(e);
+                            // Unblock every other lane.
+                            shared.remaining.store(0, Ordering::Release);
+                            (Vec::new(), 0)
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            lane_out.push(h.join().expect("serving lane panicked"));
+        }
+    });
+    if let Some(e) = first_err.into_inner().unwrap() {
+        return Err(e);
+    }
+
+    let mut rows = Vec::new();
+    let mut makespan = 0u64;
+    for (r, vend) in lane_out {
+        rows.extend(r);
+        makespan = makespan.max(vend);
+    }
+    // Sessions orphaned by a failure with no surviving engine for their
+    // model also count as dropped.
+    let completed_sessions: std::collections::HashSet<usize> =
+        rows.iter().map(|r| r.session).collect();
+    let placed = sessions.len() - dropped;
+    dropped += placed.saturating_sub(completed_sessions.len());
+    Ok(BatchReport {
+        rows,
+        dropped_sessions: dropped,
+        makespan_ns: makespan,
+        wall_ns: clock::now_ns().saturating_sub(start),
+    })
+}
+
+/// One engine's scheduling lane. Returns its completed-turn rows and its
+/// final virtual clock.
+#[allow(clippy::too_many_arguments)]
+fn run_lane(
+    j: u16,
+    engine: &Arc<TentEngine>,
+    model: &dyn ModelExecutor,
+    cache: &TieredKvCache,
+    working: &[SegmentId],
+    sessions: &[SessionScript],
+    keys: &[u64],
+    mut queue: Vec<Req>,
+    cfg: &BatchConfig,
+    models_len: usize,
+    shared: &Shared,
+) -> Result<(Vec<ReqMetrics>, u64)> {
+    let meta = model.meta();
+    let t_pre = meta.t_pre;
+    let mut running: Vec<Running> = Vec::new();
+    let mut free_slots: Vec<usize> = (0..working.len()).rev().collect();
+    let mut rows: Vec<ReqMetrics> = Vec::new();
+    let mut vnow: u64 = 0;
+    let mut admit_seq: u64 = 0;
+    let mut completed_turns: usize = 0;
+    queue.sort_by_key(|r| (r.arrival_vns, r.session, r.turn));
+
+    while shared.remaining.load(Ordering::Acquire) > 0 {
+        // Failure handoffs from a dying peer.
+        {
+            let mut inj = shared.injected[j as usize].lock().unwrap();
+            if !inj.is_empty() {
+                queue.extend(inj.drain(..));
+                drop(inj);
+                queue.sort_by_key(|r| (r.arrival_vns, r.session, r.turn));
+            }
+        }
+        if running.is_empty() {
+            match queue.iter().map(|r| r.arrival_vns).min() {
+                // Idle gap: jump the virtual clock to the next arrival.
+                Some(a) if a > vnow => vnow = a,
+                Some(_) => {}
+                None => {
+                    // Nothing owned — park until the fleet drains or a
+                    // failure hands work over.
+                    clock::sleep_ns(100_000);
+                    continue;
+                }
+            }
+        }
+
+        // ---- admission ----
+        let mut order: Vec<usize> =
+            (0..queue.len()).filter(|&i| queue[i].arrival_vns <= vnow).collect();
+        match cfg.schedule {
+            SchedulePolicy::Fifo => {
+                order.sort_by_key(|&i| (queue[i].arrival_vns, queue[i].session, queue[i].turn));
+            }
+            SchedulePolicy::Continuous => {
+                order.sort_by_key(|&i| {
+                    let r = &queue[i];
+                    let class = sessions[r.session].class;
+                    let aged = class == RequestClass::Batch
+                        && vnow.saturating_sub(r.arrival_vns) >= cfg.batch_admit_age_ns;
+                    let rank = if class == RequestClass::Interactive || aged {
+                        0u8
+                    } else {
+                        1
+                    };
+                    (rank, r.arrival_vns, r.session, r.turn)
+                });
+            }
+        }
+        let mut batch_running = running
+            .iter()
+            .filter(|r| sessions[r.session].class == RequestClass::Batch)
+            .count();
+        let mut take: Vec<usize> = Vec::new();
+        for &i in &order {
+            if free_slots.len() <= take.len() {
+                break;
+            }
+            let r = &queue[i];
+            let class = sessions[r.session].class;
+            if cfg.schedule == SchedulePolicy::Continuous && class == RequestClass::Batch {
+                let aged = vnow.saturating_sub(r.arrival_vns) >= cfg.batch_admit_age_ns;
+                let cap = cfg.max_running.saturating_sub(cfg.interactive_reserve);
+                if !aged && batch_running >= cap {
+                    continue;
+                }
+                batch_running += 1;
+            }
+            take.push(i);
+        }
+        take.sort_unstable();
+        for &i in take.iter().rev() {
+            let r = queue.swap_remove(i);
+            let slot = free_slots.pop().expect("slot reserved above");
+            let s = &sessions[r.session];
+            let chunks_total = r.turn + 1;
+            let hashes = hash_chunks(&s.chunks[..chunks_total]);
+            let reusable = &hashes[..r.turn];
+            let hit = cache.lookup_prefix(reusable);
+            let fetched = cache.fetch_prefix(engine, reusable, hit, working[slot])?;
+            let kv = if hit > 0 {
+                model.kv_from_bytes(&cache.materialize_prefix_bytes(engine, working[slot], hit)?)?
+            } else {
+                model.empty_kv()?
+            };
+            // The fetch rides the lane's iteration timeline at a modeled
+            // rate (the real transfer already moved the bytes).
+            vnow += (fetched as f64 * cfg.fetch_ns_per_byte) as u64;
+            let pos_after = chunks_total * t_pre;
+            running.push(Running {
+                session: r.session,
+                turn: r.turn,
+                arrival_vns: r.arrival_vns,
+                admit_seq,
+                admit_vns: vnow,
+                slot,
+                kv: Some(kv),
+                hashes,
+                next_chunk: hit,
+                chunks_total,
+                next_token: 0,
+                decode_done: 0,
+                decode_target: cfg.decode_tokens.min(meta.t_max - pos_after),
+                cached_blocks: hit,
+                fetched_bytes: fetched,
+                ttft_vns: 0,
+                tpot_total: 0,
+            });
+            admit_seq += 1;
+        }
+
+        // ---- prefill batch (chunked, one chunk per request per iteration) ----
+        let budget = cfg.prefill_chunks_per_iter.max(1);
+        let mut pwho: Vec<usize> = Vec::new();
+        let mut psteps: Vec<PrefillStep<'_>> = Vec::new();
+        for (i, r) in running.iter_mut().enumerate() {
+            if r.next_chunk < r.chunks_total && psteps.len() < budget {
+                psteps.push(PrefillStep {
+                    tokens: &sessions[r.session].chunks[r.next_chunk],
+                    kv: r.kv.take().expect("kv held between iterations"),
+                    offset: (r.next_chunk * t_pre) as i32,
+                });
+                pwho.push(i);
+            }
+        }
+        if !psteps.is_empty() {
+            let (res, ns) = model.prefill_batch(psteps)?;
+            vnow += ns;
+            for (&i, (tok, kv)) in pwho.iter().zip(res) {
+                let r = &mut running[i];
+                r.next_token = tok;
+                r.kv = Some(kv);
+                r.next_chunk += 1;
+            }
+        }
+
+        // ---- decode batch (every decoding request) ----
+        let mut dwho: Vec<usize> = Vec::new();
+        let mut dsteps: Vec<DecodeStep> = Vec::new();
+        for (i, r) in running.iter_mut().enumerate() {
+            if r.next_chunk == r.chunks_total && r.decode_done < r.decode_target {
+                dsteps.push(DecodeStep {
+                    token: r.next_token,
+                    kv: r.kv.take().expect("kv held between iterations"),
+                    pos: (r.chunks_total * t_pre + r.decode_done) as i32,
+                });
+                dwho.push(i);
+            }
+        }
+        if !dsteps.is_empty() {
+            let (res, ns) = model.decode_batch(dsteps)?;
+            vnow += ns;
+            for (&i, (tok, kv)) in dwho.iter().zip(res) {
+                let r = &mut running[i];
+                r.next_token = tok;
+                r.kv = Some(kv);
+                r.decode_done += 1;
+                if r.decode_done == 1 {
+                    r.ttft_vns = vnow.saturating_sub(r.arrival_vns);
+                } else {
+                    // Every request in the batch waited for the whole
+                    // iteration — the batch latency is its step latency.
+                    r.tpot_total += ns;
+                }
+            }
+        }
+
+        // ---- completions: write back, record, schedule the next turn ----
+        let done: Vec<usize> = (0..running.len())
+            .filter(|&i| {
+                running[i].next_chunk == running[i].chunks_total
+                    && running[i].decode_done >= running[i].decode_target
+            })
+            .collect();
+        for &i in done.iter().rev() {
+            let r = running.swap_remove(i);
+            let kv = r.kv.expect("kv held between iterations");
+            let seg = engine.segment(working[r.slot])?;
+            match kv.as_host_bytes() {
+                Some(raw) => seg.write_at(0, raw)?,
+                None => seg.write_at(0, &kv.to_bytes()?)?,
+            }
+            for (k, h) in r.hashes.iter().enumerate().skip(r.cached_blocks) {
+                let home = (*h % cache.config().gpus as u64) as u8;
+                cache.store_block(engine, *h, home, working[r.slot], k)?;
+            }
+            free_slots.push(r.slot);
+            rows.push(ReqMetrics {
+                session: r.session,
+                turn: r.turn,
+                class: sessions[r.session].class,
+                model: sessions[r.session].model,
+                engine: j,
+                admit_seq: r.admit_seq,
+                arrival_ns: r.arrival_vns,
+                admit_ns: r.admit_vns,
+                input_tokens: t_pre,
+                cached_blocks: r.cached_blocks,
+                fetched_bytes: r.fetched_bytes,
+                ttft_ns: r.ttft_vns,
+                tpot_ns: if r.decode_done > 1 {
+                    r.tpot_total / (r.decode_done as u64 - 1)
+                } else {
+                    0
+                },
+                decode_steps: r.decode_done,
+            });
+            completed_turns += 1;
+            shared.remaining.fetch_sub(1, Ordering::AcqRel);
+            if r.turn + 1 < sessions[r.session].chunks.len() {
+                // Session affinity: the next turn returns to this lane.
+                queue.push(Req {
+                    session: r.session,
+                    turn: r.turn + 1,
+                    arrival_vns: vnow + sessions[r.session].think_ns,
+                });
+            }
+        }
+
+        // ---- scheduled failure: hand everything to the survivors ----
+        if let Some(f) = cfg.fail {
+            if f.node == j
+                && completed_turns >= f.after_turns
+                && shared.live[j as usize].load(Ordering::Acquire)
+            {
+                shared.live[j as usize].store(false, Ordering::Release);
+                let mut orphans: Vec<Req> = queue.drain(..).collect();
+                for r in running.drain(..) {
+                    // In-flight turns restart from the target's cache.
+                    orphans.push(Req {
+                        session: r.session,
+                        turn: r.turn,
+                        arrival_vns: r.arrival_vns,
+                    });
+                }
+                for o in orphans {
+                    let m = sessions[o.session].model;
+                    match place(keys[o.session], &shared.live, models_len, m) {
+                        Some(t) => shared.injected[t as usize].lock().unwrap().push(o),
+                        None => {
+                            // No surviving engine serves this model: the
+                            // session's outstanding turns leave the run.
+                            let rest = sessions[o.session].chunks.len() - o.turn;
+                            shared.remaining.fetch_sub(rest, Ordering::AcqRel);
+                        }
+                    }
+                }
+                break;
+            }
+        }
+    }
+    Ok((rows, vnow))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rendezvous_is_stable_under_failure() {
+        let live: Vec<AtomicBool> = (0..4).map(|_| AtomicBool::new(true)).collect();
+        let keys: Vec<u64> = (0..64).map(|i| mix(i * 0x9E37)).collect();
+        let before: Vec<u16> = keys.iter().map(|&k| place(k, &live, 1, 0).unwrap()).collect();
+        // Every engine gets some share.
+        for j in 0..4u16 {
+            assert!(before.iter().any(|&p| p == j), "engine {j} got nothing");
+        }
+        // Kill engine 2: only its sessions move.
+        live[2].store(false, Ordering::Release);
+        for (i, &k) in keys.iter().enumerate() {
+            let after = place(k, &live, 1, 0).unwrap();
+            if before[i] != 2 {
+                assert_eq!(after, before[i], "session {i} moved without losing its engine");
+            } else {
+                assert_ne!(after, 2);
+            }
+        }
+    }
+
+    #[test]
+    fn rendezvous_respects_model_assignment() {
+        let live: Vec<AtomicBool> = (0..4).map(|_| AtomicBool::new(true)).collect();
+        for model in 0..2 {
+            for k in 0..32u64 {
+                let j = place(mix(k), &live, 2, model).unwrap();
+                assert_eq!(j as usize % 2, model);
+            }
+        }
+        // No live engine for the model → None.
+        live[1].store(false, Ordering::Release);
+        live[3].store(false, Ordering::Release);
+        assert_eq!(place(1, &live, 2, 1), None);
+        assert!(place(1, &live, 2, 0).is_some());
+    }
+}

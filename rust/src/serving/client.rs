@@ -72,9 +72,167 @@ pub fn build_conversations(
         .collect()
 }
 
+/// Request-level SLO class — `TransferClass` semantics lifted to the
+/// serving layer: `Interactive` rides ahead of `Batch` at admission the
+/// way Latency-class slices ride ahead of Bulk on a rail.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum RequestClass {
+    Interactive,
+    Batch,
+}
+
+impl RequestClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            RequestClass::Interactive => "interactive",
+            RequestClass::Batch => "batch",
+        }
+    }
+}
+
+/// One scripted session for the continuous-batching scheduler
+/// (`serving::batching::serve_fleet`): an arrival-driven multi-turn
+/// conversation with an SLO class and a target model shape.
+#[derive(Clone, Debug)]
+pub struct SessionScript {
+    pub session: usize,
+    pub class: RequestClass,
+    /// Index into the fleet's model list (multi-model serving).
+    pub model: usize,
+    /// `turns` chunks of exactly the target model's `t_pre` tokens.
+    pub chunks: Vec<Vec<i32>>,
+    /// Virtual arrival time of turn 0 (ns since run start).
+    pub arrival_ns: u64,
+    /// Virtual think time between a turn finishing and the next arriving.
+    pub think_ns: u64,
+}
+
+/// Knobs for [`build_sessions`].
+#[derive(Clone, Debug)]
+pub struct SessionWorkload {
+    pub sessions: usize,
+    pub turns: usize,
+    /// Fraction of sessions in the `Interactive` class.
+    pub interactive_share: f64,
+    /// Mean virtual inter-arrival between session starts (Poisson process).
+    pub mean_interarrival_ns: u64,
+    pub think_ns: u64,
+    pub shared_system_prompt: bool,
+    pub seed: u64,
+}
+
+impl Default for SessionWorkload {
+    fn default() -> Self {
+        SessionWorkload {
+            sessions: 64,
+            turns: 3,
+            interactive_share: 0.5,
+            mean_interarrival_ns: 200_000,
+            think_ns: 1_000_000,
+            shared_system_prompt: true,
+            seed: 7,
+        }
+    }
+}
+
+/// Build the deterministic session scripts for a fleet serving `metas`
+/// model shapes (session `s` targets model `s % metas.len()`). Arrivals
+/// are a Poisson process over the virtual clock; every draw comes from
+/// the seeded PRNG, so equal seeds give byte-identical workloads.
+pub fn build_sessions(
+    metas: &[&crate::runtime::ModelMeta],
+    w: &SessionWorkload,
+) -> Vec<SessionScript> {
+    assert!(!metas.is_empty(), "at least one model shape");
+    let mut rng = Pcg64::new(w.seed, 0x5E55);
+    // One shared system-prompt chunk per model shape.
+    let systems: Vec<Vec<i32>> = metas
+        .iter()
+        .map(|m| (0..m.t_pre).map(|_| rng.gen_range(m.vocab as u64) as i32).collect())
+        .collect();
+    let mut arrival = 0u64;
+    (0..w.sessions)
+        .map(|s| {
+            let model = s % metas.len();
+            let meta = metas[model];
+            arrival += rng.gen_exp(w.mean_interarrival_ns as f64).max(0.0) as u64;
+            let class = if rng.gen_bool(w.interactive_share) {
+                RequestClass::Interactive
+            } else {
+                RequestClass::Batch
+            };
+            let mut chunks = Vec::with_capacity(w.turns);
+            for t in 0..w.turns {
+                if t == 0 && w.shared_system_prompt {
+                    chunks.push(systems[model].clone());
+                } else {
+                    let mut rng_s = Pcg64::new(w.seed ^ 0xBEEF5, (s as u64) * 4096 + t as u64);
+                    chunks.push(
+                        (0..meta.t_pre)
+                            .map(|_| rng_s.gen_range(meta.vocab as u64) as i32)
+                            .collect(),
+                    );
+                }
+            }
+            SessionScript {
+                session: s,
+                class,
+                model,
+                chunks,
+                arrival_ns: arrival,
+                think_ns: w.think_ns,
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn sessions_deterministic_and_well_shaped() {
+        let meta = crate::runtime::ModelMeta::custom(2, 2, 8, 32, 4, 512, 10_000);
+        let w = SessionWorkload {
+            sessions: 32,
+            turns: 2,
+            ..Default::default()
+        };
+        let a = build_sessions(&[&meta], &w);
+        let b = build_sessions(&[&meta], &w);
+        assert_eq!(a.len(), 32);
+        let mut last_arrival = 0;
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.chunks, y.chunks);
+            assert_eq!(x.class, y.class);
+            assert_eq!(x.arrival_ns, y.arrival_ns);
+            assert_eq!(x.chunks.len(), 2);
+            assert!(x.chunks.iter().all(|c| c.len() == 4));
+            assert!(x.arrival_ns >= last_arrival, "arrivals monotone");
+            last_arrival = x.arrival_ns;
+            // Shared system prompt across sessions of the same model.
+            assert_eq!(x.chunks[0], a[0].chunks[0]);
+        }
+        assert!(a.iter().any(|s| s.class == RequestClass::Interactive));
+        assert!(a.iter().any(|s| s.class == RequestClass::Batch));
+    }
+
+    #[test]
+    fn sessions_round_robin_models() {
+        let m0 = crate::runtime::ModelMeta::custom(2, 2, 8, 32, 4, 512, 10_000);
+        let m1 = crate::runtime::ModelMeta::custom(1, 2, 8, 16, 8, 256, 5_000);
+        let w = SessionWorkload {
+            sessions: 6,
+            turns: 1,
+            ..Default::default()
+        };
+        let sess = build_sessions(&[&m0, &m1], &w);
+        for s in &sess {
+            assert_eq!(s.model, s.session % 2);
+            let t_pre = if s.model == 0 { 4 } else { 8 };
+            assert!(s.chunks.iter().all(|c| c.len() == t_pre));
+        }
+    }
 
     #[test]
     fn deterministic_and_well_shaped() {

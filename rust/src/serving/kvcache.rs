@@ -135,6 +135,8 @@ pub struct TieredKvCache {
     plane_chunk_bytes: u64,
     /// Total bytes of one block (= planes · plane_chunk_bytes).
     block_bytes: u64,
+    /// Full working-KV byte size (`ModelMeta::kv_bytes`).
+    kv_bytes: u64,
     tokens_per_block: usize,
     state: Mutex<CacheState>,
     clock: AtomicU64,
@@ -185,6 +187,7 @@ impl TieredKvCache {
             stride_bases,
             plane_chunk_bytes,
             block_bytes,
+            kv_bytes: meta.kv_bytes,
             tokens_per_block,
             state: Mutex::new(CacheState {
                 gpu_pools,
@@ -309,6 +312,33 @@ impl TieredKvCache {
         self.stats.fetched_blocks.fetch_add(n as u64, Ordering::Relaxed);
         self.stats.fetched_bytes.fetch_add(bytes, Ordering::Relaxed);
         Ok(bytes)
+    }
+
+    /// Materialize the first `hit` cached blocks of the shared working
+    /// segment into a full-size KV byte buffer whose tail (every position
+    /// `>= hit` blocks, in every plane) is **zero**. The working segment is
+    /// shared between clients on a GPU slot, so reading it whole would copy
+    /// whichever bytes the previous request left beyond the fetched prefix
+    /// — stale KV that the subsequent prefill of *this* request's suffix
+    /// never overwrites row-for-row. Only the `hit · t_pre` leading rows of
+    /// each strided plane are read.
+    pub fn materialize_prefix_bytes(
+        &self,
+        engine: &TentEngine,
+        working: SegmentId,
+        hit: usize,
+    ) -> Result<Vec<u8>> {
+        let mut raw = vec![0u8; self.kv_bytes as usize];
+        if hit == 0 {
+            return Ok(raw);
+        }
+        let span = (hit as u64 * self.plane_chunk_bytes) as usize;
+        let seg = engine.segment(working)?;
+        for &base in &self.stride_bases {
+            let start = base as usize;
+            seg.read_at(base, &mut raw[start..start + span])?;
+        }
+        Ok(raw)
     }
 
     /// Store block `k` of the working segment under `hash`, homed on

@@ -2,8 +2,11 @@
 //!
 //! * [`kvcache`] — HiCache-style multi-tier KV block store (GPU pools, host
 //!   pool, SSD pool) whose tier movement rides the engine.
-//! * [`router`] — the multi-turn serving loop producing Table 2's metrics.
-//! * [`client`] — deterministic conversation workload generator.
+//! * [`router`] — the turn-major serving loop producing Table 2's metrics
+//!   (kept as the FIFO baseline).
+//! * [`batching`] — continuous-batching scheduler with SLO admission,
+//!   prefix-aware placement, and session affinity over a fleet of engines.
+//! * [`client`] — deterministic conversation + session workload generators.
 //! * [`checkpoint`] — Moonshot-Checkpoint-Engine analogue: pipelined
 //!   weight-update broadcast (Table 3).
 //!
@@ -11,12 +14,19 @@
 //! the whole stack runs in tier-1 on the synthetic executor and switches to
 //! PJRT (`--model pjrt`) with no caller changes.
 
+pub mod batching;
 pub mod checkpoint;
 pub mod client;
 pub mod kvcache;
 pub mod router;
 
+pub use batching::{
+    serve_fleet, BatchConfig, BatchReport, FailurePlan, ReqMetrics, SchedulePolicy, SloConfig,
+};
 pub use checkpoint::{CheckpointConfig, CheckpointEngine, UpdateReport};
-pub use client::{build_conversations, build_for, Conversation};
+pub use client::{
+    build_conversations, build_for, build_sessions, Conversation, RequestClass, SessionScript,
+    SessionWorkload,
+};
 pub use kvcache::{KvCacheConfig, TieredKvCache};
 pub use router::{run_serving, ServeConfig, ServeMode, ServeReport};

@@ -76,6 +76,9 @@ pub struct TurnMetrics {
     pub ttft_ns: u64,
     /// Mean per-output-token latency over decode steps 2..n (0 if n == 1).
     pub tpot_ns: u64,
+    /// Decode steps actually executed this turn (>= 1; fewer than
+    /// `ServeConfig::decode_tokens` when the context hits `t_max`).
+    pub decode_steps: usize,
     pub total_ns: u64,
 }
 
@@ -112,13 +115,27 @@ impl ServeReport {
         }
         self.turns.iter().map(|t| t.ttft_ns as f64).sum::<f64>() / self.turns.len() as f64 / 1e9
     }
+    /// TTFT distribution over all served turns in the shared log-bucketed
+    /// histogram — the *same* quantile definition the bench PASS/FAIL gates
+    /// use, so report percentiles and gate thresholds are comparable.
+    pub fn ttft_hist(&self) -> crate::util::hist::Histogram {
+        let h = crate::util::hist::Histogram::new();
+        for t in &self.turns {
+            h.record(t.ttft_ns);
+        }
+        h
+    }
     pub fn p90_ttft_s(&self) -> f64 {
         if self.turns.is_empty() {
             return 0.0;
         }
-        let mut v: Vec<u64> = self.turns.iter().map(|t| t.ttft_ns).collect();
-        v.sort_unstable();
-        v[(v.len() - 1) * 9 / 10] as f64 / 1e9
+        self.ttft_hist().p90() as f64 / 1e9
+    }
+    pub fn p99_ttft_s(&self) -> f64 {
+        if self.turns.is_empty() {
+            return 0.0;
+        }
+        self.ttft_hist().p99() as f64 / 1e9
     }
     /// Average TTFT of a specific round (1-based, like the paper's R1/R5/R10).
     pub fn round_avg_ttft_s(&self, round: usize) -> f64 {
@@ -227,11 +244,12 @@ fn serve_turn(
             // Fetch hit blocks into the working segment via the engine.
             fetched_bytes = cache.fetch_prefix(engine, reusable, hit, wseg)?;
             let kv = if hit > 0 {
-                // Materialize the working segment into the executor's KV.
-                let seg = engine.segment(wseg)?;
-                let mut raw = vec![0u8; meta.kv_bytes as usize];
-                seg.read_at(0, &mut raw)?;
-                model.kv_from_bytes(&raw)?
+                // Materialize only the fetched prefix into the executor's
+                // KV; the tail beyond `hit` blocks is zeroed. The working
+                // segment is shared across clients on this GPU slot, so a
+                // whole-segment read would carry stale KV bytes from
+                // whichever request used the slot last.
+                model.kv_from_bytes(&cache.materialize_prefix_bytes(engine, wseg, hit)?)?
             } else {
                 model.empty_kv()?
             };
@@ -253,8 +271,11 @@ fn serve_turn(
     let ttft_ns = clock::now_ns() - arrival_ns;
 
     // 4. Remaining decode steps → TPOT. (Generated tokens are not appended
-    // to the scripted history; see DESIGN.md.)
+    // to the scripted history; see DESIGN.md.) The loop breaks early when
+    // the context fills, so the mean divides by the steps actually run —
+    // dividing by the *requested* count understates TPOT near `t_max`.
     let mut tpot_total = 0u64;
+    let mut extra_steps = 0u64;
     for i in 1..cfg.decode_tokens {
         let t0 = clock::now_ns();
         let pos = seq_len + i as i32;
@@ -265,12 +286,9 @@ fn serve_turn(
         tok = t2;
         kv_cur = kv2;
         tpot_total += clock::now_ns() - t0;
+        extra_steps += 1;
     }
-    let tpot_ns = if cfg.decode_tokens > 1 {
-        tpot_total / (cfg.decode_tokens as u64 - 1)
-    } else {
-        0
-    };
+    let tpot_ns = if extra_steps > 0 { tpot_total / extra_steps } else { 0 };
 
     // 5. Write back: store this turn's new blocks (write-through via the
     // engine). The working segment must hold the final KV bytes first.
@@ -308,6 +326,7 @@ fn serve_turn(
         fetched_bytes,
         ttft_ns,
         tpot_ns,
+        decode_steps: 1 + extra_steps as usize,
         total_ns: clock::now_ns() - arrival_ns,
     })
 }
@@ -318,6 +337,35 @@ mod tests {
 
     #[test]
     fn report_percentiles() {
+        let r = report((1..=10u64).map(|i| i * 1_000_000_000).collect());
+        assert!((r.avg_ttft_s() - 5.5).abs() < 1e-9);
+        // The histogram's log buckets report quantiles within ~3% (high) of
+        // the exact nearest-rank value.
+        let p90 = r.p90_ttft_s();
+        assert!((9.0..9.3).contains(&p90), "p90 {p90} outside histogram tolerance of 9.0");
+        assert!((r.round_avg_ttft_s(1) - 1.0).abs() < 1e-9);
+        assert!((r.input_throughput_tok_s() - 128.0).abs() < 1e-9);
+        assert_eq!(r.round_avg_ttft_s(99), 0.0);
+        assert_eq!(r.turn_table().len(), 10);
+        assert_eq!(r.turn_table()[0], (0, 0, 128, 0, 0));
+    }
+
+    #[test]
+    fn p90_uses_shared_quantile_definition() {
+        // Two samples, 1 s and 10 s. The old ad-hoc nearest-rank index
+        // `v[(len-1)*9/10]` = v[0] reported the *minimum* (1.0 s) as P90;
+        // `Histogram::quantile(0.9)` ranks ceil(0.9·2) = 2 → the 10 s
+        // sample (within log-bucket tolerance).
+        let r = report(vec![1_000_000_000, 10_000_000_000]);
+        let p90 = r.p90_ttft_s();
+        assert!(p90 >= 9.5, "p90 {p90} still reporting the low sample");
+        assert!(r.p99_ttft_s() >= 9.5);
+        // Empty report stays well-defined.
+        assert_eq!(report(Vec::new()).p90_ttft_s(), 0.0);
+    }
+
+    fn report(ttfts: Vec<u64>) -> ServeReport {
+        let total = ttfts.len();
         let mk = |ttft: u64, turn: usize| TurnMetrics {
             client: 0,
             turn,
@@ -326,22 +374,16 @@ mod tests {
             fetched_bytes: 0,
             ttft_ns: ttft,
             tpot_ns: 0,
+            decode_steps: 1,
             total_ns: ttft,
         };
-        let r = ServeReport {
+        ServeReport {
             mode: ServeMode::HiCache,
             policy: "TENT",
             model: "synthetic",
-            turns: (1..=10u64).map(|i| mk(i * 1_000_000_000, (i - 1) as usize)).collect(),
+            turns: ttfts.into_iter().enumerate().map(|(i, t)| mk(t, i)).collect(),
             wall_ns: 10_000_000_000,
-            input_tokens_total: 1280,
-        };
-        assert!((r.avg_ttft_s() - 5.5).abs() < 1e-9);
-        assert!((r.p90_ttft_s() - 9.0).abs() < 1e-9);
-        assert!((r.round_avg_ttft_s(1) - 1.0).abs() < 1e-9);
-        assert!((r.input_throughput_tok_s() - 128.0).abs() < 1e-9);
-        assert_eq!(r.round_avg_ttft_s(99), 0.0);
-        assert_eq!(r.turn_table().len(), 10);
-        assert_eq!(r.turn_table()[0], (0, 0, 128, 0, 0));
+            input_tokens_total: total * 128,
+        }
     }
 }

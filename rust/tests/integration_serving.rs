@@ -10,11 +10,13 @@
 //!   backend + AOT artifacts exist (the ROADMAP "Real PJRT binding" item
 //!   un-skips them with no changes here).
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use tent::cluster::Cluster;
 use tent::engine::{EngineConfig, TentEngine};
 use tent::policy::PolicyKind;
-use tent::runtime::{ModelExecutor, Runtime, SyntheticModel};
+use tent::runtime::{
+    KvCache, ModelExecutor, ModelMeta, Runtime, SyntheticConfig, SyntheticModel,
+};
 use tent::serving::kvcache::{hash_chunks, KvCacheConfig, TieredKvCache};
 use tent::serving::{
     build_for, run_serving, CheckpointConfig, CheckpointEngine, ServeConfig, ServeMode,
@@ -253,4 +255,175 @@ fn pjrt_checkpoint_update_then_inference() {
     let Some(mut rt) = artifacts() else { return };
     let payload = std::fs::read(rt.artifacts_dir.join("params.bin")).unwrap();
     scenario_checkpoint_then_inference(&mut rt, payload);
+}
+
+// ---- router regression tests (executor wrappers over the synthetic model) ----
+
+fn small_meta() -> ModelMeta {
+    // 16-token context in 4-token chunks: 3-turn conversations exactly fill
+    // it, and a 10-token decode request cannot fit in the last turn.
+    ModelMeta::custom(2, 2, 8, 16, 4, 512, 10_000)
+}
+
+fn unpaced(meta: ModelMeta) -> SyntheticModel {
+    SyntheticModel::new(
+        meta,
+        SyntheticConfig {
+            pace: false,
+            ..SyntheticConfig::default()
+        },
+    )
+}
+
+/// Delegating executor whose decode steps take a fixed, measurable time —
+/// what the TPOT mean is supposed to report.
+struct SlowDecode(SyntheticModel);
+
+impl ModelExecutor for SlowDecode {
+    fn name(&self) -> &'static str {
+        "synthetic"
+    }
+    fn meta(&self) -> &ModelMeta {
+        self.0.meta()
+    }
+    fn empty_kv(&self) -> tent::Result<KvCache> {
+        self.0.empty_kv()
+    }
+    fn kv_from_bytes(&self, raw: &[u8]) -> tent::Result<KvCache> {
+        self.0.kv_from_bytes(raw)
+    }
+    fn prefill(&self, tokens: &[i32], kv: KvCache, offset: i32) -> tent::Result<(i32, KvCache)> {
+        self.0.prefill(tokens, kv, offset)
+    }
+    fn decode(&self, token: i32, kv: KvCache, pos: i32) -> tent::Result<(i32, KvCache)> {
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        self.0.decode(token, kv, pos)
+    }
+    fn install_params(&mut self, flat: &[f32]) -> tent::Result<()> {
+        self.0.install_params(flat)
+    }
+}
+
+#[test]
+fn tpot_divides_by_actual_decode_steps() {
+    let model = SlowDecode(unpaced(small_meta()));
+    let e = engine(PolicyKind::Tent);
+    let pool = TempPool::new("it_kv");
+    let cfg = ServeConfig {
+        mode: ServeMode::Baseline,
+        clients: 1,
+        turns: 3,
+        decode_tokens: 10,
+        seed: 5,
+        cache: KvCacheConfig {
+            gpus: 1,
+            gpu_blocks_per_gpu: 2,
+            cpu_blocks: 16,
+            disk_blocks: 32,
+            disk_path: pool.path(),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let convs = build_for(model.meta(), &cfg);
+    let rep = run_serving(&e, &model, &convs, &cfg).unwrap();
+    // Turn 2 starts decoding at position 12 of a 16-token context: the TTFT
+    // decode lands at 12 and only 3 of the 9 remaining requested steps fit
+    // (13, 14, 15) before `t_max`. Each decode sleeps 2 ms, so true TPOT is
+    // ~2 ms; the old code divided by the requested 9 and reported ~0.67 ms.
+    let last = rep.turns.iter().find(|t| t.turn == 2).unwrap();
+    assert_eq!(last.decode_steps, 4);
+    assert!(
+        last.tpot_ns > 1_500_000,
+        "tpot {} ns understated: divided by requested, not executed, steps",
+        last.tpot_ns
+    );
+    // A turn with context headroom runs every requested step.
+    assert_eq!(rep.turns.iter().find(|t| t.turn == 0).unwrap().decode_steps, 10);
+}
+
+/// Delegating executor that records every raw byte buffer the router
+/// materializes KV state from — the contamination probe. (The synthetic
+/// model itself re-derives every row it touches, so stale bytes in the
+/// *unused* tail are latent there; a production executor attends over them.)
+struct KvProbe {
+    inner: SyntheticModel,
+    raws: Mutex<Vec<Vec<u8>>>,
+}
+
+impl ModelExecutor for KvProbe {
+    fn name(&self) -> &'static str {
+        "synthetic"
+    }
+    fn meta(&self) -> &ModelMeta {
+        self.inner.meta()
+    }
+    fn empty_kv(&self) -> tent::Result<KvCache> {
+        self.inner.empty_kv()
+    }
+    fn kv_from_bytes(&self, raw: &[u8]) -> tent::Result<KvCache> {
+        self.raws.lock().unwrap().push(raw.to_vec());
+        self.inner.kv_from_bytes(raw)
+    }
+    fn prefill(&self, tokens: &[i32], kv: KvCache, offset: i32) -> tent::Result<(i32, KvCache)> {
+        self.inner.prefill(tokens, kv, offset)
+    }
+    fn decode(&self, token: i32, kv: KvCache, pos: i32) -> tent::Result<(i32, KvCache)> {
+        self.inner.decode(token, kv, pos)
+    }
+    fn install_params(&mut self, flat: &[f32]) -> tent::Result<()> {
+        self.inner.install_params(flat)
+    }
+}
+
+#[test]
+fn partial_prefix_hit_does_not_leak_previous_clients_kv() {
+    let meta = small_meta();
+    let model = KvProbe {
+        inner: unpaced(meta.clone()),
+        raws: Mutex::new(Vec::new()),
+    };
+    let e = engine(PolicyKind::Tent);
+    let pool = TempPool::new("it_kv");
+    // One GPU → both clients share the single working KV slot, and every
+    // turn with a cache hit reuses exactly one block (the shared system
+    // prompt): all materializations in this run are partial hits.
+    let cfg = ServeConfig {
+        mode: ServeMode::HiCache,
+        clients: 2,
+        turns: 2,
+        decode_tokens: 2,
+        seed: 3,
+        shared_system_prompt: true,
+        cache: KvCacheConfig {
+            gpus: 1,
+            gpu_blocks_per_gpu: 4,
+            cpu_blocks: 16,
+            disk_blocks: 32,
+            disk_path: pool.path(),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let convs = build_for(model.meta(), &cfg);
+    run_serving(&e, &model, &convs, &cfg).unwrap();
+    // client 1 turn 0 plus both clients' turn 1 hit the system-prompt block.
+    let raws = model.raws.lock().unwrap();
+    assert!(raws.len() >= 3, "expected >= 3 partial-hit materializations, got {}", raws.len());
+    let d4 = meta.head_dim * 4;
+    let plane_len = meta.t_max * d4;
+    let hit_span = meta.t_pre * d4; // exactly one cached block
+    for (i, raw) in raws.iter().enumerate() {
+        for plane in 0..meta.layers * 2 * meta.heads {
+            let base = plane * plane_len;
+            let tail = &raw[base + hit_span..base + plane_len];
+            // Before the fix this tail carried the previous request's full
+            // KV writeback (its prefill + decode rows) out of the shared
+            // working segment.
+            assert!(
+                tail.iter().all(|&b| b == 0),
+                "materialization {i} plane {plane}: stale bytes beyond the prefix hit"
+            );
+        }
+    }
 }

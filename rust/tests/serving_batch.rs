@@ -1,0 +1,205 @@
+//! Integration tests for the continuous-batching scheduler
+//! (`serving::batching::serve_fleet`): schedule determinism on the virtual
+//! clock, SLO-class overtaking at admission, session affinity across a
+//! mid-run engine failure, and multi-model routing.
+
+use std::sync::Arc;
+use tent::cluster::{Fleet, FleetConfig};
+use tent::runtime::{ModelExecutor, ModelMeta, SyntheticConfig, SyntheticModel};
+use tent::serving::{
+    build_sessions, BatchConfig, FailurePlan, KvCacheConfig, RequestClass, SchedulePolicy,
+    SessionScript, SessionWorkload,
+};
+
+/// 2-layer toy shape: 32-token context in 4-token chunks (so up to 7 turns).
+fn small_meta() -> ModelMeta {
+    ModelMeta::custom(2, 2, 8, 32, 4, 512, 10_000)
+}
+
+fn unpaced(meta: ModelMeta) -> Arc<dyn ModelExecutor> {
+    Arc::new(SyntheticModel::new(
+        meta,
+        SyntheticConfig {
+            pace: false,
+            ..SyntheticConfig::default()
+        },
+    ))
+}
+
+fn small_cache() -> KvCacheConfig {
+    KvCacheConfig {
+        gpus: 2,
+        gpu_blocks_per_gpu: 8,
+        cpu_blocks: 64,
+        disk_blocks: 256,
+        ..KvCacheConfig::default()
+    }
+}
+
+#[test]
+fn admitted_schedule_is_deterministic() {
+    let meta = small_meta();
+    let w = SessionWorkload {
+        sessions: 16,
+        turns: 2,
+        mean_interarrival_ns: 30_000,
+        ..Default::default()
+    };
+    let cfg = BatchConfig {
+        cache: small_cache(),
+        ..Default::default()
+    };
+    let run = || {
+        let fleet = Fleet::new(FleetConfig::new("h800_hgx", 2)).unwrap();
+        let sessions = build_sessions(&[&meta], &w);
+        fleet.serve_sessions(&[unpaced(meta.clone())], &sessions, &cfg).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.rows.len(), 16 * 2, "every turn completes");
+    assert_eq!(a.dropped_sessions, 0);
+    // Virtual-clock scheduling: the admitted schedule and the makespan are
+    // pure functions of (sessions, models, config) — byte-identical across
+    // runs, however noisy the machine.
+    assert_eq!(a.schedule_table(), b.schedule_table());
+    assert_eq!(a.makespan_ns, b.makespan_ns);
+    for r in &a.rows {
+        assert_eq!(r.decode_steps, 4, "default decode budget fits this shape");
+        assert!(r.ttft_ns > 0, "TTFT includes at least one modeled iteration");
+        assert!(r.tpot_ns > 0, "TPOT measured over the extra decode steps");
+    }
+    // Turn 1 reuses turn 0's stored block on the same engine (affinity +
+    // prefix cache): every second turn reports a cached prefix.
+    assert!(
+        a.rows.iter().filter(|r| r.turn == 1).all(|r| r.cached_blocks == 1),
+        "second turns hit the prefix cache on their home engine"
+    );
+}
+
+fn one_turn(session: usize, class: RequestClass, arrival_ns: u64) -> SessionScript {
+    let base = session as i32 * 7 + 1;
+    SessionScript {
+        session,
+        class,
+        model: 0,
+        chunks: vec![vec![base, base + 1, base + 2, base + 3]],
+        arrival_ns,
+        think_ns: 0,
+    }
+}
+
+#[test]
+fn interactive_overtakes_queued_batch_under_continuous() {
+    let meta = small_meta();
+    // One engine, one slot: session 0 (batch) is mid-flight when sessions 1
+    // (batch) and 2 (interactive) arrive; the scheduler must admit the
+    // later-arrived interactive request first.
+    let sessions = vec![
+        one_turn(0, RequestClass::Batch, 0),
+        one_turn(1, RequestClass::Batch, 100),
+        one_turn(2, RequestClass::Interactive, 200),
+    ];
+    let cfg = BatchConfig {
+        max_running: 1,
+        interactive_reserve: 0,
+        batch_admit_age_ns: u64::MAX,
+        decode_tokens: 2,
+        cache: small_cache(),
+        ..Default::default()
+    };
+    let fleet = Fleet::new(FleetConfig::new("h800_hgx", 1)).unwrap();
+    let report = fleet.serve_sessions(&[unpaced(meta.clone())], &sessions, &cfg).unwrap();
+    assert_eq!(report.rows.len(), 3);
+    let seq = |s: usize| report.rows.iter().find(|r| r.session == s).unwrap().admit_seq;
+    assert_eq!(seq(0), 0, "first arrival starts on the idle engine");
+    assert!(
+        seq(2) < seq(1),
+        "interactive (arrived 200ns) must overtake batch (arrived 100ns): {} vs {}",
+        seq(2),
+        seq(1)
+    );
+
+    // FIFO control: strict arrival order, no overtaking.
+    let fifo = BatchConfig {
+        schedule: SchedulePolicy::Fifo,
+        ..cfg.clone()
+    };
+    let fleet = Fleet::new(FleetConfig::new("h800_hgx", 1)).unwrap();
+    let report = fleet.serve_sessions(&[unpaced(meta)], &sessions, &fifo).unwrap();
+    let seq = |s: usize| report.rows.iter().find(|r| r.session == s).unwrap().admit_seq;
+    assert!(seq(0) < seq(1) && seq(1) < seq(2), "FIFO admits in arrival order");
+}
+
+#[test]
+fn session_affinity_stable_across_engine_failure() {
+    let meta = small_meta();
+    let w = SessionWorkload {
+        sessions: 24,
+        turns: 3,
+        mean_interarrival_ns: 20_000,
+        think_ns: 100_000,
+        ..Default::default()
+    };
+    let sessions = build_sessions(&[&meta], &w);
+    let cfg = BatchConfig {
+        cache: small_cache(),
+        fail: Some(FailurePlan {
+            node: 0,
+            after_turns: 2,
+        }),
+        ..Default::default()
+    };
+    let fleet = Fleet::new(FleetConfig::new("h800_hgx", 2)).unwrap();
+    let report = fleet.serve_sessions(&[unpaced(meta)], &sessions, &cfg).unwrap();
+    assert_eq!(report.rows.len(), 24 * 3, "every turn completes despite the failure");
+    assert_eq!(report.dropped_sessions, 0);
+    let (mut moved, mut stayed) = (0, 0);
+    for s in 0..24 {
+        let engines = report.engines_of(s);
+        assert!(
+            engines.len() <= 2,
+            "session {s} bounced between more than two engines: {engines:?}"
+        );
+        if engines == [0, 1] {
+            moved += 1;
+        }
+        if engines == [1] {
+            stayed += 1;
+        }
+    }
+    assert!(moved >= 1, "failed engine's sessions re-home to the survivor");
+    assert!(stayed >= 1, "survivor-homed sessions keep single-engine affinity");
+    // The failed engine stopped shortly after its trigger; the survivor
+    // carried the bulk of the work.
+    let on_failed = report.rows.iter().filter(|r| r.engine == 0).count();
+    assert!(
+        on_failed < 24 * 3 / 2,
+        "engine 0 served {on_failed} turns after being scheduled to fail"
+    );
+}
+
+#[test]
+fn multi_model_fleet_routes_sessions_to_their_model() {
+    let m0 = small_meta();
+    let m1 = ModelMeta::custom(1, 2, 8, 16, 8, 256, 5_000);
+    let w = SessionWorkload {
+        sessions: 8,
+        turns: 1,
+        ..Default::default()
+    };
+    let sessions = build_sessions(&[&m0, &m1], &w);
+    let cfg = BatchConfig {
+        cache: small_cache(),
+        ..Default::default()
+    };
+    let fleet = Fleet::new(FleetConfig::new("h800_hgx", 2)).unwrap();
+    let report = fleet.serve_sessions(&[unpaced(m0), unpaced(m1)], &sessions, &cfg).unwrap();
+    assert_eq!(report.rows.len(), 8);
+    assert_eq!(report.dropped_sessions, 0);
+    for r in &report.rows {
+        assert_eq!(r.model, r.session % 2);
+        assert_eq!(r.engine as usize % 2, r.model, "each engine serves only its model");
+        let t_pre = if r.model == 0 { 4 } else { 8 };
+        assert_eq!(r.input_tokens, t_pre);
+    }
+}
