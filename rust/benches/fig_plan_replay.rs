@@ -1,0 +1,158 @@
+//! fig_plan_replay — the determinism gate over the shipped transfer plans.
+//!
+//! Every `.tent` file under `plans/` is compiled and executed **twice**, on
+//! two fresh fleets, and the two replay journals must be byte-identical:
+//! same plan digest, same per-stage op digests, same chaos applied-action
+//! log at the same scheduled offsets. This is the paper's declarative
+//! contract made testable — a plan plus a seed *is* the run.
+//!
+//! The gate is hard even under `--smoke` (journals exclude wall-clock
+//! quantities by construction, so shrinking the chaos horizon never makes
+//! the comparison flaky). A third run with a different seed must produce a
+//! *different* journal digest — guarding against a digest that ignores its
+//! inputs.
+//!
+//! Flags: --plans <dir>   plan directory          [plans, then ../plans]
+//!        --smoke         cap chaos horizons at 100 ms for CI
+//!        --json <path>   write BENCH_plan.json
+
+use std::path::{Path, PathBuf};
+use tent::plan::{compile, fleet_for, PlanSpec};
+use tent::util::cli::Args;
+use tent::util::json::Json;
+
+struct Row {
+    file: String,
+    plan: String,
+    stages: usize,
+    ops: u64,
+    bytes: u64,
+    failed: u64,
+    chaos_actions: usize,
+    journal_digest: String,
+    replay_ok: bool,
+    seed_sensitive: bool,
+}
+
+fn plans_dir(args: &Args) -> PathBuf {
+    if let Some(d) = args.get("plans") {
+        return PathBuf::from(d);
+    }
+    // `cargo bench` runs from rust/, a repo-root invocation from ./.
+    for cand in ["plans", "../plans"] {
+        if Path::new(cand).is_dir() {
+            return PathBuf::from(cand);
+        }
+    }
+    PathBuf::from("plans")
+}
+
+fn run_file(path: &Path, smoke: bool) -> tent::Result<Row> {
+    let src = std::fs::read_to_string(path).map_err(tent::Error::Io)?;
+    let mut spec = PlanSpec::parse_any(&src)?;
+    if smoke {
+        spec.cap_chaos_horizon(100_000_000.0);
+    }
+    let dag = compile(&spec)?;
+    let r1 = fleet_for(&spec)?.run_plan(&dag)?;
+    let r2 = fleet_for(&spec)?.run_plan(&dag)?;
+    let replay_ok = r1.journal.to_jsonl() == r2.journal.to_jsonl();
+    if !replay_ok {
+        if let Some(d) = r1.journal.diff(&r2.journal) {
+            eprintln!("  REPLAY DIVERGED ({}): {d}", spec.name);
+        }
+    }
+    // Seed sensitivity: a re-seeded plan must journal differently.
+    let mut spec_b = spec.clone();
+    spec_b.seed = spec.seed.wrapping_add(1);
+    let dag_b = compile(&spec_b)?;
+    let r3 = fleet_for(&spec_b)?.run_plan(&dag_b)?;
+    let seed_sensitive = r3.journal_digest() != r1.journal_digest();
+    Ok(Row {
+        file: path.file_name().unwrap().to_string_lossy().into_owned(),
+        plan: spec.name.clone(),
+        stages: r1.stages.len(),
+        ops: r1.total_ops,
+        bytes: r1.total_bytes,
+        failed: r1.failed_ops,
+        chaos_actions: r1.chaos_actions,
+        journal_digest: r1.journal.digest_hex(),
+        replay_ok,
+        seed_sensitive,
+    })
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.flag("smoke");
+    let dir = plans_dir(&args);
+    let mut files: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("plan directory {}: {e}", dir.display()))
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map(|x| x == "tent").unwrap_or(false))
+        .collect();
+    files.sort();
+    assert!(
+        !files.is_empty(),
+        "no .tent files under {} — pass --plans <dir>",
+        dir.display()
+    );
+
+    println!("== fig_plan_replay: journal determinism over shipped plans ==");
+    println!("(each plan runs twice on fresh fleets; journals must match byte-for-byte)");
+    println!(
+        "{:<24} {:>6} {:>7} {:>10} {:>6} {:>6} {:>18} {:>7} {:>5}",
+        "plan", "stages", "ops", "bytes", "failed", "chaos", "journal_digest", "replay", "seed"
+    );
+    let mut rows = Vec::new();
+    for f in &files {
+        let row = run_file(f, smoke).unwrap_or_else(|e| panic!("{}: {e}", f.display()));
+        println!(
+            "{:<24} {:>6} {:>7} {:>10} {:>6} {:>6} {:>18} {:>7} {:>5}",
+            row.plan,
+            row.stages,
+            row.ops,
+            tent::util::fmt_bytes(row.bytes),
+            row.failed,
+            row.chaos_actions,
+            row.journal_digest,
+            if row.replay_ok { "OK" } else { "DIVERGED" },
+            if row.seed_sensitive { "OK" } else { "STUCK" }
+        );
+        rows.push(row);
+    }
+    let pass = rows.iter().all(|r| r.replay_ok && r.seed_sensitive);
+    println!(
+        "\nacceptance (every plan replays byte-identically and re-rolls under a new seed): {}",
+        if pass { "PASS" } else { "FAIL" }
+    );
+    if let Some(path) = args.get("json") {
+        let j = Json::obj(vec![
+            ("bench", Json::str("fig_plan_replay")),
+            ("smoke", Json::Bool(smoke)),
+            (
+                "plans",
+                Json::arr(rows.iter().map(|r| {
+                    Json::obj(vec![
+                        ("file", Json::str(&r.file)),
+                        ("plan", Json::str(&r.plan)),
+                        ("stages", Json::num(r.stages as f64)),
+                        ("ops", Json::num(r.ops as f64)),
+                        ("bytes", Json::num(r.bytes as f64)),
+                        ("failed", Json::num(r.failed as f64)),
+                        ("chaos_actions", Json::num(r.chaos_actions as f64)),
+                        ("journal_digest", Json::str(&r.journal_digest)),
+                        ("replay_ok", Json::Bool(r.replay_ok)),
+                        ("seed_sensitive", Json::Bool(r.seed_sensitive)),
+                    ])
+                })),
+            ),
+            ("pass", Json::Bool(pass)),
+        ]);
+        std::fs::write(path, format!("{j}\n")).expect("write --json");
+        println!("results written to {path}");
+    }
+    if !pass {
+        std::process::exit(1);
+    }
+}

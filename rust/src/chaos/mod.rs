@@ -70,7 +70,7 @@ impl ChaosReport {
             .collect::<Vec<_>>();
         Json::obj(vec![
             ("seed", Json::str(&self.schedule_seed.to_string())),
-            ("digest", Json::str(&format!("{:016x}", self.schedule_digest))),
+            ("digest", Json::str(&crate::util::canon::digest_hex(self.schedule_digest))),
             ("applied", Json::arr(actions)),
         ])
         .to_string()

@@ -491,13 +491,11 @@ impl ChaosSchedule {
     }
 
     /// FNV-1a digest of the canonical form — the replay-contract identity.
+    /// Delegates to the shared [`crate::util::canon`] writer (the same one
+    /// the plan journal uses), whose pinned vectors guarantee committed
+    /// schedule digests never drift.
     pub fn digest(&self) -> u64 {
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for b in self.to_json().bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
-        }
-        h
+        crate::util::canon::fnv1a64(&self.to_json())
     }
 
     /// Number of `Fail` actions (the events the healing gate scores).
@@ -598,6 +596,21 @@ mod tests {
         assert_eq!(s, r);
         assert_eq!(j, r.to_json());
         assert_eq!(s.digest(), r.digest());
+    }
+
+    #[test]
+    fn digest_matches_the_pre_dedupe_inline_loop() {
+        // PR 9 moved the FNV loop into util::canon. Re-run the original
+        // inline implementation here so a change to the shared writer can
+        // never silently re-key committed schedule files.
+        let t = topo();
+        let s = ChaosSchedule::generate(&t, 0xA11CE, HORIZON, &ScenarioMix::default());
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in s.to_json().bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        assert_eq!(s.digest(), h);
     }
 
     #[test]

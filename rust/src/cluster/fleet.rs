@@ -25,6 +25,7 @@ use crate::policy::PolicyKind;
 use crate::segment::{Location, SegmentId};
 use crate::util::clock;
 use crate::util::hist::Histogram;
+use crate::util::json::Json;
 use crate::util::prng::Pcg64;
 use crate::Result;
 use std::collections::VecDeque;
@@ -59,6 +60,20 @@ pub struct FleetConfig {
 }
 
 impl FleetConfig {
+    /// FNV digest of the deployment-shaping knobs (canonical JSON via
+    /// `util::canon`) — the config identity the report headers print, so
+    /// two result files are comparable at a glance.
+    pub fn digest(&self) -> u64 {
+        crate::util::canon::digest_json(&Json::obj(vec![
+            ("profile", Json::str(&self.profile)),
+            ("nodes", Json::num(self.nodes as f64)),
+            ("policy", Json::str(self.policy.name())),
+            ("sharded_counters", Json::Bool(self.sharded_counters)),
+            ("numa_domains", Json::num(self.numa_domains as f64)),
+            ("time_compression", Json::num(self.fabric.time_compression)),
+        ]))
+    }
+
     /// A fleet of `nodes` engines on `profile`, with bench-friendly time
     /// compression.
     pub fn new(profile: &str, nodes: u16) -> FleetConfig {
@@ -161,6 +176,13 @@ impl Fleet {
             h.merge(&r.class_latency[class.index()]);
         }
         h
+    }
+
+    /// Execute a compiled transfer plan (see [`crate::plan`]): waves of
+    /// stages whose every op was decided at compile time, with a
+    /// deterministic replay journal in the returned report.
+    pub fn run_plan(&self, dag: &crate::plan::PlanDag) -> Result<crate::plan::PlanReport> {
+        crate::plan::exec::run(self, dag)
     }
 
     /// Drive the mixed KV-fetch / checkpoint workload across the fleet.
@@ -310,6 +332,8 @@ impl Fleet {
 
         Ok(FleetReport {
             nodes: n,
+            seed: cfg.seed,
+            config_digest: self.config.digest(),
             wall_ns,
             per_engine_bytes: per_engine_bytes.iter().map(|a| a.load(Ordering::Relaxed)).collect(),
             latency_hist: lat_hist,
@@ -365,6 +389,10 @@ impl Default for WorkloadConfig {
 /// Aggregated result of one fleet workload run.
 pub struct FleetReport {
     pub nodes: usize,
+    /// Workload seed the run was driven with (reproducibility handle).
+    pub seed: u64,
+    /// [`FleetConfig::digest`] of the fleet that produced this report.
+    pub config_digest: u64,
     pub wall_ns: u64,
     /// Completed payload bytes credited to each engine.
     pub per_engine_bytes: Vec<u64>,
@@ -386,6 +414,17 @@ pub struct FleetReport {
 }
 
 impl FleetReport {
+    /// One-line run identity printed above every pretty-printed report:
+    /// the seed and config digest that make the numbers reproducible.
+    pub fn header(&self) -> String {
+        format!(
+            "nodes={} seed={:#x} config={}",
+            self.nodes,
+            self.seed,
+            crate::util::canon::digest_hex(self.config_digest)
+        )
+    }
+
     /// Aggregate goodput over the whole fleet (bytes/sec, sim units).
     pub fn aggregate_goodput(&self) -> f64 {
         let total: u64 = self.per_engine_bytes.iter().sum();
@@ -429,6 +468,10 @@ mod tests {
         let r = f.run_workload(&w).unwrap();
         assert_eq!(r.failed_batches, 0, "no failures without injection");
         assert!(r.total_batches >= 4, "every engine submitted");
+        // The report names its reproducibility handle.
+        assert_eq!(r.seed, w.seed);
+        assert_eq!(r.config_digest, f.config.digest());
+        assert!(r.header().contains("seed=0x") && r.header().contains("config="));
         assert!(r.per_engine_bytes.iter().all(|&b| b > 0), "{:?}", r.per_engine_bytes);
         assert!(r.aggregate_goodput() > 0.0);
         assert!(r.fairness() > 0.0);

@@ -67,6 +67,7 @@ pub mod engine;
 pub mod policy;
 pub mod cluster;
 pub mod chaos;
+pub mod plan;
 pub mod runtime;
 pub mod serving;
 pub mod bench;

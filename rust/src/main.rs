@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   topo        dump the discovered topology of a cluster profile
 //!   bench       run a TEBench microbenchmark
+//!   plan        compile + execute a declarative transfer plan (.tent or
+//!               canonical JSON; see docs/DSL.md) with a replay journal
 //!   serve       run the multi-turn serving workload (synthetic model by
 //!               default; --model pjrt for the AOT-artifact path)
 //!   checkpoint  run a checkpoint-engine weight update + model install
@@ -35,6 +37,12 @@ COMMANDS:
   bench       TEBench: tentd bench --profile h800_hgx --policy tent \
                 --block 1M --batch 4 --threads 4 --iters 16 \
                 --src host --dst host
+  plan        Declarative transfer plan (docs/DSL.md, plans/*.tent):
+                tentd plan plans/hicache_storm.tent [--seed N] [--check]
+                  [--journal out.jsonl] [--verify <digest>] [--json] [--smoke]
+              --check compiles and prints the stage DAG without running;
+              --verify exits 1 unless the journal digest matches;
+              --smoke caps the embedded chaos horizon for CI
   serve       Multi-turn serving (no artifacts needed — synthetic model):
                 tentd serve --mode hicache --policy tent --clients 4 --turns 3 \
                   [--model synthetic|pjrt|auto]
@@ -63,6 +71,7 @@ fn main() {
     let code = match cmd {
         "topo" => cmd_topo(&args),
         "bench" => cmd_bench(&args),
+        "plan" => cmd_plan(&args),
         "serve" => cmd_serve(&args),
         "checkpoint" => cmd_checkpoint(&args),
         "failover" => cmd_failover(&args),
@@ -161,6 +170,47 @@ fn cmd_bench(args: &Args) -> tent::Result<()> {
     Ok(())
 }
 
+fn cmd_plan(args: &Args) -> tent::Result<()> {
+    let path = args.positional.get(1).cloned().ok_or_else(|| {
+        tent::Error::Config(
+            "usage: tentd plan <file.tent|file.json> [--seed N] [--check] \
+             [--journal out.jsonl] [--verify <digest>] [--json] [--smoke]"
+                .into(),
+        )
+    })?;
+    let src = std::fs::read_to_string(&path).map_err(tent::Error::Io)?;
+    let mut spec = tent::plan::PlanSpec::parse_any(&src)?;
+    spec.seed = args.get_u64("seed", spec.seed);
+    if args.flag("smoke") {
+        spec.cap_chaos_horizon(100_000_000.0);
+    }
+    let dag = tent::plan::compile(&spec)?;
+    if args.flag("check") {
+        print!("{}", dag.describe());
+        return Ok(());
+    }
+    let fleet = tent::plan::fleet_for(&spec)?;
+    let report = fleet.run_plan(&dag)?;
+    println!("{}", report.header());
+    print!("{}", report.table());
+    if args.flag("json") {
+        println!("{}", report.to_json());
+    }
+    if let Some(out) = args.get("journal") {
+        report.journal.save(std::path::Path::new(out))?;
+        println!("journal: {out} ({} events)", report.journal.len());
+    }
+    if let Some(want) = args.get("verify") {
+        let got = report.journal.digest_hex();
+        if got != *want {
+            eprintln!("verify FAILED: journal digest {got} != expected {want}");
+            std::process::exit(1);
+        }
+        println!("verify OK: {got}");
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> tent::Result<()> {
     let mode = match args.get_str("mode", "hicache").as_str() {
         "baseline" => ServeMode::Baseline,
@@ -183,10 +233,7 @@ fn cmd_serve(args: &Args) -> tent::Result<()> {
     let (_cluster, engine) = make_engine(args)?;
     let convs = tent::serving::build_for(model.meta(), &cfg);
     let report = tent::serving::run_serving(&engine, model.as_ref(), &convs, &cfg)?;
-    println!(
-        "mode={:?} policy={} model={} clients={} turns={}",
-        report.mode, report.policy, report.model, cfg.clients, cfg.turns
-    );
+    println!("{} clients={} turns={}", report.header(), cfg.clients, cfg.turns);
     println!(
         "input throughput: {:.0} tok/s   avg TTFT {:.3}s   P90 TTFT {:.3}s",
         report.input_throughput_tok_s(),

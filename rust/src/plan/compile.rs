@@ -1,0 +1,756 @@
+//! Plan compilation: resolve names, typecheck per-kind fields, and lower
+//! each workload stanza into a verified transfer DAG.
+//!
+//! A [`PlanDag`] is pure data: segment declarations, per-stream op lists
+//! (concrete `src/dst/off/len/class` tuples over stage-local segment
+//! indices), and stage dependencies already decomposed into execution
+//! waves. Everything random — fetch peers, source slots — is drawn from
+//! PRNG streams seeded by `(plan seed, stage name, stream index)` at
+//! *compile* time, so the op sequence is a pure function of
+//! `(plan file, seed)` and execution-order jitter can never leak into the
+//! replay journal.
+
+use super::parser::{PlanSpec, WorkloadKind, WorkloadSpec};
+use crate::chaos::{ChaosSchedule, ScenarioMix};
+use crate::engine::TransferClass;
+use crate::topology::profile::build_profile;
+use crate::util::canon;
+use crate::util::json::Json;
+use crate::util::prng::Pcg64;
+use crate::{Error, Result};
+
+/// Source-slot fan per store segment (random read offsets land on one of
+/// these slots, so concurrent reads stay cheap to reason about).
+const SRC_SLOTS: u64 = 4;
+
+/// One segment a stage registers before running (stage-local index space).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SegDecl {
+    pub node: u16,
+    pub len: u64,
+}
+
+/// One concrete transfer op. `src`/`dst` index the owning stage's `segs`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlanOp {
+    pub read: bool,
+    pub src: usize,
+    pub src_off: u64,
+    pub dst: usize,
+    pub dst_off: u64,
+    pub len: u64,
+    pub class: TransferClass,
+}
+
+/// One submission stream: a window-pipelined op sequence driven from one
+/// engine.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamOps {
+    /// Node whose engine submits this stream.
+    pub engine: u16,
+    pub ops: Vec<PlanOp>,
+}
+
+/// One executable unit of the DAG (a workload stanza, or one round of an
+/// `rl_update`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Stage {
+    pub name: String,
+    /// Indices into [`PlanDag::stages`] that must complete first.
+    pub deps: Vec<usize>,
+    pub segs: Vec<SegDecl>,
+    pub streams: Vec<StreamOps>,
+    /// Outstanding batches per stream (pipelining depth).
+    pub window: usize,
+    /// FNV digest of the canonical op listing — journaled per stage, so a
+    /// replay that compiled different ops is caught immediately.
+    pub ops_digest: u64,
+    /// Source line of the originating stanza (0 for JSON-born specs).
+    pub line: u32,
+}
+
+impl Stage {
+    pub fn ops_count(&self) -> u64 {
+        self.streams.iter().map(|s| s.ops.len() as u64).sum()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.streams.iter().flat_map(|s| s.ops.iter().map(|o| o.len)).sum()
+    }
+}
+
+/// A compiled, verified plan: ready for `Fleet::run_plan`.
+#[derive(Clone, Debug)]
+pub struct PlanDag {
+    pub spec: PlanSpec,
+    /// `canon::fnv1a64` of the spec's canonical JSON — the plan identity
+    /// every journal leads with.
+    pub digest: u64,
+    pub stages: Vec<Stage>,
+    /// Stage indices grouped by dependency depth; wave `k+1` starts only
+    /// after every stage in wave `k` completed.
+    pub waves: Vec<Vec<usize>>,
+    /// Embedded fault schedule, generated from the `chaos` stanza at
+    /// compile time (pure in the plan seed).
+    pub chaos: Option<ChaosSchedule>,
+}
+
+impl PlanDag {
+    pub fn total_ops(&self) -> u64 {
+        self.stages.iter().map(|s| s.ops_count()).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.stages.iter().map(|s| s.bytes()).sum()
+    }
+
+    /// Human-readable stage table (the CLI's `--check` view).
+    pub fn describe(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "plan {} profile={} nodes={} seed={:#x} digest={}",
+            self.spec.name,
+            self.spec.profile,
+            self.spec.nodes,
+            self.spec.seed,
+            canon::digest_hex(self.digest)
+        );
+        let _ = writeln!(
+            out,
+            "  {:<20} {:>5} {:>8} {:>8} {:>12}  deps",
+            "stage", "wave", "streams", "ops", "bytes"
+        );
+        for (k, wave) in self.waves.iter().enumerate() {
+            for &i in wave {
+                let s = &self.stages[i];
+                let deps = if s.deps.is_empty() {
+                    "-".to_string()
+                } else {
+                    s.deps
+                        .iter()
+                        .map(|&d| self.stages[d].name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(",")
+                };
+                let _ = writeln!(
+                    out,
+                    "  {:<20} {:>5} {:>8} {:>8} {:>12}  {}",
+                    s.name,
+                    k,
+                    s.streams.len(),
+                    s.ops_count(),
+                    crate::util::fmt_bytes(s.bytes()),
+                    deps
+                );
+            }
+        }
+        if let Some(c) = &self.chaos {
+            let _ = writeln!(
+                out,
+                "  chaos: {} events over {} (digest {})",
+                c.events.len(),
+                crate::util::fmt_ns(c.horizon_ns),
+                canon::digest_hex(c.digest())
+            );
+        }
+        out
+    }
+}
+
+fn cerr(line: u32, msg: impl std::fmt::Display) -> Error {
+    Error::Config(format!("line {line}: {msg}"))
+}
+
+/// Integer-valued parameter with a default and a lower bound.
+fn param_u64(w: &WorkloadSpec, key: &str, default: u64, min: u64) -> Result<u64> {
+    let Some(p) = w.params.iter().find(|p| p.key == key) else {
+        return Ok(default);
+    };
+    if !p.value.is_finite() || p.value < min as f64 || p.value.fract() != 0.0 {
+        return Err(cerr(
+            p.line,
+            format!(
+                "workload `{}`: `{key}` must be an integer >= {min} (got {})",
+                w.name, p.value
+            ),
+        ));
+    }
+    Ok(p.value as u64)
+}
+
+/// Per-kind parameter vocabulary (beyond the structural `kind`/`class`/
+/// `after`). `window` is valid everywhere.
+fn kind_keys(kind: WorkloadKind) -> &'static [&'static str] {
+    match kind {
+        WorkloadKind::HicacheFetch => &["clients", "ops", "block", "window"],
+        WorkloadKind::Broadcast => &["root", "payload", "chunk", "fanout", "window"],
+        WorkloadKind::RlUpdate => &["rounds", "root", "payload", "chunk", "ranks", "window"],
+        WorkloadKind::Flood => {
+            &["streams", "ops", "latency_block", "bulk_block", "bulk_every", "window"]
+        }
+    }
+}
+
+/// Compile a parsed spec into an executable DAG. Pure: equal specs produce
+/// equal DAGs (including all PRNG-drawn op parameters).
+pub fn compile(spec: &PlanSpec) -> Result<PlanDag> {
+    let digest = canon::fnv1a64(&spec.to_json());
+    // Validate the profile/node-count pair up front (also feeds the chaos
+    // generator, which needs the concrete topology).
+    let topo = build_profile(&spec.profile, spec.nodes)
+        .map_err(|e| Error::Config(format!("plan `{}`: {e}", spec.name)))?;
+
+    // -- resolve: names are unique, dependencies exist ---------------------
+    let mut by_name: std::collections::BTreeMap<&str, usize> = Default::default();
+    for (i, w) in spec.workloads.iter().enumerate() {
+        if by_name.insert(w.name.as_str(), i).is_some() {
+            return Err(cerr(w.line, format!("duplicate workload name `{}`", w.name)));
+        }
+    }
+    for w in &spec.workloads {
+        for dep in &w.after {
+            if dep == &w.name {
+                return Err(cerr(w.line, format!("workload `{}` depends on itself", w.name)));
+            }
+            if !by_name.contains_key(dep.as_str()) {
+                return Err(cerr(
+                    w.line,
+                    format!("workload `{}`: unknown dependency `{dep}`", w.name),
+                ));
+            }
+        }
+    }
+
+    // -- typecheck: every param key must be valid for its kind -------------
+    for w in &spec.workloads {
+        let valid = kind_keys(w.kind);
+        for p in &w.params {
+            if !valid.contains(&p.key.as_str()) {
+                return Err(cerr(
+                    p.line,
+                    format!(
+                        "workload `{}`: field `{}` not valid for kind `{}` (valid: {})",
+                        w.name,
+                        p.key,
+                        w.kind.name(),
+                        valid.join(", ")
+                    ),
+                ));
+            }
+        }
+    }
+
+    // -- lower each workload into one or more stages -----------------------
+    let mut stages: Vec<Stage> = Vec::new();
+    // Workload index → (first stage, last stage) for dependency wiring.
+    let mut span: Vec<(usize, usize)> = Vec::with_capacity(spec.workloads.len());
+    for w in &spec.workloads {
+        let first = stages.len();
+        match w.kind {
+            WorkloadKind::HicacheFetch => stages.push(lower_hicache(spec, w)?),
+            WorkloadKind::Broadcast => stages.push(lower_broadcast_like(spec, w, &w.name, "fanout")?),
+            WorkloadKind::RlUpdate => {
+                let rounds = param_u64(w, "rounds", 2, 1)?;
+                for r in 0..rounds {
+                    let name = format!("{}#r{r}", w.name);
+                    let mut st = lower_broadcast_like(spec, w, &name, "ranks")?;
+                    if r > 0 {
+                        // Round r+1 reuses round r's parameter buffers only
+                        // after the previous install completed.
+                        st.deps.push(stages.len() - 1);
+                    }
+                    stages.push(st);
+                }
+            }
+            WorkloadKind::Flood => stages.push(lower_flood(spec, w)?),
+        }
+        span.push((first, stages.len() - 1));
+    }
+
+    // -- wire cross-workload deps onto each workload's first stage ---------
+    for (wi, w) in spec.workloads.iter().enumerate() {
+        for dep in &w.after {
+            let di = by_name[dep.as_str()];
+            let (first, _) = span[wi];
+            let (_, dep_last) = span[di];
+            stages[first].deps.push(dep_last);
+        }
+        let (first, _) = span[wi];
+        stages[first].deps.sort_unstable();
+        stages[first].deps.dedup();
+    }
+
+    // -- Kahn: decompose into waves; leftovers mean a cycle ----------------
+    let n = stages.len();
+    let mut indeg: Vec<usize> = stages.iter().map(|s| s.deps.len()).collect();
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, s) in stages.iter().enumerate() {
+        for &d in &s.deps {
+            children[d].push(i);
+        }
+    }
+    let mut waves: Vec<Vec<usize>> = Vec::new();
+    let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut done = 0usize;
+    while !ready.is_empty() {
+        let wave = std::mem::take(&mut ready);
+        done += wave.len();
+        for &i in &wave {
+            for &c in &children[i] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    ready.push(c);
+                }
+            }
+        }
+        ready.sort_unstable();
+        waves.push(wave);
+    }
+    if done < n {
+        let cyc: Vec<&str> = (0..n)
+            .filter(|&i| indeg[i] > 0)
+            .map(|i| stages[i].name.as_str())
+            .collect();
+        let line = (0..n).find(|&i| indeg[i] > 0).map(|i| stages[i].line).unwrap_or(0);
+        return Err(cerr(
+            line,
+            format!("dependency cycle involving: {}", cyc.join(" -> ")),
+        ));
+    }
+
+    // -- embedded chaos schedule ------------------------------------------
+    let chaos = match &spec.chaos {
+        None => None,
+        Some(c) => {
+            let getf = |key: &str, default: f64| -> f64 {
+                c.param(key).unwrap_or(default)
+            };
+            let max_down = getf("max_down_fraction", 0.5);
+            if !(0.0..=1.0).contains(&max_down) {
+                return Err(cerr(c.line, format!("`max_down_fraction` out of [0,1]: {max_down}")));
+            }
+            let mix = ScenarioMix {
+                trace_events_per_sec: getf("eps", 4.0),
+                storms: getf("storms", 1.0) as u32,
+                storm_rails: getf("storm_rails", 2.0) as usize,
+                storm_outage_ns: getf("storm_outage", 40_000_000.0) as u64,
+                flap_cycles: getf("flap_cycles", 4.0) as u32,
+                flap_period_ns: getf("flap_period", 20_000_000.0) as u64,
+                slow_drains: getf("slow_drains", 1.0) as u32,
+                congestion_ramps: getf("ramps", 1.0) as u32,
+                max_down_fraction: max_down,
+            };
+            let horizon = getf("horizon", 250_000_000.0) as u64;
+            // Distinct stream from the op generators: the chaos schedule is
+            // seeded off the plan seed, so `--seed` re-rolls faults too.
+            Some(ChaosSchedule::generate(
+                &topo,
+                spec.seed ^ 0xC4A0_5EED,
+                horizon,
+                &mix,
+            ))
+        }
+    };
+
+    Ok(PlanDag {
+        spec: spec.clone(),
+        digest,
+        stages,
+        waves,
+        chaos,
+    })
+}
+
+/// PRNG for one (stage, stream) pair — pure in the plan seed and names.
+fn stage_rng(spec: &PlanSpec, stage: &str, stream: u64) -> Pcg64 {
+    Pcg64::new(spec.seed ^ canon::fnv1a64(stage), 0x91A7 + stream)
+}
+
+/// Digest the canonical op listing of a stage (engine + full op tuples).
+fn ops_digest(name: &str, streams: &[StreamOps]) -> u64 {
+    let sj = streams
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("engine", Json::num(s.engine as f64)),
+                (
+                    "ops",
+                    Json::arr(s.ops.iter().map(|o| {
+                        Json::arr(vec![
+                            Json::num(if o.read { 1.0 } else { 0.0 }),
+                            Json::num(o.src as f64),
+                            Json::num(o.src_off as f64),
+                            Json::num(o.dst as f64),
+                            Json::num(o.dst_off as f64),
+                            Json::num(o.len as f64),
+                            Json::str(o.class.name()),
+                        ])
+                    })),
+                ),
+            ])
+        })
+        .collect::<Vec<_>>();
+    canon::digest_json(&Json::obj(vec![
+        ("stage", Json::str(name)),
+        ("streams", Json::arr(sj)),
+    ]))
+}
+
+fn stage_window(spec: &PlanSpec, w: &WorkloadSpec) -> Result<usize> {
+    Ok(param_u64(w, "window", spec.window as u64, 1)? as usize)
+}
+
+/// HiCache fetch storm: `clients` streams of latency-class reads, each
+/// pulling random slice-aligned blocks from random peers' stores.
+fn lower_hicache(spec: &PlanSpec, w: &WorkloadSpec) -> Result<Stage> {
+    let nodes = spec.nodes as u64;
+    let clients = param_u64(w, "clients", nodes, 1)?;
+    let ops = param_u64(w, "ops", 32, 1)?;
+    let block = param_u64(w, "block", 256 << 10, 1)?;
+    let window = stage_window(spec, w)?;
+    let class = w.class.unwrap_or(TransferClass::Latency);
+
+    let mut segs: Vec<SegDecl> = (0..spec.nodes)
+        .map(|n| SegDecl { node: n, len: block * SRC_SLOTS })
+        .collect();
+    let mut streams = Vec::with_capacity(clients as usize);
+    for c in 0..clients {
+        let engine = (c % nodes) as u16;
+        let scratch = segs.len();
+        segs.push(SegDecl { node: engine, len: block * window as u64 });
+        let mut rng = stage_rng(spec, &w.name, c);
+        let mut ops_v = Vec::with_capacity(ops as usize);
+        for i in 0..ops {
+            let peer = if nodes == 1 {
+                0
+            } else {
+                // Uniform over peers != the submitting node.
+                let r = rng.gen_range(nodes - 1);
+                if r >= engine as u64 {
+                    r + 1
+                } else {
+                    r
+                }
+            };
+            let slot = rng.gen_range(SRC_SLOTS);
+            ops_v.push(PlanOp {
+                read: true,
+                src: peer as usize,
+                src_off: slot * block,
+                dst: scratch,
+                dst_off: (i % window as u64) * block,
+                len: block,
+                class,
+            });
+        }
+        streams.push(StreamOps { engine, ops: ops_v });
+    }
+    let digest = ops_digest(&w.name, &streams);
+    Ok(Stage {
+        name: w.name.clone(),
+        deps: Vec::new(),
+        segs,
+        streams,
+        window,
+        ops_digest: digest,
+        line: w.line,
+    })
+}
+
+/// Broadcast lowering shared by `broadcast` (fan key `fanout`) and each
+/// `rl_update` round (fan key `ranks`): chunked bulk pushes from `root` to
+/// the next `fan` ring peers, one stream per destination.
+fn lower_broadcast_like(
+    spec: &PlanSpec,
+    w: &WorkloadSpec,
+    stage_name: &str,
+    fan_key: &str,
+) -> Result<Stage> {
+    let nodes = spec.nodes as u64;
+    if nodes < 2 {
+        return Err(cerr(
+            w.line,
+            format!("workload `{}`: kind `{}` needs >= 2 nodes", w.name, w.kind.name()),
+        ));
+    }
+    let root = param_u64(w, "root", 0, 0)?;
+    if root >= nodes {
+        return Err(cerr(
+            w.line,
+            format!("workload `{}`: root {root} out of range (nodes = {nodes})", w.name),
+        ));
+    }
+    let payload = param_u64(w, "payload", 8 << 20, 1)?;
+    let chunk = param_u64(w, "chunk", 1 << 20, 1)?.min(payload);
+    let fan = param_u64(w, fan_key, nodes - 1, 1)?.min(nodes - 1);
+    let window = stage_window(spec, w)?;
+    let class = w.class.unwrap_or(TransferClass::Bulk);
+
+    let nchunks = payload.div_ceil(chunk);
+    // Source staging buffer: one window of chunk slots on the root.
+    let mut segs = vec![SegDecl { node: root as u16, len: chunk * window as u64 }];
+    let mut streams = Vec::with_capacity(fan as usize);
+    for k in 0..fan {
+        let dst_node = ((root + 1 + k) % nodes) as u16;
+        let dst = segs.len();
+        segs.push(SegDecl { node: dst_node, len: payload });
+        let mut ops_v = Vec::with_capacity(nchunks as usize);
+        for j in 0..nchunks {
+            let len = if j == nchunks - 1 { payload - j * chunk } else { chunk };
+            ops_v.push(PlanOp {
+                read: false,
+                src: 0,
+                src_off: (j % window as u64) * chunk,
+                dst,
+                dst_off: j * chunk,
+                len,
+                class,
+            });
+        }
+        streams.push(StreamOps { engine: root as u16, ops: ops_v });
+    }
+    let digest = ops_digest(stage_name, &streams);
+    Ok(Stage {
+        name: stage_name.to_string(),
+        deps: Vec::new(),
+        segs,
+        streams,
+        window,
+        ops_digest: digest,
+        line: w.line,
+    })
+}
+
+/// Mixed QoS flood: per-stream sequences interleaving latency-class
+/// random-peer reads with a bulk push to the ring neighbour every
+/// `bulk_every`-th op — the `Fleet::run_workload` traffic mix as data.
+fn lower_flood(spec: &PlanSpec, w: &WorkloadSpec) -> Result<Stage> {
+    let nodes = spec.nodes as u64;
+    let nstreams = param_u64(w, "streams", nodes, 1)?;
+    let ops = param_u64(w, "ops", 32, 1)?;
+    let lat_block = param_u64(w, "latency_block", 256 << 10, 1)?;
+    let bulk_block = param_u64(w, "bulk_block", 2 << 20, 1)?;
+    let bulk_every = param_u64(w, "bulk_every", 4, 0)?;
+    let window = stage_window(spec, w)?;
+
+    let mut segs: Vec<SegDecl> = (0..spec.nodes)
+        .map(|n| SegDecl { node: n, len: (lat_block * SRC_SLOTS).max(bulk_block) })
+        .collect();
+    let mut streams = Vec::with_capacity(nstreams as usize);
+    for s in 0..nstreams {
+        let engine = (s % nodes) as u16;
+        let scratch = segs.len();
+        segs.push(SegDecl { node: engine, len: lat_block * window as u64 });
+        let bulk_dst = segs.len();
+        segs.push(SegDecl {
+            node: ((engine as u64 + 1) % nodes) as u16,
+            len: bulk_block * window as u64,
+        });
+        let mut rng = stage_rng(spec, &w.name, 0xF10 + s);
+        let mut ops_v = Vec::with_capacity(ops as usize);
+        for i in 0..ops {
+            let slot = i % window as u64;
+            let bulk = bulk_every > 0 && i % bulk_every == bulk_every - 1;
+            if bulk {
+                ops_v.push(PlanOp {
+                    read: false,
+                    src: engine as usize,
+                    src_off: 0,
+                    dst: bulk_dst,
+                    dst_off: slot * bulk_block,
+                    len: bulk_block,
+                    class: w.class.unwrap_or(TransferClass::Bulk),
+                });
+            } else {
+                let peer = if nodes == 1 {
+                    0
+                } else {
+                    let r = rng.gen_range(nodes - 1);
+                    if r >= engine as u64 {
+                        r + 1
+                    } else {
+                        r
+                    }
+                };
+                let src_slot = rng.gen_range(SRC_SLOTS);
+                ops_v.push(PlanOp {
+                    read: true,
+                    src: peer as usize,
+                    src_off: src_slot * lat_block,
+                    dst: scratch,
+                    dst_off: slot * lat_block,
+                    len: lat_block,
+                    class: w.class.unwrap_or(TransferClass::Latency),
+                });
+            }
+        }
+        streams.push(StreamOps { engine, ops: ops_v });
+    }
+    let digest = ops_digest(&w.name, &streams);
+    Ok(Stage {
+        name: w.name.clone(),
+        deps: Vec::new(),
+        segs,
+        streams,
+        window,
+        ops_digest: digest,
+        line: w.line,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::parser::PlanSpec;
+
+    fn spec(src: &str) -> PlanSpec {
+        PlanSpec::parse(src).unwrap()
+    }
+
+    #[test]
+    fn compile_is_pure_in_the_spec() {
+        let s = spec(
+            "plan p\nnodes 4\nseed 9\nworkload a {\n kind hicache_fetch\n ops 8\n}\n\
+             workload b {\n kind broadcast\n payload 2M\n after a\n}\n",
+        );
+        let d1 = compile(&s).unwrap();
+        let d2 = compile(&s).unwrap();
+        assert_eq!(d1.digest, d2.digest);
+        assert_eq!(d1.stages, d2.stages);
+        // Stage-level op digests are stable too.
+        for (a, b) in d1.stages.iter().zip(&d2.stages) {
+            assert_eq!(a.ops_digest, b.ops_digest);
+        }
+        // A different seed re-rolls ops and the plan identity.
+        let mut s2 = s.clone();
+        s2.seed = 10;
+        let d3 = compile(&s2).unwrap();
+        assert_ne!(d1.digest, d3.digest);
+        assert_ne!(d1.stages[0].ops_digest, d3.stages[0].ops_digest);
+    }
+
+    #[test]
+    fn waves_respect_dependencies() {
+        let s = spec(
+            "plan p\nnodes 2\nworkload a {\n kind flood\n ops 4\n}\n\
+             workload b {\n kind flood\n ops 4\n after a\n}\n\
+             workload c {\n kind flood\n ops 4\n}\n",
+        );
+        let d = compile(&s).unwrap();
+        assert_eq!(d.waves.len(), 2);
+        assert_eq!(d.waves[0], vec![0, 2]); // a, c
+        assert_eq!(d.waves[1], vec![1]); // b after a
+        assert_eq!(d.stages[1].deps, vec![0]);
+    }
+
+    #[test]
+    fn rl_update_chains_rounds() {
+        let s = spec(
+            "plan p\nnodes 4\nworkload upd {\n kind rl_update\n rounds 3\n payload 1M\n chunk 256K\n}\n",
+        );
+        let d = compile(&s).unwrap();
+        assert_eq!(d.stages.len(), 3);
+        assert_eq!(d.stages[0].name, "upd#r0");
+        assert_eq!(d.stages[1].deps, vec![0]);
+        assert_eq!(d.stages[2].deps, vec![1]);
+        assert_eq!(d.waves.len(), 3);
+        // 4 chunks to 3 ranks per round.
+        assert_eq!(d.stages[0].ops_count(), 12);
+        assert_eq!(d.stages[0].bytes(), 3 << 20);
+    }
+
+    #[test]
+    fn rejects_cycles_with_spans() {
+        let s = spec(
+            "plan p\nnodes 2\nworkload a {\n kind flood\n after b\n}\n\
+             workload b {\n kind flood\n after a\n}\n",
+        );
+        let e = compile(&s).unwrap_err().to_string();
+        assert!(e.contains("cycle"), "{e}");
+        assert!(e.contains("line 3"), "{e}");
+        assert!(e.contains("a") && e.contains("b"), "{e}");
+    }
+
+    #[test]
+    fn rejects_bad_fields_for_kind() {
+        let s = spec("plan p\nnodes 2\nworkload w {\n kind flood\n payload 1M\n}\n");
+        let e = compile(&s).unwrap_err().to_string();
+        assert!(e.contains("line 5") && e.contains("payload") && e.contains("flood"), "{e}");
+
+        let s = spec("plan p\nworkload w {\n kind broadcast\n root 7\n}\n");
+        // default nodes = 4, root out of range
+        let e = compile(&s).unwrap_err().to_string();
+        assert!(e.contains("root"), "{e}");
+
+        let s = spec("plan p\nworkload a {\n kind flood\n}\nworkload a {\n kind flood\n}\n");
+        let e = compile(&s).unwrap_err().to_string();
+        assert!(e.contains("duplicate workload name"), "{e}");
+
+        let s = spec("plan p\nworkload a {\n kind flood\n after ghost\n}\n");
+        let e = compile(&s).unwrap_err().to_string();
+        assert!(e.contains("ghost"), "{e}");
+
+        let s = spec("plan p\nnodes 1\nworkload a {\n kind broadcast\n}\n");
+        assert!(compile(&s).is_err(), "broadcast on one node");
+    }
+
+    #[test]
+    fn broadcast_chunks_cover_the_payload_exactly() {
+        let s = spec(
+            "plan p\nnodes 3\nworkload b {\n kind broadcast\n payload 2500K\n chunk 1M\n}\n",
+        );
+        let d = compile(&s).unwrap();
+        let st = &d.stages[0];
+        assert_eq!(st.streams.len(), 2);
+        for stream in &st.streams {
+            let total: u64 = stream.ops.iter().map(|o| o.len).sum();
+            assert_eq!(total, 2500 << 10);
+            // Chunks tile the destination without overlap.
+            let mut covered = 0u64;
+            for o in &stream.ops {
+                assert_eq!(o.dst_off, covered);
+                covered += o.len;
+            }
+            // Every op stays inside the destination segment.
+            let dst_len = st.segs[stream.ops[0].dst].len;
+            assert!(covered <= dst_len);
+        }
+    }
+
+    #[test]
+    fn embedded_chaos_is_seeded_from_the_plan() {
+        let src = "plan p\nnodes 4\nseed 21\nworkload a {\n kind flood\n ops 4\n}\n\
+                   chaos {\n eps 6\n horizon 200ms\n}\n";
+        let d1 = compile(&spec(src)).unwrap();
+        let d2 = compile(&spec(src)).unwrap();
+        let c1 = d1.chaos.as_ref().unwrap();
+        let c2 = d2.chaos.as_ref().unwrap();
+        assert_eq!(c1.digest(), c2.digest());
+        assert_eq!(c1.horizon_ns, 200_000_000);
+        let mut s3 = spec(src);
+        s3.seed = 22;
+        let d3 = compile(&s3).unwrap();
+        assert_ne!(c1.digest(), d3.chaos.as_ref().unwrap().digest());
+    }
+
+    #[test]
+    fn every_op_is_in_bounds() {
+        let s = spec(
+            "plan p\nnodes 4\nworkload a {\n kind hicache_fetch\n clients 6\n ops 16\n}\n\
+             workload b {\n kind flood\n ops 16\n}\nworkload c {\n kind rl_update\n rounds 2\n}\n",
+        );
+        let d = compile(&s).unwrap();
+        for st in &d.stages {
+            for stream in &st.streams {
+                for o in &stream.ops {
+                    assert!(o.src < st.segs.len() && o.dst < st.segs.len());
+                    assert!(o.src_off + o.len <= st.segs[o.src].len, "{}: src oob", st.name);
+                    assert!(o.dst_off + o.len <= st.segs[o.dst].len, "{}: dst oob", st.name);
+                    assert!((st.segs[o.src].node as u64) < 4);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,391 @@
+//! Plan execution: drive a compiled [`PlanDag`] through a live
+//! [`Fleet`], wave by wave, with the embedded chaos schedule (if any)
+//! replaying on its own thread — and emit the deterministic journal.
+//!
+//! Stage streams use the exact submission idiom of
+//! `Fleet::run_workload`: one thread per stream, a `VecDeque` pipeline
+//! window of outstanding batches, reap via `wait_any`. The difference is
+//! that every op was already decided at compile time, so the only
+//! run-to-run variance is wall-clock — which the journal excludes.
+
+use super::compile::{PlanDag, Stage};
+use super::journal::Journal;
+use super::parser::PlanSpec;
+use crate::chaos::injector;
+use crate::cluster::{Fleet, FleetConfig};
+use crate::engine::{TentEngine, TransferClass, TransferReq};
+use crate::segment::{Location, SegmentId};
+use crate::util::canon;
+use crate::util::clock;
+use crate::util::hist::Histogram;
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Per-stage measured outcome (informational; not journaled).
+pub struct StageOutcome {
+    pub name: String,
+    /// Scheduled op count (compile-time fact).
+    pub ops: u64,
+    /// Ops that failed or could not be submitted.
+    pub failed: u64,
+    /// Scheduled payload bytes.
+    pub bytes: u64,
+    pub wall_ns: u64,
+}
+
+/// Everything one plan run produced.
+pub struct PlanReport {
+    pub plan: String,
+    pub seed: u64,
+    /// Plan identity: `canon::fnv1a64` of the spec's canonical JSON.
+    pub digest: u64,
+    pub nodes: usize,
+    pub wall_ns: u64,
+    pub total_ops: u64,
+    pub failed_ops: u64,
+    /// Scheduled payload bytes across all stages.
+    pub total_bytes: u64,
+    pub stages: Vec<StageOutcome>,
+    pub latency_hist: Histogram,
+    pub bulk_hist: Histogram,
+    /// Applied chaos actions (empty without a `chaos` stanza).
+    pub chaos_actions: usize,
+    /// The deterministic execution journal — replays of `(plan, seed)`
+    /// produce byte-identical `journal.to_jsonl()`.
+    pub journal: Journal,
+}
+
+impl PlanReport {
+    pub fn journal_digest(&self) -> u64 {
+        self.journal.digest()
+    }
+
+    /// One-line run identity, printed above the stage table.
+    pub fn header(&self) -> String {
+        format!(
+            "plan={} nodes={} seed={:#x} plan_digest={} journal_digest={}",
+            self.plan,
+            self.nodes,
+            self.seed,
+            canon::digest_hex(self.digest),
+            self.journal.digest_hex()
+        )
+    }
+
+    /// Per-stage outcome table.
+    pub fn table(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "  {:<20} {:>8} {:>8} {:>12} {:>12}",
+            "stage", "ops", "failed", "bytes", "wall"
+        );
+        for s in &self.stages {
+            let _ = writeln!(
+                out,
+                "  {:<20} {:>8} {:>8} {:>12} {:>12}",
+                s.name,
+                s.ops,
+                s.failed,
+                crate::util::fmt_bytes(s.bytes),
+                crate::util::fmt_ns(s.wall_ns)
+            );
+        }
+        let _ = writeln!(
+            out,
+            "  total: {} ops ({} failed), {} in {}, chaos_actions={}",
+            self.total_ops,
+            self.failed_ops,
+            crate::util::fmt_bytes(self.total_bytes),
+            crate::util::fmt_ns(self.wall_ns),
+            self.chaos_actions
+        );
+        out
+    }
+
+    /// Machine-readable summary for the CLI's `--json` and the bench.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("plan", Json::str(&self.plan)),
+            ("seed", Json::str(&self.seed.to_string())),
+            ("plan_digest", Json::str(&canon::digest_hex(self.digest))),
+            ("journal_digest", Json::str(&self.journal.digest_hex())),
+            ("nodes", Json::num(self.nodes as f64)),
+            ("stages", Json::num(self.stages.len() as f64)),
+            ("ops", Json::num(self.total_ops as f64)),
+            ("failed", Json::num(self.failed_ops as f64)),
+            ("bytes", Json::num(self.total_bytes as f64)),
+            ("wall_ns", Json::num(self.wall_ns as f64)),
+            ("chaos_actions", Json::num(self.chaos_actions as f64)),
+        ])
+    }
+}
+
+/// Build a fleet shaped for this plan: its profile, node count, and
+/// fabric time compression. The CLI, bench, and tests all go through this
+/// so every plan knob that shapes execution is actually honored.
+pub fn fleet_for(spec: &PlanSpec) -> Result<Fleet> {
+    let mut cfg = FleetConfig::new(&spec.profile, spec.nodes);
+    cfg.fabric.time_compression = spec.time_compression;
+    Fleet::new(cfg)
+}
+
+/// Run a compiled plan against the fleet. The fleet must have been built
+/// for the plan's node count (use [`fleet_for`]).
+pub fn run(fleet: &Fleet, dag: &PlanDag) -> Result<PlanReport> {
+    if fleet.nodes() != dag.spec.nodes as usize {
+        return Err(Error::Config(format!(
+            "plan `{}` compiled for {} nodes but the fleet has {}",
+            dag.spec.name,
+            dag.spec.nodes,
+            fleet.nodes()
+        )));
+    }
+    let fabric = Arc::clone(&fleet.cluster.fabric);
+    if let Some(sched) = &dag.chaos {
+        injector::validate(&fabric, sched)?;
+    }
+
+    let lat_hist = Histogram::new();
+    let bulk_hist = Histogram::new();
+    let mut outcomes: Vec<StageOutcome> = dag
+        .stages
+        .iter()
+        .map(|s| StageOutcome {
+            name: s.name.clone(),
+            ops: s.ops_count(),
+            failed: 0,
+            bytes: s.bytes(),
+            wall_ns: 0,
+        })
+        .collect();
+
+    let start = clock::now_ns();
+    // The injector thread spans the whole run; waves execute sequentially
+    // inside, each stage of a wave on its own thread. An early error exit
+    // still joins the injector (scope guarantees it).
+    let applied = std::thread::scope(|scope| -> Result<Vec<injector::AppliedAction>> {
+        let inj = dag.chaos.as_ref().map(|sched| {
+            let fab = &fabric;
+            scope.spawn(move || injector::replay(fab, sched, None, start))
+        });
+        for wave in &dag.waves {
+            let results: Vec<(usize, Result<(u64, u64)>)> = std::thread::scope(|ws| {
+                let handles: Vec<_> = wave
+                    .iter()
+                    .map(|&i| {
+                        let lat = &lat_hist;
+                        let bulk = &bulk_hist;
+                        (i, ws.spawn(move || run_stage(fleet, &dag.stages[i], lat, bulk)))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|(i, h)| (i, h.join().expect("plan stage thread panicked")))
+                    .collect()
+            });
+            for (i, r) in results {
+                let (failed, wall_ns) = r?;
+                outcomes[i].failed = failed;
+                outcomes[i].wall_ns = wall_ns;
+            }
+        }
+        match inj {
+            None => Ok(Vec::new()),
+            Some(h) => h.join().expect("chaos injector panicked"),
+        }
+    });
+    // Restore the fabric before error handling, so a failed run never
+    // leaves rails down for the next plan on this fleet.
+    if let Some(sched) = &dag.chaos {
+        injector::recover_touched(&fabric, sched);
+    }
+    let applied = applied?;
+    let wall_ns = clock::now_ns().saturating_sub(start);
+
+    // -- assemble the journal in deterministic order -----------------------
+    let mut journal = Journal::new();
+    journal.record_plan(dag);
+    if let Some(sched) = &dag.chaos {
+        journal.record_chaos(sched);
+    }
+    for (i, st) in dag.stages.iter().enumerate() {
+        journal.record_stage(i, st);
+    }
+    for a in &applied {
+        journal.record_action(a);
+    }
+    journal.record_end(dag.total_ops(), dag.stages.len());
+
+    Ok(PlanReport {
+        plan: dag.spec.name.clone(),
+        seed: dag.spec.seed,
+        digest: dag.digest,
+        nodes: fleet.nodes(),
+        wall_ns,
+        total_ops: dag.total_ops(),
+        failed_ops: outcomes.iter().map(|o| o.failed).sum(),
+        total_bytes: dag.total_bytes(),
+        stages: outcomes,
+        latency_hist: lat_hist,
+        bulk_hist,
+        chaos_actions: applied.len(),
+        journal,
+    })
+}
+
+/// One outstanding batch in a stream's pipeline window.
+struct PendingOp {
+    batch: crate::engine::BatchId,
+    t0: u64,
+    class: TransferClass,
+}
+
+/// Execute one stage: register its segments, run every stream with window
+/// pipelining, unregister. Returns `(failed_ops, wall_ns)`.
+fn run_stage(
+    fleet: &Fleet,
+    stage: &Stage,
+    lat_hist: &Histogram,
+    bulk_hist: &Histogram,
+) -> Result<(u64, u64)> {
+    // The segment namespace is cluster-wide, so one engine can register on
+    // behalf of all (run_workload registers cross-node stores the same way).
+    let reg = fleet.engine(0);
+    let mut ids: Vec<SegmentId> = Vec::with_capacity(stage.segs.len());
+    for s in &stage.segs {
+        ids.push(reg.register_segment(Location::host(s.node, 0), s.len)?);
+    }
+    let failed = AtomicU64::new(0);
+    let window = stage.window.max(1);
+    let t0 = clock::now_ns();
+    std::thread::scope(|scope| {
+        for stream in &stage.streams {
+            let engine = Arc::clone(fleet.engine(stream.engine));
+            let ids = &ids;
+            let failed = &failed;
+            scope.spawn(move || {
+                let mut inflight: VecDeque<PendingOp> = VecDeque::with_capacity(window);
+                let reap = |engine: &TentEngine, q: &mut VecDeque<PendingOp>| {
+                    if let Some(p) = q.pop_front() {
+                        let ok = engine
+                            .wait_any(p.batch, Duration::from_secs(120))
+                            .map(|st| st.ok())
+                            .unwrap_or(false);
+                        let _ = engine.release_batch(p.batch);
+                        if ok {
+                            let dt = clock::now_ns().saturating_sub(p.t0);
+                            match p.class {
+                                TransferClass::Latency => lat_hist.record(dt),
+                                TransferClass::Bulk => bulk_hist.record(dt),
+                            }
+                        } else {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                };
+                for (n, op) in stream.ops.iter().enumerate() {
+                    let req = if op.read {
+                        TransferReq::read(ids[op.src], op.src_off, ids[op.dst], op.dst_off, op.len)
+                    } else {
+                        TransferReq::write(ids[op.src], op.src_off, ids[op.dst], op.dst_off, op.len)
+                    }
+                    .class(op.class);
+                    let batch = engine.allocate_batch();
+                    let t0 = clock::now_ns();
+                    if engine.submit(batch, &[req]).is_err() {
+                        // Cluster shutting down: everything not yet
+                        // submitted counts as failed.
+                        let _ = engine.release_batch(batch);
+                        failed.fetch_add((stream.ops.len() - n) as u64, Ordering::Relaxed);
+                        break;
+                    }
+                    inflight.push_back(PendingOp {
+                        batch,
+                        t0,
+                        class: op.class,
+                    });
+                    if inflight.len() >= window {
+                        reap(&engine, &mut inflight);
+                    }
+                }
+                while !inflight.is_empty() {
+                    reap(&engine, &mut inflight);
+                }
+            });
+        }
+    });
+    let wall_ns = clock::now_ns().saturating_sub(t0);
+    for id in ids {
+        let _ = reg.unregister_segment(id);
+    }
+    Ok((failed.load(Ordering::Relaxed), wall_ns))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::compile::compile;
+
+    fn fleet(spec: &PlanSpec) -> Fleet {
+        fleet_for(spec).unwrap()
+    }
+
+    #[test]
+    fn plan_run_journals_deterministically() {
+        let spec = PlanSpec::parse(
+            "plan t\nnodes 2\nseed 5\nworkload f {\n kind flood\n ops 8\n streams 2\n}\n\
+             workload b {\n kind broadcast\n payload 1M\n chunk 256K\n after f\n}\n",
+        )
+        .unwrap();
+        let dag = compile(&spec).unwrap();
+        let r1 = run(&fleet(&spec), &dag).unwrap();
+        let r2 = run(&fleet(&spec), &dag).unwrap();
+        assert_eq!(r1.failed_ops, 0, "no failures without chaos");
+        assert_eq!(r1.total_ops, dag.total_ops());
+        assert_eq!(
+            r1.journal.to_jsonl(),
+            r2.journal.to_jsonl(),
+            "replay must be byte-identical"
+        );
+        assert_eq!(r1.journal_digest(), r2.journal_digest());
+        // plan + 2 flood/broadcast stages + end.
+        assert_eq!(r1.journal.len(), 1 + dag.stages.len() + 1);
+        assert!(r1.latency_hist.count() > 0 && r1.bulk_hist.count() > 0);
+        assert!(r1.header().contains("journal_digest="));
+    }
+
+    #[test]
+    fn chaos_plan_replays_with_identical_action_log() {
+        let spec = PlanSpec::parse(
+            "plan c\nnodes 2\nseed 13\nworkload f {\n kind flood\n ops 24\n}\n\
+             chaos {\n eps 8\n horizon 60ms\n storms 0\n flap_cycles 0\n slow_drains 0\n ramps 0\n}\n",
+        )
+        .unwrap();
+        let dag = compile(&spec).unwrap();
+        assert!(dag.chaos.is_some());
+        let r1 = run(&fleet(&spec), &dag).unwrap();
+        let r2 = run(&fleet(&spec), &dag).unwrap();
+        assert_eq!(r1.journal.to_jsonl(), r2.journal.to_jsonl());
+        // The fleet heals and stays reusable after the run.
+        let f = fleet(&spec);
+        let _ = run(&f, &dag).unwrap();
+        let again = run(&f, &dag).unwrap();
+        assert_eq!(again.journal_digest(), r1.journal_digest());
+    }
+
+    #[test]
+    fn rejects_a_mis_sized_fleet() {
+        let spec =
+            PlanSpec::parse("plan t\nnodes 4\nworkload f {\n kind flood\n ops 2\n}\n").unwrap();
+        let dag = compile(&spec).unwrap();
+        let small = Fleet::new(FleetConfig::new("h800_hgx", 2)).unwrap();
+        let e = run(&small, &dag).unwrap_err().to_string();
+        assert!(e.contains("4 nodes") && e.contains("2"), "{e}");
+    }
+}

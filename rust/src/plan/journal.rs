@@ -1,0 +1,245 @@
+//! Append-only execution journal: one canonical-JSON event per line, with
+//! an FNV-1a digest over the whole text (the same `util::canon` writer and
+//! digest the chaos subsystem uses for `ChaosReport::replay_signature`).
+//!
+//! Every journaled quantity is *scheduled*, not measured: op counts, op
+//! digests, chaos actions at their schedule-relative offsets. Wall-clock
+//! values (goodput, latency histograms, failure counts under injected
+//! faults) never enter — real threads never repeat them, and the journal's
+//! whole point is that two runs of `(plan file, seed)` produce
+//! byte-identical text.
+
+use super::compile::{PlanDag, Stage};
+use crate::chaos::{AppliedAction, ChaosSchedule};
+use crate::util::canon;
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::path::Path;
+
+/// An append-only event log with a canonical serialized form.
+#[derive(Clone, Debug, Default)]
+pub struct Journal {
+    events: Vec<Json>,
+}
+
+impl Journal {
+    pub fn new() -> Journal {
+        Journal::default()
+    }
+
+    pub fn push(&mut self, ev: Json) {
+        self.events.push(ev);
+    }
+
+    pub fn events(&self) -> &[Json] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Canonical text form: one sorted-key JSON object per line, trailing
+    /// newline. This is what [`Journal::digest`] hashes and what `save`
+    /// writes, so a journal loaded back from disk digests identically.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in &self.events {
+            out.push_str(&ev.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// FNV-1a 64 over the canonical text.
+    pub fn digest(&self) -> u64 {
+        canon::fnv1a64(&self.to_jsonl())
+    }
+
+    pub fn digest_hex(&self) -> String {
+        canon::digest_hex(self.digest())
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_jsonl()).map_err(Error::Io)
+    }
+
+    /// Parse a journal back from jsonl text. Key order in the input does
+    /// not matter — events re-canonicalize on parse, so
+    /// `from_jsonl(j.to_jsonl())` always digests equal to `j`.
+    pub fn from_jsonl(src: &str) -> Result<Journal> {
+        let mut events = Vec::new();
+        for (i, line) in src.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let ev = Json::parse(line).map_err(|e| {
+                Error::Config(format!("journal line {}: {e}", i + 1))
+            })?;
+            if ev.as_obj().is_none() || ev.get("ev").as_str().is_none() {
+                return Err(Error::Config(format!(
+                    "journal line {}: event without an `ev` tag",
+                    i + 1
+                )));
+            }
+            events.push(ev);
+        }
+        Ok(Journal { events })
+    }
+
+    pub fn load(path: &Path) -> Result<Journal> {
+        let src = std::fs::read_to_string(path).map_err(Error::Io)?;
+        Journal::from_jsonl(&src)
+    }
+
+    /// First divergence between two journals, or `None` if byte-identical.
+    pub fn diff(&self, other: &Journal) -> Option<String> {
+        let a = self.to_jsonl();
+        let b = other.to_jsonl();
+        if a == b {
+            return None;
+        }
+        for (i, (la, lb)) in a.lines().zip(b.lines()).enumerate() {
+            if la != lb {
+                return Some(format!("event {}: `{la}` != `{lb}`", i + 1));
+            }
+        }
+        Some(format!(
+            "event counts differ: {} vs {}",
+            self.events.len(),
+            other.events.len()
+        ))
+    }
+
+    // -- typed event constructors -----------------------------------------
+
+    /// Leading event: the plan identity the rest of the journal hangs off.
+    pub fn record_plan(&mut self, dag: &PlanDag) {
+        self.push(Json::obj(vec![
+            ("ev", Json::str("plan")),
+            ("version", Json::num(1.0)),
+            ("plan", Json::str(&dag.spec.name)),
+            ("digest", Json::str(&canon::digest_hex(dag.digest))),
+            ("profile", Json::str(&dag.spec.profile)),
+            ("nodes", Json::num(dag.spec.nodes as f64)),
+            ("seed", Json::str(&dag.spec.seed.to_string())),
+            ("stages", Json::num(dag.stages.len() as f64)),
+            ("waves", Json::num(dag.waves.len() as f64)),
+        ]));
+    }
+
+    /// The embedded fault schedule, if the plan carries one.
+    pub fn record_chaos(&mut self, sched: &ChaosSchedule) {
+        self.push(Json::obj(vec![
+            ("ev", Json::str("chaos")),
+            ("digest", Json::str(&canon::digest_hex(sched.digest()))),
+            ("events", Json::num(sched.events.len() as f64)),
+            ("horizon_ns", Json::num(sched.horizon_ns as f64)),
+        ]));
+    }
+
+    /// One executed stage. Only *scheduled* quantities enter: which ops ran
+    /// is a compile-time fact; how many failed under injected faults is a
+    /// wall-clock fact and stays in the [`super::exec::PlanReport`].
+    pub fn record_stage(&mut self, idx: usize, stage: &Stage) {
+        self.push(Json::obj(vec![
+            ("ev", Json::str("stage")),
+            ("idx", Json::num(idx as f64)),
+            ("name", Json::str(&stage.name)),
+            ("ops", Json::num(stage.ops_count() as f64)),
+            ("ops_digest", Json::str(&canon::digest_hex(stage.ops_digest))),
+        ]));
+    }
+
+    /// One applied chaos action, at its *scheduled* offset.
+    pub fn record_action(&mut self, a: &AppliedAction) {
+        self.push(Json::obj(vec![
+            ("ev", Json::str("chaos_action")),
+            ("at_ns", Json::num(a.at_ns as f64)),
+            ("rail", Json::num(a.rail.0 as f64)),
+            ("kind", Json::str(a.kind.name())),
+            ("factor", Json::num(a.factor)),
+        ]));
+    }
+
+    /// Closing event: total scheduled ops and stage count.
+    pub fn record_end(&mut self, ops: u64, stages: usize) {
+        self.push(Json::obj(vec![
+            ("ev", Json::str("end")),
+            ("ops", Json::num(ops as f64)),
+            ("stages", Json::num(stages as f64)),
+        ]));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Journal {
+        let mut j = Journal::new();
+        j.push(Json::obj(vec![
+            ("ev", Json::str("plan")),
+            ("plan", Json::str("t")),
+            ("seed", Json::str("7")),
+        ]));
+        j.push(Json::obj(vec![
+            ("ev", Json::str("end")),
+            ("ok", Json::Bool(true)),
+            ("ops", Json::num(12.0)),
+        ]));
+        j
+    }
+
+    #[test]
+    fn roundtrip_preserves_the_digest() {
+        let j = sample();
+        let back = Journal::from_jsonl(&j.to_jsonl()).unwrap();
+        assert_eq!(j.digest(), back.digest());
+        assert_eq!(j.to_jsonl(), back.to_jsonl());
+        // Scrambled key order in the input still canonicalizes.
+        let scrambled = "{\"seed\":\"7\",\"plan\":\"t\",\"ev\":\"plan\"}\n\
+                         {\"ops\":12,\"ok\":true,\"ev\":\"end\"}\n";
+        let j2 = Journal::from_jsonl(scrambled).unwrap();
+        assert_eq!(j.digest(), j2.digest());
+    }
+
+    #[test]
+    fn digest_is_sensitive_to_every_event() {
+        let j = sample();
+        let mut j2 = sample();
+        j2.record_end(12, 1);
+        assert_ne!(j.digest(), j2.digest());
+        let d = j.diff(&j2).unwrap();
+        assert!(d.contains("counts differ"), "{d}");
+    }
+
+    #[test]
+    fn diff_pinpoints_the_first_divergence() {
+        let j = sample();
+        let mut k = Journal::new();
+        k.push(j.events()[0].clone());
+        k.push(Json::obj(vec![
+            ("ev", Json::str("end")),
+            ("ok", Json::Bool(false)),
+            ("ops", Json::num(12.0)),
+        ]));
+        let d = j.diff(&k).unwrap();
+        assert!(d.starts_with("event 2:"), "{d}");
+        assert!(j.diff(&j).is_none());
+    }
+
+    #[test]
+    fn rejects_untagged_lines() {
+        assert!(Journal::from_jsonl("{\"no_tag\":1}\n").is_err());
+        assert!(Journal::from_jsonl("not json\n").is_err());
+        // Blank lines are tolerated.
+        let j = Journal::from_jsonl("\n{\"ev\":\"end\"}\n\n").unwrap();
+        assert_eq!(j.len(), 1);
+    }
+}

@@ -1,0 +1,59 @@
+//! Declarative transfer-plan DSL with a deterministic replay journal
+//! (`docs/DSL.md` is the spec; `plans/*.tent` are the shipped examples).
+//!
+//! A plan declares *what* should move — HiCache fetch storms, checkpoint
+//! broadcasts, RL parameter-update rounds, mixed-QoS floods, optionally
+//! with an embedded chaos schedule — and the engine decides how. The
+//! pipeline is `parse → resolve/typecheck → compile → PlanDag`:
+//!
+//! * [`parser`] — the line-oriented `.tent` form and its equivalent
+//!   canonical-JSON form, with span-carrying errors and byte-identical
+//!   round trips ([`PlanSpec::to_json`] / [`PlanSpec::from_json`]).
+//! * [`compile`] — name resolution, per-kind field validation, DAG
+//!   lowering into waves of stages whose every op (peer choices included)
+//!   is drawn from PRNG streams seeded by `(plan seed, stage name)` at
+//!   compile time.
+//! * [`exec`] — `Fleet::run_plan`: wave-parallel execution with the
+//!   `run_workload` submission idiom, chaos replayed on its own thread.
+//! * [`journal`] — the append-only execution record: canonical-JSON
+//!   events + FNV digest (the `ChaosReport::replay_signature` contract),
+//!   so any run replays byte-identically from `(plan file, seed)`.
+//!
+//! ```
+//! use tent::plan::{compile, PlanSpec};
+//!
+//! let spec = PlanSpec::parse(
+//!     "plan demo\nnodes 2\nseed 3\n\
+//!      workload fetch {\n kind hicache_fetch\n ops 4\n}\n\
+//!      workload push {\n kind broadcast\n payload 1M\n after fetch\n}\n",
+//! )
+//! .unwrap();
+//! let dag = compile(&spec).unwrap();
+//! // `push` waits on `fetch`: two waves.
+//! assert_eq!(dag.waves.len(), 2);
+//! // The DSL and its canonical JSON are the same plan.
+//! let json = PlanSpec::from_json(&spec.to_json()).unwrap();
+//! assert_eq!(compile(&json).unwrap().digest, dag.digest);
+//! ```
+
+pub mod compile;
+pub mod exec;
+pub mod journal;
+pub mod parser;
+
+pub use compile::{compile, PlanDag, PlanOp, SegDecl, Stage, StreamOps};
+pub use exec::{fleet_for, run, PlanReport, StageOutcome};
+pub use journal::Journal;
+pub use parser::{PlanSpec, WorkloadKind, WorkloadSpec};
+
+/// Every key the parser accepts, by stanza — `tests/plan_replay.rs` checks
+/// each one appears in `docs/DSL.md`, so the spec can't silently drift
+/// from the implementation.
+pub fn known_keys() -> Vec<(&'static str, &'static [&'static str])> {
+    vec![
+        ("plan", parser::PLAN_KEYS),
+        ("workload", parser::WORKLOAD_KEYS),
+        ("chaos", parser::CHAOS_KEYS),
+        ("kind", parser::WORKLOAD_KINDS),
+    ]
+}

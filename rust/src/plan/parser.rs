@@ -1,0 +1,820 @@
+//! The `.tent` plan format: a line-oriented DSL plus an equivalent
+//! canonical-JSON form.
+//!
+//! The DSL is deliberately tiny — comments, one `plan <name>` declaration,
+//! flat `key value` header lines, and two brace-stanza kinds (`workload`,
+//! `chaos`). Every field the parser accepts is listed in [`PLAN_KEYS`] /
+//! [`WORKLOAD_KEYS`] / [`CHAOS_KEYS`]; `tests/plan_replay.rs` enumerates
+//! those tables against `docs/DSL.md`, so the spec and this file cannot
+//! drift apart. All errors carry the 1-based source line (`line N: ...`).
+//!
+//! The canonical-JSON form ([`PlanSpec::to_json`]) flattens each stanza
+//! into one object with BTreeMap-sorted keys and deterministic number
+//! formatting, so equal specs serialize byte-equal — the plan digest
+//! (`fnv1a64(to_json())`) identifies a plan the same way
+//! `ChaosSchedule::digest` identifies a fault schedule.
+
+use crate::engine::TransferClass;
+use crate::util::cli::parse_size;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Plan-header fields (`key value` lines before/between stanzas).
+pub const PLAN_KEYS: &[&str] = &["profile", "nodes", "seed", "time_compression", "window"];
+
+/// Workload-stanza fields. `kind`, `class`, and `after` are structural;
+/// the rest are per-kind parameters validated in `compile`.
+pub const WORKLOAD_KEYS: &[&str] = &[
+    "kind",
+    "class",
+    "after",
+    "clients",
+    "ops",
+    "block",
+    "window",
+    "root",
+    "payload",
+    "chunk",
+    "fanout",
+    "rounds",
+    "ranks",
+    "streams",
+    "latency_block",
+    "bulk_block",
+    "bulk_every",
+];
+
+/// Chaos-stanza fields (all optional; defaults mirror
+/// `chaos::ScenarioMix::default`).
+pub const CHAOS_KEYS: &[&str] = &[
+    "eps",
+    "horizon",
+    "storms",
+    "storm_rails",
+    "storm_outage",
+    "flap_cycles",
+    "flap_period",
+    "slow_drains",
+    "ramps",
+    "max_down_fraction",
+];
+
+/// Workload-kind vocabulary accepted by `kind`.
+pub const WORKLOAD_KINDS: &[&str] = &["hicache_fetch", "broadcast", "rl_update", "flood"];
+
+/// Fields holding durations (accept `ns`/`us`/`ms`/`s` suffixes; stored ns).
+const DURATION_KEYS: &[&str] = &["horizon", "storm_outage", "flap_period"];
+/// Fields holding plain floats.
+const FLOAT_KEYS: &[&str] = &["eps", "max_down_fraction", "time_compression"];
+
+/// What a workload stanza compiles into (see `plan::compile`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum WorkloadKind {
+    /// HiCache fetch storm: latency-class random-peer KV-block reads.
+    HicacheFetch,
+    /// Checkpoint broadcast: bulk-class chunked pushes root → peers.
+    Broadcast,
+    /// OrchestrRL-style parameter-update rounds: chained broadcasts.
+    RlUpdate,
+    /// Mixed QoS flood: interleaved latency reads + bulk pushes.
+    Flood,
+}
+
+impl WorkloadKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkloadKind::HicacheFetch => "hicache_fetch",
+            WorkloadKind::Broadcast => "broadcast",
+            WorkloadKind::RlUpdate => "rl_update",
+            WorkloadKind::Flood => "flood",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<WorkloadKind> {
+        Some(match s {
+            "hicache_fetch" => WorkloadKind::HicacheFetch,
+            "broadcast" => WorkloadKind::Broadcast,
+            "rl_update" => WorkloadKind::RlUpdate,
+            "flood" => WorkloadKind::Flood,
+            _ => return None,
+        })
+    }
+}
+
+/// One explicitly-set parameter, with its source line for error spans.
+/// Only explicit fields are stored (defaults apply at compile time), so
+/// DSL → JSON → DSL round-trips reproduce exactly what was written.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Param {
+    pub key: String,
+    pub value: f64,
+    /// 1-based source line; 0 when the spec came from JSON.
+    pub line: u32,
+}
+
+/// One `workload <name> { ... }` stanza.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadSpec {
+    pub name: String,
+    pub kind: WorkloadKind,
+    /// QoS override; each kind has a natural default class.
+    pub class: Option<TransferClass>,
+    /// DAG dependencies: names of workloads that must complete first.
+    pub after: Vec<String>,
+    pub params: Vec<Param>,
+    /// Source line of the stanza header.
+    pub line: u32,
+}
+
+impl WorkloadSpec {
+    pub fn param(&self, key: &str) -> Option<f64> {
+        self.params.iter().find(|p| p.key == key).map(|p| p.value)
+    }
+}
+
+/// One `chaos { ... }` stanza (at most one per plan).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosStanza {
+    pub params: Vec<Param>,
+    pub line: u32,
+}
+
+impl ChaosStanza {
+    pub fn param(&self, key: &str) -> Option<f64> {
+        self.params.iter().find(|p| p.key == key).map(|p| p.value)
+    }
+}
+
+/// A parsed, structurally-valid plan (resolve/compile happens in
+/// `plan::compile`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanSpec {
+    pub name: String,
+    /// Topology profile (any name `topology::profile::build_profile` takes).
+    pub profile: String,
+    pub nodes: u16,
+    /// Full-width u64; serialized as a string in the JSON form.
+    pub seed: u64,
+    /// Fabric time compression for execution (default 20.0, the fleet
+    /// bench default).
+    pub time_compression: f64,
+    /// Default pipelining window for workloads that don't set their own.
+    pub window: usize,
+    pub workloads: Vec<WorkloadSpec>,
+    pub chaos: Option<ChaosStanza>,
+}
+
+impl Default for PlanSpec {
+    fn default() -> Self {
+        PlanSpec {
+            name: String::new(),
+            profile: "h800_hgx".to_string(),
+            nodes: 4,
+            seed: 7,
+            time_compression: 20.0,
+            window: 4,
+            workloads: Vec::new(),
+            chaos: None,
+        }
+    }
+}
+
+fn err(line: u32, msg: impl std::fmt::Display) -> Error {
+    Error::Config(format!("line {line}: {msg}"))
+}
+
+fn parse_u64_any(s: &str) -> Option<u64> {
+    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse::<u64>().ok()
+    }
+}
+
+/// Parse a duration with an optional `ns`/`us`/`ms`/`s` suffix into ns.
+/// Bare numbers are nanoseconds.
+pub fn parse_duration_ns(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let (num, mult) = if let Some(p) = s.strip_suffix("ms") {
+        (p, 1_000_000.0)
+    } else if let Some(p) = s.strip_suffix("us") {
+        (p, 1_000.0)
+    } else if let Some(p) = s.strip_suffix("ns") {
+        (p, 1.0)
+    } else if let Some(p) = s.strip_suffix('s') {
+        (p, 1_000_000_000.0)
+    } else {
+        (s, 1.0)
+    };
+    let v = num.trim().parse::<f64>().ok()?;
+    if v < 0.0 || !v.is_finite() {
+        return None;
+    }
+    Some((v * mult) as u64)
+}
+
+/// Parse one field value according to its key's type class.
+fn parse_value(key: &str, raw: &str, line: u32) -> Result<f64> {
+    if DURATION_KEYS.contains(&key) {
+        return parse_duration_ns(raw)
+            .map(|ns| ns as f64)
+            .ok_or_else(|| err(line, format!("bad duration for `{key}`: `{raw}` (try e.g. 250ms)")));
+    }
+    if FLOAT_KEYS.contains(&key) {
+        return raw
+            .parse::<f64>()
+            .ok()
+            .filter(|v| v.is_finite() && *v >= 0.0)
+            .ok_or_else(|| err(line, format!("bad number for `{key}`: `{raw}`")));
+    }
+    parse_size(raw)
+        .map(|n| n as f64)
+        .ok_or_else(|| err(line, format!("bad size/count for `{key}`: `{raw}` (try e.g. 256K)")))
+}
+
+fn valid_ident(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+}
+
+enum State {
+    Top,
+    Workload(WorkloadBuilder),
+    Chaos(ChaosStanza),
+}
+
+struct WorkloadBuilder {
+    name: String,
+    kind: Option<WorkloadKind>,
+    class: Option<TransferClass>,
+    after: Vec<String>,
+    params: Vec<Param>,
+    line: u32,
+}
+
+impl PlanSpec {
+    /// Parse either format: canonical JSON (first non-space byte `{`) or
+    /// the line-oriented DSL.
+    pub fn parse_any(src: &str) -> Result<PlanSpec> {
+        if src.trim_start().starts_with('{') {
+            PlanSpec::from_json(src)
+        } else {
+            PlanSpec::parse(src)
+        }
+    }
+
+    /// Parse the line-oriented DSL. Errors carry `line N:` spans.
+    pub fn parse(src: &str) -> Result<PlanSpec> {
+        let mut spec = PlanSpec::default();
+        let mut named = false;
+        let mut state = State::Top;
+        let mut seen_plan_keys: Vec<String> = Vec::new();
+
+        for (i, raw) in src.lines().enumerate() {
+            let line = (i + 1) as u32;
+            let text = raw.split('#').next().unwrap_or("").trim();
+            if text.is_empty() {
+                continue;
+            }
+            match &mut state {
+                State::Top => {
+                    let (head, rest) = split_first(text);
+                    match head {
+                        "plan" => {
+                            if named {
+                                return Err(err(line, "duplicate `plan` declaration"));
+                            }
+                            if !valid_ident(rest) {
+                                return Err(err(line, format!("bad plan name `{rest}`")));
+                            }
+                            spec.name = rest.to_string();
+                            named = true;
+                        }
+                        "workload" => {
+                            let (name, brace) = split_last(rest);
+                            if brace != "{" || !valid_ident(name) {
+                                return Err(err(line, "expected `workload <name> {`"));
+                            }
+                            state = State::Workload(WorkloadBuilder {
+                                name: name.to_string(),
+                                kind: None,
+                                class: None,
+                                after: Vec::new(),
+                                params: Vec::new(),
+                                line,
+                            });
+                        }
+                        "chaos" => {
+                            if rest != "{" {
+                                return Err(err(line, "expected `chaos {`"));
+                            }
+                            if spec.chaos.is_some() {
+                                return Err(err(line, "duplicate `chaos` stanza"));
+                            }
+                            state = State::Chaos(ChaosStanza {
+                                params: Vec::new(),
+                                line,
+                            });
+                        }
+                        key if PLAN_KEYS.contains(&key) => {
+                            if seen_plan_keys.iter().any(|k| k == key) {
+                                return Err(err(line, format!("duplicate plan field `{key}`")));
+                            }
+                            seen_plan_keys.push(key.to_string());
+                            apply_plan_key(&mut spec, key, rest, line)?;
+                        }
+                        other => {
+                            return Err(err(
+                                line,
+                                format!(
+                                    "unknown plan field `{other}` (known: {})",
+                                    PLAN_KEYS.join(", ")
+                                ),
+                            ));
+                        }
+                    }
+                }
+                State::Workload(b) => {
+                    if text == "}" {
+                        let b = match std::mem::replace(&mut state, State::Top) {
+                            State::Workload(b) => b,
+                            _ => unreachable!(),
+                        };
+                        let kind = b
+                            .kind
+                            .ok_or_else(|| err(b.line, format!("workload `{}` missing `kind`", b.name)))?;
+                        spec.workloads.push(WorkloadSpec {
+                            name: b.name,
+                            kind,
+                            class: b.class,
+                            after: b.after,
+                            params: b.params,
+                            line: b.line,
+                        });
+                        continue;
+                    }
+                    let (key, rest) = split_first(text);
+                    match key {
+                        "kind" => {
+                            if b.kind.is_some() {
+                                return Err(err(line, "duplicate `kind`"));
+                            }
+                            let k = WorkloadKind::parse(rest).ok_or_else(|| {
+                                err(
+                                    line,
+                                    format!(
+                                        "unknown kind `{rest}` (known: {})",
+                                        WORKLOAD_KINDS.join(", ")
+                                    ),
+                                )
+                            })?;
+                            b.kind = Some(k);
+                        }
+                        "class" => {
+                            if b.class.is_some() {
+                                return Err(err(line, "duplicate `class`"));
+                            }
+                            b.class = Some(parse_class(rest, line)?);
+                        }
+                        "after" => {
+                            if !b.after.is_empty() {
+                                return Err(err(line, "duplicate `after`"));
+                            }
+                            for dep in rest.split(',') {
+                                let dep = dep.trim();
+                                if !valid_ident(dep) {
+                                    return Err(err(line, format!("bad dependency name `{dep}`")));
+                                }
+                                b.after.push(dep.to_string());
+                            }
+                        }
+                        key if WORKLOAD_KEYS.contains(&key) => {
+                            if b.params.iter().any(|p| p.key == key) {
+                                return Err(err(line, format!("duplicate field `{key}`")));
+                            }
+                            let value = parse_value(key, rest, line)?;
+                            b.params.push(Param {
+                                key: key.to_string(),
+                                value,
+                                line,
+                            });
+                        }
+                        other => {
+                            return Err(err(
+                                line,
+                                format!(
+                                    "unknown workload field `{other}` (known: {})",
+                                    WORKLOAD_KEYS.join(", ")
+                                ),
+                            ));
+                        }
+                    }
+                }
+                State::Chaos(c) => {
+                    if text == "}" {
+                        let c = match std::mem::replace(&mut state, State::Top) {
+                            State::Chaos(c) => c,
+                            _ => unreachable!(),
+                        };
+                        spec.chaos = Some(c);
+                        continue;
+                    }
+                    let (key, rest) = split_first(text);
+                    if !CHAOS_KEYS.contains(&key) {
+                        return Err(err(
+                            line,
+                            format!(
+                                "unknown chaos field `{key}` (known: {})",
+                                CHAOS_KEYS.join(", ")
+                            ),
+                        ));
+                    }
+                    if c.params.iter().any(|p| p.key == key) {
+                        return Err(err(line, format!("duplicate field `{key}`")));
+                    }
+                    let value = parse_value(key, rest, line)?;
+                    c.params.push(Param {
+                        key: key.to_string(),
+                        value,
+                        line,
+                    });
+                }
+            }
+        }
+        match state {
+            State::Top => {}
+            State::Workload(b) => {
+                return Err(err(b.line, format!("unclosed workload `{}` (missing `}}`)", b.name)))
+            }
+            State::Chaos(c) => return Err(err(c.line, "unclosed chaos stanza (missing `}`)")),
+        }
+        if !named {
+            return Err(Error::Config("line 1: missing `plan <name>` declaration".into()));
+        }
+        if spec.workloads.is_empty() {
+            return Err(Error::Config(format!(
+                "plan `{}` declares no workloads",
+                spec.name
+            )));
+        }
+        Ok(spec)
+    }
+
+    /// Canonical JSON form: one object, BTreeMap-sorted keys, stanza params
+    /// flattened. Equal specs serialize byte-equal, so
+    /// `canon::fnv1a64(to_json())` is the plan identity.
+    pub fn to_json(&self) -> String {
+        let workloads = self
+            .workloads
+            .iter()
+            .map(|w| {
+                let mut pairs: Vec<(&str, Json)> = vec![
+                    ("name", Json::str(&w.name)),
+                    ("kind", Json::str(w.kind.name())),
+                ];
+                if let Some(c) = w.class {
+                    pairs.push(("class", Json::str(c.name())));
+                }
+                if !w.after.is_empty() {
+                    pairs.push(("after", Json::arr(w.after.iter().map(|a| Json::str(a)))));
+                }
+                for p in &w.params {
+                    pairs.push((p.key.as_str(), Json::num(p.value)));
+                }
+                Json::obj(pairs)
+            })
+            .collect::<Vec<_>>();
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("version", Json::num(1.0)),
+            ("plan", Json::str(&self.name)),
+            ("profile", Json::str(&self.profile)),
+            ("nodes", Json::num(self.nodes as f64)),
+            // Full-width u64 seeds survive the f64 JSON number type as text
+            // (same convention as ChaosSchedule::to_json).
+            ("seed", Json::str(&self.seed.to_string())),
+            ("time_compression", Json::num(self.time_compression)),
+            ("window", Json::num(self.window as f64)),
+            ("workloads", Json::arr(workloads)),
+        ];
+        if let Some(c) = &self.chaos {
+            pairs.push((
+                "chaos",
+                Json::obj(c.params.iter().map(|p| (p.key.as_str(), Json::num(p.value))).collect()),
+            ));
+        }
+        Json::obj(pairs).to_string()
+    }
+
+    /// Parse the canonical JSON form. Field vocabulary is validated against
+    /// the same key tables as the DSL; spans degrade to `line 0`.
+    pub fn from_json(src: &str) -> Result<PlanSpec> {
+        let j = Json::parse(src).map_err(|e| Error::Config(format!("plan json: {e}")))?;
+        let mut spec = PlanSpec {
+            name: j
+                .get("plan")
+                .as_str()
+                .ok_or_else(|| Error::Config("plan json: missing `plan` name".into()))?
+                .to_string(),
+            ..PlanSpec::default()
+        };
+        if let Some(p) = j.get("profile").as_str() {
+            spec.profile = p.to_string();
+        }
+        if let Some(n) = j.get("nodes").as_u64() {
+            spec.nodes = clamp_nodes(n, 0)?;
+        }
+        if let Some(s) = j.get("seed").as_str() {
+            spec.seed = parse_u64_any(s)
+                .ok_or_else(|| Error::Config(format!("plan json: bad seed `{s}`")))?;
+        } else if let Some(s) = j.get("seed").as_u64() {
+            spec.seed = s;
+        }
+        if let Some(t) = j.get("time_compression").as_f64() {
+            spec.time_compression = t;
+        }
+        if let Some(w) = j.get("window").as_u64() {
+            spec.window = w as usize;
+        }
+        let workloads = j
+            .get("workloads")
+            .as_arr()
+            .ok_or_else(|| Error::Config("plan json: missing `workloads` array".into()))?;
+        for (i, wj) in workloads.iter().enumerate() {
+            let obj = wj
+                .as_obj()
+                .ok_or_else(|| Error::Config(format!("plan json: workload {i} is not an object")))?;
+            let name = wj
+                .get("name")
+                .as_str()
+                .ok_or_else(|| Error::Config(format!("plan json: workload {i} missing `name`")))?
+                .to_string();
+            let kind = wj
+                .get("kind")
+                .as_str()
+                .and_then(WorkloadKind::parse)
+                .ok_or_else(|| {
+                    Error::Config(format!("plan json: workload `{name}` has a bad `kind`"))
+                })?;
+            let class = match wj.get("class").as_str() {
+                Some(c) => Some(parse_class(c, 0)?),
+                None => None,
+            };
+            let mut after = Vec::new();
+            if let Some(deps) = wj.get("after").as_arr() {
+                for d in deps {
+                    after.push(
+                        d.as_str()
+                            .ok_or_else(|| {
+                                Error::Config(format!(
+                                    "plan json: workload `{name}` has a non-string `after` entry"
+                                ))
+                            })?
+                            .to_string(),
+                    );
+                }
+            }
+            let mut params = Vec::new();
+            for (key, val) in obj {
+                if matches!(key.as_str(), "name" | "kind" | "class" | "after") {
+                    continue;
+                }
+                if !WORKLOAD_KEYS.contains(&key.as_str()) {
+                    return Err(Error::Config(format!(
+                        "plan json: workload `{name}`: unknown field `{key}` (known: {})",
+                        WORKLOAD_KEYS.join(", ")
+                    )));
+                }
+                let value = val.as_f64().ok_or_else(|| {
+                    Error::Config(format!("plan json: workload `{name}`: `{key}` is not a number"))
+                })?;
+                params.push(Param {
+                    key: key.clone(),
+                    value,
+                    line: 0,
+                });
+            }
+            spec.workloads.push(WorkloadSpec {
+                name,
+                kind,
+                class,
+                after,
+                params,
+                line: 0,
+            });
+        }
+        if spec.workloads.is_empty() {
+            return Err(Error::Config(format!(
+                "plan `{}` declares no workloads",
+                spec.name
+            )));
+        }
+        if let Some(cj) = j.get("chaos").as_obj() {
+            let mut params = Vec::new();
+            for (key, val) in cj {
+                if !CHAOS_KEYS.contains(&key.as_str()) {
+                    return Err(Error::Config(format!(
+                        "plan json: chaos: unknown field `{key}` (known: {})",
+                        CHAOS_KEYS.join(", ")
+                    )));
+                }
+                let value = val.as_f64().ok_or_else(|| {
+                    Error::Config(format!("plan json: chaos: `{key}` is not a number"))
+                })?;
+                params.push(Param {
+                    key: key.clone(),
+                    value,
+                    line: 0,
+                });
+            }
+            spec.chaos = Some(ChaosStanza { params, line: 0 });
+        }
+        Ok(spec)
+    }
+}
+
+fn clamp_nodes(n: u64, line: u32) -> Result<u16> {
+    if n == 0 || n > u16::MAX as u64 {
+        return Err(err(line, format!("`nodes` out of range: {n}")));
+    }
+    Ok(n as u16)
+}
+
+fn parse_class(s: &str, line: u32) -> Result<TransferClass> {
+    match s {
+        "latency" => Ok(TransferClass::Latency),
+        "bulk" => Ok(TransferClass::Bulk),
+        other => Err(err(
+            line,
+            format!("unknown class `{other}` (expected `latency` or `bulk`)"),
+        )),
+    }
+}
+
+fn apply_plan_key(spec: &mut PlanSpec, key: &str, rest: &str, line: u32) -> Result<()> {
+    match key {
+        "profile" => {
+            if !valid_ident(rest) {
+                return Err(err(line, format!("bad profile name `{rest}`")));
+            }
+            spec.profile = rest.to_string();
+        }
+        "nodes" => {
+            let n = parse_u64_any(rest)
+                .ok_or_else(|| err(line, format!("bad number for `nodes`: `{rest}`")))?;
+            spec.nodes = clamp_nodes(n, line)?;
+        }
+        "seed" => {
+            spec.seed = parse_u64_any(rest)
+                .ok_or_else(|| err(line, format!("bad number for `seed`: `{rest}`")))?;
+        }
+        "time_compression" => {
+            spec.time_compression = parse_value(key, rest, line)?;
+            if spec.time_compression <= 0.0 {
+                return Err(err(line, "`time_compression` must be > 0"));
+            }
+        }
+        "window" => {
+            let w = parse_u64_any(rest)
+                .ok_or_else(|| err(line, format!("bad number for `window`: `{rest}`")))?;
+            if w == 0 || w > 1024 {
+                return Err(err(line, format!("`window` out of range: {w}")));
+            }
+            spec.window = w as usize;
+        }
+        _ => unreachable!("caller checks PLAN_KEYS"),
+    }
+    Ok(())
+}
+
+impl PlanSpec {
+    /// Cap the embedded chaos horizon (the CLI's and bench's `--smoke`
+    /// mode), so the injector thread never dominates CI wall clock. No-op
+    /// without a `chaos` stanza. Mutating the spec changes the plan digest
+    /// — smoke journals are not comparable to full-run journals.
+    pub fn cap_chaos_horizon(&mut self, max_ns: f64) {
+        if let Some(c) = self.chaos.as_mut() {
+            match c.params.iter_mut().find(|p| p.key == "horizon") {
+                Some(p) => p.value = p.value.min(max_ns),
+                None if max_ns < 250_000_000.0 => c.params.push(Param {
+                    key: "horizon".into(),
+                    value: max_ns,
+                    line: 0,
+                }),
+                None => {}
+            }
+        }
+    }
+}
+
+/// Split off the first whitespace-delimited token; the rest is trimmed.
+fn split_first(s: &str) -> (&str, &str) {
+    match s.split_once(char::is_whitespace) {
+        Some((a, b)) => (a, b.trim()),
+        None => (s, ""),
+    }
+}
+
+/// Split off the last whitespace-delimited token; the head is trimmed.
+fn split_last(s: &str) -> (&str, &str) {
+    match s.rsplit_once(char::is_whitespace) {
+        Some((a, b)) => (a.trim(), b),
+        None => ("", s),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"
+# smallest useful plan
+plan mini
+nodes 2
+seed 11
+
+workload fetch {
+  kind hicache_fetch
+  clients 2
+  ops 4
+  block 64K
+}
+"#;
+
+    #[test]
+    fn parses_the_minimal_plan() {
+        let p = PlanSpec::parse(MINI).unwrap();
+        assert_eq!(p.name, "mini");
+        assert_eq!(p.nodes, 2);
+        assert_eq!(p.seed, 11);
+        assert_eq!(p.profile, "h800_hgx"); // default
+        assert_eq!(p.workloads.len(), 1);
+        let w = &p.workloads[0];
+        assert_eq!(w.kind, WorkloadKind::HicacheFetch);
+        assert_eq!(w.param("block"), Some(65536.0));
+        assert_eq!(w.param("clients"), Some(2.0));
+        assert_eq!(w.line, 7);
+    }
+
+    #[test]
+    fn json_roundtrip_is_byte_identical() {
+        let p = PlanSpec::parse(MINI).unwrap();
+        let j = p.to_json();
+        let q = PlanSpec::from_json(&j).unwrap();
+        assert_eq!(j, q.to_json());
+        // parse_any auto-detects both forms.
+        assert_eq!(PlanSpec::parse_any(&j).unwrap().to_json(), j);
+        assert_eq!(PlanSpec::parse_any(MINI).unwrap().to_json(), j);
+    }
+
+    #[test]
+    fn errors_carry_line_spans() {
+        let bad = "plan p\nworkload w {\n  kind hicache_fetch\n  blocc 4\n}\n";
+        let e = PlanSpec::parse(bad).unwrap_err().to_string();
+        assert!(e.contains("line 4"), "{e}");
+        assert!(e.contains("blocc"), "{e}");
+
+        let typo = "plan p\nworkload w {\n  kind hicache_fetch\n  class latnecy\n}\n";
+        let e = PlanSpec::parse(typo).unwrap_err().to_string();
+        assert!(e.contains("line 4") && e.contains("latnecy"), "{e}");
+
+        let unclosed = "plan p\nworkload w {\n  kind flood\n";
+        let e = PlanSpec::parse(unclosed).unwrap_err().to_string();
+        assert!(e.contains("line 2") && e.contains("unclosed"), "{e}");
+    }
+
+    #[test]
+    fn durations_and_sizes_parse() {
+        assert_eq!(parse_duration_ns("250ms"), Some(250_000_000));
+        assert_eq!(parse_duration_ns("2s"), Some(2_000_000_000));
+        assert_eq!(parse_duration_ns("500us"), Some(500_000));
+        assert_eq!(parse_duration_ns("42"), Some(42));
+        assert_eq!(parse_duration_ns("1.5ms"), Some(1_500_000));
+        assert_eq!(parse_duration_ns("-1ms"), None);
+        assert_eq!(parse_duration_ns("x"), None);
+    }
+
+    #[test]
+    fn chaos_stanza_and_after_deps() {
+        let src = "plan p\nnodes 4\nworkload a {\n kind broadcast\n payload 1M\n}\n\
+                   workload b {\n kind flood\n after a\n ops 8\n}\nchaos {\n eps 2\n horizon 100ms\n}\n";
+        let p = PlanSpec::parse(src).unwrap();
+        assert_eq!(p.workloads[1].after, vec!["a"]);
+        let c = p.chaos.as_ref().unwrap();
+        assert_eq!(c.param("eps"), Some(2.0));
+        assert_eq!(c.param("horizon"), Some(100_000_000.0));
+        // Round-trip keeps the chaos stanza.
+        let q = PlanSpec::from_json(&p.to_json()).unwrap();
+        assert_eq!(q.to_json(), p.to_json());
+        assert!(q.chaos.is_some());
+    }
+
+    #[test]
+    fn rejects_structural_mistakes() {
+        assert!(PlanSpec::parse("workload w {\n kind flood\n}\n").is_err(), "no plan name");
+        assert!(PlanSpec::parse("plan p\n").is_err(), "no workloads");
+        let dup = "plan p\nnodes 2\nnodes 4\nworkload w {\n kind flood\n}\n";
+        assert!(PlanSpec::parse(dup).unwrap_err().to_string().contains("line 3"));
+        let badkind = "plan p\nworkload w {\n kind warp\n}\n";
+        assert!(PlanSpec::parse(badkind).unwrap_err().to_string().contains("warp"));
+    }
+}

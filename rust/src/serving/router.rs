@@ -50,6 +50,30 @@ pub struct ServeConfig {
     pub model: ModelSelect,
 }
 
+impl ServeConfig {
+    /// FNV digest of the run-shaping knobs (canonical JSON via
+    /// `util::canon`) — printed in [`ServeReport::header`] so two result
+    /// tables are comparable at a glance.
+    pub fn digest(&self) -> u64 {
+        use crate::util::json::Json;
+        crate::util::canon::digest_json(&Json::obj(vec![
+            (
+                "mode",
+                Json::str(match self.mode {
+                    ServeMode::Baseline => "baseline",
+                    ServeMode::HiCache => "hicache",
+                }),
+            ),
+            ("clients", Json::num(self.clients as f64)),
+            ("turns", Json::num(self.turns as f64)),
+            ("decode_tokens", Json::num(self.decode_tokens as f64)),
+            ("seed", Json::str(&self.seed.to_string())),
+            ("shared_system_prompt", Json::Bool(self.shared_system_prompt)),
+            ("gpus", Json::num(self.cache.gpus as f64)),
+        ]))
+    }
+}
+
 impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
@@ -92,9 +116,26 @@ pub struct ServeReport {
     pub turns: Vec<TurnMetrics>,
     pub wall_ns: u64,
     pub input_tokens_total: usize,
+    /// Seed the run was driven with (reproducibility handle).
+    pub seed: u64,
+    /// [`ServeConfig::digest`] of the config that produced this report.
+    pub config_digest: u64,
 }
 
 impl ServeReport {
+    /// One-line run identity: mode, policy, model, plus the seed and
+    /// config digest that make the numbers below reproducible.
+    pub fn header(&self) -> String {
+        format!(
+            "mode={:?} policy={} model={} seed={:#x} config={}",
+            self.mode,
+            self.policy,
+            self.model,
+            self.seed,
+            crate::util::canon::digest_hex(self.config_digest)
+        )
+    }
+
     /// The semantic (timing-free) turn table: `(client, turn, input_tokens,
     /// cached_blocks, fetched_bytes)` per served turn. Two runs with the
     /// same `ServeConfig::seed` and executor must produce identical tables
@@ -210,6 +251,8 @@ pub fn run_serving(
         turns: metrics,
         wall_ns: clock::now_ns() - wall_start,
         input_tokens_total,
+        seed: cfg.seed,
+        config_digest: cfg.digest(),
     })
 }
 
@@ -348,6 +391,10 @@ mod tests {
         assert_eq!(r.round_avg_ttft_s(99), 0.0);
         assert_eq!(r.turn_table().len(), 10);
         assert_eq!(r.turn_table()[0], (0, 0, 128, 0, 0));
+        // The header names the reproducibility handle.
+        let h = r.header();
+        assert!(h.contains("seed=0x7") && h.contains("config="), "{h}");
+        assert_eq!(r.config_digest, ServeConfig::default().digest());
     }
 
     #[test]
@@ -384,6 +431,8 @@ mod tests {
             turns: ttfts.into_iter().enumerate().map(|(i, t)| mk(t, i)).collect(),
             wall_ns: 10_000_000_000,
             input_tokens_total: total * 128,
+            seed: 7,
+            config_digest: ServeConfig::default().digest(),
         }
     }
 }

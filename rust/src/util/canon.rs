@@ -1,0 +1,85 @@
+//! Canonical-form serialization helpers shared by every replay contract.
+//!
+//! Two subsystems identify runs by a digest over a canonical JSON form:
+//! the chaos harness (`ChaosSchedule::digest`, `ChaosReport::
+//! replay_signature`) and the plan journal (`plan::Journal::digest`). Both
+//! previously hand-rolled the same FNV-1a loop; this module is the single
+//! implementation, regression-pinned so existing chaos signatures can
+//! never drift.
+//!
+//! Canonical form means: [`crate::util::json::Json`] with `Obj` backed by a
+//! `BTreeMap` (sorted keys), deterministic number formatting (integers
+//! print without a fraction), and full-width `u64` values carried as
+//! strings — so equal values serialize byte-equal and the digest is a pure
+//! function of the data.
+
+use crate::util::json::Json;
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64-bit digest of a byte slice.
+pub fn fnv1a64_bytes(data: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a 64-bit digest of a string's UTF-8 bytes.
+pub fn fnv1a64(s: &str) -> u64 {
+    fnv1a64_bytes(s.as_bytes())
+}
+
+/// The zero-padded hex form every replay contract prints (`{:016x}`).
+pub fn digest_hex(digest: u64) -> String {
+    format!("{digest:016x}")
+}
+
+/// Serialize a [`Json`] value in canonical form and digest it in one step.
+pub fn digest_json(j: &Json) -> u64 {
+    fnv1a64(&j.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Known FNV-1a 64-bit vectors. These pins are the regression contract:
+    // if they move, every committed chaos schedule digest and journal
+    // digest silently changes meaning.
+    #[test]
+    fn fnv_vectors_are_pinned() {
+        assert_eq!(fnv1a64(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64("a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64("foobar"), 0x8594_4171_f739_67e8);
+        assert_eq!(fnv1a64_bytes(b"foobar"), fnv1a64("foobar"));
+    }
+
+    #[test]
+    fn hex_form_is_zero_padded() {
+        assert_eq!(digest_hex(0x1a2b), "0000000000001a2b");
+        assert_eq!(digest_hex(u64::MAX), "ffffffffffffffff");
+    }
+
+    #[test]
+    fn digest_json_matches_manual_loop() {
+        let j = Json::obj(vec![
+            ("b", Json::num(2.0)),
+            ("a", Json::str("x")),
+        ]);
+        // BTreeMap ordering: "a" before "b" regardless of insertion order.
+        let s = j.to_string();
+        assert_eq!(s, r#"{"a":"x","b":2}"#);
+        let mut h: u64 = FNV_OFFSET;
+        for b in s.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        assert_eq!(digest_json(&j), h);
+    }
+}

@@ -6,6 +6,7 @@
 //! the paper's own datapath (§4.4): pinned workers draining lock-free MPSC
 //! rings, hierarchical atomic completion counters, no async runtime.
 
+pub mod canon;
 pub mod cli;
 pub mod clock;
 pub mod ewma;

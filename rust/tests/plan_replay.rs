@@ -1,0 +1,157 @@
+//! Tier-1 suite for the plan DSL + replay journal (see `docs/DSL.md`).
+//!
+//! Covers the whole declarative contract:
+//! * the shipped `plans/*.tent` files parse, round-trip byte-identically
+//!   through the canonical JSON form, and compile to the same plan digest
+//!   on both sides;
+//! * structural mistakes are rejected with span-carrying errors;
+//! * the determinism gate — the same `(plan, seed)` executed twice on
+//!   fresh fleets journals byte-identically, a different seed does not,
+//!   and a journal survives a disk round trip with its digest intact;
+//! * the doc-drift gate — every key the parser accepts appears
+//!   (backticked) in `docs/DSL.md`, so the spec cannot silently diverge
+//!   from the implementation.
+//!
+//! Tests run with CWD = `rust/`, so repo-root paths are `../plans/…`.
+
+use std::path::Path;
+use tent::plan::{compile, fleet_for, Journal, PlanReport, PlanSpec};
+
+const SHIPPED: [&str; 3] = [
+    "../plans/checkpoint_bcast.tent",
+    "../plans/hicache_storm.tent",
+    "../plans/rl_param_update.tent",
+];
+
+fn read(rel: &str) -> String {
+    std::fs::read_to_string(Path::new(rel))
+        .unwrap_or_else(|e| panic!("{rel}: {e} (tier-1 runs from rust/)"))
+}
+
+fn run_plan(spec: &PlanSpec) -> PlanReport {
+    let dag = compile(spec).unwrap();
+    fleet_for(spec).unwrap().run_plan(&dag).unwrap()
+}
+
+#[test]
+fn shipped_plans_roundtrip_between_dsl_and_json() {
+    for p in SHIPPED {
+        let spec = PlanSpec::parse(&read(p)).unwrap_or_else(|e| panic!("{p}: {e}"));
+        let json = spec.to_json();
+        let back = PlanSpec::from_json(&json).unwrap_or_else(|e| panic!("{p}: {e}"));
+        assert_eq!(back.to_json(), json, "{p}: JSON round trip not byte-identical");
+        // Both forms are the same plan: identical compile-time identity.
+        assert_eq!(
+            compile(&spec).unwrap().digest,
+            compile(&back).unwrap().digest,
+            "{p}: DSL and JSON forms compiled to different digests"
+        );
+        // parse_any dispatches on the leading brace.
+        let via_any = PlanSpec::parse_any(&json).unwrap();
+        assert_eq!(via_any.to_json(), json, "{p}");
+    }
+}
+
+#[test]
+fn rejections_carry_spans() {
+    // Unknown workload field, with its line number.
+    let e = PlanSpec::parse("plan p\nworkload w {\n kind flood\n blocc 4\n}\n")
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("line 4") && e.contains("blocc"), "{e}");
+    // QoS class typo names the offender and the valid values.
+    let e = PlanSpec::parse("plan p\nworkload w {\n kind flood\n class latnecy\n}\n")
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("line 4") && e.contains("latnecy"), "{e}");
+    assert!(e.contains("latency") && e.contains("bulk"), "{e}");
+    // Cyclic DAG is a compile-time rejection, also with a span.
+    let s = PlanSpec::parse(
+        "plan p\nnodes 2\nworkload a {\n kind flood\n after b\n}\n\
+         workload b {\n kind flood\n after a\n}\n",
+    )
+    .unwrap();
+    let e = compile(&s).unwrap_err().to_string();
+    assert!(e.contains("cycle") && e.contains("line 3"), "{e}");
+    // A field that exists but not for this kind.
+    let s = PlanSpec::parse("plan p\nnodes 2\nworkload w {\n kind broadcast\n clients 4\n}\n")
+        .unwrap();
+    let e = compile(&s).unwrap_err().to_string();
+    assert!(e.contains("line 5") && e.contains("clients") && e.contains("broadcast"), "{e}");
+}
+
+#[test]
+fn shipped_plan_replays_byte_identically() {
+    // The fault-free shipped plan, verbatim: the core determinism gate.
+    let spec = PlanSpec::parse(&read("../plans/checkpoint_bcast.tent")).unwrap();
+    let r1 = run_plan(&spec);
+    let r2 = run_plan(&spec);
+    assert_eq!(
+        r1.journal.to_jsonl(),
+        r2.journal.to_jsonl(),
+        "replay diverged: {:?}",
+        r1.journal.diff(&r2.journal)
+    );
+    assert_eq!(r1.journal_digest(), r2.journal_digest());
+    assert_eq!(r1.failed_ops, 0, "fault-free plan must not fail ops");
+    assert!(r1.total_ops > 0 && r1.total_bytes > 0);
+
+    // A different seed is a different run: new op streams, new digest.
+    let mut reseeded = spec.clone();
+    reseeded.seed = spec.seed.wrapping_add(1);
+    let r3 = run_plan(&reseeded);
+    assert_ne!(r1.journal_digest(), r3.journal_digest());
+}
+
+#[test]
+fn chaos_plan_replays_with_identical_action_log() {
+    // The chaos-bearing shipped plan, horizon capped to keep tier-1 fast
+    // (the full-horizon run is fig_plan_replay's job). Chaos actions are
+    // journaled at scheduled offsets, so the whole journal — applied-action
+    // log included — must still be byte-identical across replays.
+    let mut spec = PlanSpec::parse(&read("../plans/hicache_storm.tent")).unwrap();
+    spec.cap_chaos_horizon(80_000_000.0);
+    let dag = compile(&spec).unwrap();
+    assert!(dag.chaos.is_some(), "hicache_storm ships a chaos stanza");
+    let r1 = run_plan(&spec);
+    let r2 = run_plan(&spec);
+    assert_eq!(
+        r1.journal.to_jsonl(),
+        r2.journal.to_jsonl(),
+        "chaos replay diverged: {:?}",
+        r1.journal.diff(&r2.journal)
+    );
+    assert_eq!(r1.chaos_actions, r2.chaos_actions);
+}
+
+#[test]
+fn journal_survives_a_disk_roundtrip() {
+    let spec = PlanSpec::parse(
+        "plan disk\nnodes 2\nseed 3\nworkload f {\n kind flood\n ops 6\n streams 2\n}\n",
+    )
+    .unwrap();
+    let r = run_plan(&spec);
+    let path = std::env::temp_dir().join(format!("tent_plan_journal_{}.jsonl", std::process::id()));
+    r.journal.save(&path).unwrap();
+    let loaded = Journal::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(loaded.digest(), r.journal_digest(), "digest changed across disk");
+    assert!(loaded.diff(&r.journal).is_none());
+    // The loaded journal verifies a fresh replay, journal-against-journal.
+    let r2 = run_plan(&spec);
+    assert_eq!(loaded.digest(), r2.journal_digest());
+}
+
+#[test]
+fn dsl_doc_documents_every_parser_key() {
+    let doc = read("../docs/DSL.md");
+    for (stanza, keys) in tent::plan::known_keys() {
+        for key in keys {
+            assert!(
+                doc.contains(&format!("`{key}`")),
+                "docs/DSL.md is missing `{key}` (a parser-accepted {stanza} key) — \
+                 the spec must document every field the parser knows"
+            );
+        }
+    }
+}

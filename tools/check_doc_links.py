@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Doc link/anchor checker for README.md and docs/*.md.
+
+Every relative markdown link must point at a file that exists (resolved
+against the file containing the link), and every `#anchor` — bare or
+appended to a file link — must match a heading slug (GitHub slugging
+rules) in the target document. External http(s) links are not fetched.
+
+Runs from the repo root with no dependencies:  python3 tools/check_doc_links.py
+Exit status is the number of broken links (0 = pass).
+"""
+
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+FENCE = re.compile(r"^\s*(```|~~~)")
+
+
+def strip_fences(text):
+    """Drop fenced code blocks so code snippets can't register links."""
+    out, fenced = [], False
+    for line in text.splitlines():
+        if FENCE.match(line):
+            fenced = not fenced
+            continue
+        out.append("" if fenced else line)
+    return "\n".join(out)
+
+
+def slugify(heading):
+    """GitHub anchor slugging: lowercase, drop punctuation, spaces → '-'."""
+    heading = re.sub(r"`([^`]*)`", r"\1", heading).strip().lower()
+    slug = []
+    for ch in heading:
+        if ch.isalnum():
+            slug.append(ch)
+        elif ch in (" ", "-"):
+            slug.append("-")
+    return "".join(slug)
+
+
+def anchors_of(path, cache={}):
+    if path not in cache:
+        text = strip_fences(path.read_text(encoding="utf-8"))
+        cache[path] = {slugify(m.group(1)) for m in map(HEADING.match, text.splitlines()) if m}
+    return cache[path]
+
+
+def check(doc, root):
+    errors = []
+    for target in LINK.findall(strip_fences(doc.read_text(encoding="utf-8"))):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = doc if not path_part else (doc.parent / path_part).resolve()
+        if not dest.exists():
+            errors.append(f"{doc.relative_to(root)}: broken link -> {target}")
+            continue
+        if anchor and dest.suffix == ".md" and slugify(anchor) not in anchors_of(dest):
+            errors.append(f"{doc.relative_to(root)}: missing anchor -> {target}")
+    return errors
+
+
+def main():
+    root = Path(__file__).resolve().parent.parent
+    docs = [root / "README.md"] + sorted((root / "docs").glob("*.md"))
+    errors = [e for doc in docs for e in check(doc, root)]
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    checked = ", ".join(str(d.relative_to(root)) for d in docs)
+    print(f"doc-link check: {len(errors)} broken ({checked})")
+    return min(len(errors), 100)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
