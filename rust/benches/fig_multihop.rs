@@ -1,0 +1,236 @@
+//! fig_multihop — staged routing across heterogeneous silos: direct vs
+//! single-bounce vs k-hop relay goodput, plus the relay-cost ablation.
+//!
+//! Three device-to-device streams over increasingly partitioned fabrics:
+//!
+//! * **direct** (`h800_hgx`) — GPUDirect RDMA spans the nodes, no staging;
+//! * **1-bounce** (`no_gpudirect`) — the classic staged synthesis: D2H,
+//!   one H2H leg, H2D;
+//! * **k-hop** (`silo_fleet`) — the silos share no fabric at all, so the
+//!   planner routes through a dual-fabric gateway's host memory and the
+//!   relay ledger must balance (every byte in, every byte out).
+//!
+//! The relay-cost ablation then drives the fleet-level cross-silo handoff
+//! with `SchedParams::relay_cost` ∈ {0, 1, 4}: pricing the store-and-forward
+//! term is a ranking knob, so correctness (zero failed batches, balanced
+//! gateway ledgers) must hold at every setting.
+//!
+//! Hard gates: zero failures everywhere, k-hop relay conservation, and the
+//! direct stream out-running the TCP-bottlenecked k-hop stream. The goodput
+//! spread itself is reported, not gated (wall-clock, machine-dependent).
+//!
+//! Flags: --smoke         shrink payloads/durations for CI
+//!        --json <path>   write BENCH_multihop.json
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tent::cluster::{Cluster, CrossSiloConfig, Fleet, FleetConfig};
+use tent::engine::{EngineConfig, TentEngine, TransferReq};
+use tent::fabric::FabricConfig;
+use tent::segment::Location;
+use tent::topology::NodeId;
+use tent::util::cli::Args;
+use tent::util::json::Json;
+
+const TIMEOUT: Duration = Duration::from_secs(120);
+
+struct Scenario {
+    name: &'static str,
+    goodput: f64,
+    relay_in: u64,
+    relay_out: u64,
+    failures: u64,
+}
+
+/// Stream `iters` device-to-device payloads node 0 → node 1 and measure
+/// wall-clock goodput; the relay ledger is read at `relay_node` (the
+/// gateway on `silo_fleet`, a no-op node elsewhere).
+fn stream(
+    name: &'static str,
+    profile: &str,
+    nodes: u16,
+    payload: u64,
+    iters: usize,
+    relay_node: u16,
+) -> tent::Result<Scenario> {
+    let c = Cluster::from_profile_nodes(profile, nodes, FabricConfig::default())?;
+    let e = Arc::new(TentEngine::new(&c, EngineConfig::default())?);
+    let src = e.register_segment(Location::device(0, 0), payload)?;
+    let dst = e.register_segment(Location::device(1, 0), payload)?;
+    e.transfer_sync(TransferReq::write(src, 0, dst, 0, payload), TIMEOUT)?; // warm-up
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        e.transfer_sync(TransferReq::write(src, 0, dst, 0, payload), TIMEOUT)?;
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let (relay_in, relay_out) = c.fabric.relay_bytes(NodeId(relay_node));
+    Ok(Scenario {
+        name,
+        goodput: payload as f64 * iters as f64 / wall,
+        relay_in,
+        relay_out,
+        failures: e.stats().permanent_failures,
+    })
+}
+
+struct AblationRow {
+    relay_cost: f64,
+    goodput: f64,
+    relayed: u64,
+    balanced: bool,
+    failed_batches: u64,
+}
+
+/// Fleet-level cross-silo handoff on 6 nodes (two gateways) with the
+/// store-and-forward pricing term set to `relay_cost`.
+fn ablate(relay_cost: f64, duration: Duration) -> tent::Result<AblationRow> {
+    let mut fc = FleetConfig::new("silo_fleet", 6);
+    fc.engine.sched.relay_cost = relay_cost;
+    let fleet = Fleet::new(fc)?;
+    let cfg = CrossSiloConfig {
+        duration,
+        block: 128 << 10,
+        window: 2,
+        ..Default::default()
+    };
+    let r = fleet.run_cross_silo(&cfg)?;
+    let mut relayed = 0u64;
+    let mut balanced = true;
+    for gw in [2u16, 5] {
+        let (inb, outb) = fleet.cluster.fabric.relay_bytes(NodeId(gw));
+        balanced &= inb == outb;
+        relayed += inb;
+    }
+    Ok(AblationRow {
+        relay_cost,
+        goodput: r.aggregate_goodput(),
+        relayed,
+        balanced,
+        failed_batches: r.failed_batches,
+    })
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.flag("smoke");
+    let (payload, iters) = if smoke { (256u64 << 10, 6) } else { (1u64 << 20, 32) };
+    let duration = if smoke {
+        Duration::from_millis(250)
+    } else {
+        Duration::from_millis(700)
+    };
+
+    println!("== fig_multihop: direct vs 1-bounce vs k-hop staged routing ==");
+    println!("(device-to-device node 0 -> node 1, {iters} x {} per stream)", tent::util::fmt_bytes(payload));
+    let scenarios = vec![
+        stream("direct(h800_hgx)", "h800_hgx", 2, payload, iters, 0).unwrap(),
+        stream("1-bounce(no_gpudirect)", "no_gpudirect", 2, payload, iters, 0).unwrap(),
+        stream("k-hop(silo_fleet)", "silo_fleet", 3, payload, iters, 2).unwrap(),
+    ];
+    println!(
+        "{:<24} {:>14} {:>12} {:>12} {:>6}",
+        "scenario", "goodput", "relay_in", "relay_out", "fails"
+    );
+    for s in &scenarios {
+        println!(
+            "{:<24} {:>12}/s {:>12} {:>12} {:>6}",
+            s.name,
+            tent::util::fmt_bytes(s.goodput as u64),
+            tent::util::fmt_bytes(s.relay_in),
+            tent::util::fmt_bytes(s.relay_out),
+            s.failures
+        );
+    }
+
+    println!("\n-- relay-cost ablation (6-node silo fleet, cross-silo handoff) --");
+    println!(
+        "{:<12} {:>14} {:>12} {:>9} {:>7}",
+        "relay_cost", "goodput", "relayed", "balanced", "failed"
+    );
+    let ablation: Vec<AblationRow> = [0.0, 1.0, 4.0]
+        .iter()
+        .map(|&rc| ablate(rc, duration).unwrap())
+        .collect();
+    for a in &ablation {
+        println!(
+            "{:<12} {:>12}/s {:>12} {:>9} {:>7}",
+            a.relay_cost,
+            tent::util::fmt_bytes(a.goodput as u64),
+            tent::util::fmt_bytes(a.relayed),
+            a.balanced,
+            a.failed_batches
+        );
+    }
+
+    // Hard gates: correctness everywhere, and the fabric hierarchy showing
+    // through (a direct GPUDirect stream beats a TCP-bottlenecked relay).
+    let khop = &scenarios[2];
+    let total = payload * (iters as u64 + 1); // warm-up included
+    let mut failures: Vec<String> = Vec::new();
+    if scenarios.iter().any(|s| s.failures > 0) {
+        failures.push("a stream saw permanent failures".into());
+    }
+    if khop.relay_in != khop.relay_out {
+        failures.push(format!(
+            "k-hop relay ledger imbalanced ({} in, {} out)",
+            khop.relay_in, khop.relay_out
+        ));
+    }
+    if khop.relay_in < total {
+        failures.push(format!(
+            "k-hop relayed {} < moved {total}: the stream skipped the gateway",
+            khop.relay_in
+        ));
+    }
+    if scenarios[0].goodput <= khop.goodput {
+        failures.push("direct stream did not out-run the k-hop relay".into());
+    }
+    if ablation.iter().any(|a| a.failed_batches > 0 || !a.balanced || a.relayed == 0) {
+        failures.push("relay-cost ablation broke conservation or dropped batches".into());
+    }
+    let pass = failures.is_empty();
+    for f in &failures {
+        eprintln!("GATE: {f}");
+    }
+    println!(
+        "\nacceptance (zero failures, balanced relay ledgers, direct > k-hop): {}",
+        if pass { "PASS" } else { "FAIL" }
+    );
+
+    if let Some(path) = args.get("json") {
+        let j = Json::obj(vec![
+            ("bench", Json::str("fig_multihop")),
+            ("smoke", Json::Bool(smoke)),
+            (
+                "scenarios",
+                Json::arr(scenarios.iter().map(|s| {
+                    Json::obj(vec![
+                        ("name", Json::str(s.name)),
+                        ("goodput_bytes_per_sec", Json::num(s.goodput)),
+                        ("relay_in", Json::num(s.relay_in as f64)),
+                        ("relay_out", Json::num(s.relay_out as f64)),
+                        ("failures", Json::num(s.failures as f64)),
+                    ])
+                })),
+            ),
+            (
+                "relay_cost_ablation",
+                Json::arr(ablation.iter().map(|a| {
+                    Json::obj(vec![
+                        ("relay_cost", Json::num(a.relay_cost)),
+                        ("goodput_bytes_per_sec", Json::num(a.goodput)),
+                        ("relayed", Json::num(a.relayed as f64)),
+                        ("balanced", Json::Bool(a.balanced)),
+                        ("failed_batches", Json::num(a.failed_batches as f64)),
+                    ])
+                })),
+            ),
+            ("pass", Json::Bool(pass)),
+        ]);
+        std::fs::write(path, format!("{j}\n")).expect("write --json");
+        println!("results written to {path}");
+    }
+    if !pass {
+        std::process::exit(1);
+    }
+}

@@ -344,6 +344,156 @@ impl Fleet {
             recovery_hist: Histogram::new(),
         })
     }
+
+    /// Prefill nodes of a heterogeneous fleet: every node carrying an
+    /// NVLink-connected GPU pool (the GPU prefill silo).
+    pub fn prefill_nodes(&self) -> Vec<u16> {
+        self.silo_nodes(crate::topology::FabricKind::NvLink)
+    }
+
+    /// Decode nodes: every node carrying a UB-connected NPU pool (the
+    /// accelerator decode silo).
+    pub fn decode_nodes(&self) -> Vec<u16> {
+        self.silo_nodes(crate::topology::FabricKind::AscendUb)
+    }
+
+    fn silo_nodes(&self, fabric: crate::topology::FabricKind) -> Vec<u16> {
+        (0..self.nodes() as u16)
+            .filter(|&i| {
+                self.cluster
+                    .topo
+                    .node_in_fabric(crate::topology::NodeId(i), fabric)
+            })
+            .collect()
+    }
+
+    /// Drive the disaggregated prefill→decode KV handoff across a mixed
+    /// hardware fleet: each prefill (GPU) node streams KV blocks from
+    /// device memory to its round-robin-paired decode (NPU) node's device
+    /// memory, with a pipelining window per pair. On fleets whose silos
+    /// share no direct fabric (e.g. the `silo_fleet` profile) every handoff
+    /// rides a planned k-hop relay route through a gateway — the spraying,
+    /// QoS, and chaos machinery apply to each hop unchanged.
+    pub fn run_cross_silo(&self, cfg: &CrossSiloConfig) -> Result<FleetReport> {
+        let prefill = self.prefill_nodes();
+        let decode = self.decode_nodes();
+        if prefill.is_empty() || decode.is_empty() {
+            return Err(crate::Error::Config(format!(
+                "cross-silo workload needs both silos: {} prefill (NVLink) and {} decode (UB) nodes",
+                prefill.len(),
+                decode.len()
+            )));
+        }
+        let window = cfg.window.max(1);
+        let n = self.nodes();
+        // Pair prefill→decode round-robin; each pair gets private device
+        // segments sized one window of KV blocks (in-flight writes stay
+        // disjoint).
+        let pairs: Vec<(u16, u16)> = prefill
+            .iter()
+            .enumerate()
+            .map(|(k, &p)| (p, decode[k % decode.len()]))
+            .collect();
+        let span = cfg.block * window as u64;
+        let segs: Vec<(SegmentId, SegmentId)> = pairs
+            .iter()
+            .map(|&(p, d)| -> Result<(SegmentId, SegmentId)> {
+                let src = self.engines[p as usize]
+                    .register_segment(Location::device(p, 0), span)?;
+                let dst = self.engines[p as usize]
+                    .register_segment(Location::device(d, 0), span)?;
+                Ok((src, dst))
+            })
+            .collect::<Result<_>>()?;
+
+        let per_engine_bytes: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let hist = Histogram::new();
+        let total_batches = AtomicU64::new(0);
+        let failed_batches = AtomicU64::new(0);
+        let deadline = clock::now_ns() + cfg.duration.as_nanos() as u64;
+
+        let start = clock::now_ns();
+        std::thread::scope(|scope| {
+            for (k, &(p, _d)) in pairs.iter().enumerate() {
+                let engine = Arc::clone(&self.engines[p as usize]);
+                let (src, dst) = segs[k];
+                let per_engine_bytes = &per_engine_bytes;
+                let hist = &hist;
+                let total_batches = &total_batches;
+                let failed_batches = &failed_batches;
+                scope.spawn(move || {
+                    let mut inflight: VecDeque<Pending> = VecDeque::with_capacity(window);
+                    let mut ops: u64 = 0;
+                    let mut reap = |engine: &TentEngine, q: &mut VecDeque<Pending>| {
+                        if let Some(pe) = q.pop_front() {
+                            let ok = engine
+                                .wait_any(pe.batch, Duration::from_secs(120))
+                                .map(|st| st.ok())
+                                .unwrap_or(false);
+                            let _ = engine.release_batch(pe.batch);
+                            total_batches.fetch_add(1, Ordering::Relaxed);
+                            if ok {
+                                hist.record(clock::now_ns().saturating_sub(pe.t0));
+                                per_engine_bytes[p as usize]
+                                    .fetch_add(pe.bytes, Ordering::Relaxed);
+                            } else {
+                                failed_batches.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    };
+                    while clock::now_ns() < deadline {
+                        let slot = ops % window as u64;
+                        let req = TransferReq::write(
+                            src,
+                            slot * cfg.block,
+                            dst,
+                            slot * cfg.block,
+                            cfg.block,
+                        )
+                        .class(cfg.class);
+                        let batch = engine.allocate_batch();
+                        let t0 = clock::now_ns();
+                        if engine.submit(batch, &[req]).is_err() {
+                            let _ = engine.release_batch(batch);
+                            break;
+                        }
+                        inflight.push_back(Pending {
+                            batch,
+                            t0,
+                            class: cfg.class,
+                            bytes: cfg.block,
+                        });
+                        if inflight.len() >= window {
+                            reap(&engine, &mut inflight);
+                        }
+                        ops += 1;
+                    }
+                    while !inflight.is_empty() {
+                        reap(&engine, &mut inflight);
+                    }
+                });
+            }
+        });
+        let wall_ns = clock::now_ns().saturating_sub(start);
+
+        let (latency_hist, bulk_hist) = match cfg.class {
+            TransferClass::Latency => (hist, Histogram::new()),
+            TransferClass::Bulk => (Histogram::new(), hist),
+        };
+        Ok(FleetReport {
+            nodes: n,
+            seed: cfg.seed,
+            config_digest: self.config.digest(),
+            wall_ns,
+            per_engine_bytes: per_engine_bytes.iter().map(|a| a.load(Ordering::Relaxed)).collect(),
+            latency_hist,
+            bulk_hist,
+            total_batches: total_batches.load(Ordering::Relaxed),
+            failed_batches: failed_batches.load(Ordering::Relaxed),
+            healing_hist: Histogram::new(),
+            recovery_hist: Histogram::new(),
+        })
+    }
 }
 
 /// One outstanding batch in a submitter's pipeline window.
@@ -382,6 +532,33 @@ impl Default for WorkloadConfig {
             submitters_per_engine: 2,
             window: 4,
             seed: 0xF1EE7,
+        }
+    }
+}
+
+/// Cross-silo prefill→decode handoff knobs (see [`Fleet::run_cross_silo`]).
+#[derive(Clone, Debug)]
+pub struct CrossSiloConfig {
+    /// Measured wall-clock duration (submission stops, then drains).
+    pub duration: Duration,
+    /// KV block size per handoff.
+    pub block: u64,
+    /// Outstanding batches per prefill→decode pair (pipelining depth).
+    pub window: usize,
+    /// QoS class the handoff rides (KV delivery is latency-sensitive by
+    /// default — decode stalls until the blocks land).
+    pub class: TransferClass,
+    pub seed: u64,
+}
+
+impl Default for CrossSiloConfig {
+    fn default() -> Self {
+        CrossSiloConfig {
+            duration: Duration::from_millis(800),
+            block: 256 << 10,
+            window: 4,
+            class: TransferClass::Latency,
+            seed: 0x51_10,
         }
     }
 }
@@ -482,6 +659,55 @@ mod tests {
             assert_eq!(s.slices_completed, s.slices_dispatched, "{s:?}");
             assert_eq!(s.permanent_failures, 0, "{s:?}");
         }
+    }
+
+    #[test]
+    fn silo_fleet_splits_into_prefill_and_decode_nodes() {
+        let f = Fleet::new(FleetConfig::new("silo_fleet", 6)).unwrap();
+        assert_eq!(f.prefill_nodes(), vec![0, 3]);
+        assert_eq!(f.decode_nodes(), vec![1, 4]);
+    }
+
+    #[test]
+    fn cross_silo_handoff_relays_through_gateways() {
+        let f = Fleet::new(FleetConfig::new("silo_fleet", 6)).unwrap();
+        let cfg = CrossSiloConfig {
+            duration: Duration::from_millis(400),
+            block: 64 << 10,
+            window: 2,
+            ..Default::default()
+        };
+        let r = f.run_cross_silo(&cfg).unwrap();
+        assert_eq!(r.failed_batches, 0, "no failures without injection");
+        assert!(r.total_batches >= 2, "both pairs submitted");
+        // Prefill engines carried the handoffs; decode engines idle.
+        assert!(r.per_engine_bytes[0] > 0 && r.per_engine_bytes[3] > 0);
+        assert_eq!(r.per_engine_bytes[1] + r.per_engine_bytes[4], 0);
+        // The silos share no direct fabric, so every byte bounced through a
+        // gateway: the relay ledger must show traffic and balance (every
+        // staged byte forwarded, none stranded) at each gateway node.
+        let moved: u64 = r.per_engine_bytes.iter().sum();
+        let mut relayed = 0u64;
+        for gw in [2u16, 5] {
+            let (inb, outb) = f.cluster.fabric.relay_bytes(crate::topology::NodeId(gw));
+            assert_eq!(inb, outb, "gateway {gw} relay ledger imbalanced");
+            relayed += inb;
+        }
+        assert!(
+            relayed >= moved,
+            "relayed {relayed} < completed {moved}: some handoff skipped the gateways"
+        );
+        // Queues fully drained after the run.
+        for rail in &f.cluster.fabric.rails {
+            assert_eq!(rail.queued_bytes(), 0, "{} leaked queue", rail.id);
+        }
+    }
+
+    #[test]
+    fn cross_silo_on_homogeneous_fleet_is_a_config_error() {
+        let f = Fleet::new(FleetConfig::new("h800_hgx", 2)).unwrap();
+        let err = f.run_cross_silo(&CrossSiloConfig::default()).unwrap_err();
+        assert!(matches!(err, crate::Error::Config(_)), "{err:?}");
     }
 
     #[test]

@@ -21,7 +21,7 @@ use crate::transport::TransportRegistry;
 use crate::Result;
 use std::sync::{Arc, OnceLock};
 
-pub use fleet::{Fleet, FleetConfig, FleetReport, WorkloadConfig};
+pub use fleet::{CrossSiloConfig, Fleet, FleetConfig, FleetReport, WorkloadConfig};
 
 pub struct Cluster {
     pub topo: Arc<Topology>,

@@ -558,12 +558,19 @@ pub(crate) fn execute_slice(
         Ok(_out) => {
             let done_ns = clock::now_ns();
             let observed = done_ns.saturating_sub(slice.enqueue_ns);
-            // Receiver-side pricing: release this slice's ingestion claim
-            // on the destination node. Terminal-event symmetric with the
-            // dispatch-side `add_ingress` (retries keep the claim).
+            // Receiver-side pricing: release this slice's ingestion claims
+            // on the destination node and any relay nodes of the candidate
+            // that carried it. Terminal-event symmetric with the
+            // dispatch-side `add_ingress_route` (retries keep the claims;
+            // a retry that switched candidates swapped the relay set).
             if core.sched.params.rx_omega > 0.0 {
-                core.sched
-                    .sub_ingress(&core.fabric, slice.plan.dst_node, slice.len, slice.class);
+                core.sched.sub_ingress_route(
+                    &core.fabric,
+                    slice.plan.dst_node,
+                    cand.relays(),
+                    slice.len,
+                    slice.class,
+                );
             }
             if slice.attempt > 0 {
                 // A resilience reroute landed: stamp the completion instant

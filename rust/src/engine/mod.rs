@@ -353,6 +353,7 @@ impl TentEngine {
             cand.bw,
             s.class,
             Some(s.plan.dst_node),
+            cand.relays(),
         );
         s.predicted_ns = pred;
         s.serial_ns = serial;
@@ -360,9 +361,15 @@ impl TentEngine {
         core.sched.add_queued(&core.fabric, cand.rail, s.len, s.class); // Alg. 1 line 11
         if core.sched.params.rx_omega > 0.0 {
             // Receiver-side pricing: claim ingestion capacity on the
-            // destination node until the slice terminally resolves.
-            core.sched
-                .add_ingress(&core.fabric, s.plan.dst_node, s.len, s.class);
+            // destination node — and every relay node of a multi-hop
+            // candidate — until the slice terminally resolves.
+            core.sched.add_ingress_route(
+                &core.fabric,
+                s.plan.dst_node,
+                cand.relays(),
+                s.len,
+                s.class,
+            );
         }
         EngineStats::bump(&core.stats.slices_dispatched);
         core.stats.inflight.fetch_add(1, Ordering::AcqRel);
@@ -372,11 +379,17 @@ impl TentEngine {
                 // Shutdown while enqueueing: unwind the accounting (caller
                 // completes the transfer ledger as failed).
                 core.stats.inflight.fetch_sub(1, Ordering::AcqRel);
-                let rail = back.plan.candidates[back.cand_idx].rail;
-                core.sched.sub_queued(&core.fabric, rail, back.len, back.class);
+                let cand = &back.plan.candidates[back.cand_idx];
+                core.sched
+                    .sub_queued(&core.fabric, cand.rail, back.len, back.class);
                 if core.sched.params.rx_omega > 0.0 {
-                    core.sched
-                        .sub_ingress(&core.fabric, back.plan.dst_node, back.len, back.class);
+                    core.sched.sub_ingress_route(
+                        &core.fabric,
+                        back.plan.dst_node,
+                        cand.relays(),
+                        back.len,
+                        back.class,
+                    );
                 }
                 Err(Error::Shutdown)
             }

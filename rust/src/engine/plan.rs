@@ -7,11 +7,15 @@
 //! backend substitution falls out of the plan containing multiple fabrics.
 //!
 //! When no direct path spans the endpoints (e.g. consumer GPUs without
-//! GPUDirect), the planner synthesizes a staged D2H→H2H→H2D route.
+//! GPUDirect), the planner synthesizes a staged D2H→H2H→H2D route; when
+//! even the single bounce cannot reach (partitioned host fabrics), it
+//! searches the fabric-reachability graph for a k-hop relay route
+//! (`Topology::relay_routes`, k ≤ `MAX_RELAY_LEGS`).
 
 use super::TransferClass;
 use crate::segment::Segment;
-use crate::topology::{NodeId, RailId, Tier, Topology};
+use crate::topology::{NodeId, RailId, RelayRoute, Tier, Topology, MAX_RELAY_LEGS};
+use crate::transport::staged::StagedBackend;
 use crate::transport::{TransportBackend, TransportRegistry};
 use crate::{Error, Result};
 use std::sync::Arc;
@@ -22,27 +26,65 @@ pub struct Candidate {
     pub rail: RailId,
     /// Affinity tier of the rail relative to the *source* buffer (§3.1).
     pub tier: Tier,
-    /// Nominal link bandwidth B_d (bytes/sec) — what a state-blind scheduler
-    /// knows; real asymmetries only surface through telemetry.
+    /// Nominal path bandwidth B_d (bytes/sec) — what a state-blind scheduler
+    /// knows; real asymmetries only surface through telemetry. For staged
+    /// candidates this is the *bottleneck* across every hop of the route
+    /// (D2H, network legs, H2D), not the primary rail's nominal rate.
     pub bw: f64,
     /// Physical path asymmetry (invisible to the scheduler, applied by the
     /// fabric).
     pub cross_numa: bool,
     /// Tier-2 asymmetry: device buffer behind a different PCIe root.
     pub cross_root: bool,
+    /// Multi-hop relay route this candidate executes, if any. Pricing
+    /// charges its relay nodes (`predict_ns_to`), dispatch claims ingress
+    /// at each, and the staged backend bounces through them.
+    pub route: Option<Arc<RelayRoute>>,
+}
+
+impl Candidate {
+    /// Relay nodes this candidate bounces through (empty for direct and
+    /// single-bounce paths).
+    #[inline]
+    pub fn relays(&self) -> &[NodeId] {
+        self.route.as_ref().map(|r| r.relays()).unwrap_or(&[])
+    }
 }
 
 impl std::fmt::Debug for Candidate {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "Candidate({} {} tier{:?} {:.0}MB/s)",
+            "Candidate({} {} tier{:?} {:.0}MB/s{})",
             self.backend.name(),
             self.rail,
             self.tier as u8,
-            self.bw / 1e6
+            self.bw / 1e6,
+            if let Some(r) = &self.route {
+                format!(" via{:?}", r.relays())
+            } else {
+                String::new()
+            }
         )
     }
+}
+
+/// Bottleneck bandwidth of a staged path: the network leg(s) capped by the
+/// D2H/H2D PCIe hops its device endpoints must cross. This is the satellite
+/// bugfix — staged candidates used to advertise the primary rail's nominal
+/// rate alone, over-ranking bounce routes against direct tier-3 rails.
+fn staged_bottleneck(topo: &Topology, src: &Segment, dst: &Segment, net_bw: f64) -> f64 {
+    let hop = |seg: &Segment| {
+        StagedBackend::pcie_hop(seg, topo).map(|r| topo.rail(r).bw_bytes_per_sec)
+    };
+    let mut bw = net_bw;
+    if let Some(b) = hop(src) {
+        bw = bw.min(b);
+    }
+    if let Some(b) = hop(dst) {
+        bw = bw.min(b);
+    }
+    bw
 }
 
 /// The transport plan for one logical transfer: the full candidate set plus
@@ -84,6 +126,7 @@ pub fn build_plan(
             cross_numa,
             cross_root: !cross_numa
                 && src_root.map(|r| def.pcie_root != r).unwrap_or(false),
+            route: None,
         }
     };
     for backend in registry.all() {
@@ -93,10 +136,34 @@ pub fn build_plan(
     }
     let mut staged = false;
     if candidates.is_empty() {
-        // §4.1: synthesize a staged multi-hop route through host memory.
+        // §4.1: synthesize a staged single-bounce route through host memory,
+        // priced by its bottleneck hop rather than the primary rail alone.
         let backend = registry.staged();
         for rail in backend.plan_rails(src, dst, topo) {
-            candidates.push(mk(&backend, rail));
+            let mut c = mk(&backend, rail);
+            c.bw = staged_bottleneck(topo, src, dst, c.bw);
+            candidates.push(c);
+        }
+        staged = !candidates.is_empty();
+    }
+    if candidates.is_empty() && !src.loc.is_storage() && !dst.loc.is_storage() {
+        // Last resort: k-hop relay routes over the fabric-reachability
+        // graph (partitioned host fabrics — e.g. an RDMA-only prefill silo
+        // reaching a TCP-only decode silo through a dual-fabric gateway).
+        // One candidate per (route × first-leg rail); the candidate's bw is
+        // the bottleneck over every hop, so Algorithm 1 ranks a 20x-slower
+        // relay leg honestly against anything faster.
+        for route in topo.relay_routes(src.loc.node(), dst.loc.node(), MAX_RELAY_LEGS) {
+            let route = Arc::new(route);
+            let backend: Arc<dyn TransportBackend> =
+                Arc::new(StagedBackend::over(Arc::clone(&route)));
+            for rail in backend.plan_rails(src, dst, topo) {
+                let mut c = mk(&backend, rail);
+                let net_bw = route.bottleneck_bw.min(topo.rail(rail).bw_bytes_per_sec);
+                c.bw = staged_bottleneck(topo, src, dst, net_bw);
+                c.route = Some(Arc::clone(&route));
+                candidates.push(c);
+            }
         }
         staged = !candidates.is_empty();
     }
@@ -198,5 +265,135 @@ mod tests {
         let asc = c.segments.register_memory(Location::device(1, 0), 1024).unwrap();
         let plan = build_plan(&c.transports, &c.topo, &nv, &asc, 1024).unwrap();
         assert!(plan.staged, "cross-vendor GPU pair must stage via hosts");
+    }
+
+    #[test]
+    fn staged_candidates_price_the_bottleneck_hop() {
+        // Satellite bugfix: a staged candidate used to advertise its H2H
+        // rail's nominal bw; it must be min(D2H PCIe, H2H rail, H2D PCIe).
+        let c = Cluster::from_profile("no_gpudirect").unwrap();
+        let a = c.segments.register_memory(Location::device(0, 0), 1024).unwrap();
+        let b = c.segments.register_memory(Location::device(1, 0), 1024).unwrap();
+        let plan = build_plan(&c.transports, &c.topo, &a, &b, 1024).unwrap();
+        assert!(plan.staged);
+        let hop_bw = |seg: &Arc<crate::segment::Segment>| {
+            crate::transport::staged::StagedBackend::pcie_hop(seg, &c.topo)
+                .map(|r| c.topo.rail(r).bw_bytes_per_sec)
+                .unwrap()
+        };
+        let (d2h, h2d) = (hop_bw(&a), hop_bw(&b));
+        for cand in &plan.candidates {
+            let rail_bw = c.topo.rail(cand.rail).bw_bytes_per_sec;
+            assert_eq!(
+                cand.bw,
+                rail_bw.min(d2h).min(h2d),
+                "candidate {cand:?} must price its slowest hop"
+            );
+        }
+    }
+
+    #[test]
+    fn silo_fleet_cross_silo_pair_plans_a_relay_route() {
+        // Acceptance: a pair with no direct backend AND no single-bounce
+        // path (partitioned host fabrics) plans a k<=3-hop relay route.
+        let c = Cluster::from_profile_nodes(
+            "silo_fleet",
+            3,
+            crate::fabric::FabricConfig::default(),
+        )
+        .unwrap();
+        let gpu = c.segments.register_memory(Location::device(0, 0), 1024).unwrap();
+        let npu = c.segments.register_memory(Location::device(1, 0), 1024).unwrap();
+        let plan = build_plan(&c.transports, &c.topo, &gpu, &npu, 1024).unwrap();
+        assert!(plan.staged);
+        assert!(!plan.candidates.is_empty());
+        for cand in &plan.candidates {
+            let route = cand.route.as_ref().expect("relay candidates carry routes");
+            assert!(route.legs() >= 2 && route.legs() <= 3);
+            assert_eq!(cand.relays(), &[crate::topology::NodeId(2)]);
+            // Bottleneck pricing: the slow TCP decode leg caps the whole
+            // route even though the first leg rides a 20x-faster RDMA rail.
+            let tcp_bw = c
+                .topo
+                .rails_of(crate::topology::NodeId(2), crate::topology::FabricKind::Tcp)
+                .iter()
+                .map(|&r| c.topo.rail(r).bw_bytes_per_sec)
+                .fold(0.0f64, f64::max);
+            assert_eq!(cand.bw, cand.bw.min(tcp_bw));
+            assert!(
+                cand.bw < c.topo.rail(cand.rail).bw_bytes_per_sec,
+                "first-leg rail bw must not be advertised: {cand:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn relay_candidate_ranks_below_equally_slow_direct_rail() {
+        // Ranking regression: under the old pricing a relay candidate
+        // advertised its first-leg RDMA rail (~20x the route's true TCP
+        // bottleneck) and out-ranked honest direct paths. With bottleneck
+        // pricing plus the relay_cost term, a direct rail of the same
+        // nominal bw must always win.
+        use crate::engine::sched::{SchedParams, SchedulerState};
+        use crate::policy::SlicePolicy;
+        let c = Cluster::from_profile_nodes(
+            "silo_fleet",
+            3,
+            crate::fabric::FabricConfig::default(),
+        )
+        .unwrap();
+        let gpu = c.segments.register_memory(Location::device(0, 0), 1024).unwrap();
+        let npu = c.segments.register_memory(Location::device(1, 0), 1024).unwrap();
+        let mut plan = build_plan(&c.transports, &c.topo, &gpu, &npu, 1 << 20).unwrap();
+        let relay = &plan.candidates[0];
+        // Synthetic "direct" candidate with the same nominal bw and tier on
+        // an idle gateway TCP rail — a state-blind scheduler sees two
+        // equally-fast paths, but only one buffers at a relay.
+        let tcp_rail =
+            c.topo.rails_of(crate::topology::NodeId(2), crate::topology::FabricKind::Tcp)[0];
+        let direct = Candidate {
+            backend: Arc::clone(&relay.backend),
+            rail: tcp_rail,
+            tier: relay.tier,
+            bw: relay.bw,
+            cross_numa: false,
+            cross_root: false,
+            route: None,
+        };
+        plan.candidates.push(direct);
+        let sched = SchedulerState::new(c.topo.rails.len(), SchedParams::default());
+        let ctx = crate::engine::sched::SchedCtx {
+            sched: &sched,
+            fabric: &c.fabric,
+            topo: &c.topo,
+            class: crate::engine::TransferClass::Bulk,
+        };
+        let direct_idx = plan.candidates.len() - 1;
+        let viable: Vec<usize> = (0..plan.candidates.len()).collect();
+        for _ in 0..32 {
+            let i = crate::policy::TentPolicy
+                .pick(&plan, &viable, 1 << 20, &ctx)
+                .unwrap();
+            assert_eq!(i, direct_idx, "relay route must not out-rank a direct rail");
+        }
+    }
+
+    #[test]
+    fn relay_fallback_never_serves_storage_endpoints() {
+        let c = Cluster::from_profile_nodes(
+            "silo_fleet",
+            3,
+            crate::fabric::FabricConfig::default(),
+        )
+        .unwrap();
+        let a = c.segments.register_memory(Location::host(0, 0), 1024).unwrap();
+        let p = std::env::temp_dir().join(format!("tent_relay_{}", std::process::id()));
+        let s = c
+            .segments
+            .register_file(Location::storage(1, p.clone()), 1024)
+            .unwrap();
+        let e = build_plan(&c.transports, &c.topo, &a, &s, 1024);
+        assert!(matches!(e, Err(Error::NoEligibleDevice(_))));
+        std::fs::remove_file(p).ok();
     }
 }

@@ -41,10 +41,26 @@ pub(crate) fn on_slice_failure(core: &Arc<EngineCore>, mut slice: SliceDesc) {
             // The slice keeps its QoS class — a rerouted latency slice
             // re-enters the latency lane and latency-class accounting.
             if let Some(idx) = pick_reliable(core, &slice, failed_rail) {
+                let prev_idx = slice.cand_idx;
                 slice.cand_idx = idx;
                 let cand = &slice.plan.candidates[idx];
-                // The retry keeps its receiver-ingress claim (same
-                // destination), so only the queue side re-prices here.
+                // The retry keeps its destination-ingress claim (same
+                // receiver) — but when the new candidate bounces through a
+                // *different* relay set, the relay claims must follow the
+                // route the slice will actually take, or the release at
+                // completion would drain nodes it never claimed.
+                if core.sched.params.rx_omega > 0.0 {
+                    let old = slice.plan.candidates[prev_idx].relays();
+                    let new = cand.relays();
+                    if old != new {
+                        for &n in old {
+                            core.sched.sub_ingress(&core.fabric, n, slice.len, slice.class);
+                        }
+                        for &n in new {
+                            core.sched.add_ingress(&core.fabric, n, slice.len, slice.class);
+                        }
+                    }
+                }
                 let (pred, serial) = core.sched.predict_ns_to(
                     &core.fabric,
                     cand.rail,
@@ -52,6 +68,7 @@ pub(crate) fn on_slice_failure(core: &Arc<EngineCore>, mut slice: SliceDesc) {
                     cand.bw,
                     slice.class,
                     Some(slice.plan.dst_node),
+                    cand.relays(),
                 );
                 slice.predicted_ns = pred;
                 slice.serial_ns = serial;
@@ -72,11 +89,17 @@ pub(crate) fn on_slice_failure(core: &Arc<EngineCore>, mut slice: SliceDesc) {
             }
         }
     }
-    // Give up: release the receiver-ingress claim (terminal event, like a
-    // completion) and surface the failure through the batch status.
+    // Give up: release the receiver-ingress claims — destination plus the
+    // current candidate's relay nodes (terminal event, like a completion) —
+    // and surface the failure through the batch status.
     if core.sched.params.rx_omega > 0.0 {
-        core.sched
-            .sub_ingress(&core.fabric, slice.plan.dst_node, slice.len, slice.class);
+        core.sched.sub_ingress_route(
+            &core.fabric,
+            slice.plan.dst_node,
+            slice.plan.candidates[slice.cand_idx].relays(),
+            slice.len,
+            slice.class,
+        );
     }
     EngineStats::bump(&core.stats.permanent_failures);
     slice.transfer.mark_failed();
@@ -85,11 +108,17 @@ pub(crate) fn on_slice_failure(core: &Arc<EngineCore>, mut slice: SliceDesc) {
 }
 
 /// Choose the retry path: healthy & non-excluded candidates ordered by tier
-/// (reliability over latency); avoid the just-failed rail. Falls back to
-/// "any rail that is not hard-failed" so a mass exclusion cannot strand the
-/// slice.
+/// (reliability over latency); avoid the just-failed rail. A multi-hop
+/// failure may sit on a *relay* leg the soft exclusion cannot see (it only
+/// tracks the source rail), so candidates that bounce through the same
+/// relay set as the failed attempt are deprioritized — an alternative
+/// route, when one exists, is tried before another source rail onto the
+/// same possibly-dead path. Direct candidates all share the empty relay
+/// set, so their ordering is unchanged. Falls back to "any rail that is
+/// not hard-failed" so a mass exclusion cannot strand the slice.
 fn pick_reliable(core: &EngineCore, slice: &SliceDesc, avoid: crate::topology::RailId) -> Option<usize> {
     let cands = &slice.plan.candidates;
+    let failed_relays = cands[slice.cand_idx].relays().to_vec();
     let healthy = |i: &usize| {
         let c = &cands[*i];
         c.rail != avoid && core.fabric.rail(c.rail).health() != RailHealth::Failed
@@ -105,8 +134,10 @@ fn pick_reliable(core: &EngineCore, slice: &SliceDesc, avoid: crate::topology::R
     order
         .into_iter()
         .min_by(|&a, &b| {
-            (cands[a].tier as u8)
-                .cmp(&(cands[b].tier as u8))
+            let same_route = |i: usize| (cands[i].relays() == failed_relays) as u8;
+            same_route(a)
+                .cmp(&same_route(b))
+                .then((cands[a].tier as u8).cmp(&(cands[b].tier as u8)))
                 .then(cands[b].bw.partial_cmp(&cands[a].bw).unwrap())
         })
 }

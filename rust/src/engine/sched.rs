@@ -50,6 +50,14 @@ pub struct SchedParams {
     /// inflates the effective queue term of a prediction. 0 (default) =
     /// sender-side pricing only, the historical behavior.
     pub rx_omega: f64,
+    /// Relay-buffering penalty for multi-hop staged routes, in extra
+    /// serializations per relay node: every bounce through an intermediate
+    /// host buffers the payload once (write into staging memory) and drains
+    /// it once (read back out), so a k-relay route pays roughly
+    /// `k × relay_cost × len/bottleneck_bw` on top of the wire estimate.
+    /// 1.0 (default) models a store-and-forward hop; 0 ablates the term
+    /// (routes priced purely by bottleneck bandwidth).
+    pub relay_cost: f64,
 }
 
 impl Default for SchedParams {
@@ -65,6 +73,7 @@ impl Default for SchedParams {
             gamma_min: 1.0,
             gamma_max: 64.0,
             rx_omega: 0.0,
+            relay_cost: 1.0,
         }
     }
 }
@@ -201,12 +210,16 @@ impl SchedulerState {
         (pred, serial)
     }
 
-    /// Like [`SchedulerState::predict_ns`] but pricing **both ends** of the
-    /// path: when `rx_omega > 0` and the destination node is known, the
+    /// Like [`SchedulerState::predict_ns`] but pricing **every node** on
+    /// the path: when `rx_omega > 0` and the destination node is known, the
     /// receiver's ingestion backlog inflates the effective queue term, so
     /// sprays back off a node many peers are incasting into even when the
-    /// local rail looks idle. With `rx_omega == 0` (default) this is
-    /// exactly `predict_ns`.
+    /// local rail looks idle — and the same charge applies at every relay
+    /// node of a multi-hop staged route, not just the final destination (a
+    /// congested gateway must repel new routes exactly like a congested
+    /// receiver). Each relay additionally pays the store-and-forward term
+    /// `relay_cost × len/bw` on both the prediction and the serial floor.
+    /// With `rx_omega == 0` and no relays this is exactly `predict_ns`.
     #[inline]
     pub fn predict_ns_to(
         &self,
@@ -216,6 +229,7 @@ impl SchedulerState {
         bw: f64,
         class: TransferClass,
         dst: Option<NodeId>,
+        relays: &[NodeId],
     ) -> (f64, f64) {
         let mut a = self.queued(fabric, rail, class);
         let w = self.params.rx_omega;
@@ -223,9 +237,15 @@ impl SchedulerState {
             if let Some(node) = dst {
                 a += (w * self.rx_queued(fabric, node, class) as f64) as u64;
             }
+            for &relay in relays {
+                a += (w * self.rx_queued(fabric, relay, class) as f64) as u64;
+            }
         }
-        let serial = (a + len) as f64 / bw.max(1.0) * 1e9;
-        let pred = self.models[rail.0 as usize].predict_ns(len, a, bw);
+        let bounce = relays.len() as f64 * self.params.relay_cost * len as f64
+            / bw.max(1.0)
+            * 1e9;
+        let serial = (a + len) as f64 / bw.max(1.0) * 1e9 + bounce;
+        let pred = self.models[rail.0 as usize].predict_ns(len, a, bw) + bounce;
         (pred, serial)
     }
 
@@ -299,6 +319,43 @@ impl SchedulerState {
     #[inline]
     pub fn sub_ingress(&self, fabric: &Fabric, node: NodeId, len: u64, class: TransferClass) {
         fabric.sub_ingress_at(self.fabric_shard, node, len, class.index());
+    }
+
+    /// Claim ingress for a whole route: the destination plus every relay
+    /// node the chosen candidate bounces through. A multi-hop slice
+    /// pressures each staging host it crosses, so `predict_ns_to` can
+    /// charge congested gateways (which the dst-only claim missed).
+    #[inline]
+    pub fn add_ingress_route(
+        &self,
+        fabric: &Fabric,
+        dst: NodeId,
+        relays: &[NodeId],
+        len: u64,
+        class: TransferClass,
+    ) {
+        self.add_ingress(fabric, dst, len, class);
+        for &relay in relays {
+            self.add_ingress(fabric, relay, len, class);
+        }
+    }
+
+    /// Release the claims of [`SchedulerState::add_ingress_route`]. Must be
+    /// called with the *same* relay set that was claimed — on a retry that
+    /// switches candidates the caller swaps relay claims explicitly.
+    #[inline]
+    pub fn sub_ingress_route(
+        &self,
+        fabric: &Fabric,
+        dst: NodeId,
+        relays: &[NodeId],
+        len: u64,
+        class: TransferClass,
+    ) {
+        self.sub_ingress(fabric, dst, len, class);
+        for &relay in relays {
+            self.sub_ingress(fabric, relay, len, class);
+        }
     }
 
     /// Account a completed / failed slice. Saturating on both ledgers: the
@@ -474,21 +531,76 @@ mod tests {
         let busy = t.nodes[1];
         s.add_ingress(&f, busy, 64 << 20, TransferClass::Bulk);
         let (p_quiet, _) =
-            s.predict_ns_to(&f, rail, 1 << 20, bw, TransferClass::Bulk, Some(quiet));
-        let (p_busy, _) = s.predict_ns_to(&f, rail, 1 << 20, bw, TransferClass::Bulk, Some(busy));
+            s.predict_ns_to(&f, rail, 1 << 20, bw, TransferClass::Bulk, Some(quiet), &[]);
+        let (p_busy, _) =
+            s.predict_ns_to(&f, rail, 1 << 20, bw, TransferClass::Bulk, Some(busy), &[]);
         assert!(p_busy > 2.0 * p_quiet, "quiet={p_quiet} busy={p_busy}");
         // Latency-class slices are not priced against bulk ingest.
         let (l_busy, _) =
-            s.predict_ns_to(&f, rail, 1 << 20, bw, TransferClass::Latency, Some(busy));
+            s.predict_ns_to(&f, rail, 1 << 20, bw, TransferClass::Latency, Some(busy), &[]);
         assert!((l_busy - p_quiet).abs() / p_quiet < 0.01);
-        // rx_omega = 0 restores plain predict_ns exactly.
+        // rx_omega = 0 + no relays restores plain predict_ns exactly.
         let s0 = SchedulerState::new(t.rails.len(), SchedParams::default());
         let (a, sa) = s0.predict_ns(&f, rail, 1 << 20, bw, TransferClass::Bulk);
-        let (b, sb) = s0.predict_ns_to(&f, rail, 1 << 20, bw, TransferClass::Bulk, Some(busy));
+        let (b, sb) =
+            s0.predict_ns_to(&f, rail, 1 << 20, bw, TransferClass::Bulk, Some(busy), &[]);
         assert_eq!(a, b);
         assert_eq!(sa, sb);
         s.sub_ingress(&f, busy, 64 << 20, TransferClass::Bulk);
         assert_eq!(f.ingress_bytes(busy), 0);
+    }
+
+    #[test]
+    fn relay_pricing_charges_every_hop() {
+        let t = build_profile("h800_hgx", 3).unwrap();
+        let f = Fabric::new(&t, FabricConfig::default());
+        let p = SchedParams {
+            rx_omega: 1.0,
+            ..Default::default()
+        };
+        let s = SchedulerState::new(t.rails.len(), p);
+        let rail = t.rails_of(NodeId(0), FabricKind::Rdma)[0];
+        let bw = t.rail(rail).bw_bytes_per_sec;
+        let len: u64 = 1 << 20;
+        let dst = t.nodes[1];
+        let relay = t.nodes[2];
+
+        // Store-and-forward term: one relay costs ~one extra serialization
+        // of `len` at the bottleneck bandwidth (relay_cost = 1.0 default).
+        let (p0, s0) = s.predict_ns_to(&f, rail, len, bw, TransferClass::Bulk, Some(dst), &[]);
+        let (p1, s1) =
+            s.predict_ns_to(&f, rail, len, bw, TransferClass::Bulk, Some(dst), &[relay]);
+        let per_hop = len as f64 / bw * 1e9;
+        assert!((p1 - p0 - per_hop).abs() < 1.0, "p0={p0} p1={p1}");
+        assert!((s1 - s0 - per_hop).abs() < 1.0, "s0={s0} s1={s1}");
+
+        // Congestion at the relay inflates the route's price even when the
+        // final destination is idle — the bug this PR fixes priced only dst.
+        s.add_ingress(&f, relay, 64 << 20, TransferClass::Bulk);
+        let (p_busy, _) =
+            s.predict_ns_to(&f, rail, len, bw, TransferClass::Bulk, Some(dst), &[relay]);
+        assert!(p_busy > 2.0 * p1, "idle={p1} busy-relay={p_busy}");
+        s.sub_ingress(&f, relay, 64 << 20, TransferClass::Bulk);
+
+        // relay_cost = 0 ablates the store-and-forward term entirely.
+        let pz = SchedParams {
+            rx_omega: 1.0,
+            relay_cost: 0.0,
+            ..Default::default()
+        };
+        let sz = SchedulerState::new(t.rails.len(), pz);
+        let (z0, _) = sz.predict_ns_to(&f, rail, len, bw, TransferClass::Bulk, Some(dst), &[]);
+        let (z1, _) =
+            sz.predict_ns_to(&f, rail, len, bw, TransferClass::Bulk, Some(dst), &[relay]);
+        assert_eq!(z0, z1);
+
+        // Route-claim helpers: claim at dst + every relay, release drains all.
+        s.add_ingress_route(&f, dst, &[relay], 4_096, TransferClass::Bulk);
+        assert_eq!(f.ingress_bytes(dst), 4_096);
+        assert_eq!(f.ingress_bytes(relay), 4_096);
+        s.sub_ingress_route(&f, dst, &[relay], 4_096, TransferClass::Bulk);
+        assert_eq!(f.ingress_bytes(dst), 0);
+        assert_eq!(f.ingress_bytes(relay), 0);
     }
 
     #[test]

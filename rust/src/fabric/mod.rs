@@ -197,6 +197,13 @@ pub struct FabricContention {
     /// this counter (plus a debug assertion) makes it observable. Cold
     /// path, so a plain atomic is fine.
     pub underflow_clamps: AtomicU64,
+    /// Ingress claims or releases aimed at a node outside the ingress
+    /// table (the fabric was built for a smaller topology than the plan
+    /// references). Claim and release both clamp — symmetrically, so a
+    /// clamped claim can never leave a phantom balance for the release to
+    /// underflow — and both count here so skewed `rx_omega` pricing is
+    /// observable instead of silent.
+    pub ingress_oob_clamps: AtomicU64,
 }
 
 impl FabricContention {
@@ -204,6 +211,7 @@ impl FabricContention {
         FabricContention {
             shard_sum_reads: ShardedU64::new(shards),
             underflow_clamps: AtomicU64::new(0),
+            ingress_oob_clamps: AtomicU64::new(0),
         }
     }
 }
@@ -224,6 +232,12 @@ pub struct Fabric {
     /// peers are incasting into even when the local rail looks idle.
     /// Same shard geometry as the rail queues.
     node_ingress: Vec<[ShardedU64; QOS_CLASSES]>,
+    /// Per-node relay ledger `[bytes_in, bytes_out]`: payload buffered into
+    /// / forwarded out of each node's host staging memory by multi-hop
+    /// staged transfers. Conservation invariant once traffic drains:
+    /// `in == out` at every relay node (no byte enters a relay without
+    /// leaving it). Cold path — one pair of bumps per slice per relay.
+    relay_ledger: Vec<[AtomicU64; 2]>,
 }
 
 impl Fabric {
@@ -247,12 +261,18 @@ impl Fabric {
             .iter()
             .map(|_| [ShardedU64::new(shards), ShardedU64::new(shards)])
             .collect();
+        let relay_ledger = topo
+            .nodes
+            .iter()
+            .map(|_| [AtomicU64::new(0), AtomicU64::new(0)])
+            .collect();
         Fabric {
             rails,
             config,
             contention: FabricContention::new(shards),
             engine_seq: AtomicUsize::new(0),
             node_ingress,
+            relay_ledger,
         }
     }
 
@@ -472,28 +492,49 @@ impl Fabric {
     // ---- receiver-side (dst-node) ingestion accounting ----
 
     /// Account bytes dispatched towards `node` (receiver-side pressure).
+    /// A node outside the ingress table clamps the claim (counted in
+    /// `contention.ingress_oob_clamps`) — symmetric with
+    /// [`Fabric::sub_ingress_at`], so a clamped claim and its clamped
+    /// release always balance.
     #[inline]
     pub fn add_ingress_at(&self, shard: usize, node: NodeId, len: u64, class: usize) {
-        if let Some(lanes) = self.node_ingress.get(node.0 as usize) {
-            lanes[class].add(shard, len);
+        match self.node_ingress.get(node.0 as usize) {
+            Some(lanes) => lanes[class].add(shard, len),
+            None => {
+                self.contention.ingress_oob_clamps.fetch_add(1, Ordering::Relaxed);
+                log::warn!(
+                    "fabric: ingress claim on out-of-range node {} clamped (shard {shard}, +{len})",
+                    node.0
+                );
+            }
         }
     }
 
     /// Retire receiver-side bytes once the slice completes (or gives up).
-    /// Saturating like [`Fabric::sub_queued_at`]; shares the underflow
-    /// telemetry since both clamp for the same class of upstream bug.
+    /// Saturating like [`Fabric::sub_queued_at`]; in-range underflows share
+    /// that telemetry since both clamp for the same class of upstream bug.
+    /// Out-of-range nodes clamp-and-count exactly like the claim path.
     #[inline]
     pub fn sub_ingress_at(&self, shard: usize, node: NodeId, len: u64, class: usize) {
-        if let Some(lanes) = self.node_ingress.get(node.0 as usize) {
-            if lanes[class].sub_saturating(shard, len) {
-                self.contention.underflow_clamps.fetch_add(1, Ordering::Relaxed);
+        match self.node_ingress.get(node.0 as usize) {
+            Some(lanes) => {
+                if lanes[class].sub_saturating(shard, len) {
+                    self.contention.underflow_clamps.fetch_add(1, Ordering::Relaxed);
+                    log::warn!(
+                        "fabric: ingress underflow clamped on node {} (shard {shard}, -{len})",
+                        node.0
+                    );
+                    debug_assert!(
+                        false,
+                        "node-ingress underflow on node {}: shard {shard} asked to drop {len}",
+                        node.0
+                    );
+                }
+            }
+            None => {
+                self.contention.ingress_oob_clamps.fetch_add(1, Ordering::Relaxed);
                 log::warn!(
-                    "fabric: ingress underflow clamped on node {} (shard {shard}, -{len})",
-                    node.0
-                );
-                debug_assert!(
-                    false,
-                    "node-ingress underflow on node {}: shard {shard} asked to drop {len}",
+                    "fabric: ingress release on out-of-range node {} clamped (shard {shard}, -{len})",
                     node.0
                 );
             }
@@ -519,6 +560,39 @@ impl Fabric {
             .unwrap_or(0)
     }
 
+    // ---- relay byte ledger (multi-hop staged routes) ----
+
+    /// Record `len` payload bytes buffered *into* `node`'s host staging
+    /// memory by a multi-hop staged transfer. Out-of-range nodes are
+    /// dropped silently: the ledger is pure telemetry, unlike the ingress
+    /// claims it never feeds pricing.
+    #[inline]
+    pub fn relay_in(&self, node: NodeId, len: u64) {
+        if let Some(pair) = self.relay_ledger.get(node.0 as usize) {
+            pair[0].fetch_add(len, Ordering::Relaxed);
+        }
+    }
+
+    /// Record `len` payload bytes forwarded *out of* `node`'s host staging
+    /// memory towards the next hop.
+    #[inline]
+    pub fn relay_out(&self, node: NodeId, len: u64) {
+        if let Some(pair) = self.relay_ledger.get(node.0 as usize) {
+            pair[1].fetch_add(len, Ordering::Relaxed);
+        }
+    }
+
+    /// `(bytes_in, bytes_out)` relayed through `node`. Once in-flight
+    /// traffic drains the two must be equal at every relay node — the
+    /// byte-conservation invariant multi-hop tests pin.
+    #[inline]
+    pub fn relay_bytes(&self, node: NodeId) -> (u64, u64) {
+        self.relay_ledger
+            .get(node.0 as usize)
+            .map(|pair| (pair[0].load(Ordering::Relaxed), pair[1].load(Ordering::Relaxed)))
+            .unwrap_or((0, 0))
+    }
+
     /// Snapshot per-rail byte counters (Fig 6 "per-NIC byte counters").
     pub fn byte_counters(&self) -> Vec<(RailId, u64)> {
         self.rails
@@ -537,6 +611,10 @@ impl Fabric {
             for h in &r.class_latency {
                 h.reset();
             }
+        }
+        for pair in &self.relay_ledger {
+            pair[0].store(0, Ordering::Relaxed);
+            pair[1].store(0, Ordering::Relaxed);
         }
     }
 }
@@ -769,10 +847,33 @@ mod tests {
         f.sub_ingress_at(0, node, 60_000, 1);
         assert_eq!(f.ingress_bytes(node), 0);
         assert_eq!(f.contention.underflow_clamps.load(Ordering::Relaxed), 0);
-        // Out-of-range nodes are ignored, not a panic (staged plans can
-        // price only the nodes the fabric was built with).
+        // Out-of-range nodes clamp-and-count symmetrically on both the
+        // claim and the release path — neither mutates any counter, and
+        // neither trips the in-range underflow telemetry. Regression for
+        // the staged-path bug where an ignored claim paired with a
+        // decrementing release skewed rx_omega pricing.
         f.add_ingress_at(0, NodeId(9_999), 1, 0);
+        assert_eq!(f.contention.ingress_oob_clamps.load(Ordering::Relaxed), 1);
+        f.sub_ingress_at(0, NodeId(9_999), 1, 0);
+        assert_eq!(f.contention.ingress_oob_clamps.load(Ordering::Relaxed), 2);
         assert_eq!(f.ingress_bytes(NodeId(9_999)), 0);
+        assert_eq!(f.contention.underflow_clamps.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn relay_ledger_tracks_in_and_out() {
+        let (_t, f) = fabric();
+        let node = NodeId(0);
+        assert_eq!(f.relay_bytes(node), (0, 0));
+        f.relay_in(node, 1_000);
+        f.relay_in(node, 24);
+        f.relay_out(node, 1_024);
+        assert_eq!(f.relay_bytes(node), (1_024, 1_024));
+        // Out-of-range nodes are inert telemetry, never a panic.
+        f.relay_in(NodeId(9_999), 7);
+        assert_eq!(f.relay_bytes(NodeId(9_999)), (0, 0));
+        f.reset_stats();
+        assert_eq!(f.relay_bytes(node), (0, 0));
     }
 
     #[test]

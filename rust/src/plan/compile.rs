@@ -28,6 +28,9 @@ const SRC_SLOTS: u64 = 4;
 pub struct SegDecl {
     pub node: u16,
     pub len: u64,
+    /// Device index for GPU/NPU-resident segments; `None` = host memory.
+    /// Only `staged` workloads declare device endpoints.
+    pub gpu: Option<u8>,
 }
 
 /// One concrete transfer op. `src`/`dst` index the owning stage's `segs`.
@@ -190,7 +193,24 @@ fn kind_keys(kind: WorkloadKind) -> &'static [&'static str] {
         WorkloadKind::Flood => {
             &["streams", "ops", "latency_block", "bulk_block", "bulk_every", "window"]
         }
+        WorkloadKind::Staged => {
+            &["src", "dst", "src_gpu", "dst_gpu", "payload", "chunk", "window"]
+        }
     }
+}
+
+/// Optional small-integer parameter (device indices).
+fn param_opt_u8(w: &WorkloadSpec, key: &str) -> Result<Option<u8>> {
+    let Some(p) = w.params.iter().find(|p| p.key == key) else {
+        return Ok(None);
+    };
+    if !p.value.is_finite() || p.value < 0.0 || p.value > u8::MAX as f64 || p.value.fract() != 0.0 {
+        return Err(cerr(
+            p.line,
+            format!("workload `{}`: `{key}` must be a device index 0..=255 (got {})", w.name, p.value),
+        ));
+    }
+    Ok(Some(p.value as u8))
 }
 
 /// Compile a parsed spec into an executable DAG. Pure: equal specs produce
@@ -265,8 +285,83 @@ pub fn compile(spec: &PlanSpec) -> Result<PlanDag> {
                 }
             }
             WorkloadKind::Flood => stages.push(lower_flood(spec, w)?),
+            WorkloadKind::Staged => stages.push(lower_staged(spec, w)?),
         }
         span.push((first, stages.len() - 1));
+    }
+
+    // -- resolve route stanzas against workloads and the topology ----------
+    for r in &spec.routes {
+        let Some(&wi) = by_name.get(r.name.as_str()) else {
+            return Err(cerr(r.line, format!("route for unknown workload `{}`", r.name)));
+        };
+        let w = &spec.workloads[wi];
+        if w.kind != WorkloadKind::Staged {
+            return Err(cerr(
+                r.line,
+                format!(
+                    "route `{}` targets a `{}` workload (routes apply to kind `staged`)",
+                    r.name,
+                    w.kind.name()
+                ),
+            ));
+        }
+        let max_legs = r.max_legs.unwrap_or(crate::topology::MAX_RELAY_LEGS as u32);
+        if !(1..=crate::topology::MAX_RELAY_LEGS as u32).contains(&max_legs) {
+            return Err(cerr(
+                r.line,
+                format!(
+                    "route `{}`: `max_legs` must be 1..={} (got {max_legs})",
+                    r.name,
+                    crate::topology::MAX_RELAY_LEGS
+                ),
+            ));
+        }
+        let src = param_u64(w, "src", 0, 0)? as u16;
+        let dst = param_u64(w, "dst", 1, 0)? as u16;
+        use crate::topology::NodeId;
+        if !r.via.is_empty() {
+            // Pinned relay path: every hop must have a shared host fabric.
+            if r.via.len() as u32 + 1 > max_legs {
+                return Err(cerr(
+                    r.line,
+                    format!(
+                        "route `{}`: {} relays need {} legs but `max_legs` is {max_legs}",
+                        r.name,
+                        r.via.len(),
+                        r.via.len() + 1
+                    ),
+                ));
+            }
+            let mut path = vec![src];
+            path.extend_from_slice(&r.via);
+            path.push(dst);
+            for pair in path.windows(2) {
+                let (a, b) = (pair[0], pair[1]);
+                if a as u64 >= spec.nodes as u64 || b as u64 >= spec.nodes as u64 {
+                    return Err(cerr(
+                        r.line,
+                        format!("route `{}`: node {} out of range (nodes = {})", r.name, a.max(b), spec.nodes),
+                    ));
+                }
+                if topo.host_net_between(NodeId(a), NodeId(b)).is_none() {
+                    return Err(cerr(
+                        r.line,
+                        format!("route `{}`: no shared host fabric between nodes {a} and {b}", r.name),
+                    ));
+                }
+            }
+        } else if topo.host_net_between(NodeId(src), NodeId(dst)).is_none()
+            && topo.relay_routes(NodeId(src), NodeId(dst), max_legs as usize).is_empty()
+        {
+            return Err(cerr(
+                r.line,
+                format!(
+                    "route `{}`: nodes {src} and {dst} are unreachable within {max_legs} legs",
+                    r.name
+                ),
+            ));
+        }
     }
 
     // -- wire cross-workload deps onto each workload's first stage ---------
@@ -413,13 +508,13 @@ fn lower_hicache(spec: &PlanSpec, w: &WorkloadSpec) -> Result<Stage> {
     let class = w.class.unwrap_or(TransferClass::Latency);
 
     let mut segs: Vec<SegDecl> = (0..spec.nodes)
-        .map(|n| SegDecl { node: n, len: block * SRC_SLOTS })
+        .map(|n| SegDecl { node: n, len: block * SRC_SLOTS, gpu: None })
         .collect();
     let mut streams = Vec::with_capacity(clients as usize);
     for c in 0..clients {
         let engine = (c % nodes) as u16;
         let scratch = segs.len();
-        segs.push(SegDecl { node: engine, len: block * window as u64 });
+        segs.push(SegDecl { node: engine, len: block * window as u64, gpu: None });
         let mut rng = stage_rng(spec, &w.name, c);
         let mut ops_v = Vec::with_capacity(ops as usize);
         for i in 0..ops {
@@ -490,12 +585,12 @@ fn lower_broadcast_like(
 
     let nchunks = payload.div_ceil(chunk);
     // Source staging buffer: one window of chunk slots on the root.
-    let mut segs = vec![SegDecl { node: root as u16, len: chunk * window as u64 }];
+    let mut segs = vec![SegDecl { node: root as u16, len: chunk * window as u64, gpu: None }];
     let mut streams = Vec::with_capacity(fan as usize);
     for k in 0..fan {
         let dst_node = ((root + 1 + k) % nodes) as u16;
         let dst = segs.len();
-        segs.push(SegDecl { node: dst_node, len: payload });
+        segs.push(SegDecl { node: dst_node, len: payload, gpu: None });
         let mut ops_v = Vec::with_capacity(nchunks as usize);
         for j in 0..nchunks {
             let len = if j == nchunks - 1 { payload - j * chunk } else { chunk };
@@ -536,17 +631,18 @@ fn lower_flood(spec: &PlanSpec, w: &WorkloadSpec) -> Result<Stage> {
     let window = stage_window(spec, w)?;
 
     let mut segs: Vec<SegDecl> = (0..spec.nodes)
-        .map(|n| SegDecl { node: n, len: (lat_block * SRC_SLOTS).max(bulk_block) })
+        .map(|n| SegDecl { node: n, len: (lat_block * SRC_SLOTS).max(bulk_block), gpu: None })
         .collect();
     let mut streams = Vec::with_capacity(nstreams as usize);
     for s in 0..nstreams {
         let engine = (s % nodes) as u16;
         let scratch = segs.len();
-        segs.push(SegDecl { node: engine, len: lat_block * window as u64 });
+        segs.push(SegDecl { node: engine, len: lat_block * window as u64, gpu: None });
         let bulk_dst = segs.len();
         segs.push(SegDecl {
             node: ((engine as u64 + 1) % nodes) as u16,
             len: bulk_block * window as u64,
+            gpu: None,
         });
         let mut rng = stage_rng(spec, &w.name, 0xF10 + s);
         let mut ops_v = Vec::with_capacity(ops as usize);
@@ -588,6 +684,80 @@ fn lower_flood(spec: &PlanSpec, w: &WorkloadSpec) -> Result<Stage> {
         }
         streams.push(StreamOps { engine, ops: ops_v });
     }
+    let digest = ops_digest(&w.name, &streams);
+    Ok(Stage {
+        name: w.name.clone(),
+        deps: Vec::new(),
+        segs,
+        streams,
+        window,
+        ops_digest: digest,
+        line: w.line,
+    })
+}
+
+/// Point-to-point staged stream: chunked pushes `src` → `dst`, optionally
+/// between device endpoints (`src_gpu`/`dst_gpu`). On profiles where the
+/// endpoints share no direct backend the engine's planner realizes each op
+/// as a k-hop relay through host memory on intermediate nodes — a `route`
+/// stanza naming this workload declares (and compile-validates) that such
+/// a path exists in the topology.
+fn lower_staged(spec: &PlanSpec, w: &WorkloadSpec) -> Result<Stage> {
+    let nodes = spec.nodes as u64;
+    if nodes < 2 {
+        return Err(cerr(
+            w.line,
+            format!("workload `{}`: kind `staged` needs >= 2 nodes", w.name),
+        ));
+    }
+    let src = param_u64(w, "src", 0, 0)?;
+    let dst = param_u64(w, "dst", 1, 0)?;
+    for (key, n) in [("src", src), ("dst", dst)] {
+        if n >= nodes {
+            return Err(cerr(
+                w.line,
+                format!("workload `{}`: `{key}` {n} out of range (nodes = {nodes})", w.name),
+            ));
+        }
+    }
+    if src == dst {
+        return Err(cerr(
+            w.line,
+            format!("workload `{}`: `src` and `dst` are both node {src}", w.name),
+        ));
+    }
+    let payload = param_u64(w, "payload", 4 << 20, 1)?;
+    let chunk = param_u64(w, "chunk", 1 << 20, 1)?.min(payload);
+    let window = stage_window(spec, w)?;
+    let class = w.class.unwrap_or(TransferClass::Bulk);
+
+    let nchunks = payload.div_ceil(chunk);
+    let segs = vec![
+        SegDecl {
+            node: src as u16,
+            len: chunk * window as u64,
+            gpu: param_opt_u8(w, "src_gpu")?,
+        },
+        SegDecl {
+            node: dst as u16,
+            len: payload,
+            gpu: param_opt_u8(w, "dst_gpu")?,
+        },
+    ];
+    let mut ops_v = Vec::with_capacity(nchunks as usize);
+    for j in 0..nchunks {
+        let len = if j == nchunks - 1 { payload - j * chunk } else { chunk };
+        ops_v.push(PlanOp {
+            read: false,
+            src: 0,
+            src_off: (j % window as u64) * chunk,
+            dst: 1,
+            dst_off: j * chunk,
+            len,
+            class,
+        });
+    }
+    let streams = vec![StreamOps { engine: src as u16, ops: ops_v }];
     let digest = ops_digest(&w.name, &streams);
     Ok(Stage {
         name: w.name.clone(),
@@ -733,6 +903,79 @@ mod tests {
         s3.seed = 22;
         let d3 = compile(&s3).unwrap();
         assert_ne!(c1.digest(), d3.chaos.as_ref().unwrap().digest());
+    }
+
+    #[test]
+    fn staged_workload_lowers_with_device_endpoints() {
+        let s = spec(
+            "plan p\nprofile silo_fleet\nnodes 3\nworkload push {\n kind staged\n src 0\n dst 1\n \
+             src_gpu 0\n dst_gpu 2\n payload 1M\n chunk 256K\n}\nroute push {\n via 2\n}\n",
+        );
+        let d = compile(&s).unwrap();
+        let st = &d.stages[0];
+        assert_eq!(st.segs[0].gpu, Some(0));
+        assert_eq!(st.segs[1].gpu, Some(2));
+        assert_eq!(st.segs[0].node, 0);
+        assert_eq!(st.segs[1].node, 1);
+        assert_eq!(st.streams.len(), 1);
+        assert_eq!(st.bytes(), 1 << 20);
+        // Deterministic: the route stanza is part of the plan identity.
+        assert_eq!(compile(&s).unwrap().digest, d.digest);
+        let mut bare = s.clone();
+        bare.routes.clear();
+        assert_ne!(compile(&bare).unwrap().digest, d.digest);
+    }
+
+    #[test]
+    fn route_stanza_is_validated_against_the_topology() {
+        // Unknown workload target.
+        let s = spec("plan p\nworkload w {\n kind flood\n}\nroute ghost {\n via 1\n}\n");
+        assert!(compile(&s).unwrap_err().to_string().contains("unknown workload"));
+
+        // Routes only apply to staged workloads.
+        let s = spec("plan p\nworkload w {\n kind flood\n}\nroute w {\n via 1\n}\n");
+        let e = compile(&s).unwrap_err().to_string();
+        assert!(e.contains("staged"), "{e}");
+
+        // A pinned relay path must have a host fabric on every hop:
+        // silo_fleet prefill (0) and decode (1) share none directly, so
+        // `via` pinning the direct hop 0->1 cannot compile...
+        let bad = spec(
+            "plan p\nprofile silo_fleet\nnodes 3\nworkload w {\n kind staged\n src 0\n dst 1\n}\n\
+             route w {\n max_legs 1\n}\n",
+        );
+        let e = compile(&bad).unwrap_err().to_string();
+        assert!(e.contains("unreachable") && e.contains("1 legs"), "{e}");
+        // ...while bouncing through the gateway (2) does.
+        let ok = spec(
+            "plan p\nprofile silo_fleet\nnodes 3\nworkload w {\n kind staged\n src 0\n dst 1\n}\n\
+             route w {\n via 2\n}\n",
+        );
+        assert!(compile(&ok).is_ok());
+
+        // max_legs out of range.
+        let s = spec(
+            "plan p\nnodes 2\nworkload w {\n kind staged\n}\nroute w {\n max_legs 9\n}\n",
+        );
+        assert!(compile(&s).unwrap_err().to_string().contains("max_legs"));
+
+        // via longer than the leg budget.
+        let s = spec(
+            "plan p\nprofile silo_fleet\nnodes 6\nworkload w {\n kind staged\n src 0\n dst 1\n}\n\
+             route w {\n max_legs 2\n via 2,5\n}\n",
+        );
+        let e = compile(&s).unwrap_err().to_string();
+        assert!(e.contains("3 legs"), "{e}");
+    }
+
+    #[test]
+    fn staged_rejects_bad_endpoints() {
+        let s = spec("plan p\nnodes 2\nworkload w {\n kind staged\n src 0\n dst 0\n}\n");
+        assert!(compile(&s).unwrap_err().to_string().contains("both node 0"));
+        let s = spec("plan p\nnodes 2\nworkload w {\n kind staged\n dst 7\n}\n");
+        assert!(compile(&s).unwrap_err().to_string().contains("out of range"));
+        let s = spec("plan p\nnodes 2\nworkload w {\n kind staged\n src_gpu 300\n}\n");
+        assert!(compile(&s).unwrap_err().to_string().contains("device index"));
     }
 
     #[test]

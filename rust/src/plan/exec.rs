@@ -259,7 +259,11 @@ fn run_stage(
     let reg = fleet.engine(0);
     let mut ids: Vec<SegmentId> = Vec::with_capacity(stage.segs.len());
     for s in &stage.segs {
-        ids.push(reg.register_segment(Location::host(s.node, 0), s.len)?);
+        let loc = match s.gpu {
+            Some(g) => Location::device(s.node, g),
+            None => Location::host(s.node, 0),
+        };
+        ids.push(reg.register_segment(loc, s.len)?);
     }
     let failed = AtomicU64::new(0);
     let window = stage.window.max(1);

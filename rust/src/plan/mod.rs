@@ -2,7 +2,8 @@
 //! (`docs/DSL.md` is the spec; `plans/*.tent` are the shipped examples).
 //!
 //! A plan declares *what* should move — HiCache fetch storms, checkpoint
-//! broadcasts, RL parameter-update rounds, mixed-QoS floods, optionally
+//! broadcasts, RL parameter-update rounds, mixed-QoS floods, staged
+//! point-to-point streams with `route` relay constraints, optionally
 //! with an embedded chaos schedule — and the engine decides how. The
 //! pipeline is `parse → resolve/typecheck → compile → PlanDag`:
 //!
@@ -44,7 +45,7 @@ pub mod parser;
 pub use compile::{compile, PlanDag, PlanOp, SegDecl, Stage, StreamOps};
 pub use exec::{fleet_for, run, PlanReport, StageOutcome};
 pub use journal::Journal;
-pub use parser::{PlanSpec, WorkloadKind, WorkloadSpec};
+pub use parser::{PlanSpec, RouteSpec, WorkloadKind, WorkloadSpec};
 
 /// Every key the parser accepts, by stanza — `tests/plan_replay.rs` checks
 /// each one appears in `docs/DSL.md`, so the spec can't silently drift
@@ -54,6 +55,7 @@ pub fn known_keys() -> Vec<(&'static str, &'static [&'static str])> {
         ("plan", parser::PLAN_KEYS),
         ("workload", parser::WORKLOAD_KEYS),
         ("chaos", parser::CHAOS_KEYS),
+        ("route", parser::ROUTE_KEYS),
         ("kind", parser::WORKLOAD_KINDS),
     ]
 }

@@ -42,7 +42,15 @@ pub const WORKLOAD_KEYS: &[&str] = &[
     "latency_block",
     "bulk_block",
     "bulk_every",
+    "src",
+    "dst",
+    "src_gpu",
+    "dst_gpu",
 ];
+
+/// Route-stanza fields (`route <workload> { ... }`): constraints on the
+/// relay path a `staged` workload's transfers may take.
+pub const ROUTE_KEYS: &[&str] = &["max_legs", "via"];
 
 /// Chaos-stanza fields (all optional; defaults mirror
 /// `chaos::ScenarioMix::default`).
@@ -60,7 +68,8 @@ pub const CHAOS_KEYS: &[&str] = &[
 ];
 
 /// Workload-kind vocabulary accepted by `kind`.
-pub const WORKLOAD_KINDS: &[&str] = &["hicache_fetch", "broadcast", "rl_update", "flood"];
+pub const WORKLOAD_KINDS: &[&str] =
+    &["hicache_fetch", "broadcast", "rl_update", "flood", "staged"];
 
 /// Fields holding durations (accept `ns`/`us`/`ms`/`s` suffixes; stored ns).
 const DURATION_KEYS: &[&str] = &["horizon", "storm_outage", "flap_period"];
@@ -78,6 +87,10 @@ pub enum WorkloadKind {
     RlUpdate,
     /// Mixed QoS flood: interleaved latency reads + bulk pushes.
     Flood,
+    /// Point-to-point staged stream `src` → `dst` (optionally device
+    /// endpoints via `src_gpu`/`dst_gpu`) — the declarative k-hop relay
+    /// scenario, constrainable with a `route` stanza.
+    Staged,
 }
 
 impl WorkloadKind {
@@ -87,6 +100,7 @@ impl WorkloadKind {
             WorkloadKind::Broadcast => "broadcast",
             WorkloadKind::RlUpdate => "rl_update",
             WorkloadKind::Flood => "flood",
+            WorkloadKind::Staged => "staged",
         }
     }
 
@@ -96,6 +110,7 @@ impl WorkloadKind {
             "broadcast" => WorkloadKind::Broadcast,
             "rl_update" => WorkloadKind::RlUpdate,
             "flood" => WorkloadKind::Flood,
+            "staged" => WorkloadKind::Staged,
             _ => return None,
         })
     }
@@ -145,6 +160,24 @@ impl ChaosStanza {
     }
 }
 
+/// One `route <workload> { ... }` stanza: relay-path constraints for a
+/// `staged` workload. `via` pins the exact relay-node sequence the compiled
+/// plan must be able to realize; `max_legs` bounds the route search when
+/// `via` is absent. Resolution against the topology happens in
+/// `plan::compile` (so stanza order relative to the workload doesn't
+/// matter).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RouteSpec {
+    /// Name of the staged workload this route constrains.
+    pub name: String,
+    /// Network-leg bound for the route search (validated 1..=3 at compile).
+    pub max_legs: Option<u32>,
+    /// Explicit relay nodes (intermediates only, in hop order).
+    pub via: Vec<u16>,
+    /// Source line of the stanza header; 0 when from JSON.
+    pub line: u32,
+}
+
 /// A parsed, structurally-valid plan (resolve/compile happens in
 /// `plan::compile`).
 #[derive(Clone, Debug, PartialEq)]
@@ -162,6 +195,8 @@ pub struct PlanSpec {
     pub window: usize,
     pub workloads: Vec<WorkloadSpec>,
     pub chaos: Option<ChaosStanza>,
+    /// Relay-route constraints, one per staged workload at most.
+    pub routes: Vec<RouteSpec>,
 }
 
 impl Default for PlanSpec {
@@ -175,6 +210,7 @@ impl Default for PlanSpec {
             window: 4,
             workloads: Vec::new(),
             chaos: None,
+            routes: Vec::new(),
         }
     }
 }
@@ -241,6 +277,7 @@ enum State {
     Top,
     Workload(WorkloadBuilder),
     Chaos(ChaosStanza),
+    Route(RouteSpec),
 }
 
 struct WorkloadBuilder {
@@ -313,6 +350,24 @@ impl PlanSpec {
                             }
                             state = State::Chaos(ChaosStanza {
                                 params: Vec::new(),
+                                line,
+                            });
+                        }
+                        "route" => {
+                            let (name, brace) = split_last(rest);
+                            if brace != "{" || !valid_ident(name) {
+                                return Err(err(line, "expected `route <workload> {`"));
+                            }
+                            if spec.routes.iter().any(|r| r.name == name) {
+                                return Err(err(
+                                    line,
+                                    format!("duplicate `route` stanza for `{name}`"),
+                                ));
+                            }
+                            state = State::Route(RouteSpec {
+                                name: name.to_string(),
+                                max_legs: None,
+                                via: Vec::new(),
                                 line,
                             });
                         }
@@ -410,6 +465,51 @@ impl PlanSpec {
                         }
                     }
                 }
+                State::Route(r) => {
+                    if text == "}" {
+                        let r = match std::mem::replace(&mut state, State::Top) {
+                            State::Route(r) => r,
+                            _ => unreachable!(),
+                        };
+                        spec.routes.push(r);
+                        continue;
+                    }
+                    let (key, rest) = split_first(text);
+                    match key {
+                        "max_legs" => {
+                            if r.max_legs.is_some() {
+                                return Err(err(line, "duplicate `max_legs`"));
+                            }
+                            let n = parse_u64_any(rest).filter(|&n| n > 0).ok_or_else(|| {
+                                err(line, format!("bad number for `max_legs`: `{rest}`"))
+                            })?;
+                            r.max_legs = Some(n as u32);
+                        }
+                        "via" => {
+                            if !r.via.is_empty() {
+                                return Err(err(line, "duplicate `via`"));
+                            }
+                            for tok in rest.split(',') {
+                                let tok = tok.trim();
+                                let n = parse_u64_any(tok)
+                                    .filter(|&n| n <= u16::MAX as u64)
+                                    .ok_or_else(|| {
+                                        err(line, format!("bad relay node id `{tok}` in `via`"))
+                                    })?;
+                                r.via.push(n as u16);
+                            }
+                        }
+                        other => {
+                            return Err(err(
+                                line,
+                                format!(
+                                    "unknown route field `{other}` (known: {})",
+                                    ROUTE_KEYS.join(", ")
+                                ),
+                            ));
+                        }
+                    }
+                }
                 State::Chaos(c) => {
                     if text == "}" {
                         let c = match std::mem::replace(&mut state, State::Top) {
@@ -447,6 +547,9 @@ impl PlanSpec {
                 return Err(err(b.line, format!("unclosed workload `{}` (missing `}}`)", b.name)))
             }
             State::Chaos(c) => return Err(err(c.line, "unclosed chaos stanza (missing `}`)")),
+            State::Route(r) => {
+                return Err(err(r.line, format!("unclosed route `{}` (missing `}}`)", r.name)))
+            }
         }
         if !named {
             return Err(Error::Config("line 1: missing `plan <name>` declaration".into()));
@@ -500,6 +603,23 @@ impl PlanSpec {
             pairs.push((
                 "chaos",
                 Json::obj(c.params.iter().map(|p| (p.key.as_str(), Json::num(p.value))).collect()),
+            ));
+        }
+        // `routes` only when present, so pre-existing plans keep their
+        // digests.
+        if !self.routes.is_empty() {
+            pairs.push((
+                "routes",
+                Json::arr(self.routes.iter().map(|r| {
+                    let mut rp: Vec<(&str, Json)> = vec![("name", Json::str(&r.name))];
+                    if let Some(m) = r.max_legs {
+                        rp.push(("max_legs", Json::num(m as f64)));
+                    }
+                    if !r.via.is_empty() {
+                        rp.push(("via", Json::arr(r.via.iter().map(|&n| Json::num(n as f64)))));
+                    }
+                    Json::obj(rp)
+                })),
             ));
         }
         Json::obj(pairs).to_string()
@@ -627,6 +747,57 @@ impl PlanSpec {
                 });
             }
             spec.chaos = Some(ChaosStanza { params, line: 0 });
+        }
+        if let Some(routes) = j.get("routes").as_arr() {
+            for (i, rj) in routes.iter().enumerate() {
+                let obj = rj.as_obj().ok_or_else(|| {
+                    Error::Config(format!("plan json: route {i} is not an object"))
+                })?;
+                let name = rj
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| Error::Config(format!("plan json: route {i} missing `name`")))?
+                    .to_string();
+                if spec.routes.iter().any(|r| r.name == name) {
+                    return Err(Error::Config(format!(
+                        "plan json: duplicate route for `{name}`"
+                    )));
+                }
+                for (key, _) in obj {
+                    if key != "name" && !ROUTE_KEYS.contains(&key.as_str()) {
+                        return Err(Error::Config(format!(
+                            "plan json: route `{name}`: unknown field `{key}` (known: {})",
+                            ROUTE_KEYS.join(", ")
+                        )));
+                    }
+                }
+                let max_legs = match rj.get("max_legs").as_u64() {
+                    Some(0) => {
+                        return Err(Error::Config(format!(
+                            "plan json: route `{name}`: `max_legs` must be > 0"
+                        )))
+                    }
+                    Some(m) => Some(m as u32),
+                    None => None,
+                };
+                let mut via = Vec::new();
+                if let Some(hops) = rj.get("via").as_arr() {
+                    for h in hops {
+                        let n = h.as_u64().filter(|&n| n <= u16::MAX as u64).ok_or_else(|| {
+                            Error::Config(format!(
+                                "plan json: route `{name}`: bad `via` node id"
+                            ))
+                        })?;
+                        via.push(n as u16);
+                    }
+                }
+                spec.routes.push(RouteSpec {
+                    name,
+                    max_legs,
+                    via,
+                    line: 0,
+                });
+            }
         }
         Ok(spec)
     }
@@ -806,6 +977,48 @@ workload fetch {
         let q = PlanSpec::from_json(&p.to_json()).unwrap();
         assert_eq!(q.to_json(), p.to_json());
         assert!(q.chaos.is_some());
+    }
+
+    #[test]
+    fn staged_workload_and_route_stanza_parse_and_round_trip() {
+        let src = "plan relay\nprofile silo_fleet\nnodes 3\nworkload push {\n kind staged\n \
+                   src 0\n dst 1\n src_gpu 0\n payload 1M\n chunk 128K\n}\n\
+                   route push {\n max_legs 2\n via 2\n}\n";
+        let p = PlanSpec::parse(src).unwrap();
+        let w = &p.workloads[0];
+        assert_eq!(w.kind, WorkloadKind::Staged);
+        assert_eq!(w.param("src"), Some(0.0));
+        assert_eq!(w.param("dst"), Some(1.0));
+        assert_eq!(p.routes.len(), 1);
+        let r = &p.routes[0];
+        assert_eq!(r.name, "push");
+        assert_eq!(r.max_legs, Some(2));
+        assert_eq!(r.via, vec![2]);
+        // JSON round-trip carries the route stanza byte-identically.
+        let j = p.to_json();
+        assert!(j.contains("\"routes\""), "{j}");
+        let q = PlanSpec::from_json(&j).unwrap();
+        assert_eq!(q.to_json(), j);
+        assert_eq!(q.routes, p.routes.iter().map(|r| RouteSpec { line: 0, ..r.clone() }).collect::<Vec<_>>());
+        // Plans without routes keep their old serialization (digest
+        // stability for the shipped corpus).
+        assert!(!PlanSpec::parse(MINI).unwrap().to_json().contains("routes"));
+    }
+
+    #[test]
+    fn route_stanza_rejects_mistakes() {
+        let dup = "plan p\nworkload w {\n kind staged\n src 0\n dst 1\n}\n\
+                   route w {\n via 2\n}\nroute w {\n via 3\n}\n";
+        let e = PlanSpec::parse(dup).unwrap_err().to_string();
+        assert!(e.contains("line 9") && e.contains("duplicate"), "{e}");
+
+        let badkey = "plan p\nworkload w {\n kind staged\n}\nroute w {\n hops 2\n}\n";
+        let e = PlanSpec::parse(badkey).unwrap_err().to_string();
+        assert!(e.contains("line 6") && e.contains("max_legs"), "{e}");
+
+        let unclosed = "plan p\nworkload w {\n kind staged\n}\nroute w {\n via 2\n";
+        let e = PlanSpec::parse(unclosed).unwrap_err().to_string();
+        assert!(e.contains("line 5") && e.contains("unclosed route"), "{e}");
     }
 
     #[test]

@@ -74,6 +74,7 @@ impl SlicePolicy for TentPolicy {
                 c.bw,
                 ctx.class,
                 Some(plan.dst_node),
+                c.relays(),
             );
             let s = sched.penalty(c.tier) * t_hat;
             s_min = s_min.min(s);

@@ -156,6 +156,46 @@ pub struct Topology {
     pub nodes: Vec<NodeId>,
 }
 
+/// Fabrics that can carry host-memory bytes *between* nodes — the edges of
+/// the relay-reachability graph. Device fabrics (NVLink, MNNVL, UB), the
+/// intra-node paths (SHM, PCIe), and storage are not relay legs.
+pub const HOST_NET_FABRICS: [FabricKind; 2] = [FabricKind::Rdma, FabricKind::Tcp];
+
+/// Cap on inter-node legs in a synthesized relay route (k ≤ 3: at most two
+/// host-memory bounces on intermediate nodes).
+pub const MAX_RELAY_LEGS: usize = 3;
+
+/// A multi-hop relay route through host memory on intermediate nodes,
+/// produced by [`Topology::relay_routes`] when no direct backend (and no
+/// single-bounce staged path) spans a pair of endpoints.
+///
+/// `nodes` is the full node sequence including both endpoints, so a k-leg
+/// route has `k + 1` entries and `k - 1` relay nodes; `fabrics[i]` is the
+/// inter-node fabric chosen for the leg `nodes[i] → nodes[i+1]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RelayRoute {
+    pub nodes: Vec<NodeId>,
+    pub fabrics: Vec<FabricKind>,
+    /// Bottleneck bandwidth across the network legs (bytes/sec): the
+    /// minimum over legs of the best rail the egress node offers on that
+    /// leg's fabric. Endpoint PCIe staging hops are min-ed in by the
+    /// planner, which knows whether the endpoints are device memory.
+    pub bottleneck_bw: f64,
+}
+
+impl RelayRoute {
+    /// Inter-node leg count (k).
+    pub fn legs(&self) -> usize {
+        self.fabrics.len()
+    }
+
+    /// The intermediate nodes whose host memory buffers the transfer —
+    /// everything between the endpoints.
+    pub fn relays(&self) -> &[NodeId] {
+        &self.nodes[1..self.nodes.len() - 1]
+    }
+}
+
 impl Topology {
     pub fn rail(&self, id: RailId) -> &RailDef {
         &self.rails[id.0 as usize]
@@ -212,6 +252,129 @@ impl Topology {
                 }
             }
         }
+    }
+
+    /// The best host-network fabric shared by two distinct nodes — the one
+    /// whose fastest rail on the egress node `a` has the highest nominal
+    /// bandwidth (deterministic tie-break: [`HOST_NET_FABRICS`] order).
+    /// `None` means no single inter-node leg can connect the pair.
+    pub fn host_net_between(&self, a: NodeId, b: NodeId) -> Option<FabricKind> {
+        if a == b {
+            return None;
+        }
+        let mut best: Option<(FabricKind, f64)> = None;
+        for f in HOST_NET_FABRICS {
+            if !self.node_in_fabric(a, f) || !self.node_in_fabric(b, f) {
+                continue;
+            }
+            let bw = self.best_leg_bw(a, f);
+            if bw <= 0.0 {
+                continue;
+            }
+            if best.map(|(_, b)| bw > b).unwrap_or(true) {
+                best = Some((f, bw));
+            }
+        }
+        best.map(|(f, _)| f)
+    }
+
+    /// Fastest rail bandwidth a node offers on a fabric (0.0 if it has no
+    /// rails of that kind — fabric membership without rails cannot carry a
+    /// leg).
+    pub fn best_leg_bw(&self, node: NodeId, fabric: FabricKind) -> f64 {
+        self.rails
+            .iter()
+            .filter(|r| r.node == node && r.fabric == fabric)
+            .map(|r| r.bw_bytes_per_sec)
+            .fold(0.0, f64::max)
+    }
+
+    /// Bounded fabric-reachability search (§3.1 extended to heterogeneous
+    /// silos): enumerate relay routes from `src` to `dst` through host
+    /// memory on intermediate nodes, using at most `max_legs` inter-node
+    /// legs (clamped to [`MAX_RELAY_LEGS`]).
+    ///
+    /// Only *shortest* routes are returned (all of them, relay nodes in
+    /// ascending order, capped at 4), so the result is deterministic for a
+    /// given topology — the planner's "same seed → same relay choice"
+    /// contract costs nothing because no RNG is involved at all. Returns an
+    /// empty vec when the pair is unreachable within the leg budget, and a
+    /// single one-leg route when the endpoints share a host fabric
+    /// directly.
+    pub fn relay_routes(&self, src: NodeId, dst: NodeId, max_legs: usize) -> Vec<RelayRoute> {
+        let max_legs = max_legs.clamp(1, MAX_RELAY_LEGS);
+        if src == dst {
+            return Vec::new();
+        }
+        // BFS distances from src over the shared-host-fabric edge relation.
+        let idx = |n: NodeId| self.nodes.iter().position(|&x| x == n);
+        let (Some(_), Some(dst_i)) = (idx(src), idx(dst)) else {
+            return Vec::new();
+        };
+        let n = self.nodes.len();
+        let mut dist = vec![usize::MAX; n];
+        let mut frontier = vec![src];
+        dist[idx(src).unwrap()] = 0;
+        let mut d = 0;
+        while !frontier.is_empty() && d < max_legs && dist[dst_i] == usize::MAX {
+            d += 1;
+            let mut next = Vec::new();
+            for &a in &frontier {
+                for (i, &b) in self.nodes.iter().enumerate() {
+                    if dist[i] != usize::MAX || self.host_net_between(a, b).is_none() {
+                        continue;
+                    }
+                    dist[i] = d;
+                    next.push(b);
+                }
+            }
+            frontier = next;
+        }
+        let legs = dist[dst_i];
+        if legs == usize::MAX {
+            return Vec::new();
+        }
+        // Enumerate every shortest path by walking the BFS layers forward;
+        // node order keeps it deterministic, the cap keeps it cheap.
+        let mut routes = Vec::new();
+        let mut stack: Vec<Vec<NodeId>> = vec![vec![src]];
+        while let Some(path) = stack.pop() {
+            if routes.len() >= 4 {
+                break;
+            }
+            let here = *path.last().unwrap();
+            let depth = path.len() - 1;
+            if here == dst {
+                let fabrics: Vec<FabricKind> = path
+                    .windows(2)
+                    .map(|w| self.host_net_between(w[0], w[1]).unwrap())
+                    .collect();
+                let bottleneck_bw = path
+                    .windows(2)
+                    .zip(&fabrics)
+                    .map(|(w, &f)| self.best_leg_bw(w[0], f))
+                    .fold(f64::INFINITY, f64::min);
+                routes.push(RelayRoute {
+                    nodes: path,
+                    fabrics,
+                    bottleneck_bw,
+                });
+                continue;
+            }
+            if depth >= legs {
+                continue;
+            }
+            // Push in reverse node order so the stack pops ascending.
+            for (i, &b) in self.nodes.iter().enumerate().rev() {
+                let on_layer = dist[i] == depth + 1 && (b == dst || depth + 1 < legs);
+                if on_layer && self.host_net_between(here, b).is_some() && !path.contains(&b) {
+                    let mut next = path.clone();
+                    next.push(b);
+                    stack.push(next);
+                }
+            }
+        }
+        routes
     }
 
     /// Dump a human-readable topology description.
@@ -292,5 +455,46 @@ mod tests {
     #[test]
     fn unknown_profile_rejected() {
         assert!(build_profile("warp_drive", 1).is_err());
+    }
+
+    #[test]
+    fn relay_routes_bridge_partitioned_silos() {
+        let t = build_profile("silo_fleet", 3).unwrap();
+        // GPU silo (0) → NPU silo (1): no shared host fabric, so the only
+        // route is the 2-leg relay through the gateway's host memory.
+        let routes = t.relay_routes(NodeId(0), NodeId(1), 3);
+        assert_eq!(routes.len(), 1);
+        let r = &routes[0];
+        assert_eq!(r.nodes, vec![NodeId(0), NodeId(2), NodeId(1)]);
+        assert_eq!(r.fabrics, vec![FabricKind::Rdma, FabricKind::Tcp]);
+        assert_eq!(r.legs(), 2);
+        assert_eq!(r.relays(), &[NodeId(2)]);
+        // Bottleneck = the gateway's TCP leg, not the fat RDMA first leg.
+        let tcp_bw = t.best_leg_bw(NodeId(2), FabricKind::Tcp);
+        let rdma_bw = t.best_leg_bw(NodeId(0), FabricKind::Rdma);
+        assert!(tcp_bw < rdma_bw);
+        assert_eq!(r.bottleneck_bw, tcp_bw);
+        // A 1-leg budget can't reach across the partition.
+        assert!(t.relay_routes(NodeId(0), NodeId(1), 1).is_empty());
+    }
+
+    #[test]
+    fn relay_routes_are_deterministic_and_shortest() {
+        let t = build_profile("silo_fleet", 6).unwrap();
+        let a = t.relay_routes(NodeId(0), NodeId(4), 3);
+        let b = t.relay_routes(NodeId(0), NodeId(4), 3);
+        assert_eq!(a, b, "route search must be a pure function of the topology");
+        assert!(!a.is_empty());
+        // Two gateways (2 and 5) → two shortest 2-leg routes, relays in
+        // ascending node order.
+        assert!(a.iter().all(|r| r.legs() == 2), "{a:?}");
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].relays(), &[NodeId(2)]);
+        assert_eq!(a[1].relays(), &[NodeId(5)]);
+        // Directly-connected pairs get a single-leg route.
+        let direct = t.relay_routes(NodeId(0), NodeId(3), 3);
+        assert!(direct.iter().all(|r| r.legs() == 1));
+        // Same node: nothing to relay.
+        assert!(t.relay_routes(NodeId(0), NodeId(0), 3).is_empty());
     }
 }

@@ -90,11 +90,15 @@ impl Builder {
 
     /// A standard H800 HGX node: 2 sockets, 8 GPUs, 8 NICs (one per PCIe
     /// root, shared with its GPU), NVLink among GPUs, 1 NVMe, SHM + PCIe +
-    /// TCP rails.
-    fn h800_node(&mut self, id: u16, gpudirect: bool, nvlink: bool) -> NodeId {
+    /// TCP rails. `tcp = false` drops the TCP fallback (the silo-isolated
+    /// prefill shape: the node reaches the rest of the fleet over RDMA
+    /// only).
+    fn h800_node(&mut self, id: u16, gpudirect: bool, nvlink: bool, tcp: bool) -> NodeId {
         let n = self.node(id);
         self.fabric(n, FabricKind::Rdma);
-        self.fabric(n, FabricKind::Tcp);
+        if tcp {
+            self.fabric(n, FabricKind::Tcp);
+        }
         self.fabric(n, FabricKind::Shm);
         self.fabric(n, FabricKind::Pcie);
         self.fabric(n, FabricKind::FileIo);
@@ -176,17 +180,19 @@ impl Builder {
             );
         }
         // TCP fallback rail (real loopback sockets, paced to 10 Gbps/SCALE).
-        self.rail(
-            n,
-            FabricKind::Tcp,
-            format!("n{id}-tcp"),
-            0,
-            255,
-            gbps_paper(1.25),
-            80_000,
-            None,
-            false,
-        );
+        if tcp {
+            self.rail(
+                n,
+                FabricKind::Tcp,
+                format!("n{id}-tcp"),
+                0,
+                255,
+                gbps_paper(1.25),
+                80_000,
+                None,
+                false,
+            );
+        }
         // One NVMe SSD, io_uring-style file backend (real file I/O, unpaced).
         self.device(n, DeviceKind::Ssd { idx: 0, numa: 0 });
         self.rail(
@@ -203,10 +209,15 @@ impl Builder {
         n
     }
 
-    fn ascend_node(&mut self, id: u16) -> NodeId {
+    /// An Ascend NPU node. `roce = false` drops the RoCE NICs and RDMA
+    /// fabric membership (the silo-isolated decode shape: the node reaches
+    /// the rest of the fleet over TCP only).
+    fn ascend_node(&mut self, id: u16, roce: bool) -> NodeId {
         let n = self.node(id);
         self.fabric(n, FabricKind::AscendUb);
-        self.fabric(n, FabricKind::Rdma);
+        if roce {
+            self.fabric(n, FabricKind::Rdma);
+        }
         self.fabric(n, FabricKind::Tcp);
         self.fabric(n, FabricKind::Shm);
         self.fabric(n, FabricKind::Pcie);
@@ -248,18 +259,20 @@ impl Builder {
             );
         }
         // 4 RoCE NICs (no GPUDirect on this stack — HIXL handles NPU mem).
-        for i in 0..4u8 {
-            self.rail(
-                n,
-                FabricKind::Rdma,
-                format!("n{id}-roce{i}"),
-                i / 2,
-                2 * i,
-                gbps_paper(theoretical::RDMA_RAIL_GBPS / 2.0),
-                25_000,
-                None,
-                false,
-            );
+        if roce {
+            for i in 0..4u8 {
+                self.rail(
+                    n,
+                    FabricKind::Rdma,
+                    format!("n{id}-roce{i}"),
+                    i / 2,
+                    2 * i,
+                    gbps_paper(theoretical::RDMA_RAIL_GBPS / 2.0),
+                    25_000,
+                    None,
+                    false,
+                );
+            }
         }
         for numa in 0..2u8 {
             self.rail(
@@ -318,8 +331,64 @@ impl Builder {
         n
     }
 
+    /// A host-only relay gateway bridging the RDMA backbone and the TCP
+    /// front net: the one node a silo-isolated fleet can route cross-silo
+    /// traffic through. Two rails per fabric so a single rail failure on
+    /// the relay never severs the route.
+    fn gateway_node(&mut self, id: u16) -> NodeId {
+        let n = self.node(id);
+        self.fabric(n, FabricKind::Rdma);
+        self.fabric(n, FabricKind::Tcp);
+        self.fabric(n, FabricKind::Shm);
+        self.device(n, DeviceKind::CpuNuma { numa: 0 });
+        for i in 0..2u8 {
+            self.rail(
+                n,
+                FabricKind::Rdma,
+                format!("n{id}-gwmlx{i}"),
+                0,
+                2 * i,
+                gbps_paper(theoretical::RDMA_RAIL_GBPS),
+                20_000,
+                None,
+                false,
+            );
+            self.device(
+                n,
+                DeviceKind::Nic {
+                    idx: i,
+                    numa: 0,
+                    pcie_root: 2 * i,
+                },
+            );
+            self.rail(
+                n,
+                FabricKind::Tcp,
+                format!("n{id}-gwtcp{i}"),
+                0,
+                255,
+                gbps_paper(1.25),
+                80_000,
+                None,
+                false,
+            );
+        }
+        self.rail(
+            n,
+            FabricKind::Shm,
+            format!("n{id}-shm0"),
+            0,
+            255,
+            gbps_paper(300.0),
+            2_500,
+            None,
+            false,
+        );
+        n
+    }
+
     fn mnnvl_node(&mut self, id: u16) -> NodeId {
-        let n = self.h800_node(id, true, true);
+        let n = self.h800_node(id, true, true, true);
         self.fabric(n, FabricKind::Mnnvl);
         for g in 0..8u8 {
             let numa = g / 4;
@@ -355,22 +424,26 @@ impl Builder {
 /// * `mixed_fleet` — H800 / Ascend / legacy nodes in a repeating 1:1:1 mix
 ///   (the paper's communication-silo scenario); `nodes` below 3 yields the
 ///   canonical 3-node shape.
+/// * `silo_fleet` — mixed fleet with *partitioned* host fabrics: RDMA-only
+///   H800 prefill nodes, TCP-only Ascend decode nodes, and host-only
+///   RDMA+TCP gateway relays in a repeating 1:1:1 mix — cross-silo pairs
+///   are reachable only through a k-hop staged route via a gateway.
 pub fn build_profile(name: &str, nodes: u16) -> Result<Topology> {
     let mut b = Builder::new(name);
     match name {
         "h800_hgx" => {
             for i in 0..nodes.max(1) {
-                b.h800_node(i, true, true);
+                b.h800_node(i, true, true, true);
             }
         }
         "h800_no_nvlink" => {
             for i in 0..nodes.max(1) {
-                b.h800_node(i, true, false);
+                b.h800_node(i, true, false, true);
             }
         }
         "no_gpudirect" => {
             for i in 0..nodes.max(1) {
-                b.h800_node(i, false, false);
+                b.h800_node(i, false, false, true);
             }
         }
         "mnnvl_rack" => {
@@ -380,7 +453,7 @@ pub fn build_profile(name: &str, nodes: u16) -> Result<Topology> {
         }
         "ascend_ub" => {
             for i in 0..nodes.max(1) {
-                b.ascend_node(i);
+                b.ascend_node(i, true);
             }
         }
         "legacy_tcp" => {
@@ -395,16 +468,33 @@ pub fn build_profile(name: &str, nodes: u16) -> Result<Topology> {
             // original 3-node paper scenario.
             for i in 0..nodes.max(3) {
                 match i % 3 {
-                    0 => b.h800_node(i, true, true),
-                    1 => b.ascend_node(i),
+                    0 => b.h800_node(i, true, true, true),
+                    1 => b.ascend_node(i, true),
                     _ => b.tcp_only_node(i),
+                };
+            }
+        }
+        "silo_fleet" => {
+            // Communication-silo disaggregation with *partitioned* host
+            // fabrics: prefill H800 nodes speak RDMA only (no TCP front
+            // net), decode Ascend nodes speak TCP only (no RoCE NICs), and
+            // every third node is a host-only gateway on both — so a
+            // cross-silo GPU→NPU transfer has no direct backend and no
+            // single-bounce staged path, and must relay through a
+            // gateway's host memory (RDMA leg, then TCP leg). The k-hop
+            // planner's motivating shape.
+            for i in 0..nodes.max(3) {
+                match i % 3 {
+                    0 => b.h800_node(i, true, true, false),
+                    1 => b.ascend_node(i, false),
+                    _ => b.gateway_node(i),
                 };
             }
         }
         other => {
             return Err(Error::Config(format!(
                 "unknown profile '{other}' (try h800_hgx, h800_no_nvlink, no_gpudirect, \
-                 mnnvl_rack, ascend_ub, legacy_tcp, mixed_fleet)"
+                 mnnvl_rack, ascend_ub, legacy_tcp, mixed_fleet, silo_fleet)"
             )))
         }
     }
@@ -425,6 +515,7 @@ mod tests {
             "ascend_ub",
             "legacy_tcp",
             "mixed_fleet",
+            "silo_fleet",
         ] {
             let t = build_profile(p, 2).unwrap();
             assert!(!t.rails.is_empty(), "{p} has rails");
@@ -479,6 +570,42 @@ mod tests {
         for n in [NodeId(2), NodeId(5)] {
             assert!(!t.node_in_fabric(n, FabricKind::Rdma), "{n:?}");
             assert!(t.node_in_fabric(n, FabricKind::Tcp), "{n:?}");
+        }
+    }
+
+    #[test]
+    fn silo_fleet_partitions_host_fabrics() {
+        let t = build_profile("silo_fleet", 3).unwrap();
+        // Prefill silo: RDMA backbone, no TCP front net.
+        assert!(t.node_in_fabric(NodeId(0), FabricKind::Rdma));
+        assert!(!t.node_in_fabric(NodeId(0), FabricKind::Tcp));
+        assert!(t.node_in_fabric(NodeId(0), FabricKind::NvLink));
+        // Decode silo: TCP only, no RoCE.
+        assert!(!t.node_in_fabric(NodeId(1), FabricKind::Rdma));
+        assert!(t.node_in_fabric(NodeId(1), FabricKind::Tcp));
+        assert!(t.node_in_fabric(NodeId(1), FabricKind::AscendUb));
+        assert!(t.rails_of(NodeId(1), FabricKind::Rdma).is_empty());
+        // Gateway: both, host-only, dual rails per fabric.
+        assert!(t.node_in_fabric(NodeId(2), FabricKind::Rdma));
+        assert!(t.node_in_fabric(NodeId(2), FabricKind::Tcp));
+        assert_eq!(t.rails_of(NodeId(2), FabricKind::Rdma).len(), 2);
+        assert_eq!(t.rails_of(NodeId(2), FabricKind::Tcp).len(), 2);
+        assert!(t.gpus(NodeId(2)).is_empty());
+        // The silos share no host fabric with each other; both reach the
+        // gateway.
+        assert!(t.host_net_between(NodeId(0), NodeId(1)).is_none());
+        assert_eq!(t.host_net_between(NodeId(0), NodeId(2)), Some(FabricKind::Rdma));
+        assert_eq!(t.host_net_between(NodeId(1), NodeId(2)), Some(FabricKind::Tcp));
+    }
+
+    #[test]
+    fn silo_fleet_is_node_count_parametric() {
+        let t = build_profile("silo_fleet", 6).unwrap();
+        assert_eq!(t.nodes.len(), 6);
+        for n in [NodeId(2), NodeId(5)] {
+            assert!(t.node_in_fabric(n, FabricKind::Rdma), "{n:?}");
+            assert!(t.node_in_fabric(n, FabricKind::Tcp), "{n:?}");
+            assert!(t.gpus(n).is_empty(), "{n:?} is host-only");
         }
     }
 

@@ -145,7 +145,7 @@ impl TransportRegistry {
         }
         TransportRegistry {
             backends,
-            staged: Arc::new(staged::StagedBackend),
+            staged: Arc::new(staged::StagedBackend::new()),
         }
     }
 

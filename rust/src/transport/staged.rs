@@ -7,26 +7,61 @@
 //! an elephant flow are in flight concurrently on different rails, the D2H,
 //! H2H, and H2D stages of successive chunks overlap — the pipelining the
 //! paper describes emerges at the slice level.
+//!
+//! A backend constructed with [`StagedBackend::over`] generalizes the single
+//! bounce to a k-hop relay route ([`crate::topology::RelayRoute`]): each
+//! network leg is dispatched on a healthy rail of that leg's fabric picked
+//! at execution time, so spraying, pacing, and chaos masking apply per hop
+//! — a dead rail on a relay node is sidestepped without failing the slice
+//! as long as the node keeps one healthy rail in the leg's fabric.
 
 use super::*;
-use crate::fabric::Fabric;
+use crate::fabric::{Fabric, RailHealth};
 use crate::segment::Segment;
-use crate::topology::{FabricKind, RailId, Topology};
+use crate::topology::{FabricKind, NodeId, RailId, RelayRoute, Topology};
 use crate::util::clock;
 use crate::util::prng::Pcg64;
 use crate::Result;
 use std::cell::RefCell;
+use std::sync::atomic::Ordering;
 
-pub struct StagedBackend;
+pub struct StagedBackend {
+    /// Multi-hop relay route this instance executes; `None` is the classic
+    /// synthesized single-bounce D2H→H2H→H2D.
+    route: Option<Arc<RelayRoute>>,
+}
 
 thread_local! {
     /// Per-worker reusable bounce buffer (perf: no per-slice allocation).
     static BOUNCE: RefCell<Vec<u8>> = const { RefCell::new(Vec::new()) };
 }
 
+impl Default for StagedBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl StagedBackend {
+    /// The classic single-bounce synthesizer.
+    pub fn new() -> Self {
+        StagedBackend { route: None }
+    }
+
+    /// A backend bound to one k-hop relay route: slices bounce through host
+    /// memory on every intermediate node of `route`.
+    pub fn over(route: Arc<RelayRoute>) -> Self {
+        StagedBackend { route: Some(route) }
+    }
+
+    pub fn route(&self) -> Option<&Arc<RelayRoute>> {
+        self.route.as_ref()
+    }
+
     /// Find the PCIe rail serving a device endpoint, if the hop is needed.
-    fn pcie_hop(seg: &Segment, topo: &Topology) -> Option<RailId> {
+    /// `pub(crate)` so the planner can price staged candidates by their
+    /// bottleneck hop (D2H/H2D PCIe included), not the network rail alone.
+    pub(crate) fn pcie_hop(seg: &Segment, topo: &Topology) -> Option<RailId> {
         if !seg.loc.is_device() {
             return None;
         }
@@ -35,23 +70,165 @@ impl StagedBackend {
             .into_iter()
             .find(|&r| topo.rail(r).gpu_idx == seg.loc.pcie_root())
     }
+
+    /// Pick the rail carrying one network leg: `prefer` (the scheduled
+    /// primary rail) if it serves this leg and is alive, else the healthy
+    /// rail of `kind` on `node` with the least queued wire time. `None`
+    /// only when every rail of the leg's fabric on the node is down.
+    fn pick_leg_rail(
+        topo: &Topology,
+        fabric: &Fabric,
+        node: NodeId,
+        kind: FabricKind,
+        prefer: Option<RailId>,
+    ) -> Option<RailId> {
+        let rails = topo.rails_of(node, kind);
+        if let Some(p) = prefer {
+            if rails.contains(&p) && fabric.rail(p).health() != RailHealth::Failed {
+                return Some(p);
+            }
+        }
+        rails
+            .into_iter()
+            .filter(|&r| fabric.rail(r).health() != RailHealth::Failed)
+            .min_by(|&x, &y| {
+                let load = |r: RailId| {
+                    fabric.rail(r).queued_bytes() as f64
+                        / topo.rail(r).bw_bytes_per_sec.max(1.0)
+                };
+                load(x).partial_cmp(&load(y)).unwrap_or(std::cmp::Ordering::Equal)
+            })
+    }
+
+    /// Execute a slice along a k-hop relay route. One staged copy exists at
+    /// a time (store-and-forward): the payload is read from `src` once,
+    /// bounced through each relay's host memory — timed and paced on a rail
+    /// of that leg's fabric, but carried in the shared thread-local buffer —
+    /// and written to `dst` once. The fabric's relay ledger records bytes
+    /// in/out of every relay node; an aborted leg drains the stranded
+    /// staging copy (`relay_out`) so the conservation invariant survives
+    /// retries.
+    fn execute_route(
+        &self,
+        route: &RelayRoute,
+        io: &SliceIo,
+        topo: &Topology,
+        fabric: &Fabric,
+        rng: &mut Pcg64,
+    ) -> Result<ExecOutcome> {
+        let d2h = Self::pcie_hop(io.src, topo);
+        let h2d = Self::pcie_hop(io.dst, topo);
+        let mut total: u64 = 0;
+
+        BOUNCE.with(|b| -> Result<()> {
+            let mut buf = b.borrow_mut();
+            buf.resize(io.len as usize, 0);
+            io.src.read_at(io.src_off, &mut buf)?;
+
+            // Optional D2H into host staging memory on the source node.
+            if let Some(rail) = d2h {
+                let start = clock::now_ns();
+                let svc = fabric
+                    .service_ns(topo, rail, io.len, io.affinity, rng)
+                    .ok_or_else(|| crate::Error::TransferFailed(format!("{rail} down")))?;
+                fabric.pace(rail, start, svc);
+                total += svc;
+            }
+
+            // Network legs, each dispatched at execution time.
+            let mut staged_at: Option<NodeId> = None;
+            let legs = (|| -> Result<()> {
+                for leg in 0..route.legs() {
+                    let egress = route.nodes[leg];
+                    let kind = route.fabrics[leg];
+                    let prefer = (leg == 0).then_some(io.rail);
+                    let rail = Self::pick_leg_rail(topo, fabric, egress, kind, prefer)
+                        .ok_or_else(|| {
+                            crate::Error::TransferFailed(format!(
+                                "no healthy {kind:?} rail on node {} (relay leg {leg})",
+                                egress.0
+                            ))
+                        })?;
+                    // Relay staging buffers are host-local: endpoint-buffer
+                    // asymmetries only apply to the first leg.
+                    let affinity = if leg == 0 {
+                        io.affinity
+                    } else {
+                        PathAffinity::default()
+                    };
+                    let start = clock::now_ns();
+                    let svc = fabric
+                        .service_ns(topo, rail, io.len, affinity, rng)
+                        .ok_or_else(|| {
+                            crate::Error::TransferFailed(format!("{rail} down"))
+                        })?;
+                    fabric.pace(rail, start, svc);
+                    if rail != io.rail {
+                        // Non-primary legs bypass the datapath's completion
+                        // accounting; credit their byte counters here.
+                        fabric
+                            .rail(rail)
+                            .bytes_carried
+                            .fetch_add(io.len, Ordering::Relaxed);
+                    }
+                    total += svc;
+                    // Ledger: the staged copy drained from the previous
+                    // relay and (unless this was the last leg) landed on
+                    // the next one.
+                    if let Some(n) = staged_at.take() {
+                        fabric.relay_out(n, io.len);
+                    }
+                    if leg + 1 < route.legs() {
+                        let relay = route.nodes[leg + 1];
+                        fabric.relay_in(relay, io.len);
+                        staged_at = Some(relay);
+                    }
+                }
+                Ok(())
+            })();
+            if let Err(e) = legs {
+                // Abandoned staging copy is freed, not forwarded — drain it
+                // so in == out still holds once the retry lands elsewhere.
+                if let Some(n) = staged_at.take() {
+                    fabric.relay_out(n, io.len);
+                }
+                return Err(e);
+            }
+
+            // Optional H2D out of staging memory on the destination node.
+            if let Some(rail) = h2d {
+                let start = clock::now_ns();
+                let svc = fabric
+                    .service_ns(topo, rail, io.len, io.affinity, rng)
+                    .ok_or_else(|| crate::Error::TransferFailed(format!("{rail} down")))?;
+                fabric.pace(rail, start, svc);
+                total += svc;
+            }
+            io.dst.write_at(io.dst_off, &buf)?;
+            Ok(())
+        })?;
+
+        Ok(ExecOutcome { service_ns: total })
+    }
 }
 
 impl TransportBackend for StagedBackend {
     fn fabric(&self) -> FabricKind {
-        // Rides the RDMA fabric for its H2H leg; identity is the Arc itself.
-        FabricKind::Rdma
+        // A routed instance rides its first leg's fabric; the classic
+        // synthesizer rides RDMA for its H2H leg. Identity is the Arc.
+        self.route
+            .as_ref()
+            .map(|r| r.fabrics[0])
+            .unwrap_or(FabricKind::Rdma)
     }
     fn name(&self) -> &'static str {
         "staged"
     }
 
     fn plan_rails(&self, src: &Segment, dst: &Segment, topo: &Topology) -> Vec<RailId> {
-        // At least one device endpoint; storage excluded.
+        // Storage endpoints are refused in every mode (file I/O has its own
+        // backend and no host staging path).
         if src.loc.is_storage() || dst.loc.is_storage() {
-            return Vec::new();
-        }
-        if !src.loc.is_device() && !dst.loc.is_device() {
             return Vec::new();
         }
         // Device endpoints must have a PCIe staging rail.
@@ -62,6 +239,21 @@ impl TransportBackend for StagedBackend {
             return Vec::new();
         }
         let (sn, dn) = (src.loc.node(), dst.loc.node());
+        if let Some(route) = &self.route {
+            // Routed instance: the schedulable unit is a first-leg rail on
+            // the route's source node. Host↔host pairs are fine here — a
+            // relay route exists precisely because no direct fabric spans
+            // the endpoints.
+            if route.nodes.first() != Some(&sn) || route.nodes.last() != Some(&dn) {
+                return Vec::new();
+            }
+            return topo.rails_of(sn, route.fabrics[0]);
+        }
+        // Classic single bounce: at least one device endpoint (a reachable
+        // host↔host pair always has a direct backend).
+        if !src.loc.is_device() && !dst.loc.is_device() {
+            return Vec::new();
+        }
         if sn == dn {
             // Same node: D2H + H2D only, no H2H leg; ride the source PCIe
             // rail as the schedulable unit.
@@ -85,6 +277,9 @@ impl TransportBackend for StagedBackend {
         fabric: &Fabric,
         rng: &mut Pcg64,
     ) -> Result<ExecOutcome> {
+        if let Some(route) = &self.route {
+            return self.execute_route(route, io, topo, fabric, rng);
+        }
         let same_node = io.src.loc.node() == io.dst.loc.node();
         let d2h = Self::pcie_hop(io.src, topo);
         let h2d = Self::pcie_hop(io.dst, topo);
@@ -158,7 +353,7 @@ mod tests {
                 .is_empty()
         );
         // …but the staged route is available over host-capable NICs.
-        let rails = StagedBackend.plan_rails(&a, &b, &t);
+        let rails = StagedBackend::new().plan_rails(&a, &b, &t);
         assert_eq!(rails.len(), 8);
     }
 
@@ -170,9 +365,9 @@ mod tests {
         let a = m.register_memory(Location::device(0, 0), 1 << 20).unwrap();
         let b = m.register_memory(Location::device(1, 0), 1 << 20).unwrap();
         a.write_at(0, &[0x77; 1 << 18]).unwrap();
-        let rail = StagedBackend.plan_rails(&a, &b, &t)[0];
+        let rail = StagedBackend::new().plan_rails(&a, &b, &t)[0];
         let mut rng = Pcg64::new(1, 0);
-        let out = StagedBackend
+        let out = StagedBackend::new()
             .execute(
                 &SliceIo {
                     src: &a,
@@ -202,7 +397,7 @@ mod tests {
         let m = SegmentManager::new();
         let a = m.register_memory(Location::device(0, 0), 4096).unwrap();
         let b = m.register_memory(Location::device(0, 1), 4096).unwrap();
-        let rails = StagedBackend.plan_rails(&a, &b, &t);
+        let rails = StagedBackend::new().plan_rails(&a, &b, &t);
         assert_eq!(rails.len(), 1); // the PCIe rail, not 8 NICs
         assert_eq!(t.rail(rails[0]).fabric, FabricKind::Pcie);
     }
@@ -213,6 +408,99 @@ mod tests {
         let m = SegmentManager::new();
         let a = m.register_memory(Location::host(0, 0), 64).unwrap();
         let b = m.register_memory(Location::host(1, 0), 64).unwrap();
-        assert!(StagedBackend.plan_rails(&a, &b, &t).is_empty());
+        assert!(StagedBackend::new().plan_rails(&a, &b, &t).is_empty());
+    }
+
+    #[test]
+    fn routed_instance_executes_relay_legs_and_keeps_the_ledger_balanced() {
+        // silo_fleet: h800 prefill (node 0, RDMA-only) can only reach the
+        // ascend decode silo (node 1, TCP-only) through the gateway (node 2).
+        let t = build_profile("silo_fleet", 3).unwrap();
+        let f = Fabric::new(&t, FabricConfig::default());
+        let routes = t.relay_routes(crate::topology::NodeId(0), crate::topology::NodeId(1), 3);
+        assert!(!routes.is_empty());
+        let route = Arc::new(routes[0].clone());
+        assert_eq!(route.relays(), &[crate::topology::NodeId(2)]);
+        let backend = StagedBackend::over(Arc::clone(&route));
+
+        let m = SegmentManager::new();
+        let a = m.register_memory(Location::device(0, 0), 1 << 20).unwrap();
+        let b = m.register_memory(Location::host(1, 0), 1 << 20).unwrap();
+        a.write_at(0, &[0x5A; 1 << 18]).unwrap();
+        let rails = backend.plan_rails(&a, &b, &t);
+        assert!(!rails.is_empty(), "first-leg rails on the route's source");
+        assert!(rails.iter().all(|&r| t.rail(r).fabric == route.fabrics[0]));
+
+        let mut rng = Pcg64::new(7, 0);
+        let out = backend
+            .execute(
+                &SliceIo {
+                    src: &a,
+                    src_off: 0,
+                    dst: &b,
+                    dst_off: 0,
+                    len: 1 << 18,
+                    rail: rails[0],
+                    affinity: PathAffinity::default(),
+                },
+                &t,
+                &f,
+                &mut rng,
+            )
+            .unwrap();
+        assert!(out.service_ns > 0);
+        let mut buf = [0u8; 1 << 18];
+        b.read_at(0, &mut buf).unwrap();
+        assert!(buf.iter().all(|&x| x == 0x5A));
+        // Every byte entered and left the gateway's staging memory.
+        assert_eq!(f.relay_bytes(crate::topology::NodeId(2)), (1 << 18, 1 << 18));
+        // The second leg's rail was credited directly (not the primary).
+        let leg2: u64 = t
+            .rails_of(crate::topology::NodeId(2), route.fabrics[1])
+            .iter()
+            .map(|&r| f.rail(r).bytes_carried.load(Ordering::Relaxed))
+            .sum();
+        assert_eq!(leg2, 1 << 18);
+    }
+
+    #[test]
+    fn routed_instance_masks_a_dead_relay_rail_per_hop() {
+        let t = build_profile("silo_fleet", 3).unwrap();
+        let f = Fabric::new(&t, FabricConfig::default());
+        let route = Arc::new(
+            t.relay_routes(crate::topology::NodeId(0), crate::topology::NodeId(1), 3)[0].clone(),
+        );
+        let backend = StagedBackend::over(Arc::clone(&route));
+        let m = SegmentManager::new();
+        let a = m.register_memory(Location::host(0, 0), 1 << 20).unwrap();
+        let b = m.register_memory(Location::host(1, 0), 1 << 20).unwrap();
+        a.write_at(0, &[0x33; 4096]).unwrap();
+        let rails = backend.plan_rails(&a, &b, &t);
+        // Kill one of the gateway's two second-leg rails: the slice must
+        // route around it at the hop, not fail.
+        let gw_rails = t.rails_of(crate::topology::NodeId(2), route.fabrics[1]);
+        assert!(gw_rails.len() >= 2);
+        f.inject_failure(gw_rails[0]);
+        let mut rng = Pcg64::new(9, 0);
+        let out = backend.execute(
+            &SliceIo {
+                src: &a,
+                src_off: 0,
+                dst: &b,
+                dst_off: 0,
+                len: 4096,
+                rail: rails[0],
+                affinity: PathAffinity::default(),
+            },
+            &t,
+            &f,
+            &mut rng,
+        );
+        assert!(out.is_ok(), "surviving gateway rail must carry the leg");
+        assert_eq!(
+            f.rail(gw_rails[1]).bytes_carried.load(Ordering::Relaxed),
+            4096
+        );
+        assert_eq!(f.relay_bytes(crate::topology::NodeId(2)), (4096, 4096));
     }
 }

@@ -17,8 +17,9 @@
 use std::path::Path;
 use tent::plan::{compile, fleet_for, Journal, PlanReport, PlanSpec};
 
-const SHIPPED: [&str; 3] = [
+const SHIPPED: [&str; 4] = [
     "../plans/checkpoint_bcast.tent",
+    "../plans/cross_silo.tent",
     "../plans/hicache_storm.tent",
     "../plans/rl_param_update.tent",
 ];
